@@ -1,0 +1,6 @@
+# Make `import compile` work when pytest runs from the repo root
+# (the python sources live under python/).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

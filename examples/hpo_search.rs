@@ -1,0 +1,94 @@
+//! Experiment E3: the funneled "prune and combine" hyperparameter search —
+//! 30 dimensions, 205 trials, 15 finalist templates benchmarked at 4–8
+//! nodes, objective = projected time-to-train.
+//!
+//! Run: `cargo run --release --example hpo_search [model]`
+//! (default model: mt5-base)
+
+use scalestudy::hpo::{run_funnel, space, FunnelCfg, Template};
+
+fn main() {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "mt5-base".to_string());
+    let cfg = FunnelCfg { model: model.clone(), ..FunnelCfg::default() };
+    println!("== funneled HPO study on {model}: {} trials total ==\n", cfg.total_trials);
+
+    let t0 = std::time::Instant::now();
+    let result = run_funnel(&cfg);
+    let dims = space();
+
+    // phase accounting
+    let mut by_phase = std::collections::BTreeMap::new();
+    for t in &result.trials {
+        *by_phase.entry(t.phase).or_insert(0usize) += 1;
+    }
+    println!("trials by phase: {by_phase:?} (total {})", result.trials.len());
+    println!(
+        "pruned dimensions ({}): {}",
+        result.pruned_dims.len(),
+        result.pruned_dims.join(", ")
+    );
+
+    // phase-1 leaderboard: best single-dimension deviations
+    let base_obj = result
+        .trials
+        .iter()
+        .find(|t| t.phase == "phase1" && t.template == Template::baseline(&dims))
+        .map(|t| t.score.time_to_train())
+        .unwrap();
+    println!("\nbaseline projected time-to-train: {}", human_h(base_obj));
+    let mut p1: Vec<_> = result
+        .trials
+        .iter()
+        .filter(|t| t.phase == "phase1" && t.score.time_to_train() < base_obj)
+        .collect();
+    p1.sort_by(|a, b| a.score.time_to_train().partial_cmp(&b.score.time_to_train()).unwrap());
+    println!("\ntop single-parameter improvements:");
+    for t in p1.iter().take(8) {
+        println!(
+            "  {:<38} -> {} ({:+.1}%)",
+            t.template.describe(&dims),
+            human_h(t.score.time_to_train()),
+            (t.score.time_to_train() / base_obj - 1.0) * 100.0
+        );
+    }
+
+    // finalists at 4-8 nodes
+    println!("\n== 15 finalist templates at 4/6/8 nodes (projected time-to-train) ==");
+    for (i, (t, rows)) in result.finalists.iter().enumerate() {
+        let cells: Vec<String> = rows
+            .iter()
+            .map(|(n, s)| format!("{n}n: {}", human_h(s.time_to_train())))
+            .collect();
+        println!("  #{:<2} [{}]  {}", i + 1, cells.join("  "), t.describe(&dims));
+    }
+
+    println!("\nbest template: {}", result.best.describe(&dims));
+    println!("study wall time: {:.2}s", t0.elapsed().as_secs_f64());
+
+    // the paper's conclusion: no one-size-fits-all — different node
+    // counts favour different finalists
+    let best_at = |node_idx: usize| {
+        result
+            .finalists
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.1[node_idx]
+                    .1
+                    .time_to_train()
+                    .partial_cmp(&b.1[node_idx].1.time_to_train())
+                    .unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    let winners: Vec<usize> = (0..3).map(best_at).collect();
+    println!("winning finalist per node count (4/6/8): {winners:?}");
+}
+
+fn human_h(seconds: f64) -> String {
+    if !seconds.is_finite() {
+        return "infeasible".to_string();
+    }
+    format!("{:.1} h", seconds / 3600.0)
+}

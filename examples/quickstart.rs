@@ -1,0 +1,59 @@
+//! Quickstart: the three-layer path end to end in a few lines.
+//!
+//! Loads the `micro` preset's AOT artifacts (Pallas kernel → JAX model →
+//! HLO text, built by `make artifacts`), compiles them on the PJRT CPU
+//! client, runs a couple of train steps with the ZeRO-1 sharded trainer,
+//! and prints the losses.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use scalestudy::data::{CorpusCfg, TaskGen};
+use scalestudy::metrics::RunLog;
+use scalestudy::runtime::{Manifest, Runtime};
+use scalestudy::train::{LrSchedule, Optimizer, Trainer, TrainerCfg};
+
+fn main() -> anyhow::Result<()> {
+    let dir = scalestudy::artifacts_dir();
+    println!("artifacts: {}", dir.display());
+
+    let rt = Runtime::cpu(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let manifest = Manifest::load(&dir, "micro")?;
+    println!(
+        "model: {} ({} tensors, {:.2} M params)",
+        manifest.preset,
+        manifest.params.len(),
+        manifest.total_params as f64 / 1e6
+    );
+
+    let task = TaskGen::new(CorpusCfg::for_manifest(&manifest), 7);
+    let cfg = TrainerCfg {
+        ranks: 2,
+        zero_stage: 1,
+        optimizer: Optimizer::adamw(),
+        schedule: LrSchedule::InvSqrt { peak: 2e-2, warmup: 10 },
+        grad_clip: 1.0,
+        seed: 42,
+        loader_workers: 1,
+    };
+    let mut trainer = Trainer::new(&rt, &manifest, &task, cfg)?;
+    println!(
+        "trainer: 2 ranks, ZeRO-1 (optimizer state sharded: {} bytes total)",
+        trainer.optimizer_state_bytes()
+    );
+
+    let mut log = RunLog::new();
+    trainer.run(20, &mut log)?;
+    for r in &log.records {
+        if r.step % 5 == 0 || r.step == 1 {
+            println!("step {:>3}  loss {:.4}  ({:.0} tok/s)", r.step, r.loss, r.tokens_per_s);
+        }
+    }
+    let first = log.records.first().unwrap().loss;
+    let last = log.smoothed_loss(5).unwrap();
+    println!("loss {first:.3} -> {last:.3} over 20 steps");
+    assert!(last < first, "training must make progress");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,132 @@
+"""AOT lowering: JAX -> HLO text + JSON manifest for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never executes on the
+training path.  Interchange format is **HLO text**, not a serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (behind the published ``xla`` crate) rejects;
+the text parser reassigns ids and round-trips cleanly.
+
+Artifacts per preset P:
+  artifacts/P_train.hlo.txt     (params..., enc, dec, tgt) -> (loss, grads...)
+  artifacts/P_eval.hlo.txt      (params..., enc, dec, tgt) -> (loss,)
+  artifacts/P_manifest.json     calling convention: param names/shapes/stds,
+                                batch geometry, counts
+  artifacts/adamw_<n>.hlo.txt   fused AdamW update over flat f32[n]
+
+Usage: python -m compile.aot --out ../artifacts [--presets micro,tiny,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fused_adamw
+
+ADAMW_CHUNK = 65536  # flat-update chunk size the Rust runtime pads to
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side can unwrap a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def manifest_for(cfg: model.ModelConfig) -> dict:
+    specs = model.param_specs(cfg)
+    return {
+        "preset": cfg.name,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "d_ff": cfg.d_ff,
+            "num_heads": cfg.num_heads,
+            "enc_layers": cfg.enc_layers,
+            "dec_layers": cfg.dec_layers,
+        },
+        "batch": {"size": cfg.batch, "enc_len": cfg.enc_len,
+                  "dec_len": cfg.dec_len},
+        "pad_id": model.PAD_ID,
+        "num_params_tensors": len(specs),
+        "total_params": int(model.param_count(cfg)),
+        "params": [
+            {"name": n, "shape": list(s), "init_std": std,
+             "size": int(jnp.prod(jnp.array(s)))}
+            for n, s, std in specs
+        ],
+        "train_artifact": f"{cfg.name}_train.hlo.txt",
+        "eval_artifact": f"{cfg.name}_eval.hlo.txt",
+        "adamw_artifact": f"adamw_{ADAMW_CHUNK}.hlo.txt",
+        "adamw_chunk": ADAMW_CHUNK,
+    }
+
+
+def lower_preset(cfg: model.ModelConfig, out_dir: str) -> None:
+    args = model.example_args(cfg)
+    train = jax.jit(model.make_train_step(cfg))
+    evals = jax.jit(model.make_eval_step(cfg))
+    for kind, fn in (("train", train), ("eval", evals)):
+        text = to_hlo_text(fn.lower(*args))
+        path = os.path.join(out_dir, f"{cfg.name}_{kind}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {path}: {len(text)/1e6:.2f} MB")
+    with open(os.path.join(out_dir, f"{cfg.name}_manifest.json"), "w") as f:
+        json.dump(manifest_for(cfg), f, indent=1)
+
+
+def lower_adamw(out_dir: str, n: int = ADAMW_CHUNK) -> None:
+    """Standalone fused-AdamW artifact over flat f32[n] (hyperparameters
+    are runtime inputs so one artifact serves every template)."""
+
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    one = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    # fused_adamw bakes lr/wd into the kernel closure (they are Python
+    # floats at trace time).  To keep them runtime-settable from Rust, run
+    # the kernel at unit lr / zero decay and rescale outside: the unit-lr
+    # Adam direction is recovered as p - p2, then
+    #   p' = p - lr * (direction + wd * p)
+    # which is exactly AdamW with dynamic lr/wd.
+    def dyn(p, g, m, v, s, lr, wd):
+        p2, m2, v2 = fused_adamw.fused_adamw(p, g, m, v, s, lr=1.0,
+                                             weight_decay=0.0)
+        upd = p - p2          # unit-lr Adam direction (no decay)
+        return (p - lr * (upd + wd * p), m2, v2)
+
+    lowered = jax.jit(dyn).lower(vec, vec, vec, vec, one,
+                                 jax.ShapeDtypeStruct((), jnp.float32),
+                                 jax.ShapeDtypeStruct((), jnp.float32))
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"adamw_{n}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {path}: {len(text)/1e6:.2f} MB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="micro,tiny,e2e100m")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.presets.split(","):
+        cfg = model.PRESETS[name.strip()]
+        print(f"lowering preset {cfg.name} "
+              f"({model.param_count(cfg)/1e6:.1f} M params)")
+        lower_preset(cfg, args.out)
+    lower_adamw(args.out)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""L1 Pallas kernel: tiled flash-style multi-head attention.
+
+This is the compute hot-spot of the mt5-style encoder-decoder in
+``compile.model``.  The paper's cluster is CUDA/A100; per the
+hardware-adaptation rule we do NOT port threadblock/shared-memory idioms.
+Instead the kernel is structured for the TPU execution model:
+
+* the grid iterates over (batch*heads, query blocks) — each grid step owns
+  one MXU-shaped Q tile resident in VMEM;
+* the KV sequence is streamed through VMEM in ``block_k``-sized tiles via
+  tiled loads inside a ``fori_loop`` (the BlockSpec/VMEM analogue of a
+  CUDA threadblock's shared-memory staging loop);
+* softmax uses the online (streaming) formulation so the (Sq, Skv) score
+  matrix is never materialized — only a (block_q, block_k) tile exists at
+  any time.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops.  Real-TPU VMEM
+footprint and MXU utilization are *estimated* in DESIGN.md / EXPERIMENTS.md
+from the chosen block shapes.
+
+Gradients: ``attention`` is wrapped in ``jax.custom_vjp``.  The forward
+pass runs the Pallas kernel; the backward pass recomputes attention with
+the pure-jnp reference (numerically identical formulation) and uses its
+VJP.  This mirrors the recompute-in-backward strategy of FlashAttention
+while keeping the backward in fusable XLA ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# MXU-shaped defaults: multiples of 128 saturate the 128x128 systolic
+# array; smaller sequences fall back to a single block.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _choose_block(size: int, preferred: int) -> int:
+    """Largest divisor of ``size`` that is <= preferred (block shapes must
+    tile the sequence exactly; sequences here are powers of two)."""
+    b = min(size, preferred)
+    while size % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block_k: int,
+                  causal: bool, block_q: int):
+    """One grid step: one (block_q, d) query tile against all KV tiles.
+
+    mask_ref carries per-key validity (1.0 valid / 0.0 padding) for the
+    whole KV sequence of this batch element.
+    """
+    q = q_ref[0, ...].astype(jnp.float32)          # (block_q, d)
+    kv_len = k_ref.shape[1]
+    d = q.shape[-1]
+    scale = jax.lax.rsqrt(jnp.float32(d))
+    num_kv_blocks = kv_len // block_k
+
+    q_block_idx = pl.program_id(1)
+    q_positions = q_block_idx * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    m0 = jnp.full((block_q,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k = k_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        kmask = mask_ref[0, pl.dslice(i * block_k, block_k)]
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        valid = jnp.broadcast_to(kmask[None, :] > 0.5, s.shape)
+        if causal:
+            k_positions = i * block_k + jax.lax.iota(jnp.int32, block_k)
+            valid = valid & (q_positions[:, None] >= k_positions[None, :])
+        s = jnp.where(valid, s, -1e30)
+
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        # exp(-1e30 - (-1e30)) == 1, so a fully-masked tile would leak
+        # uniform weight; zero invalid lanes explicitly instead.
+        p = jnp.exp(s - m_new[:, None]) * valid.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    _, l, acc = jax.lax.fori_loop(0, num_kv_blocks, body, (m0, l0, acc0))
+    # Fully-masked rows (all keys padding) have l == 0; emit zeros there.
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    o_ref[0, ...] = (acc / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    kv_mask: jax.Array, *, causal: bool = False,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jax.Array:
+    """Tiled attention over merged batch*head leading dim.
+
+    Args:
+      q: (BH, Sq, d) queries.
+      k, v: (BH, Skv, d) keys/values.
+      kv_mask: (BH, Skv) float validity mask (1 valid, 0 padding).
+      causal: apply causal masking (decoder self-attention).
+    Returns:
+      (BH, Sq, d) attention output, dtype of q.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    bq = _choose_block(sq, block_q)
+    bk = _choose_block(skv, block_k)
+    kernel = functools.partial(_flash_kernel, block_k=bk, causal=causal,
+                               block_q=bq)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, skv, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, skv, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, skv), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, kv_mask)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def attention(q, k, v, kv_mask, causal=False):
+    """Differentiable tiled attention (Pallas forward, recompute backward)."""
+    return flash_attention(q, k, v, kv_mask, causal=causal)
+
+
+def _attention_fwd(q, k, v, kv_mask, causal):
+    out = flash_attention(q, k, v, kv_mask, causal=causal)
+    return out, (q, k, v, kv_mask)
+
+
+def _attention_bwd(causal, res, g):
+    q, k, v, kv_mask = res
+    # FlashAttention-style recompute: no softmax tensor was saved in fwd;
+    # rebuild the (numerically identical) reference graph and pull its VJP.
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, kv_mask,
+                                             causal=causal), q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def vmem_footprint_bytes(sq: int, skv: int, d: int,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         bytes_per_el: int = 4) -> int:
+    """Estimated VMEM working set of one grid step on a real TPU.
+
+    Q tile + one KV tile pair + score tile + accumulator + output tile.
+    Used by DESIGN.md section Perf to check the <= 16 MiB VMEM budget.
+    """
+    bq = _choose_block(sq, block_q)
+    bk = _choose_block(skv, block_k)
+    tiles = (
+        bq * d            # q tile
+        + 2 * bk * d      # k tile + v tile
+        + bq * bk         # score/prob tile
+        + bq * d          # accumulator
+        + bq * d          # output tile
+        + 2 * bq          # m, l vectors
+    )
+    return tiles * bytes_per_el
+
+
+def mxu_utilization_estimate(sq: int, skv: int, d: int,
+                             block_q: int = DEFAULT_BLOCK_Q,
+                             block_k: int = DEFAULT_BLOCK_K) -> float:
+    """Fraction of MXU lanes covered by the matmul tiles (128x128 array).
+
+    A (bq, d) x (d, bk) matmul uses min(bq,128)*min(bk,128)*min(d,128) of
+    the systolic array's 128^3-per-pass capacity; report the geometric
+    coverage of the dominant QK^T tile.
+    """
+    bq = min(_choose_block(sq, block_q), 128)
+    bk = min(_choose_block(skv, block_k), 128)
+    dd = min(d, 128)
+    return (bq / 128.0) * (bk / 128.0) * (dd / 128.0)

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: fused AdamW parameter update.
+
+One fused elementwise pass over (param, grad, m, v) tiles resident in VMEM,
+emitting (param', m', v').  On a real TPU this saves three HBM round-trips
+versus the unfused jnp formulation (each tensor is read once and written
+once); under ``interpret=True`` it lowers to plain HLO and is validated
+against ``ref.adamw_ref``.
+
+The Rust trainer implements the *sharded* (ZeRO-1) optimizer itself so that
+partitioning is observable at the coordinator layer; this kernel is the
+single-shard compute path and is also exported standalone by ``aot.py`` as
+``adamw_<preset>.hlo.txt`` for the runtime's fused-update mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096  # elements per grid step; 4 KiB*4 tensors in VMEM
+
+
+def _adamw_kernel(step_ref, p_ref, g_ref, m_ref, v_ref,
+                  p_out, m_out, v_out, *, lr, beta1, beta2, eps,
+                  weight_decay):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    step = step_ref[0]
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - jnp.power(jnp.float32(beta1), step)
+    bc2 = 1.0 - jnp.power(jnp.float32(beta2), step)
+    mhat = m_new / bc1
+    vhat = v_new / bc2
+    p_out[...] = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def fused_adamw(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                step: jax.Array, *, lr: float = 1e-3, beta1: float = 0.9,
+                beta2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0, block: int = DEFAULT_BLOCK,
+                interpret: bool = True):
+    """Fused AdamW over flat f32 vectors. step: f32 scalar array (1,).
+
+    Returns (p', m', v').  Length must be a multiple of ``block`` or less
+    than it (single block fallback).
+    """
+    n = p.shape[0]
+    blk = min(block, n)
+    if n % blk != 0:
+        # pad to a block multiple; padded lanes update garbage that is
+        # sliced away — cheaper than a ragged grid.
+        pad = blk - n % blk
+        pz = jnp.zeros((pad,), p.dtype)
+        out = fused_adamw(jnp.concatenate([p, pz]), jnp.concatenate([g, pz]),
+                          jnp.concatenate([m, pz]), jnp.concatenate([v, pz]),
+                          step, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                          weight_decay=weight_decay, block=blk,
+                          interpret=interpret)
+        return tuple(o[:n] for o in out)
+
+    kernel = functools.partial(_adamw_kernel, lr=lr, beta1=beta1,
+                               beta2=beta2, eps=eps,
+                               weight_decay=weight_decay)
+    grid = (n // blk,)
+    vec = pl.BlockSpec((blk,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,)), vec, vec, vec, vec],
+        out_specs=[vec, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(step, p, g, m, v)

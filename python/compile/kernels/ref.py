@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the CORE correctness signal: pytest (plus hypothesis sweeps over
+shapes) asserts the Pallas kernels match these to tight tolerances.  They
+are also used as the recompute path in the kernels' custom VJPs, so forward
+agreement here implies gradient agreement by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  kv_mask: jax.Array, *, causal: bool = False) -> jax.Array:
+    """Dense softmax attention. q,k,v: (BH, S, d); kv_mask: (BH, Skv)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * jax.lax.rsqrt(jnp.float32(d))
+    s = jnp.where(kv_mask[:, None, :] > 0.5, s, -1e30)
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -1e30)
+    # Match the kernel's fully-masked-row convention: those rows output 0.
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    any_valid = (s > -1e29).any(axis=-1, keepdims=True)
+    out = jnp.where(any_valid, p / jnp.where(l > 0, l, 1.0), 0.0)
+    return jnp.einsum("bqk,bkd->bqd", out,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def softmax_xent_ref(logits: jax.Array, targets: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """Mean masked token cross-entropy.
+
+    logits: (N, V) float; targets: (N,) int32; valid: (N,) float 0/1.
+    Returns a scalar: sum of per-token NLL over valid tokens / #valid.
+    """
+    logits = logits.astype(jnp.float32)
+    m = logits.max(axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.exp(shifted).sum(axis=-1)) + m[:, 0]
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    nll = (lse - gold) * valid
+    denom = jnp.maximum(valid.sum(), 1.0)
+    return nll.sum() / denom
+
+
+def adamw_ref(p, g, m, v, *, step, lr, beta1, beta2, eps, weight_decay):
+    """Reference AdamW update; returns (p', m', v')."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m_new / (1.0 - beta1 ** step)
+    vhat = v_new / (1.0 - beta2 ** step)
+    p_new = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    return p_new, m_new, v_new

@@ -1,0 +1,76 @@
+"""AOT pipeline tests: HLO text generation + manifest consistency."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_to_hlo_text_emits_parseable_module():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    # HLO text module header + an entry computation
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+    # return_tuple=True -> tuple-shaped root (with layout annotations)
+    assert "->(f32[4,4]{1,0})" in text
+
+
+def test_manifest_matches_param_specs():
+    cfg = M.PRESETS["micro"]
+    man = aot.manifest_for(cfg)
+    specs = M.param_specs(cfg)
+    assert man["num_params_tensors"] == len(specs)
+    assert man["total_params"] == M.param_count(cfg)
+    assert len(man["params"]) == len(specs)
+    for entry, (name, shape, std) in zip(man["params"], specs):
+        assert entry["name"] == name
+        assert tuple(entry["shape"]) == shape
+        assert entry["size"] == int(jnp.prod(jnp.array(shape)))
+    # json-serializable (rust parses this)
+    text = json.dumps(man)
+    assert json.loads(text) == man
+
+
+def test_manifest_order_is_hlo_signature_order():
+    """The manifest param order IS the AOT calling convention: it must be
+    the name-sorted order used by example_args/params_to_list."""
+    cfg = M.PRESETS["micro"]
+    man = aot.manifest_for(cfg)
+    names = [p["name"] for p in man["params"]]
+    assert names == sorted(names)
+
+
+def test_train_signature_arity():
+    cfg = M.PRESETS["micro"]
+    args = M.example_args(cfg)
+    n = len(M.param_specs(cfg))
+    assert len(args) == n + 3
+    # batch tensors are int32 with the manifest geometry
+    assert args[n].shape == (cfg.batch, cfg.enc_len)
+    assert args[n].dtype == jnp.int32
+
+
+@pytest.mark.slow
+def test_micro_preset_lowers_end_to_end(tmp_path):
+    aot.lower_preset(M.PRESETS["micro"], str(tmp_path))
+    man = json.loads((tmp_path / "micro_manifest.json").read_text())
+    hlo = (tmp_path / "micro_train.hlo.txt").read_text()
+    assert hlo.startswith("HloModule")
+    # ENTRY takes one input per param + 3 batch tensors; nested reduce
+    # computations add their own parameter() instructions, so >=
+    n_inputs = man["num_params_tensors"] + 3
+    assert hlo.count("parameter(") >= n_inputs
+    # the entry layout lists exactly the expected number of operands
+    entry_line = hlo.splitlines()[0]
+    assert entry_line.count("f32[") + entry_line.count("s32[") >= n_inputs

@@ -1,0 +1,166 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+hypothesis sweeps shapes/masking/causality; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import fused_adamw as FA
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32) * scale
+
+
+def full_mask(bh, s):
+    return jnp.ones((bh, s), jnp.float32)
+
+
+# ---------------------------------------------------------------- attention
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("bh,sq,skv,d", [
+    (2, 32, 32, 16),
+    (4, 128, 128, 32),
+    (1, 64, 128, 64),   # cross-attention geometry (Sq != Skv)
+    (8, 16, 16, 8),
+])
+def test_flash_matches_ref(causal, bh, sq, skv, d):
+    if causal and sq != skv:
+        pytest.skip("causal only used for self-attention")
+    q, k, v = rand(0, (bh, sq, d)), rand(1, (bh, skv, d)), rand(2, (bh, skv, d))
+    m = full_mask(bh, skv)
+    out = A.flash_attention(q, k, v, m, causal=causal)
+    want = ref.attention_ref(q, k, v, m, causal=causal)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_respects_padding_mask():
+    bh, sq, skv, d = 2, 32, 64, 16
+    q, k, v = rand(0, (bh, sq, d)), rand(1, (bh, skv, d)), rand(2, (bh, skv, d))
+    mask = jnp.concatenate([jnp.ones((bh, 40)), jnp.zeros((bh, 24))], axis=1)
+    out = A.flash_attention(q, k, v, mask)
+    want = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+    # padding keys must not influence the output at all
+    k2 = k.at[:, 40:, :].set(1e4)
+    v2 = v.at[:, 40:, :].set(-1e4)
+    out2 = A.flash_attention(q, k2, v2, mask)
+    np.testing.assert_allclose(out, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_flash_fully_masked_rows_zero():
+    bh, s, d = 2, 16, 8
+    q, k, v = rand(0, (bh, s, d)), rand(1, (bh, s, d)), rand(2, (bh, s, d))
+    mask = jnp.zeros((bh, s), jnp.float32)
+    out = A.flash_attention(q, k, v, mask)
+    np.testing.assert_allclose(out, jnp.zeros_like(out), atol=1e-6)
+
+
+def test_flash_block_size_invariance():
+    """Different block tilings must give identical results."""
+    bh, s, d = 2, 128, 32
+    q, k, v = rand(0, (bh, s, d)), rand(1, (bh, s, d)), rand(2, (bh, s, d))
+    m = full_mask(bh, s)
+    a = A.flash_attention(q, k, v, m, block_q=32, block_k=32)
+    b = A.flash_attention(q, k, v, m, block_q=128, block_k=64)
+    np.testing.assert_allclose(a, b, rtol=2e-6, atol=2e-6)
+
+
+def test_attention_grads_match_ref():
+    bh, s, d = 2, 32, 16
+    q, k, v = rand(0, (bh, s, d)), rand(1, (bh, s, d)), rand(2, (bh, s, d))
+    m = full_mask(bh, s)
+
+    def loss_kernel(q, k, v):
+        return (A.attention(q, k, v, m, True) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, m, causal=True) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 4]),
+    log_s=st.integers(3, 7),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_hypothesis_shapes(bh, log_s, d, causal, seed):
+    s = 2 ** log_s
+    q = rand(seed, (bh, s, d))
+    k = rand(seed + 1, (bh, s, d))
+    v = rand(seed + 2, (bh, s, d))
+    # random suffix padding
+    nvalid = max(1, (seed % s))
+    mask = (jnp.arange(s)[None, :] < nvalid).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, (bh, s))
+    out = A.flash_attention(q, k, v, mask, causal=causal)
+    want = ref.attention_ref(q, k, v, mask, causal=causal)
+    np.testing.assert_allclose(out, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1.0, 100.0), seed=st.integers(0, 2**16))
+def test_flash_large_logits_stable(scale, seed):
+    """Online softmax must stay finite for large score magnitudes."""
+    bh, s, d = 2, 32, 16
+    q = rand(seed, (bh, s, d), scale)
+    k = rand(seed + 1, (bh, s, d), scale)
+    v = rand(seed + 2, (bh, s, d))
+    out = A.flash_attention(q, k, v, full_mask(bh, s))
+    assert bool(jnp.isfinite(out).all())
+    want = ref.attention_ref(q, k, v, full_mask(bh, s))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- adamw
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([17, 256, 4096, 5000]),
+    step=st.integers(1, 1000),
+    lr=st.floats(1e-5, 1e-1),
+    wd=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_adamw_matches_ref(n, step, lr, wd, seed):
+    p = rand(seed, (n,))
+    g = rand(seed + 1, (n,))
+    m = rand(seed + 2, (n,)) * 0.1
+    v = jnp.abs(rand(seed + 3, (n,))) * 0.01
+    s = jnp.array([float(step)], jnp.float32)
+    got = FA.fused_adamw(p, g, m, v, s, lr=lr, beta1=0.9, beta2=0.999,
+                         eps=1e-8, weight_decay=wd, block=1024)
+    want = ref.adamw_ref(p, g, m, v, step=float(step), lr=lr, beta1=0.9,
+                         beta2=0.999, eps=1e-8, weight_decay=wd)
+    # f32 pow(beta, step) in-kernel vs f64 host bias correction: allow a
+    # few ulps of drift at large step counts.
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=1e-5)
+
+
+def test_vmem_budget():
+    """Default block shapes must fit the 16 MiB VMEM budget (DESIGN §Perf)."""
+    for sq, skv, d in [(128, 128, 64), (512, 512, 64), (2048, 2048, 128)]:
+        assert A.vmem_footprint_bytes(sq, skv, d) <= 16 * 2**20
+
+
+def test_mxu_estimate_full_tiles():
+    assert A.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert A.mxu_utilization_estimate(64, 128, 128) == 0.5

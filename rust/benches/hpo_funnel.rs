@@ -1,0 +1,106 @@
+//! Bench E3 — the funneled hyperparameter study: runs the full 205-trial
+//! prune-and-combine search, reports phase structure, improvement over
+//! baseline, the 15-finalist multi-node table, and search wall-time.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::hpo::{evaluate, run_funnel, space, FunnelCfg, Template};
+use scalestudy::model::by_name;
+
+fn main() {
+    let mut b = Bench::new("hpo_funnel");
+    let dims = space();
+
+    for model_name in ["mt5-base", "mt5-xl"] {
+        let cfg = FunnelCfg { model: model_name.to_string(), ..FunnelCfg::default() };
+        let t0 = std::time::Instant::now();
+        let result = run_funnel(&cfg);
+        let wall = t0.elapsed().as_secs_f64();
+
+        let model = by_name(model_name).unwrap();
+        let base = evaluate(&dims, &Template::baseline(&dims), &model, 1).time_to_train();
+        let best1 = evaluate(&dims, &result.best, &model, 1).time_to_train();
+
+        let mut t = Table::new(
+            &format!("funnel study summary — {model_name}"),
+            &["value"],
+        );
+        t.row("trials executed", vec![result.trials.len() as f64]);
+        t.row("dimensions pruned", vec![result.pruned_dims.len() as f64]);
+        t.row("finalists", vec![result.finalists.len() as f64]);
+        t.row("baseline time-to-train (h)", vec![base / 3600.0]);
+        t.row("best time-to-train (h)", vec![best1 / 3600.0]);
+        t.row("improvement (x)", vec![base / best1]);
+        t.row("search wall time (s)", vec![wall]);
+        b.table(t);
+
+        // finalist x node-count grid (the paper's 4-8 node benchmark)
+        let mut grid = Table::new(
+            &format!("finalists at 4/6/8 nodes (projected hours) — {model_name}"),
+            &["4 nodes", "6 nodes", "8 nodes"],
+        );
+        for (i, (_, rows)) in result.finalists.iter().enumerate().take(15) {
+            grid.row(
+                &format!("finalist {:02}", i + 1),
+                rows.iter()
+                    .map(|(_, s)| {
+                        let t = s.time_to_train();
+                        if t.is_finite() {
+                            t / 3600.0
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect(),
+            );
+        }
+        grid.note("0 = infeasible at that scale; no single template wins every column (no one-size-fits-all)");
+        b.table(grid);
+
+        assert_eq!(result.trials.len(), 205);
+        assert_eq!(result.finalists.len(), 15);
+        assert!(best1 <= base);
+    }
+
+    // ---- search-algorithm ablation: same 205-trial budget, four
+    // algorithms, judged by the best template's time-to-train at each
+    // finalist node count (the "scaling environment" the paper's future
+    // work targets)
+    use scalestudy::hpo::{run_random_search, run_scaling_aware, run_successive_halving};
+    let cfg = FunnelCfg::default();
+    let model = by_name(&cfg.model).unwrap();
+    let funnel = run_funnel(&cfg);
+    let funnel_row: Vec<f64> = cfg
+        .finalist_nodes
+        .iter()
+        .map(|&n| evaluate(&dims, &funnel.best, &model, n).time_to_train() / 3600.0)
+        .collect();
+    let mut abl = Table::new(
+        "search-algorithm ablation (best template's projected hours; 205-trial budget each)",
+        &["4 nodes", "6 nodes", "8 nodes"],
+    );
+    abl.row("funnel (the paper's)", funnel_row);
+    for outcome in [
+        run_random_search(&cfg),
+        run_successive_halving(&cfg),
+        run_scaling_aware(&cfg),
+    ] {
+        abl.row(
+            outcome.name,
+            outcome
+                .best_at_nodes
+                .iter()
+                .map(|(_, t)| if t.is_finite() { t / 3600.0 } else { 0.0 })
+                .collect(),
+        );
+    }
+    abl.note("scaling-aware = the paper's future-work proposal: survivors must transfer to 8 nodes before combination. 0 = infeasible.");
+    b.table(abl);
+
+    // search engine micro-bench: single trial evaluation cost
+    let t = Template::baseline(&dims);
+    b.iter("evaluate(template) [sim+convergence]", || {
+        std::hint::black_box(evaluate(&dims, &t, &model, 4));
+    });
+
+    b.finish();
+}

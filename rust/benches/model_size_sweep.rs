@@ -1,0 +1,84 @@
+//! Bench E2 — the "5 encoder-decoder LLMs, 580 M to 13 B" scaling sweep:
+//! seconds/step and per-GPU memory for every zoo model across node counts
+//! and ZeRO stages, including the memory-fit frontier (which stage is
+//! *required* at each size — the paper's motivation for progressing
+//! through stages).
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::model::mt5_zoo;
+use scalestudy::sim::{simulate_step, TrainSetup};
+use scalestudy::zero::ZeroStage;
+
+fn main() {
+    let mut b = Bench::new("model_size_sweep");
+    let nodes = [1usize, 2, 4, 8];
+
+    for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
+        let mut t = Table::new(
+            &format!("seconds/step across the zoo, ZeRO stage {}", stage.index()),
+            &["1 node", "2 nodes", "4 nodes", "8 nodes"],
+        );
+        for model in mt5_zoo() {
+            let row: Vec<f64> = nodes
+                .iter()
+                .map(|&n| {
+                    let st = simulate_step(&TrainSetup::dp_pod(model.clone(), n, stage));
+                    if st.fits {
+                        st.seconds_per_step()
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            t.row(&model.name, row);
+        }
+        t.note("0 = does not fit HBM at that scale/stage");
+        b.table(t);
+    }
+
+    // memory-fit frontier: minimum ZeRO stage that fits, per model x nodes
+    let mut fit = Table::new(
+        "minimum ZeRO stage that fits (9 = nothing fits)",
+        &["1 node", "2 nodes", "4 nodes", "8 nodes"],
+    );
+    for model in mt5_zoo() {
+        let row: Vec<f64> = nodes
+            .iter()
+            .map(|&n| {
+                ZeroStage::all()
+                    .into_iter()
+                    .find(|&s| simulate_step(&TrainSetup::dp_pod(model.clone(), n, s)).fits)
+                    .map(|s| s.index() as f64)
+                    .unwrap_or(9.0)
+            })
+            .collect();
+        fit.row(&model.name, row);
+    }
+    fit.note("reproduces the motivation: larger models force higher stages (more partitioning)");
+    b.table(fit);
+
+    // scaling-efficiency table: samples/s per GPU (ideal = flat)
+    let mut eff = Table::new(
+        "throughput per GPU (samples/s/GPU), stage 2",
+        &["1 node", "2 nodes", "4 nodes", "8 nodes"],
+    );
+    for model in mt5_zoo() {
+        let row: Vec<f64> = nodes
+            .iter()
+            .map(|&n| {
+                let setup = TrainSetup::dp_pod(model.clone(), n, ZeroStage::Stage2);
+                let st = simulate_step(&setup);
+                if st.fits {
+                    st.throughput(setup.workload.global_batch) / (n * 8) as f64
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        eff.row(&model.name, row);
+    }
+    eff.note("the 8-node column collapses -- the paper's central anomaly, all model sizes");
+    b.table(eff);
+
+    b.finish();
+}

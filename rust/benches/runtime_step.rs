@@ -1,0 +1,98 @@
+//! Bench E7 — the real hot path: PJRT train-step latency, gradient
+//! all-reduce, sharded optimizer update, and the full trainer step, on
+//! the `micro` and `tiny` presets.  This is the L3 target of the §Perf
+//! pass (EXPERIMENTS.md).
+//!
+//! Requires `make artifacts`.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::data::{CorpusCfg, TaskGen};
+use scalestudy::metrics::RunLog;
+use scalestudy::runtime::{Manifest, Runtime, TrainModule};
+use scalestudy::train::{LrSchedule, Optimizer, Trainer, TrainerCfg};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("runtime_step");
+    let dir = scalestudy::artifacts_dir();
+    if !dir.join("micro_manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first; skipping runtime bench");
+        b.finish();
+        return Ok(());
+    }
+    let rt = Runtime::cpu(&dir)?;
+
+    for preset in ["micro", "tiny"] {
+        let manifest = Manifest::load(&dir, preset)?;
+        let task = TaskGen::new(CorpusCfg::for_manifest(&manifest), 5);
+        let mut rng = scalestudy::util::Rng::new(1);
+        let batch = task.batch(&mut rng);
+
+        // compile time (one-off)
+        let t0 = std::time::Instant::now();
+        let module = TrainModule::load(&rt, &manifest)?;
+        let compile_s = t0.elapsed().as_secs_f64();
+
+        let params = manifest.init_flat(3);
+        let mut grads = vec![0.0f32; manifest.flat_len()];
+
+        b.iter(&format!("{preset}: PJRT train step (fwd+bwd)"), || {
+            let loss = module.step_into(&params, &batch, &mut grads).unwrap();
+            std::hint::black_box(loss);
+        });
+
+        // flat all-reduce (4 ranks) over this model's gradient size
+        let n = manifest.flat_len();
+        let rank_grads: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 * 0.1; n]).collect();
+        let mut avg = vec![0.0f32; n];
+        b.iter(&format!("{preset}: 4-rank grad average ({n} floats)"), || {
+            avg.fill(0.0);
+            for rg in &rank_grads {
+                for (a, g) in avg.iter_mut().zip(rg) {
+                    *a += g * 0.25;
+                }
+            }
+            std::hint::black_box(&avg);
+        });
+
+        let mut t = Table::new(&format!("{preset} runtime facts"), &["value"]);
+        t.row("params (M)", vec![manifest.total_params as f64 / 1e6]);
+        t.row("compile time (s)", vec![compile_s]);
+        t.row(
+            "tokens per rank-step",
+            vec![(manifest.batch_size * (manifest.enc_len + manifest.dec_len)) as f64],
+        );
+        b.table(t);
+    }
+
+    // full trainer step (2 ranks, ZeRO-1) on micro
+    let manifest = Manifest::load(&dir, "micro")?;
+    let task = TaskGen::new(CorpusCfg::for_manifest(&manifest), 5);
+    let mut trainer = Trainer::new(
+        &rt,
+        &manifest,
+        &task,
+        TrainerCfg {
+            ranks: 2,
+            zero_stage: 1,
+            optimizer: Optimizer::adamw(),
+            schedule: LrSchedule::Constant { lr: 1e-3 },
+            grad_clip: 1.0,
+            seed: 7,
+            loader_workers: 1,
+        },
+    )?;
+    b.iter("micro: full trainer step (2 ranks, ZeRO-1)", || {
+        std::hint::black_box(trainer.step().unwrap());
+    });
+
+    // steady-state tokens/s through the public run() API
+    let mut log = RunLog::new();
+    trainer.run(10, &mut log)?;
+    let mut t = Table::new("micro trainer throughput", &["value"]);
+    t.row("steady tokens/s", vec![log.records.last().unwrap().tokens_per_s]);
+    t.row("mean s/step", vec![log.mean_step_seconds(8).unwrap()]);
+    b.table(t);
+
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,270 @@
+//! Criterion-like micro/macro benchmark harness (the vendor set has no
+//! criterion).  Each `cargo bench` target builds a [`Bench`] and registers
+//! benchmark functions; the harness warms up, runs timed iterations,
+//! reports mean/σ/percentiles with MAD-based outlier counts, and writes a
+//! machine-readable JSON report next to human-readable tables.
+//!
+//! Two benchmark flavours:
+//! * [`Bench::iter`] — wall-clock timing of a closure (runtime hot paths).
+//! * [`Bench::table`] — "model benches": rows of precomputed values (e.g.
+//!   simulated seconds/step) printed as the paper's tables; these have no
+//!   timing loop but land in the same report format.
+
+use crate::json::Json;
+use crate::util::stats::{outlier_mask, Summary};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Configuration for the timing loop.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop early once this much total measurement time has accumulated.
+    pub target_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, min_iters: 10, max_iters: 1000, target_seconds: 3.0 }
+    }
+}
+
+/// One timed result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    pub outliers: usize,
+    pub samples: Vec<f64>,
+}
+
+/// The harness: collects measurements and table rows, then reports.
+pub struct Bench {
+    pub name: &'static str,
+    pub config: BenchConfig,
+    measurements: Vec<Measurement>,
+    tables: Vec<Table>,
+    t_start: Instant,
+}
+
+/// A named table of rows (each row: label + column values).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Printed footnote (e.g. "paper reports ...").
+    pub note: String,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            note: String::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values));
+    }
+
+    pub fn note(&mut self, s: &str) {
+        self.note = s.to_string();
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn markdown(&self) -> String {
+        let mut s = format!("### {}\n\n| |", self.title);
+        for c in &self.columns {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push_str("\n|---|");
+        for _ in &self.columns {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (label, vals) in &self.rows {
+            s.push_str(&format!("| {label} |"));
+            for v in vals {
+                s.push_str(&format!(" {} |", fmt_val(*v)));
+            }
+            s.push('\n');
+        }
+        if !self.note.is_empty() {
+            s.push_str(&format!("\n_{}_\n", self.note));
+        }
+        s
+    }
+}
+
+fn fmt_val(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 || v.abs() < 0.01 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Bench {
+        // honour a quick mode for CI-style runs
+        let mut config = BenchConfig::default();
+        if std::env::var("SCALESTUDY_BENCH_FAST").is_ok() {
+            config = BenchConfig { warmup_iters: 1, min_iters: 3, max_iters: 10, target_seconds: 0.3 };
+        }
+        println!("== bench: {name} ==");
+        Bench { name, config, measurements: Vec::new(), tables: Vec::new(), t_start: Instant::now() }
+    }
+
+    /// Time `f` (seconds per call) under the configured loop.
+    pub fn iter<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        for _ in 0..self.config.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let loop_start = Instant::now();
+        while samples.len() < self.config.max_iters
+            && (samples.len() < self.config.min_iters
+                || loop_start.elapsed().as_secs_f64() < self.config.target_seconds)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&samples);
+        let outliers = outlier_mask(&samples, 5.0).iter().filter(|&&b| b).count();
+        println!(
+            "  {name:<40} mean {:>12} σ {:>10} p50 {:>12} p99 {:>12} (n={}, outliers={})",
+            crate::util::human_time(summary.mean),
+            crate::util::human_time(summary.std),
+            crate::util::human_time(summary.p50),
+            crate::util::human_time(summary.p99),
+            summary.n,
+            outliers
+        );
+        self.measurements.push(Measurement { name: name.to_string(), summary, outliers, samples });
+    }
+
+    /// Time `f` which processes `items` items per call; also reports
+    /// throughput (items/s).
+    pub fn throughput<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) {
+        self.iter(name, &mut f);
+        let m = self.measurements.last().unwrap();
+        println!(
+            "  {name:<40} throughput {:.1} items/s",
+            items / m.summary.mean
+        );
+    }
+
+    /// Register a finished table.
+    pub fn table(&mut self, t: Table) {
+        println!("{}", t.markdown());
+        self.tables.push(t);
+    }
+
+    /// Write the JSON report and finish. Conventional call at the end of
+    /// every bench target's `main`.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("target/bench-reports");
+        let _ = std::fs::create_dir_all(dir);
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str(self.name.to_string()));
+        obj.insert(
+            "wall_seconds".to_string(),
+            Json::Num(self.t_start.elapsed().as_secs_f64()),
+        );
+        let meas: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::Str(m.name.clone())),
+                    ("mean_s", Json::Num(m.summary.mean)),
+                    ("std_s", Json::Num(m.summary.std)),
+                    ("p50_s", Json::Num(m.summary.p50)),
+                    ("p90_s", Json::Num(m.summary.p90)),
+                    ("p99_s", Json::Num(m.summary.p99)),
+                    ("n", Json::Num(m.summary.n as f64)),
+                    ("outliers", Json::Num(m.outliers as f64)),
+                ])
+            })
+            .collect();
+        obj.insert("measurements".to_string(), Json::Arr(meas));
+        let tables: Vec<Json> = self
+            .tables
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("title", Json::Str(t.title.clone())),
+                    (
+                        "columns",
+                        Json::Arr(t.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+                    ),
+                    (
+                        "rows",
+                        Json::Arr(
+                            t.rows
+                                .iter()
+                                .map(|(l, v)| {
+                                    Json::obj(vec![
+                                        ("label", Json::Str(l.clone())),
+                                        ("values", Json::from_f64_slice(v)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        obj.insert("tables".to_string(), Json::Arr(tables));
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, Json::Obj(obj).pretty()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("report: {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iter_collects_min_iters() {
+        std::env::set_var("SCALESTUDY_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        let mut counter = 0u64;
+        b.iter("noop", || counter += 1);
+        assert!(counter >= 3);
+        assert_eq!(b.measurements.len(), 1);
+        assert!(b.measurements[0].summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Table 1", &["2", "4", "8"]);
+        t.row("stage 2", vec![20.38, 12.0, 31.42]);
+        t.row("stage 3", vec![25.78, 23.25, 38.86]);
+        t.note("seconds per step");
+        let md = t.markdown();
+        assert!(md.contains("| stage 2 | 20.38 | 12.00 | 31.42 |"));
+        assert!(md.contains("seconds per step"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row("r", vec![1.0]);
+    }
+}

@@ -1,0 +1,307 @@
+//! Declarative command-line parsing (the vendor set has no clap).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments; generates `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One option/flag specification.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// A (sub)command specification.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// `--key <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// `--key <value>` option that is required (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Positional argument.
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {prog} {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let meta = if o.is_flag { String::new() } else { format!(" <{}>", o.name.to_uppercase()) };
+            let dflt = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if !o.is_flag => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{meta}\n      {}{dflt}\n", o.name, o.help));
+        }
+        s.push_str("  --help\n      print this help\n");
+        s
+    }
+}
+
+/// Parsed argument values for one command.
+#[derive(Clone, Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown option '{name}' requested"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{}'", self.get(name)))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{}'", self.get(name)))
+    }
+
+    /// Comma-separated list of integers ("2,4,8").
+    pub fn get_usize_list(&self, name: &str) -> anyhow::Result<Vec<usize>> {
+        self.get(name)
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{p}'"))
+            })
+            .collect()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+}
+
+/// Outcome of parsing: either matches, or help text to print.
+pub enum Parsed {
+    Run(Matches),
+    Help(String),
+}
+
+/// Top-level application: a set of subcommands.
+pub struct App {
+    pub prog: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(prog: &'static str, about: &'static str) -> Self {
+        App { prog, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn overview(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n", self.prog, self.about, self.prog);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<22} {}\n", c.name, c.about));
+        }
+        s.push_str(&format!("\nRun '{} <COMMAND> --help' for command options.\n", self.prog));
+        s
+    }
+
+    /// Parse argv (excluding the program name). Returns the command name
+    /// and its matches, or help text.
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<(String, Parsed)> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Ok(("help".into(), Parsed::Help(self.overview())));
+        }
+        let name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == *name)
+            .ok_or_else(|| anyhow::anyhow!("unknown command '{name}'\n\n{}", self.overview()))?;
+        match parse_command(cmd, self.prog, &argv[1..])? {
+            Parsed::Help(h) => Ok((name.clone(), Parsed::Help(h))),
+            m => Ok((name.clone(), m)),
+        }
+    }
+}
+
+fn parse_command(cmd: &Command, prog: &str, argv: &[String]) -> anyhow::Result<Parsed> {
+    let mut values = BTreeMap::new();
+    let mut flags = BTreeMap::new();
+    let mut positionals = Vec::new();
+    for o in &cmd.opts {
+        if let Some(d) = &o.default {
+            values.insert(o.name.to_string(), d.clone());
+        }
+        if o.is_flag {
+            flags.insert(o.name.to_string(), false);
+        }
+    }
+
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if a == "--help" || a == "-h" {
+            return Ok(Parsed::Help(cmd.usage(prog)));
+        }
+        if let Some(body) = a.strip_prefix("--") {
+            let (key, inline) = match body.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (body, None),
+            };
+            let spec = cmd
+                .opts
+                .iter()
+                .find(|o| o.name == key)
+                .ok_or_else(|| anyhow::anyhow!("unknown option '--{key}' for '{}'", cmd.name))?;
+            if spec.is_flag {
+                if inline.is_some() {
+                    anyhow::bail!("flag '--{key}' takes no value");
+                }
+                flags.insert(key.to_string(), true);
+            } else {
+                let v = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("option '--{key}' needs a value"))?
+                    }
+                };
+                values.insert(key.to_string(), v);
+            }
+        } else {
+            positionals.push(a.clone());
+        }
+        i += 1;
+    }
+
+    if positionals.len() > cmd.positionals.len() {
+        anyhow::bail!(
+            "too many positional arguments for '{}' (expected {})",
+            cmd.name,
+            cmd.positionals.len()
+        );
+    }
+    for o in &cmd.opts {
+        if !o.is_flag && !values.contains_key(o.name) {
+            anyhow::bail!("missing required option '--{}'", o.name);
+        }
+    }
+    Ok(Parsed::Run(Matches { values, flags, positionals }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("scalestudy", "test app").command(
+            Command::new("table1", "reproduce table 1")
+                .opt("nodes", "2,4,8", "node counts")
+                .opt("model", "mt5-xxl", "model preset")
+                .flag("quiet", "no output")
+                .req("out", "output path"),
+        )
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let (name, parsed) = app()
+            .parse(&sv(&["table1", "--out", "/tmp/x", "--nodes=2,4", "--quiet"]))
+            .unwrap();
+        assert_eq!(name, "table1");
+        let m = match parsed {
+            Parsed::Run(m) => m,
+            _ => panic!("expected run"),
+        };
+        assert_eq!(m.get("model"), "mt5-xxl");
+        assert_eq!(m.get_usize_list("nodes").unwrap(), vec![2, 4]);
+        assert!(m.flag("quiet"));
+        assert_eq!(m.get("out"), "/tmp/x");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(app().parse(&sv(&["table1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(app().parse(&sv(&["table1", "--out", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(app().parse(&sv(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        match app().parse(&sv(&[])).unwrap().1 {
+            Parsed::Help(h) => assert!(h.contains("COMMANDS")),
+            _ => panic!(),
+        }
+        match app().parse(&sv(&["table1", "--help"])).unwrap().1 {
+            Parsed::Help(h) => {
+                assert!(h.contains("--nodes"));
+                assert!(h.contains("[default: 2,4,8]"));
+                assert!(h.contains("[required]"));
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! TOML-subset parser for run configuration files.
+//!
+//! The launcher (`scalestudy train --config run.toml`) and study binaries
+//! read configs in a TOML subset: `[section.subsection]` tables,
+//! `key = value` pairs with string/int/float/bool/array values, and `#`
+//! comments.  Values are materialized into the [`crate::json::Json`] tree
+//! so downstream code has one value type for both formats.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+/// Error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse TOML text into a JSON object tree.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let errf = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(section) = line.strip_prefix('[') {
+            let section = section
+                .strip_suffix(']')
+                .ok_or_else(|| errf("unterminated section header"))?;
+            if section.is_empty() {
+                return Err(errf("empty section name"));
+            }
+            current_path = section.split('.').map(|s| s.trim().to_string()).collect();
+            if current_path.iter().any(|s| s.is_empty()) {
+                return Err(errf("empty section path component"));
+            }
+            // ensure the table exists
+            ensure_table(&mut root, &current_path).map_err(|m| errf(&m))?;
+            continue;
+        }
+
+        let eq = line.find('=').ok_or_else(|| errf("expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(errf("empty key"));
+        }
+        let vtext = line[eq + 1..].trim();
+        let value = parse_value(vtext).map_err(|m| errf(&m))?;
+
+        let table = ensure_table(&mut root, &current_path).map_err(|m| errf(&m))?;
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(errf(&format!("duplicate key '{key}'")));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Parse a TOML file into a JSON object tree.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    Ok(parse(&text)?)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for key in path {
+        let entry = cur
+            .entry(key.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(format!("'{key}' is not a table")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(v: &str) -> Result<Json, String> {
+    if v.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = v.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Json::Str(unescape(body)?));
+    }
+    if v == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(body) = v.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    // number (allow underscores as digit separators, TOML-style)
+    let clean: String = v.chars().filter(|&c| c != '_').collect();
+    clean
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value '{v}'"))
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape '\\{:?}'", other)),
+        }
+    }
+    Ok(out)
+}
+
+/// Split on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_config() {
+        let toml = r#"
+# run config
+seed = 42
+name = "mt5-xxl sweep"   # inline comment
+
+[cluster]
+nodes = 8
+gpus_per_node = 8
+ib_gbps = 200.0
+
+[train.optimizer]
+kind = "adamw"
+lr = 1e-4
+betas = [0.9, 0.999]
+fused = true
+"#;
+        let j = parse(toml).unwrap();
+        assert_eq!(j.get("seed").as_i64(), Some(42));
+        assert_eq!(j.get("name").as_str(), Some("mt5-xxl sweep"));
+        assert_eq!(j.path(&["cluster", "nodes"]).as_i64(), Some(8));
+        assert_eq!(j.path(&["train", "optimizer", "lr"]).as_f64(), Some(1e-4));
+        assert_eq!(
+            j.path(&["train", "optimizer", "betas"]).as_arr().unwrap().len(),
+            2
+        );
+        assert_eq!(j.path(&["train", "optimizer", "fused"]).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn nested_arrays_and_underscores() {
+        let j = parse("xs = [[1, 2], [3, 4]]\nbig = 1_000_000").unwrap();
+        assert_eq!(j.get("big").as_i64(), Some(1_000_000));
+        assert_eq!(j.get("xs").as_arr().unwrap()[1].as_arr().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let j = parse("s = \"a # b\"").unwrap();
+        assert_eq!(j.get("s").as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("dup = 1\ndup = 2").is_err());
+    }
+}

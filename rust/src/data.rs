@@ -1,0 +1,332 @@
+//! Data pipeline: synthetic pre-training corpus, tokenization into
+//! seq2seq batches, and a multi-worker prefetching dataloader.
+//!
+//! The paper's corpora are not available (repro gate); the substitution is
+//! a *learnable* synthetic seq2seq task with natural-language-like token
+//! statistics: source sequences are drawn from a Zipfian unigram model
+//! with first-order Markov structure, and the target is the source passed
+//! through a fixed random vocabulary permutation ("translation") — the
+//! model must learn cross-attention copying plus the permutation, so real
+//! optimization progress is observable (loss curves in EXPERIMENTS.md E6).
+//!
+//! The dataloader is the paper's suspected scaling bottleneck: this module
+//! implements both the serial loader and an N-worker prefetch loader over
+//! a bounded channel (backpressure), and the `dataloader` bench (E4)
+//! measures the throughput cliff the paper hypothesizes.
+
+use crate::runtime::Batch;
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+/// First "content" token id (0 = pad, 1 = bos).
+pub const FIRST_CONTENT_ID: i32 = 2;
+
+/// Geometry + task parameters of the synthetic corpus.
+#[derive(Clone, Debug)]
+pub struct CorpusCfg {
+    pub vocab: usize,
+    pub batch_size: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+    /// Zipf exponent of the unigram distribution (~1.1 for natural text).
+    pub zipf_s: f64,
+    /// Probability of continuing a Markov bigram run instead of
+    /// resampling from the unigram model.
+    pub markov_p: f64,
+    /// Fraction of samples whose tail is padding (variable lengths).
+    pub pad_frac: f64,
+    /// Per-sample CPU cost knob: extra synthesis work per token to mimic
+    /// real tokenization/IO cost in the dataloader benches (0 = free).
+    pub work_per_token: usize,
+}
+
+impl CorpusCfg {
+    /// Config matched to a runtime manifest.
+    pub fn for_manifest(m: &crate::runtime::Manifest) -> CorpusCfg {
+        CorpusCfg {
+            vocab: m.vocab,
+            batch_size: m.batch_size,
+            enc_len: m.enc_len,
+            dec_len: m.dec_len,
+            zipf_s: 1.1,
+            markov_p: 0.35,
+            pad_frac: 0.2,
+            work_per_token: 0,
+        }
+    }
+}
+
+/// The synthetic task: Zipf+Markov source, permuted copy target.
+#[derive(Clone)]
+pub struct TaskGen {
+    cfg: CorpusCfg,
+    /// Fixed vocabulary permutation the model must learn.
+    perm: Arc<Vec<i32>>,
+}
+
+impl TaskGen {
+    pub fn new(cfg: CorpusCfg, task_seed: u64) -> TaskGen {
+        let mut rng = Rng::new(task_seed ^ 0x7A5C_1234_DEAD_BEEF);
+        let content = (cfg.vocab as i32) - FIRST_CONTENT_ID;
+        let mut perm: Vec<i32> = (0..content).collect();
+        rng.shuffle(&mut perm);
+        TaskGen { cfg, perm: Arc::new(perm) }
+    }
+
+    fn map_token(&self, t: i32) -> i32 {
+        debug_assert!(t >= FIRST_CONTENT_ID);
+        FIRST_CONTENT_ID + self.perm[(t - FIRST_CONTENT_ID) as usize]
+    }
+
+    /// Generate one batch with the given stream RNG.
+    pub fn batch(&self, rng: &mut Rng) -> Batch {
+        let c = &self.cfg;
+        let content = (c.vocab as u64) - FIRST_CONTENT_ID as u64;
+        let mut enc = vec![PAD_ID; c.batch_size * c.enc_len];
+        let mut dec_in = vec![PAD_ID; c.batch_size * c.dec_len];
+        let mut targets = vec![PAD_ID; c.batch_size * c.dec_len];
+        for b in 0..c.batch_size {
+            // variable source length
+            let len = if rng.chance(c.pad_frac) {
+                (c.enc_len / 2) + rng.index(c.enc_len / 2)
+            } else {
+                c.enc_len
+            };
+            let mut prev: i32 = FIRST_CONTENT_ID + rng.zipf(content, c.zipf_s) as i32 - 1;
+            for i in 0..len {
+                let tok = if i > 0 && rng.chance(c.markov_p) {
+                    // bigram continuation: deterministic successor
+                    FIRST_CONTENT_ID
+                        + ((prev - FIRST_CONTENT_ID + 7) % content as i32)
+                } else {
+                    FIRST_CONTENT_ID + rng.zipf(content, c.zipf_s) as i32 - 1
+                };
+                enc[b * c.enc_len + i] = tok;
+                prev = tok;
+                // optional synthetic CPU cost (tokenizer/IO stand-in)
+                for w in 0..c.work_per_token {
+                    std::hint::black_box(w * 2654435761);
+                }
+            }
+            // target: permuted copy of the source prefix
+            let tlen = c.dec_len.min(len);
+            dec_in[b * c.dec_len] = BOS_ID;
+            for i in 0..tlen {
+                let mapped = self.map_token(enc[b * c.enc_len + i]);
+                targets[b * c.dec_len + i] = mapped;
+                if i + 1 < c.dec_len {
+                    dec_in[b * c.dec_len + i + 1] = mapped;
+                }
+            }
+        }
+        Batch { enc, dec_in, targets }
+    }
+}
+
+/// Shared throughput counters for a loader.
+#[derive(Default)]
+pub struct LoaderStats {
+    pub batches: AtomicU64,
+    pub wait_ns: AtomicU64,
+}
+
+/// A source of batches: serial (generated inline on `next()`) or
+/// multi-worker (N producer threads + bounded prefetch queue).
+pub enum Loader {
+    Serial { task: TaskGen, rng: Rng, stats: Arc<LoaderStats> },
+    Workers {
+        rx: Receiver<Batch>,
+        handles: Vec<JoinHandle<()>>,
+        stats: Arc<LoaderStats>,
+    },
+}
+
+impl Loader {
+    /// The serial loader the paper suspects: every batch is synthesized on
+    /// the training thread.
+    pub fn serial(task: TaskGen, seed: u64) -> Loader {
+        Loader::Serial { task, rng: Rng::new(seed), stats: Arc::new(LoaderStats::default()) }
+    }
+
+    /// N worker threads prefetching into a bounded queue of `depth`.
+    /// Each worker draws from an independent split of `seed`, so the
+    /// stream is deterministic *as a set* (arrival order may vary).
+    pub fn workers(task: TaskGen, seed: u64, n_workers: usize, depth: usize) -> Loader {
+        assert!(n_workers >= 1);
+        let (tx, rx) = sync_channel(depth.max(1));
+        let stats = Arc::new(LoaderStats::default());
+        let handles = (0..n_workers)
+            .map(|w| {
+                let tx = tx.clone();
+                let task = task.clone();
+                let mut rng = Rng::new(seed).split(w as u64);
+                std::thread::Builder::new()
+                    .name(format!("loader-{w}"))
+                    .spawn(move || {
+                        loop {
+                            let b = task.batch(&mut rng);
+                            if tx.send(b).is_err() {
+                                return; // consumer dropped
+                            }
+                        }
+                    })
+                    .expect("spawn loader worker")
+            })
+            .collect();
+        Loader::Workers { rx, handles, stats }
+    }
+
+    /// Next batch (blocking).
+    pub fn next(&mut self) -> Batch {
+        let t0 = std::time::Instant::now();
+        let (batch, stats) = match self {
+            Loader::Serial { task, rng, stats } => (task.batch(rng), stats.clone()),
+            Loader::Workers { rx, stats, .. } => {
+                (rx.recv().expect("loader workers died"), stats.clone())
+            }
+        };
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        batch
+    }
+
+    pub fn stats(&self) -> Arc<LoaderStats> {
+        match self {
+            Loader::Serial { stats, .. } => stats.clone(),
+            Loader::Workers { stats, .. } => stats.clone(),
+        }
+    }
+}
+
+impl Drop for Loader {
+    fn drop(&mut self) {
+        if let Loader::Workers { rx, handles, .. } = self {
+            // drain so senders unblock, then let threads see the closed
+            // channel and exit
+            while rx.try_recv().is_ok() {}
+            // receiver is dropped with self; workers exit on send error
+            for h in handles.drain(..) {
+                // detach: the thread exits on its next send attempt
+                drop(h);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CorpusCfg {
+        CorpusCfg {
+            vocab: 512,
+            batch_size: 4,
+            enc_len: 32,
+            dec_len: 32,
+            zipf_s: 1.1,
+            markov_p: 0.35,
+            pad_frac: 0.3,
+            work_per_token: 0,
+        }
+    }
+
+    #[test]
+    fn batches_well_formed() {
+        let task = TaskGen::new(cfg(), 1);
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let b = task.batch(&mut rng);
+            assert_eq!(b.enc.len(), 4 * 32);
+            assert_eq!(b.dec_in.len(), 4 * 32);
+            assert_eq!(b.targets.len(), 4 * 32);
+            for &t in b.enc.iter().chain(&b.dec_in).chain(&b.targets) {
+                assert!((0..512).contains(&t), "token {t} out of range");
+            }
+            // decoder input starts with BOS in every row
+            for row in 0..4 {
+                assert_eq!(b.dec_in[row * 32], BOS_ID);
+            }
+        }
+    }
+
+    #[test]
+    fn target_is_permuted_copy() {
+        let task = TaskGen::new(cfg(), 1);
+        let mut rng = Rng::new(3);
+        let b = task.batch(&mut rng);
+        // for non-pad positions, target = perm(enc) and dec_in is the
+        // target shifted right
+        for row in 0..4 {
+            for i in 0..31 {
+                let tgt = b.targets[row * 32 + i];
+                if tgt == PAD_ID {
+                    continue;
+                }
+                assert_eq!(tgt, task.map_token(b.enc[row * 32 + i]));
+                assert_eq!(b.dec_in[row * 32 + i + 1], tgt);
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_is_bijective() {
+        let task = TaskGen::new(cfg(), 9);
+        let mut seen = std::collections::HashSet::new();
+        for t in FIRST_CONTENT_ID..512 {
+            assert!(seen.insert(task.map_token(t)));
+        }
+    }
+
+    #[test]
+    fn serial_loader_deterministic() {
+        let task = TaskGen::new(cfg(), 1);
+        let mut a = Loader::serial(task.clone(), 42);
+        let mut b = Loader::serial(task, 42);
+        for _ in 0..5 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn worker_loader_produces_and_stops() {
+        let task = TaskGen::new(cfg(), 1);
+        let mut l = Loader::workers(task, 7, 2, 4);
+        for _ in 0..10 {
+            let b = l.next();
+            assert_eq!(b.enc.len(), 4 * 32);
+        }
+        assert_eq!(l.stats().batches.load(Ordering::Relaxed), 10);
+        drop(l); // must not hang
+    }
+
+    #[test]
+    fn zipf_statistics_present() {
+        // frequent tokens should dominate: count token frequencies over
+        // many batches and check head-heaviness
+        let task = TaskGen::new(cfg(), 1);
+        let mut rng = Rng::new(5);
+        let mut counts = vec![0u32; 512];
+        for _ in 0..50 {
+            let b = task.batch(&mut rng);
+            for &t in &b.enc {
+                if t >= FIRST_CONTENT_ID {
+                    counts[t as usize] += 1;
+                }
+            }
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u32 = sorted.iter().sum();
+        let top10: u32 = sorted[..10].iter().sum();
+        assert!(
+            top10 as f64 > 0.2 * total as f64,
+            "top-10 tokens should carry >20% of mass, got {}",
+            top10 as f64 / total as f64
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Hardware substrate: the paper's testbed, described analytically.
+//!
+//! "an 8 node 8-A100 DGX system" — DGX A100 nodes (8×A100-80GB, NVSwitch
+//! intra-node) connected by InfiniBand.  Since the physical cluster is not
+//! available (repro gate), these specs drive the performance simulator:
+//! compute times come from a roofline over [`GpuSpec`], communication
+//! times from [`crate::comm`] over [`ClusterSpec`] link parameters.
+//!
+//! All constants are public A100/DGX datasheet numbers, with achievable
+//! fractions calibrated in `sim::calibration` (see DESIGN.md §7).
+
+/// One accelerator.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak dense bf16/fp16 tensor-core throughput (FLOP/s).
+    pub peak_flops_bf16: f64,
+    /// Peak fp32 (non-tensor-core) throughput (FLOP/s).
+    pub peak_flops_fp32: f64,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: f64,
+    /// HBM bandwidth (bytes/s).
+    pub hbm_bw: f64,
+    /// Fraction of peak realistically achieved by a tuned training step
+    /// (Megatron-LM reports ~0.45–0.55 on A100 for large GPT; mt5's
+    /// enc-dec attention mix lands lower).
+    pub achievable_frac: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100-SXM4-80GB.
+    pub fn a100_80g() -> GpuSpec {
+        GpuSpec {
+            name: "A100-SXM4-80GB".into(),
+            peak_flops_bf16: 312e12,
+            peak_flops_fp32: 19.5e12,
+            hbm_bytes: 80.0 * 1024f64.powi(3),
+            hbm_bw: 2.039e12,
+            achievable_frac: 0.42,
+        }
+    }
+
+    /// Sustained training throughput (FLOP/s) after the achievable factor.
+    pub fn sustained_flops(&self) -> f64 {
+        self.peak_flops_bf16 * self.achievable_frac
+    }
+}
+
+/// One node (a DGX A100 chassis).
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub gpus: usize,
+    pub gpu: GpuSpec,
+    /// Per-GPU NVLink/NVSwitch bandwidth (bytes/s, unidirectional usable).
+    pub nvlink_bw: f64,
+    /// NVLink latency per hop (seconds).
+    pub nvlink_latency: f64,
+    /// Host RAM bytes (for ZeRO CPU offload modelling).
+    pub host_ram_bytes: f64,
+    /// PCIe gen4 x16 bandwidth to host (bytes/s) for offload traffic.
+    pub pcie_bw: f64,
+}
+
+impl NodeSpec {
+    /// DGX A100: 8×A100-80GB, NVSwitch 600 GB/s per GPU (300 GB/s usable
+    /// each direction), 2 TB host RAM, PCIe gen4.
+    pub fn dgx_a100() -> NodeSpec {
+        NodeSpec {
+            gpus: 8,
+            gpu: GpuSpec::a100_80g(),
+            nvlink_bw: 250e9,       // achievable all-reduce bus bw per GPU
+            nvlink_latency: 3e-6,
+            host_ram_bytes: 2.0 * 1024f64.powi(4),
+            pcie_bw: 25e9,
+        }
+    }
+}
+
+/// The cluster: homogeneous nodes plus the inter-node fabric.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub node: NodeSpec,
+    /// Per-node injection bandwidth into the IB fabric (bytes/s).
+    pub ib_bw: f64,
+    /// Inter-node latency (seconds) per message.
+    pub ib_latency: f64,
+    /// Spine oversubscription: ratio of aggregate injection bandwidth to
+    /// core bandwidth.  1.0 = non-blocking.  The paper's 8-node slowdown
+    /// is consistent with an oversubscribed (or partially degraded) core:
+    /// when more than `oversub_threshold_nodes` nodes communicate
+    /// simultaneously, per-node effective bandwidth is divided by
+    /// `oversub_factor`.
+    pub oversub_threshold_nodes: usize,
+    pub oversub_factor: f64,
+    /// Shared storage/dataloader front-end aggregate throughput
+    /// (samples/s) — the paper names non-parallel dataloaders as a
+    /// suspected scaling bottleneck; this models the shared source.
+    pub storage_samples_per_s: f64,
+    /// Number of concurrent node clients the storage front-end serves at
+    /// full rate; beyond it the aggregate rate collapses by
+    /// `storage_contention` per extra node (lock convoy / NFS saturation).
+    pub storage_threshold_nodes: usize,
+    pub storage_contention: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed: 8-node DGX A100 pod, HDR InfiniBand
+    /// (200 Gb/s per port), storage front-end sized so dataloading is
+    /// comfortable at small node counts and binds at large ones.
+    /// Calibration (DESIGN.md §7): `ib_bw` is the *measured-effective*
+    /// per-node fabric rate implied by Table 1 (≈6 GB/s — far below HDR
+    /// line rate, consistent with the paper's "importance of having
+    /// sufficient interconnect" remark), and the 8-node anomaly is
+    /// jointly carried by spine oversubscription (×4.4 beyond 4 nodes)
+    /// and storage front-end saturation — the paper's two suspected
+    /// causes.
+    pub fn lps_pod(nodes: usize) -> ClusterSpec {
+        ClusterSpec {
+            nodes,
+            node: NodeSpec::dgx_a100(),
+            ib_bw: 6e9,
+            ib_latency: 5e-6,
+            oversub_threshold_nodes: 4,
+            oversub_factor: 4.4,
+            storage_samples_per_s: 480.0,
+            storage_threshold_nodes: 4,
+            storage_contention: 4.7,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.node.gpus
+    }
+
+    /// Effective per-node IB bandwidth when `active` nodes exchange data
+    /// concurrently (spine contention model).
+    pub fn effective_ib_bw(&self, active: usize) -> f64 {
+        if active > self.oversub_threshold_nodes {
+            // linear degradation from threshold to full oversubscription
+            let over = (active - self.oversub_threshold_nodes) as f64
+                / (self.nodes.max(active) - self.oversub_threshold_nodes).max(1) as f64;
+            self.ib_bw / (1.0 + (self.oversub_factor - 1.0) * over)
+        } else {
+            self.ib_bw
+        }
+    }
+
+    /// Aggregate HBM across the cluster (bytes).
+    pub fn total_hbm(&self) -> f64 {
+        self.total_gpus() as f64 * self.node.gpu.hbm_bytes
+    }
+
+    /// Aggregate storage/dataloader front-end rate (samples/s) with
+    /// `active` node clients attached.
+    pub fn effective_storage_rate(&self, active: usize) -> f64 {
+        if active > self.storage_threshold_nodes {
+            let extra = (active - self.storage_threshold_nodes) as f64;
+            self.storage_samples_per_s / (1.0 + self.storage_contention * extra)
+        } else {
+            self.storage_samples_per_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_datasheet_numbers() {
+        let g = GpuSpec::a100_80g();
+        assert_eq!(g.peak_flops_bf16, 312e12);
+        assert!((g.hbm_bytes - 80.0 * 1024f64.powi(3)).abs() < 1.0);
+        assert!(g.sustained_flops() < g.peak_flops_bf16);
+        assert!(g.sustained_flops() > 0.25 * g.peak_flops_bf16);
+    }
+
+    #[test]
+    fn pod_shapes() {
+        let c = ClusterSpec::lps_pod(8);
+        assert_eq!(c.total_gpus(), 64);
+        assert!(c.total_hbm() > 5.0e12); // 5 TiB aggregate HBM
+    }
+
+    #[test]
+    fn oversubscription_kicks_in_above_threshold() {
+        let c = ClusterSpec::lps_pod(8);
+        let bw2 = c.effective_ib_bw(2);
+        let bw4 = c.effective_ib_bw(4);
+        let bw8 = c.effective_ib_bw(8);
+        assert_eq!(bw2, c.ib_bw);
+        assert_eq!(bw4, c.ib_bw);
+        assert!(bw8 < bw4, "8-node traffic must see contention");
+        assert!(bw8 >= c.ib_bw / c.oversub_factor - 1.0);
+    }
+
+    #[test]
+    fn effective_bw_monotone_nonincreasing() {
+        let c = ClusterSpec::lps_pod(8);
+        let mut prev = f64::INFINITY;
+        for n in 1..=8 {
+            let bw = c.effective_ib_bw(n);
+            assert!(bw <= prev + 1e-9);
+            prev = bw;
+        }
+    }
+}

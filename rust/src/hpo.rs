@@ -1,0 +1,775 @@
+//! Funneled hyperparameter search — the paper's "prune and combine"
+//! procedure over 30 hyperparameter dimensions, 205 trials total.
+//!
+//! > "our study implemented a funneled hyperparameter search approach, in
+//! > which we first broadly observed changes to single parameters at a
+//! > time, while keeping all others constant on a single node.  …  We
+//! > then pruned certain parameters and combined the best resulting
+//! > templates across the first phase and created combination templates
+//! > …  We selected a total of 15 templates to benchmark across 4-8 node
+//! > tests."
+//!
+//! Phases:
+//! 1. **Broad sweep** (single node): one-at-a-time deviations from the
+//!    baseline template, one trial per non-baseline value of each of the
+//!    30 dimensions.
+//! 2. **Prune & combine**: dimensions whose best deviation did not improve
+//!    the objective are pruned (reset to baseline); the survivors are
+//!    combined greedily in descending-gain order, re-evaluating after each
+//!    addition (interactions are real: a combination is kept only if it
+//!    actually helps), then local random recombinations spend the
+//!    remaining trial budget.
+//! 3. **Finalists**: the best 15 distinct templates are benchmarked at
+//!    4–8 nodes (the paper's multi-node tests).
+//!
+//! The objective is the paper's headline metric: **projected time-to-train**
+//! = predicted seconds/step ([`crate::sim`]) × predicted steps-to-target
+//! ([`crate::convergence`]).  Infeasible configs (OOM, divergent LR) get
+//! an infinite objective — exactly how a failed cluster trial behaves.
+
+use crate::convergence::{ConvergenceInputs, LossModel};
+use crate::hardware::ClusterSpec;
+use crate::model::{by_name, ModelCfg};
+use crate::parallel::{ParallelCfg, PipeSchedule};
+use crate::sim::{simulate_step, TrainSetup, Workload};
+use crate::util::Rng;
+use crate::zero::{OptimizerKind, ZeroStage};
+
+/// A hyperparameter value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Val {
+    F(f64),
+    I(i64),
+    B(bool),
+    S(&'static str),
+}
+
+impl Val {
+    pub fn f(&self) -> f64 {
+        match *self {
+            Val::F(x) => x,
+            Val::I(x) => x as f64,
+            Val::B(b) => b as i64 as f64,
+            Val::S(_) => f64::NAN,
+        }
+    }
+
+    pub fn i(&self) -> i64 {
+        match *self {
+            Val::I(x) => x,
+            Val::F(x) => x as i64,
+            Val::B(b) => b as i64,
+            Val::S(_) => 0,
+        }
+    }
+
+    pub fn b(&self) -> bool {
+        matches!(*self, Val::B(true)) || self.i() != 0
+    }
+
+    pub fn s(&self) -> &'static str {
+        match *self {
+            Val::S(s) => s,
+            _ => "",
+        }
+    }
+}
+
+impl std::fmt::Display for Val {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Val::F(x) => write!(f, "{x}"),
+            Val::I(x) => write!(f, "{x}"),
+            Val::B(b) => write!(f, "{b}"),
+            Val::S(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// One hyperparameter dimension: a name, candidate values, and which
+/// index is the baseline.
+#[derive(Clone, Debug)]
+pub struct Dim {
+    pub name: &'static str,
+    pub values: Vec<Val>,
+    pub baseline: usize,
+}
+
+/// The 30-dimension search space of the study.
+pub fn space() -> Vec<Dim> {
+    use Val::*;
+    let d = |name, values: Vec<Val>, baseline| Dim { name, values, baseline };
+    vec![
+        d("lr_peak", vec![F(1e-5), F(5e-5), F(1e-4), F(5e-4), F(1e-3), F(5e-3)], 2),
+        d("lr_schedule", vec![S("constant"), S("linear"), S("invsqrt")], 1),
+        d("warmup_steps", vec![I(0), I(100), I(1000), I(4000)], 2),
+        d("global_batch", vec![I(128), I(256), I(512), I(768), I(1536)], 3),
+        d("micro_batch_cap", vec![I(0), I(4), I(16)], 0), // 0 = auto (largest fit)
+        d("grad_accum_mode", vec![S("auto"), S("min_comm"), S("min_mem")], 0),
+        d("optimizer", vec![S("adamw"), S("adafactor"), S("sgd"), S("lamb")], 0),
+        d("beta1", vec![F(0.85), F(0.9), F(0.95)], 1),
+        d("beta2", vec![F(0.98), F(0.999), F(0.9995)], 1),
+        d("adam_eps", vec![F(1e-6), F(1e-8), F(1e-10)], 1),
+        d("weight_decay", vec![F(0.0), F(0.01), F(0.1), F(0.3)], 1),
+        d("grad_clip", vec![F(0.0), F(1.0), F(5.0)], 1),
+        d("dropout", vec![F(0.0), F(0.1), F(0.2), F(0.3)], 1),
+        d("label_smoothing", vec![F(0.0), F(0.1), F(0.2)], 1),
+        d("precision", vec![S("bf16"), S("fp32")], 0),
+        d("zero_stage", vec![I(0), I(1), I(2), I(3)], 2),
+        d("cpu_offload", vec![B(false), B(true)], 0),
+        d("overlap_comm", vec![B(true), B(false)], 0),
+        d("bucket_msgs", vec![I(5), I(25), I(100)], 1),
+        d("tp_degree", vec![I(1), I(2), I(4), I(8)], 0),
+        d("pp_degree", vec![I(1), I(2), I(4)], 0),
+        d("pipe_schedule", vec![S("1f1b"), S("gpipe")], 0),
+        d("activation_ckpt", vec![B(true), B(false)], 0),
+        d("dataloader_workers", vec![I(1), I(2), I(4), I(8)], 1),
+        d("prefetch_depth", vec![I(1), I(4), I(16)], 1),
+        d("enc_len", vec![I(512), I(1024), I(2048)], 1),
+        d("dec_len", vec![I(128), I(256), I(512)], 1),
+        d("init_scheme", vec![S("normal"), S("scaled")], 0),
+        d("tie_embeddings", vec![B(false), B(true)], 0),
+        d("data_seed", vec![I(13), I(42), I(1234)], 1),
+    ]
+}
+
+/// A template: one chosen value index per dimension.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Template(pub Vec<usize>);
+
+impl Template {
+    pub fn baseline(dims: &[Dim]) -> Template {
+        Template(dims.iter().map(|d| d.baseline).collect())
+    }
+
+    pub fn get<'a>(&self, dims: &'a [Dim], name: &str) -> &'a Val {
+        let i = dims.iter().position(|d| d.name == name).expect("unknown dim");
+        &dims[i].values[self.0[i]]
+    }
+
+    pub fn with(&self, dims: &[Dim], name: &str, value_idx: usize) -> Template {
+        let i = dims.iter().position(|d| d.name == name).expect("unknown dim");
+        let mut t = self.clone();
+        t.0[i] = value_idx;
+        t
+    }
+
+    /// Human-readable diff vs the baseline.
+    pub fn describe(&self, dims: &[Dim]) -> String {
+        let mut parts = Vec::new();
+        for (i, d) in dims.iter().enumerate() {
+            if self.0[i] != d.baseline {
+                parts.push(format!("{}={}", d.name, d.values[self.0[i]]));
+            }
+        }
+        if parts.is_empty() {
+            "baseline".to_string()
+        } else {
+            parts.join(", ")
+        }
+    }
+}
+
+/// Trial outcome.
+#[derive(Clone, Debug)]
+pub struct Score {
+    pub seconds_per_step: f64,
+    pub steps_to_target: Option<f64>,
+    pub feasible: bool,
+}
+
+impl Score {
+    /// The objective: projected time-to-train (seconds); +inf if the
+    /// trial OOMed or diverged.
+    pub fn time_to_train(&self) -> f64 {
+        match (self.feasible, self.steps_to_target) {
+            (true, Some(steps)) => steps * self.seconds_per_step,
+            _ => f64::INFINITY,
+        }
+    }
+}
+
+/// One executed trial.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub id: usize,
+    pub phase: &'static str,
+    pub template: Template,
+    pub nodes: usize,
+    pub score: Score,
+}
+
+/// Study configuration.
+#[derive(Clone, Debug)]
+pub struct FunnelCfg {
+    pub model: String,
+    /// Target loss defining "converged" for the steps-to-target metric
+    /// (relative margin above the model's irreducible loss).
+    pub target_margin: f64,
+    pub phase1_nodes: usize,
+    pub finalist_nodes: Vec<usize>,
+    pub num_finalists: usize,
+    /// Total trial budget across all phases (the paper ran 205).
+    pub total_trials: usize,
+    pub seed: u64,
+}
+
+impl Default for FunnelCfg {
+    fn default() -> Self {
+        FunnelCfg {
+            model: "mt5-base".to_string(),
+            target_margin: 0.55,
+            phase1_nodes: 1,
+            finalist_nodes: vec![4, 6, 8],
+            num_finalists: 15,
+            total_trials: 205,
+            seed: 2023,
+        }
+    }
+}
+
+/// Full study result.
+#[derive(Debug)]
+pub struct FunnelResult {
+    pub trials: Vec<Trial>,
+    /// (template, per-node-count scores) for each finalist.
+    pub finalists: Vec<(Template, Vec<(usize, Score)>)>,
+    pub best: Template,
+    pub pruned_dims: Vec<&'static str>,
+}
+
+/// Evaluate a template on `nodes` nodes: build the simulator setup and the
+/// convergence inputs, return the combined score.
+pub fn evaluate(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize) -> Score {
+    let g = |name: &str| t.get(dims, name);
+
+    // ---- simulator setup
+    let cluster = ClusterSpec::lps_pod(nodes.max(1));
+    let gpus = cluster.total_gpus();
+    let tp = (g("tp_degree").i() as usize).min(cluster.node.gpus);
+    let pp = (g("pp_degree").i() as usize).min(gpus / tp);
+    let dp = (gpus / tp / pp).max(1);
+    let stage = ZeroStage::from_index(g("zero_stage").i() as usize).unwrap();
+    let opt = match g("optimizer").s() {
+        "adafactor" => OptimizerKind::Adafactor,
+        "sgd" => OptimizerKind::SgdMomentum,
+        "lamb" => OptimizerKind::Lamb,
+        _ => OptimizerKind::AdamW,
+    };
+    let setup = TrainSetup {
+        model: model.clone(),
+        cluster,
+        par: ParallelCfg { dp, tp, pp },
+        stage,
+        opt,
+        sched: if g("pipe_schedule").s() == "gpipe" {
+            PipeSchedule::GPipe
+        } else {
+            PipeSchedule::OneFOneB
+        },
+        workload: Workload {
+            global_batch: g("global_batch").i() as usize,
+            enc_len: g("enc_len").i() as u64,
+            dec_len: g("dec_len").i() as u64,
+            ckpt: g("activation_ckpt").b(),
+        },
+        dataloader_workers: g("dataloader_workers").i() as usize,
+        overlap_comm: g("overlap_comm").b(),
+        offload: g("cpu_offload").b(),
+        grad_bucket_msgs: g("bucket_msgs").i() as usize,
+    };
+    let step = simulate_step(&setup);
+
+    // ---- convergence inputs
+    let inp = ConvergenceInputs {
+        lr: g("lr_peak").f()
+            * match g("lr_schedule").s() {
+                // schedule quality enters as an effective-lr factor
+                "constant" => 0.8,
+                "invsqrt" => 1.0,
+                _ => 0.97,
+            },
+        warmup_steps: g("warmup_steps").f(),
+        global_batch: g("global_batch").i() as usize,
+        tokens_per_sample: (g("enc_len").i() + g("dec_len").i()) as u64,
+        opt,
+        weight_decay: g("weight_decay").f(),
+        dropout: g("dropout").f(),
+        grad_clip: g("grad_clip").f(),
+        label_smoothing: g("label_smoothing").f(),
+        full_precision: g("precision").s() == "fp32",
+    };
+    // fp32 halves effective math throughput on tensor cores
+    let sps = if inp.full_precision {
+        step.seconds_per_step() * 2.0
+    } else {
+        step.seconds_per_step()
+    };
+
+    let lm = LossModel::for_model(model);
+    let target = lm.l_inf + 0.0_f64.max(1.0) * 0.0 + cfg_margin_target(&lm, model);
+    let steps = lm.steps_to_loss(&inp, target);
+
+    Score { seconds_per_step: sps, steps_to_target: steps, feasible: step.fits }
+}
+
+fn cfg_margin_target(_lm: &LossModel, _model: &ModelCfg) -> f64 {
+    0.55
+}
+
+/// Run the full funneled study.
+pub fn run_funnel(cfg: &FunnelCfg) -> FunnelResult {
+    let dims = space();
+    let model = by_name(&cfg.model).expect("unknown model");
+    let mut rng = Rng::new(cfg.seed);
+    let mut trials: Vec<Trial> = Vec::new();
+    let mut id = 0usize;
+
+    let run = |t: &Template, phase: &'static str, nodes: usize, trials: &mut Vec<Trial>, id: &mut usize| -> f64 {
+        let score = evaluate(&dims, t, &model, nodes);
+        let obj = score.time_to_train();
+        trials.push(Trial { id: *id, phase, template: t.clone(), nodes, score });
+        *id += 1;
+        obj
+    };
+
+    // ---------- phase 1: baseline + one-at-a-time sweep
+    let baseline = Template::baseline(&dims);
+    let base_obj = run(&baseline, "phase1", cfg.phase1_nodes, &mut trials, &mut id);
+
+    // best value index + gain per dimension
+    let mut best_per_dim: Vec<(usize, f64)> = Vec::with_capacity(dims.len());
+    for (di, d) in dims.iter().enumerate() {
+        let mut best = (d.baseline, 0.0f64);
+        for vi in 0..d.values.len() {
+            if vi == d.baseline {
+                continue;
+            }
+            let mut t = baseline.clone();
+            t.0[di] = vi;
+            let obj = run(&t, "phase1", cfg.phase1_nodes, &mut trials, &mut id);
+            let gain = base_obj - obj;
+            if gain > best.1 {
+                best = (vi, gain);
+            }
+        }
+        best_per_dim.push(best);
+    }
+
+    // ---------- phase 2: prune & combine
+    // prune: dimensions with no improving deviation stay at baseline
+    let pruned_dims: Vec<&'static str> = dims
+        .iter()
+        .zip(&best_per_dim)
+        .filter(|(_, (_, gain))| *gain <= 0.0)
+        .map(|(d, _)| d.name)
+        .collect();
+
+    // survivors in descending gain order
+    let mut survivors: Vec<(usize, usize, f64)> = best_per_dim
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, gain))| *gain > 0.0)
+        .map(|(di, &(vi, gain))| (di, vi, gain))
+        .collect();
+    survivors.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+
+    // greedy forward combination
+    let mut current = baseline.clone();
+    let mut current_obj = base_obj;
+    let mut candidates: Vec<(Template, f64)> = vec![(baseline.clone(), base_obj)];
+    for &(di, vi, _) in &survivors {
+        let mut t = current.clone();
+        t.0[di] = vi;
+        let obj = run(&t, "phase2", cfg.phase1_nodes, &mut trials, &mut id);
+        candidates.push((t.clone(), obj));
+        if obj < current_obj {
+            current = t;
+            current_obj = obj;
+        }
+    }
+
+    // spend the remaining pre-finalist budget on random recombinations of
+    // survivor values around the incumbent
+    let finalist_budget = cfg.num_finalists * cfg.finalist_nodes.len();
+    while id + finalist_budget < cfg.total_trials && !survivors.is_empty() {
+        let mut t = current.clone();
+        // flip 2-4 surviving dimensions to random candidate values
+        let flips = 2 + rng.index(3);
+        for _ in 0..flips {
+            let &(di, best_vi, _) = rng.choose(&survivors);
+            let vi = if rng.chance(0.5) {
+                best_vi
+            } else {
+                rng.index(dims[di].values.len())
+            };
+            t.0[di] = vi;
+        }
+        if t == current {
+            continue;
+        }
+        let obj = run(&t, "phase2", cfg.phase1_nodes, &mut trials, &mut id);
+        candidates.push((t.clone(), obj));
+        if obj < current_obj {
+            current = t;
+            current_obj = obj;
+        }
+    }
+
+    // ---------- phase 3: 15 finalists at 4–8 nodes
+    candidates.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    candidates.dedup_by(|a, b| a.0 == b.0);
+    let finalists_t: Vec<Template> = candidates
+        .iter()
+        .map(|(t, _)| t.clone())
+        .take(cfg.num_finalists)
+        .collect();
+
+    let mut finalists = Vec::new();
+    for t in &finalists_t {
+        let mut rows = Vec::new();
+        for &n in &cfg.finalist_nodes {
+            let score = evaluate(&dims, t, &model, n);
+            trials.push(Trial { id, phase: "finalist", template: t.clone(), nodes: n, score: score.clone() });
+            id += 1;
+            rows.push((n, score));
+        }
+        finalists.push((t.clone(), rows));
+    }
+
+    // best overall = finalist with the lowest best-node time-to-train
+    let best = finalists
+        .iter()
+        .min_by(|a, b| {
+            let fa = a.1.iter().map(|(_, s)| s.time_to_train()).fold(f64::INFINITY, f64::min);
+            let fb = b.1.iter().map(|(_, s)| s.time_to_train()).fold(f64::INFINITY, f64::min);
+            fa.partial_cmp(&fb).unwrap()
+        })
+        .map(|(t, _)| t.clone())
+        .unwrap_or(current);
+
+    FunnelResult { trials, finalists, best, pruned_dims }
+}
+
+// ---------------------------------------------------------------------
+// Comparator search algorithms (ablation of the funnel's design choices,
+// and the paper's stated future work: "a novel hyperparameter search
+// algorithm specifically made for scaling environments").
+// ---------------------------------------------------------------------
+
+/// Outcome of a comparator run: best template + objective at each of the
+/// finalist node counts, under the same trial budget as the funnel.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    pub name: &'static str,
+    pub trials_used: usize,
+    pub best: Template,
+    /// time-to-train of `best` at the funnel's finalist node counts.
+    pub best_at_nodes: Vec<(usize, f64)>,
+}
+
+fn score_at_nodes(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: &[usize]) -> Vec<(usize, f64)> {
+    nodes
+        .iter()
+        .map(|&n| (n, evaluate(dims, t, model, n).time_to_train()))
+        .collect()
+}
+
+fn random_template(dims: &[Dim], rng: &mut Rng) -> Template {
+    Template(dims.iter().map(|d| rng.index(d.values.len())).collect())
+}
+
+/// Pure random search: the whole budget is i.i.d. templates evaluated at
+/// the phase-1 node count; best-of-budget wins.
+pub fn run_random_search(cfg: &FunnelCfg) -> SearchOutcome {
+    let dims = space();
+    let model = by_name(&cfg.model).expect("unknown model");
+    let mut rng = Rng::new(cfg.seed);
+    let mut best = Template::baseline(&dims);
+    let mut best_obj = evaluate(&dims, &best, &model, cfg.phase1_nodes).time_to_train();
+    let mut used = 1;
+    while used < cfg.total_trials {
+        let t = random_template(&dims, &mut rng);
+        let obj = evaluate(&dims, &t, &model, cfg.phase1_nodes).time_to_train();
+        used += 1;
+        if obj < best_obj {
+            best_obj = obj;
+            best = t;
+        }
+    }
+    let best_at_nodes = score_at_nodes(&dims, &best, &model, &cfg.finalist_nodes);
+    SearchOutcome { name: "random", trials_used: used, best, best_at_nodes }
+}
+
+/// Successive halving over node-count rungs: a wide random cohort is
+/// evaluated at 1 node; the top 1/3 are promoted to the mid rung; the top
+/// 1/3 of those to the top rung.  Spends the same total budget.
+pub fn run_successive_halving(cfg: &FunnelCfg) -> SearchOutcome {
+    let dims = space();
+    let model = by_name(&cfg.model).expect("unknown model");
+    let mut rng = Rng::new(cfg.seed ^ 0x5A5A);
+    let rungs = [
+        cfg.phase1_nodes,
+        *cfg.finalist_nodes.first().unwrap_or(&4),
+        *cfg.finalist_nodes.last().unwrap_or(&8),
+    ];
+    // budget split: cohort + cohort/3 + cohort/9 <= total
+    let cohort = cfg.total_trials * 9 / 13;
+    let mut pool: Vec<Template> = (0..cohort).map(|_| random_template(&dims, &mut rng)).collect();
+    let mut used = 0;
+    let mut scored: Vec<(Template, f64)> = Vec::new();
+    for (i, &nodes) in rungs.iter().enumerate() {
+        scored = pool
+            .iter()
+            .map(|t| {
+                let obj = evaluate(&dims, t, &model, nodes).time_to_train();
+                (t.clone(), obj)
+            })
+            .collect();
+        used += pool.len();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        if i + 1 < rungs.len() {
+            let keep = (pool.len() / 3).max(1);
+            pool = scored.iter().take(keep).map(|(t, _)| t.clone()).collect();
+        }
+    }
+    let best = scored.first().map(|(t, _)| t.clone()).unwrap();
+    let best_at_nodes = score_at_nodes(&dims, &best, &model, &cfg.finalist_nodes);
+    SearchOutcome { name: "successive-halving", trials_used: used, best, best_at_nodes }
+}
+
+/// Scaling-aware funnel (the paper's future-work proposal, implemented):
+/// identical to the funnel, except survivors of phase 1 are re-validated
+/// at the *largest* node count before being allowed into combinations —
+/// dimensions whose gain does not transfer across scale (e.g. settings
+/// that only help when communication is cheap) are pruned early, so the
+/// combination budget is spent on scale-robust dimensions only.
+pub fn run_scaling_aware(cfg: &FunnelCfg) -> SearchOutcome {
+    let dims = space();
+    let model = by_name(&cfg.model).expect("unknown model");
+    let mut rng = Rng::new(cfg.seed ^ 0xA11CE);
+    let big = *cfg.finalist_nodes.last().unwrap_or(&8);
+    let mut used = 0;
+    let eval_at = |t: &Template, n: usize, used: &mut usize| {
+        *used += 1;
+        evaluate(&dims, t, &model, n).time_to_train()
+    };
+
+    let baseline = Template::baseline(&dims);
+    let base_small = eval_at(&baseline, cfg.phase1_nodes, &mut used);
+    let base_big = eval_at(&baseline, big, &mut used);
+
+    // phase 1: one-at-a-time at 1 node
+    let mut best_per_dim: Vec<(usize, f64)> = Vec::new();
+    for (di, d) in dims.iter().enumerate() {
+        let mut best = (d.baseline, 0.0f64);
+        for vi in 0..d.values.len() {
+            if vi == d.baseline || used >= cfg.total_trials {
+                continue;
+            }
+            let mut t = baseline.clone();
+            t.0[di] = vi;
+            let gain = base_small - eval_at(&t, cfg.phase1_nodes, &mut used);
+            if gain > best.1 {
+                best = (vi, gain);
+            }
+        }
+        best_per_dim.push(best);
+    }
+
+    // scale-transfer check: survivors must also win at the big rung
+    let mut survivors: Vec<(usize, usize, f64)> = Vec::new();
+    for (di, &(vi, gain)) in best_per_dim.iter().enumerate() {
+        if gain <= 0.0 || used >= cfg.total_trials {
+            continue;
+        }
+        let mut t = baseline.clone();
+        t.0[di] = vi;
+        let big_gain = base_big - eval_at(&t, big, &mut used);
+        if big_gain > 0.0 {
+            survivors.push((di, vi, gain.min(big_gain)));
+        }
+    }
+    survivors.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+
+    // greedy combine, validated at BOTH rungs (worst-of-two objective)
+    let mut current = baseline.clone();
+    let mut current_obj = base_small.max(base_big);
+    for &(di, vi, _) in &survivors {
+        if used + 2 > cfg.total_trials {
+            break;
+        }
+        let mut t = current.clone();
+        t.0[di] = vi;
+        let small = eval_at(&t, cfg.phase1_nodes, &mut used);
+        let bigv = eval_at(&t, big, &mut used);
+        let obj = small.max(bigv);
+        if obj < current_obj {
+            current = t;
+            current_obj = obj;
+        }
+    }
+
+    // spend remainder on random recombinations (same move as the funnel)
+    while used + 2 <= cfg.total_trials && !survivors.is_empty() {
+        let mut t = current.clone();
+        for _ in 0..(1 + rng.index(3)) {
+            let &(di, best_vi, _) = rng.choose(&survivors);
+            t.0[di] = if rng.chance(0.5) { best_vi } else { rng.index(dims[di].values.len()) };
+        }
+        if t == current {
+            continue;
+        }
+        let small = eval_at(&t, cfg.phase1_nodes, &mut used);
+        let bigv = eval_at(&t, big, &mut used);
+        if small.max(bigv) < current_obj {
+            current_obj = small.max(bigv);
+            current = t;
+        }
+    }
+
+    let best_at_nodes = score_at_nodes(&dims, &current, &model, &cfg.finalist_nodes);
+    SearchOutcome { name: "scaling-aware", trials_used: used, best: current, best_at_nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_is_30_dimensional_with_unique_names() {
+        let dims = space();
+        assert_eq!(dims.len(), 30, "the paper sweeps 30 hyperparameters");
+        let mut names = std::collections::HashSet::new();
+        for d in &dims {
+            assert!(names.insert(d.name), "duplicate dim {}", d.name);
+            assert!(d.baseline < d.values.len());
+            assert!(d.values.len() >= 2);
+        }
+    }
+
+    #[test]
+    fn baseline_template_reads_back_baseline_values() {
+        let dims = space();
+        let t = Template::baseline(&dims);
+        assert_eq!(t.get(&dims, "optimizer").s(), "adamw");
+        assert_eq!(t.get(&dims, "zero_stage").i(), 2);
+        assert_eq!(t.describe(&dims), "baseline");
+        let t2 = t.with(&dims, "zero_stage", 3);
+        assert!(t2.describe(&dims).contains("zero_stage=3"));
+    }
+
+    #[test]
+    fn evaluate_baseline_feasible_on_base_model() {
+        let dims = space();
+        let t = Template::baseline(&dims);
+        let model = by_name("mt5-base").unwrap();
+        let s = evaluate(&dims, &t, &model, 1);
+        assert!(s.feasible);
+        assert!(s.steps_to_target.is_some());
+        assert!(s.time_to_train().is_finite());
+    }
+
+    #[test]
+    fn infeasible_config_scores_infinite() {
+        let dims = space();
+        // 13B at ZeRO stage 0 cannot fit 80 GB -> infeasible, like a
+        // failed cluster trial
+        let t = Template::baseline(&dims).with(&dims, "zero_stage", 0);
+        let model = by_name("mt5-xxl").unwrap();
+        let s = evaluate(&dims, &t, &model, 1);
+        assert!(!s.feasible);
+        assert!(s.time_to_train().is_infinite());
+    }
+
+    #[test]
+    fn divergent_lr_scores_infinite_via_loss_model() {
+        // divergence lives in the convergence model: an LR >8x the
+        // optimum returns no steps-to-target
+        let model = by_name("mt5-base").unwrap();
+        let lm = crate::convergence::LossModel::for_model(&model);
+        let mut inp = crate::convergence::ConvergenceInputs::default();
+        inp.lr = lm.lr_opt * 10.0;
+        assert!(lm.steps_to_loss(&inp, lm.l_inf + 0.5).is_none());
+    }
+
+    #[test]
+    fn funnel_runs_exactly_205_trials_and_15_finalists() {
+        let cfg = FunnelCfg::default();
+        let r = run_funnel(&cfg);
+        assert_eq!(r.trials.len(), 205, "the paper ran 205 trials");
+        assert_eq!(r.finalists.len(), 15, "the paper benchmarked 15 templates");
+        // every finalist was evaluated at all requested node counts
+        for (_, rows) in &r.finalists {
+            assert_eq!(rows.len(), 3);
+        }
+    }
+
+    #[test]
+    fn funnel_improves_on_baseline() {
+        let r = run_funnel(&FunnelCfg::default());
+        let dims = space();
+        let model = by_name("mt5-base").unwrap();
+        let base = evaluate(&dims, &Template::baseline(&dims), &model, 1).time_to_train();
+        let best = evaluate(&dims, &r.best, &model, 1).time_to_train();
+        assert!(
+            best <= base,
+            "funnel must not end worse than baseline: {best} vs {base}"
+        );
+    }
+
+    #[test]
+    fn funnel_deterministic_for_seed() {
+        let a = run_funnel(&FunnelCfg::default());
+        let b = run_funnel(&FunnelCfg::default());
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.trials.len(), b.trials.len());
+    }
+
+    #[test]
+    fn pruning_reports_noop_dims() {
+        let r = run_funnel(&FunnelCfg::default());
+        // data_seed cannot move the analytic objective -> always pruned
+        assert!(r.pruned_dims.contains(&"data_seed"));
+    }
+
+    #[test]
+    fn comparators_respect_budget_and_find_feasible_configs() {
+        let cfg = FunnelCfg::default();
+        for outcome in [
+            run_random_search(&cfg),
+            run_successive_halving(&cfg),
+            run_scaling_aware(&cfg),
+        ] {
+            assert!(
+                outcome.trials_used <= cfg.total_trials,
+                "{} used {} trials",
+                outcome.name,
+                outcome.trials_used
+            );
+            // best must at least be feasible at some finalist node count
+            assert!(
+                outcome.best_at_nodes.iter().any(|(_, t)| t.is_finite()),
+                "{}: no feasible node count for best template",
+                outcome.name
+            );
+        }
+    }
+
+    #[test]
+    fn scaling_aware_never_worse_than_funnel_at_largest_scale() {
+        // the future-work algorithm's whole point: robustness at scale
+        let cfg = FunnelCfg::default();
+        let funnel = run_funnel(&cfg);
+        let dims = space();
+        let model = by_name(&cfg.model).unwrap();
+        let big = *cfg.finalist_nodes.last().unwrap();
+        let funnel_big = evaluate(&dims, &funnel.best, &model, big).time_to_train();
+        let sa = run_scaling_aware(&cfg);
+        let sa_big = sa.best_at_nodes.last().unwrap().1;
+        assert!(
+            sa_big <= funnel_big * 1.001,
+            "scaling-aware {sa_big} worse than funnel {funnel_big} at {big} nodes"
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! # ScaleStudy
+//!
+//! Reproduction of *"Scaling Studies for Efficient Parameter Search and
+//! Parallelism for Large Language Model Pre-training"* (CS.DC 2023).
+//!
+//! The library has three strata (see `DESIGN.md`):
+//!
+//! 1. **Substrates** (no external deps beyond the offline vendor set):
+//!    [`util`] (PRNG/stats), [`json`], [`configtoml`], [`cli`],
+//!    [`benchkit`] (criterion-like harness), [`testkit`] (proptest-mini).
+//! 2. **Study machinery** — analytical models of the paper's testbed:
+//!    [`model`] (mt5 zoo + FLOP/memory accounting), [`hardware`]
+//!    (A100/DGX cluster specs), [`comm`] (α–β collective cost models),
+//!    [`zero`] (ZeRO stage 0–3 memory/comm), [`parallel`] (TP/PP),
+//!    [`sim`] (step-time simulator), [`convergence`] (loss scaling laws),
+//!    [`hpo`] (funneled prune-and-combine search), [`metrics`].
+//! 3. **Real runtime** — the three-layer execution path: [`runtime`]
+//!    (PJRT artifact loading/execution), [`data`] (synthetic corpus +
+//!    parallel dataloader), [`train`] (multi-worker data-parallel trainer
+//!    with ZeRO-style sharded optimizer states).
+
+pub mod benchkit;
+pub mod checkpoint;
+pub mod cli;
+pub mod comm;
+pub mod configtoml;
+pub mod convergence;
+pub mod data;
+pub mod hardware;
+pub mod hpo;
+pub mod json;
+pub mod metrics;
+pub mod model;
+pub mod parallel;
+pub mod runconfig;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod train;
+pub mod util;
+pub mod zero;
+
+/// Crate version (from Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Root of the artifacts directory, overridable with `SCALESTUDY_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("SCALESTUDY_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,395 @@
+//! `scalestudy` — launcher CLI for the scaling-study framework.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md §5):
+//! `table1` (E1), `sweep` (E2), `hpo` (E3), `collectives` (E5),
+//! `train` (E6 — real PJRT pre-training), plus `zoo` and `simulate`
+//! utilities.
+
+use scalestudy::cli::{App, Command, Matches, Parsed};
+use scalestudy::comm::{Collective, CommModel};
+use scalestudy::data::{CorpusCfg, TaskGen};
+use scalestudy::hardware::ClusterSpec;
+use scalestudy::hpo;
+use scalestudy::metrics::RunLog;
+use scalestudy::model::{by_name, mt5_zoo};
+use scalestudy::runtime::{Manifest, Runtime};
+use scalestudy::sim::{simulate_step, TrainSetup, PAPER_TABLE1};
+use scalestudy::train::{LrSchedule, Optimizer, Trainer, TrainerCfg};
+use scalestudy::util::{human_bytes, human_time};
+use scalestudy::zero::ZeroStage;
+
+fn app() -> App {
+    App::new("scalestudy", "LLM pre-training scaling studies (CS.DC 2023 reproduction)")
+        .command(
+            Command::new("table1", "reproduce Table 1: ZeRO stage x node count, mt5-XXL")
+                .opt("nodes", "2,4,8", "node counts to simulate")
+                .opt("model", "mt5-xxl", "zoo model"),
+        )
+        .command(
+            Command::new("sweep", "model-size scaling sweep (E2)")
+                .opt("nodes", "1,2,4,8", "node counts")
+                .opt("stage", "2", "ZeRO stage (0-3)"),
+        )
+        .command(
+            Command::new("hpo", "funneled prune-and-combine hyperparameter search (E3)")
+                .opt("model", "mt5-base", "zoo model to optimize")
+                .opt("trials", "205", "total trial budget")
+                .opt("seed", "2023", "search seed"),
+        )
+        .command(
+            Command::new("collectives", "collective cost sweep (E5)")
+                .opt("nodes", "1,2,4,8", "node counts")
+                .opt("mb", "1,64,1024", "message sizes (MiB)"),
+        )
+        .command(
+            Command::new("train", "real PJRT pre-training on a runnable preset (E6)")
+                .opt("config", "", "TOML run config (overrides the individual flags)")
+                .opt("preset", "tiny", "artifact preset (micro/tiny/e2e100m)")
+                .opt("steps", "100", "training steps")
+                .opt("ranks", "4", "data-parallel ranks")
+                .opt("zero", "1", "ZeRO stage for optimizer state (0/1)")
+                .opt("lr", "8e-3", "peak learning rate")
+                .opt("loader-workers", "1", "dataloader workers per rank")
+                .opt("seed", "42", "init + data seed")
+                .opt("csv", "", "write step log CSV to this path")
+                .opt("save", "", "write a checkpoint directory when done")
+                .opt("resume", "", "restore a checkpoint directory before training"),
+        )
+        .command(
+            Command::new("simulate", "seconds/step for one configuration")
+                .opt("model", "mt5-xxl", "zoo model")
+                .opt("nodes", "4", "node count")
+                .opt("stage", "2", "ZeRO stage (0-3)")
+                .opt("tp", "1", "tensor-parallel degree")
+                .opt("pp", "1", "pipeline-parallel degree")
+                .opt("batch", "768", "effective batch size")
+                .flag("no-overlap", "disable comm/compute overlap"),
+        )
+        .command(Command::new("zoo", "list the model zoo with parameter accounting"))
+        .command(
+            Command::new("report", "aggregate target/bench-reports/*.json into markdown")
+                .opt("dir", "target/bench-reports", "reports directory")
+                .opt("out", "", "write markdown here instead of stdout"),
+        )
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    match app.parse(&argv) {
+        Ok((_, Parsed::Help(h))) => println!("{h}"),
+        Ok((name, Parsed::Run(m))) => {
+            let r = match name.as_str() {
+                "table1" => cmd_table1(&m),
+                "sweep" => cmd_sweep(&m),
+                "hpo" => cmd_hpo(&m),
+                "collectives" => cmd_collectives(&m),
+                "train" => cmd_train(&m),
+                "simulate" => cmd_simulate(&m),
+                "zoo" => cmd_zoo(),
+                "report" => cmd_report(&m),
+                _ => unreachable!(),
+            };
+            if let Err(e) = r {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_table1(m: &Matches) -> anyhow::Result<()> {
+    let nodes = m.get_usize_list("nodes")?;
+    let model = by_name(m.get("model")).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    println!(
+        "seconds/step, {} ({:.1}B params), fixed effective batch\n",
+        model.name,
+        model.params() as f64 / 1e9
+    );
+    print!("{:<16}", "stage \\ nodes");
+    for n in &nodes {
+        print!("{n:>10}");
+    }
+    println!();
+    for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
+        print!("stage {:<10}", stage.index());
+        for &n in &nodes {
+            let st = simulate_step(&TrainSetup::dp_pod(model.clone(), n, stage));
+            print!("{:>10.2}", st.seconds_per_step());
+        }
+        println!();
+    }
+    println!("\npaper (mt5-xxl):");
+    for (n, p2, p3) in PAPER_TABLE1 {
+        println!("  {n} nodes: stage2 {p2:.2}  stage3 {p3:.2}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(m: &Matches) -> anyhow::Result<()> {
+    let nodes = m.get_usize_list("nodes")?;
+    let stage = ZeroStage::from_index(m.get_usize("stage")?)
+        .ok_or_else(|| anyhow::anyhow!("stage must be 0-3"))?;
+    println!("seconds/step across the zoo (ZeRO stage {}):\n", stage.index());
+    print!("{:<12}", "model");
+    for n in &nodes {
+        print!("{:>12}", format!("{n} nodes"));
+    }
+    println!("{:>14}", "params");
+    for model in mt5_zoo() {
+        print!("{:<12}", model.name);
+        for &n in &nodes {
+            let st = simulate_step(&TrainSetup::dp_pod(model.clone(), n, stage));
+            if st.fits {
+                print!("{:>12.2}", st.seconds_per_step());
+            } else {
+                print!("{:>12}", "OOM");
+            }
+        }
+        println!("{:>14}", format!("{:.2}B", model.params() as f64 / 1e9));
+    }
+    Ok(())
+}
+
+fn cmd_hpo(m: &Matches) -> anyhow::Result<()> {
+    let cfg = hpo::FunnelCfg {
+        model: m.get("model").to_string(),
+        total_trials: m.get_usize("trials")?,
+        seed: m.get_u64("seed")?,
+        ..hpo::FunnelCfg::default()
+    };
+    let result = hpo::run_funnel(&cfg);
+    let dims = hpo::space();
+    println!("{} trials run; {} dims pruned", result.trials.len(), result.pruned_dims.len());
+    println!("best template: {}", result.best.describe(&dims));
+    for (i, (t, rows)) in result.finalists.iter().take(5).enumerate() {
+        let cells: Vec<String> = rows
+            .iter()
+            .map(|(n, s)| format!("{n}n={}", human_time(s.time_to_train())))
+            .collect();
+        println!("  finalist #{}: [{}] {}", i + 1, cells.join(" "), t.describe(&dims));
+    }
+    Ok(())
+}
+
+fn cmd_collectives(m: &Matches) -> anyhow::Result<()> {
+    let nodes = m.get_usize_list("nodes")?;
+    let sizes = m.get_usize_list("mb")?;
+    println!("collective times (hierarchical NVLink+IB model), 8 GPUs/node\n");
+    for c in Collective::all() {
+        println!("{}:", c.name());
+        print!("  {:<10}", "MiB \\ n");
+        for n in &nodes {
+            print!("{n:>12}");
+        }
+        println!();
+        for &mb in &sizes {
+            print!("  {:<10}", mb);
+            for &n in &nodes {
+                let comm = CommModel::new(ClusterSpec::lps_pod(n.max(1)));
+                let t = comm.time(c, mb as f64 * 1024.0 * 1024.0, n, 8);
+                print!("{:>12}", human_time(t));
+            }
+            println!();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(m: &Matches) -> anyhow::Result<()> {
+    // --config file takes precedence over individual flags
+    let file_cfg = match m.get("config") {
+        "" => None,
+        path => Some(scalestudy::runconfig::RunConfig::from_file(std::path::Path::new(path))?),
+    };
+    let preset_owned;
+    let (preset, steps, cfg) = if let Some(rc) = &file_cfg {
+        preset_owned = rc.preset.clone();
+        (preset_owned.as_str(), rc.steps, rc.trainer.clone())
+    } else {
+        let steps = m.get_u64("steps")?;
+        let cfg = TrainerCfg {
+            ranks: m.get_usize("ranks")?,
+            zero_stage: m.get_usize("zero")?,
+            optimizer: Optimizer::adamw(),
+            schedule: LrSchedule::LinearWarmupDecay {
+                peak: m.get_f64("lr")? as f32,
+                warmup: steps / 10 + 1,
+                total_steps: steps + steps / 5,
+            },
+            grad_clip: 1.0,
+            seed: m.get_u64("seed")?,
+            loader_workers: m.get_usize("loader-workers")?,
+        };
+        (m.get("preset"), steps, cfg)
+    };
+    let dir = scalestudy::artifacts_dir();
+    let rt = Runtime::cpu(&dir)?;
+    let manifest = Manifest::load(&dir, preset)?;
+    let task = TaskGen::new(CorpusCfg::for_manifest(&manifest), cfg.seed);
+    println!(
+        "training {preset} ({:.1}M params) for {steps} steps on {} ranks (ZeRO-{})",
+        manifest.total_params as f64 / 1e6,
+        cfg.ranks,
+        cfg.zero_stage
+    );
+    let mut trainer = Trainer::new(&rt, &manifest, &task, cfg)?;
+    let resume = m.get("resume");
+    if !resume.is_empty() {
+        trainer.load_checkpoint(std::path::Path::new(resume))?;
+        println!("resumed from {resume} at step {}", trainer.step_count());
+    }
+    let mut log = RunLog::new();
+    let mut done = 0;
+    while done < steps {
+        let n = 10.min(steps - done);
+        trainer.run(n, &mut log)?;
+        done += n;
+        println!(
+            "step {done:>5}  loss {:.4}  {:.2} s/step",
+            log.smoothed_loss(10).unwrap(),
+            log.mean_step_seconds(10).unwrap_or(f64::NAN)
+        );
+    }
+    println!("{}", log.ascii_loss_curve(60, 10));
+    let csv = file_cfg
+        .as_ref()
+        .and_then(|rc| rc.csv.clone())
+        .unwrap_or_else(|| m.get("csv").to_string());
+    if !csv.is_empty() {
+        log.write_csv(std::path::Path::new(&csv))?;
+        println!("wrote {csv}");
+    }
+    let save = file_cfg
+        .as_ref()
+        .and_then(|rc| rc.save.clone())
+        .unwrap_or_else(|| m.get("save").to_string());
+    if !save.is_empty() {
+        trainer.save_checkpoint(std::path::Path::new(&save))?;
+        println!("checkpoint saved to {save} (step {})", trainer.step_count());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(m: &Matches) -> anyhow::Result<()> {
+    let model = by_name(m.get("model")).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let nodes = m.get_usize("nodes")?;
+    let stage = ZeroStage::from_index(m.get_usize("stage")?)
+        .ok_or_else(|| anyhow::anyhow!("stage must be 0-3"))?;
+    let mut setup = TrainSetup::dp_pod(model, nodes, stage);
+    let tp = m.get_usize("tp")?;
+    let pp = m.get_usize("pp")?;
+    let gpus = setup.cluster.total_gpus();
+    setup.par = scalestudy::parallel::ParallelCfg { dp: gpus / tp / pp, tp, pp };
+    setup.workload.global_batch = m.get_usize("batch")?;
+    setup.overlap_comm = !m.flag("no-overlap");
+    let st = simulate_step(&setup);
+    if !st.fits {
+        println!("configuration does NOT fit: needs {} per GPU", human_bytes(st.mem_per_gpu));
+        return Ok(());
+    }
+    println!(
+        "model {}, {} nodes, stage {}, dp={} tp={tp} pp={pp}",
+        setup.model.name,
+        nodes,
+        stage.index(),
+        setup.par.dp
+    );
+    println!("  micro-batch/GPU     {}", st.micro_batch);
+    println!("  grad-accum steps    {}", st.num_microbatches);
+    println!("  compute             {}", human_time(st.compute));
+    println!("  exposed comm        {}", human_time(st.exposed_comm));
+    println!("  total comm issued   {}", human_time(st.total_comm));
+    println!("  pipeline bubble     {}", human_time(st.bubble));
+    println!("  optimizer           {}", human_time(st.optimizer));
+    println!("  input stall         {}", human_time(st.stall));
+    println!("  memory per GPU      {}", human_bytes(st.mem_per_gpu));
+    println!("  => seconds/step     {:.3}", st.seconds_per_step());
+    println!("  => samples/s        {:.1}", st.throughput(setup.workload.global_batch));
+    Ok(())
+}
+
+fn cmd_report(m: &Matches) -> anyhow::Result<()> {
+    use scalestudy::json::Json;
+    let dir = std::path::PathBuf::from(m.get("dir"));
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `cargo bench` first)", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    let mut out = String::from("# Bench report summary\n");
+    for e in entries {
+        let j = Json::parse_file(&e.path())?;
+        out.push_str(&format!(
+            "\n## {} ({:.1}s wall)\n",
+            j.get("bench").as_str().unwrap_or("?"),
+            j.get("wall_seconds").as_f64().unwrap_or(0.0)
+        ));
+        for t in j.get("tables").as_arr().unwrap_or(&[]) {
+            out.push_str(&format!("\n### {}\n\n| |", t.get("title").as_str().unwrap_or("")));
+            let cols = t.get("columns").as_arr().unwrap_or(&[]);
+            for c in cols {
+                out.push_str(&format!(" {} |", c.as_str().unwrap_or("")));
+            }
+            out.push_str("\n|---|");
+            for _ in cols {
+                out.push_str("---|");
+            }
+            out.push('\n');
+            for r in t.get("rows").as_arr().unwrap_or(&[]) {
+                out.push_str(&format!("| {} |", r.get("label").as_str().unwrap_or("")));
+                for v in r.get("values").as_arr().unwrap_or(&[]) {
+                    out.push_str(&format!(" {:.2} |", v.as_f64().unwrap_or(f64::NAN)));
+                }
+                out.push('\n');
+            }
+        }
+        let meas = j.get("measurements").as_arr().unwrap_or(&[]);
+        if !meas.is_empty() {
+            out.push_str("\n| measurement | mean | p50 | p99 | n |\n|---|---|---|---|---|\n");
+            for mm in meas {
+                out.push_str(&format!(
+                    "| {} | {} | {} | {} | {} |\n",
+                    mm.get("name").as_str().unwrap_or(""),
+                    human_time(mm.get("mean_s").as_f64().unwrap_or(0.0)),
+                    human_time(mm.get("p50_s").as_f64().unwrap_or(0.0)),
+                    human_time(mm.get("p99_s").as_f64().unwrap_or(0.0)),
+                    mm.get("n").as_i64().unwrap_or(0),
+                ));
+            }
+        }
+    }
+    let path = m.get("out");
+    if path.is_empty() {
+        println!("{out}");
+    } else {
+        std::fs::write(path, &out)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_zoo() -> anyhow::Result<()> {
+    println!(
+        "{:<12} {:>8} {:>8} {:>7} {:>7} {:>10} {:>14}",
+        "model", "d_model", "d_ff", "heads", "layers", "params", "flops/sample"
+    );
+    for m in mt5_zoo().iter().chain(scalestudy::model::runnable_presets().iter()) {
+        println!(
+            "{:<12} {:>8} {:>8} {:>7} {:>7} {:>10} {:>14.2e}",
+            m.name,
+            m.d_model,
+            m.d_ff,
+            m.num_heads,
+            m.enc_layers + m.dec_layers,
+            format!("{:.2}B", m.params() as f64 / 1e9),
+            m.train_flops_per_sample(1024, 256)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Run metrics: step logs, CSV/JSON persistence, projections.
+
+use crate::json::Json;
+use std::io::Write;
+
+/// One optimization step's telemetry.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub lr: f64,
+    pub seconds: f64,
+    pub tokens_per_s: f64,
+}
+
+/// A training-run log with windowed smoothing and persistence.
+#[derive(Default)]
+pub struct RunLog {
+    pub records: Vec<StepRecord>,
+    /// Free-form metadata surfaced in the JSON dump.
+    pub meta: Vec<(String, String)>,
+}
+
+impl RunLog {
+    pub fn new() -> RunLog {
+        RunLog::default()
+    }
+
+    pub fn meta(&mut self, k: &str, v: impl ToString) {
+        self.meta.push((k.to_string(), v.to_string()));
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `w` records.
+    pub fn smoothed_loss(&self, w: usize) -> Option<f64> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(w)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Mean seconds/step over the last `w` records (ignoring the first
+    /// record, which usually carries compile/warmup time).
+    pub fn mean_step_seconds(&self, w: usize) -> Option<f64> {
+        if self.records.len() < 2 {
+            return None;
+        }
+        let body = &self.records[1..];
+        let tail = &body[body.len().saturating_sub(w)..];
+        Some(tail.iter().map(|r| r.seconds).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// CSV dump (step,loss,lr,seconds,tokens_per_s).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,lr,seconds,tokens_per_s")?;
+        for r in &self.records {
+            writeln!(f, "{},{:.6},{:.3e},{:.4},{:.1}", r.step, r.loss, r.lr, r.seconds, r.tokens_per_s)?;
+        }
+        Ok(())
+    }
+
+    /// JSON dump with metadata.
+    pub fn to_json(&self) -> Json {
+        let meta = Json::Obj(
+            self.meta
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect(),
+        );
+        let recs = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("step", Json::Num(r.step as f64)),
+                    ("loss", Json::Num(r.loss)),
+                    ("lr", Json::Num(r.lr)),
+                    ("seconds", Json::Num(r.seconds)),
+                    ("tokens_per_s", Json::Num(r.tokens_per_s)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("meta", meta), ("records", Json::Arr(recs))])
+    }
+
+    /// Render a coarse ASCII loss curve (for terminal logs/EXPERIMENTS.md).
+    pub fn ascii_loss_curve(&self, width: usize, height: usize) -> String {
+        if self.records.len() < 2 || width < 2 || height < 2 {
+            return String::new();
+        }
+        let losses: Vec<f64> = self.records.iter().map(|r| r.loss).collect();
+        let (lo, hi) = losses
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &x| (a.min(x), b.max(x)));
+        let span = (hi - lo).max(1e-9);
+        let mut grid = vec![vec![b' '; width]; height];
+        for (i, &l) in losses.iter().enumerate() {
+            let x = i * (width - 1) / (losses.len() - 1);
+            let y = ((hi - l) / span * (height - 1) as f64).round() as usize;
+            grid[y.min(height - 1)][x] = b'*';
+        }
+        let mut out = String::new();
+        for (row_i, row) in grid.iter().enumerate() {
+            let label = if row_i == 0 {
+                format!("{hi:8.3} |")
+            } else if row_i == height - 1 {
+                format!("{lo:8.3} |")
+            } else {
+                "         |".to_string()
+            };
+            out.push_str(&label);
+            out.push_str(std::str::from_utf8(row).unwrap());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "          +{}\n           steps 1..{}\n",
+            "-".repeat(width),
+            self.records.last().unwrap().step
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log(n: u64) -> RunLog {
+        let mut log = RunLog::new();
+        for s in 1..=n {
+            log.push(StepRecord {
+                step: s,
+                loss: 5.0 / (s as f64).sqrt(),
+                lr: 1e-3,
+                seconds: if s == 1 { 10.0 } else { 1.0 },
+                tokens_per_s: 1000.0,
+            });
+        }
+        log
+    }
+
+    #[test]
+    fn smoothing_and_means() {
+        let log = sample_log(100);
+        let s = log.smoothed_loss(10).unwrap();
+        assert!(s < 1.0);
+        // warmup step excluded from timing
+        let t = log.mean_step_seconds(50).unwrap();
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let log = sample_log(5);
+        let path = std::env::temp_dir().join("scalestudy_log_test.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 6);
+        assert!(text.starts_with("step,loss"));
+    }
+
+    #[test]
+    fn json_has_records_and_meta() {
+        let mut log = sample_log(3);
+        log.meta("preset", "tiny");
+        let j = log.to_json();
+        assert_eq!(j.path(&["meta", "preset"]).as_str(), Some("tiny"));
+        assert_eq!(j.get("records").as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn ascii_curve_renders() {
+        let log = sample_log(50);
+        let art = log.ascii_loss_curve(40, 8);
+        assert!(art.contains('*'));
+        assert!(art.lines().count() >= 8);
+    }
+
+    #[test]
+    fn empty_log_is_safe() {
+        let log = RunLog::new();
+        assert!(log.last_loss().is_none());
+        assert!(log.smoothed_loss(5).is_none());
+        assert!(log.mean_step_seconds(5).is_none());
+        assert_eq!(log.ascii_loss_curve(10, 5), "");
+    }
+}

@@ -1,0 +1,232 @@
+//! mt5-family model zoo with exact parameter / FLOP / memory accounting.
+//!
+//! The paper pre-trains "a set of 5 encoder-decoder LLMs, ranging from 580
+//! million parameters to 13 billion parameters" — the mt5 family (small,
+//! base, large, xl, xxl; mt5-base is the 580 M end and mt5-xxl the 13 B
+//! end).  This module describes those architectures analytically: the
+//! simulator ([`crate::sim`]) and ZeRO memory model ([`crate::zero`]) are
+//! driven entirely by the numbers computed here.
+//!
+//! The *runnable* presets (micro/tiny/e2e100m) mirror
+//! `python/compile/model.py` and are what the PJRT runtime executes; the
+//! paper-scale configs are simulation-only.
+
+/// Architecture of an encoder-decoder transformer (mt5 conventions:
+/// gated-GELU FFN, RMSNorm, tied embeddings, no biases).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: u64,
+    pub d_model: u64,
+    pub d_ff: u64,
+    pub num_heads: u64,
+    pub d_kv: u64,
+    pub enc_layers: u64,
+    pub dec_layers: u64,
+    /// mt5 (T5 v1.1) keeps a *separate* LM head; the runnable presets tie
+    /// it to the embedding (python/compile/model.py convention).
+    pub tied_lm_head: bool,
+}
+
+impl ModelCfg {
+    /// Parameters of one attention block: q,k,v project d_model -> h*d_kv,
+    /// o projects back, plus an RMSNorm scale.
+    pub fn attn_params(&self) -> u64 {
+        let proj = self.d_model * self.num_heads * self.d_kv;
+        4 * proj + self.d_model
+    }
+
+    /// Gated-GELU FFN: wi_0, wi_1 (d->ff) and wo (ff->d) + norm.
+    pub fn ffn_params(&self) -> u64 {
+        3 * self.d_model * self.d_ff + self.d_model
+    }
+
+    /// Embedding table(s): input embedding plus the LM head when untied.
+    pub fn embed_params(&self) -> u64 {
+        let base = self.vocab * self.d_model;
+        if self.tied_lm_head {
+            base
+        } else {
+            2 * base
+        }
+    }
+
+    /// Relative-position bias tables (mt5: per self-attention stack,
+    /// 32 buckets x heads; negligible but counted for exactness).
+    pub fn relpos_params(&self) -> u64 {
+        2 * 32 * self.num_heads
+    }
+
+    /// Total parameter count.
+    pub fn params(&self) -> u64 {
+        let enc = self.enc_layers * (self.attn_params() + self.ffn_params());
+        let dec = self.dec_layers * (2 * self.attn_params() + self.ffn_params());
+        self.embed_params() + enc + dec + self.relpos_params() + 2 * self.d_model
+    }
+
+    /// Non-embedding parameters (the N that matmul FLOPs scale with).
+    pub fn params_nonembed(&self) -> u64 {
+        self.params() - self.embed_params()
+    }
+
+    /// Training FLOPs for one sample of (enc_len, dec_len) tokens:
+    /// forward + backward ≈ 3 × forward; forward counts every matmul
+    /// (projections, attention scores, FFN, logits) at 2 flops per MAC.
+    pub fn train_flops_per_sample(&self, enc_len: u64, dec_len: u64) -> f64 {
+        let d = self.d_model as f64;
+        let h_dkv = (self.num_heads * self.d_kv) as f64;
+        let ff = self.d_ff as f64;
+        let se = enc_len as f64;
+        let sd = dec_len as f64;
+
+        // per-layer matmul FLOPs (multiply-accumulate = 2 flops)
+        let attn_proj = |s: f64| 2.0 * s * d * h_dkv * 4.0; // q,k,v,o
+        let attn_scores = |sq: f64, skv: f64| 2.0 * 2.0 * sq * skv * h_dkv; // QK^T + PV
+        let ffn = |s: f64| 2.0 * s * d * ff * 3.0; // wi0, wi1, wo
+
+        let enc = self.enc_layers as f64
+            * (attn_proj(se) + attn_scores(se, se) + ffn(se));
+        let dec = self.dec_layers as f64
+            * (attn_proj(sd)                 // self-attn projections
+                + attn_scores(sd, sd)
+                + 2.0 * sd * d * h_dkv * 2.0  // cross-attn q,o (decoder side)
+                + 2.0 * se * d * h_dkv * 2.0  // cross-attn k,v (encoder side)
+                + attn_scores(sd, se)
+                + ffn(sd));
+        let logits = 2.0 * sd * d * self.vocab as f64;
+        let fwd = enc + dec + logits;
+        3.0 * fwd // fwd + bwd(≈2× fwd)
+    }
+
+    /// Bytes of activation memory per sample in mixed precision (fp16
+    /// activations; Megatron-style ≈ 34·s·d bytes per layer, decoder
+    /// layers ×1.5 for the extra cross-attention block).
+    pub fn activation_bytes_per_sample(&self, enc_len: u64, dec_len: u64) -> f64 {
+        let d = self.d_model as f64;
+        let per_tok_layer = 34.0 * d;
+        let enc = self.enc_layers as f64 * enc_len as f64 * per_tok_layer;
+        let dec = self.dec_layers as f64 * dec_len as f64 * per_tok_layer * 1.5;
+        enc + dec
+    }
+}
+
+/// The five mt5 models of the paper (architecture hyperparameters from
+/// Xue et al. 2021).
+pub fn mt5_zoo() -> Vec<ModelCfg> {
+    let m = |name: &str, d_model, d_ff, num_heads, d_kv, layers| ModelCfg {
+        name: name.to_string(),
+        vocab: 250_112,
+        d_model,
+        d_ff,
+        num_heads,
+        d_kv,
+        enc_layers: layers,
+        dec_layers: layers,
+        tied_lm_head: false,
+    };
+    vec![
+        m("mt5-small", 512, 1024, 6, 64, 8),
+        m("mt5-base", 768, 2048, 12, 64, 12),
+        m("mt5-large", 1024, 2816, 16, 64, 24),
+        m("mt5-xl", 2048, 5120, 32, 64, 24),
+        m("mt5-xxl", 4096, 10240, 64, 64, 24),
+    ]
+}
+
+/// The PJRT-runnable presets; must mirror `python/compile/model.py`
+/// (learned absolute positions stand in for relative bias — the python
+/// manifest is authoritative for the runtime; these configs drive the
+/// simulator only).
+pub fn runnable_presets() -> Vec<ModelCfg> {
+    let m = |name: &str, vocab, d_model, d_ff, num_heads, layers| ModelCfg {
+        name: name.to_string(),
+        vocab,
+        d_model,
+        d_ff,
+        num_heads,
+        d_kv: d_model / num_heads,
+        enc_layers: layers,
+        dec_layers: layers,
+        tied_lm_head: true,
+    };
+    vec![
+        m("micro", 512, 128, 256, 4, 2),
+        m("tiny", 2048, 256, 640, 4, 4),
+        m("e2e100m", 8192, 640, 1664, 8, 8),
+    ]
+}
+
+/// Look up a zoo model or a runnable preset by name.
+pub fn by_name(name: &str) -> Option<ModelCfg> {
+    mt5_zoo().into_iter().chain(runnable_presets()).find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Published parameter counts (mt5 paper): small 300M, base 580M,
+    /// large 1.2B, xl 3.7B, xxl 13B.  Our accounting must land within 10%
+    /// (residual: vocab padding, relpos detail).
+    #[test]
+    fn zoo_matches_published_sizes() {
+        let published: &[(&str, f64)] = &[
+            ("mt5-small", 300e6),
+            ("mt5-base", 580e6),
+            ("mt5-large", 1.2e9),
+            ("mt5-xl", 3.7e9),
+            ("mt5-xxl", 13e9),
+        ];
+        for (name, want) in published {
+            let m = by_name(name).unwrap();
+            let got = m.params() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.10, "{name}: got {got:.3e}, want {want:.3e} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn paper_range_580m_to_13b() {
+        let base = by_name("mt5-base").unwrap().params() as f64;
+        let xxl = by_name("mt5-xxl").unwrap().params() as f64;
+        assert!((5.2e8..6.5e8).contains(&base));
+        assert!((1.2e10..1.4e10).contains(&xxl));
+    }
+
+    #[test]
+    fn flops_scale_roughly_6nd() {
+        let m = by_name("mt5-xxl").unwrap();
+        let (se, sd) = (1024, 256);
+        let flops = m.train_flops_per_sample(se, sd);
+        let approx = 6.0 * m.params_nonembed() as f64 * (se + sd) as f64 / 2.0;
+        assert!(
+            flops > approx / 3.0 && flops < approx * 3.0,
+            "flops {flops:.3e} vs approx {approx:.3e}"
+        );
+    }
+
+    #[test]
+    fn params_monotone_in_zoo() {
+        let zoo = mt5_zoo();
+        for w in zoo.windows(2) {
+            assert!(w[0].params() < w[1].params());
+        }
+    }
+
+    #[test]
+    fn runnable_presets_exist() {
+        for p in ["micro", "tiny", "e2e100m"] {
+            assert!(by_name(p).is_some());
+        }
+        let n = by_name("e2e100m").unwrap().params() as f64;
+        assert!((0.7e8..1.4e8).contains(&n), "{n:.3e}");
+    }
+
+    #[test]
+    fn activation_memory_positive_and_scales() {
+        let m = by_name("mt5-base").unwrap();
+        let a1 = m.activation_bytes_per_sample(512, 128);
+        let a2 = m.activation_bytes_per_sample(1024, 256);
+        assert!(a1 > 0.0 && a2 > 1.9 * a1);
+    }
+}

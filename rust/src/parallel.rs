@@ -1,0 +1,204 @@
+//! Tensor- and pipeline-parallelism models (the "model parallelism" axis
+//! of the paper's data/model/tensor trichotomy).
+//!
+//! * Tensor parallelism follows Megatron-LM: each transformer layer keeps
+//!   column/row-split matmuls and issues 2 activation all-reduces in
+//!   forward and 2 in backward per layer, always inside a node (NVLink) in
+//!   sane placements.
+//! * Pipeline parallelism follows GPipe/1F1B: `p` stages, `m` microbatches,
+//!   bubble fraction (p-1)/(m+p-1); 1F1B has the same bubble but bounded
+//!   activation memory (min(p, m) live microbatches instead of m).
+
+use crate::comm::CommModel;
+use crate::model::ModelCfg;
+
+/// Degrees of each parallelism axis. `dp × tp × pp` == total GPUs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelCfg {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+}
+
+impl ParallelCfg {
+    pub fn data_only(dp: usize) -> ParallelCfg {
+        ParallelCfg { dp, tp: 1, pp: 1 }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+
+    /// All factorizations of `gpus` into (dp, tp, pp) with tp bounded by
+    /// gpus-per-node (TP across nodes is never sensible on this fabric).
+    pub fn enumerate(gpus: usize, max_tp: usize, max_pp: usize) -> Vec<ParallelCfg> {
+        let mut out = Vec::new();
+        for tp in divisors(gpus) {
+            if tp > max_tp {
+                continue;
+            }
+            for pp in divisors(gpus / tp) {
+                if pp > max_pp {
+                    continue;
+                }
+                out.push(ParallelCfg { dp: gpus / tp / pp, tp, pp });
+            }
+        }
+        out
+    }
+}
+
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// Pipeline schedule kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipeSchedule {
+    GPipe,
+    OneFOneB,
+}
+
+/// Bubble fraction of a step: share of time stages sit idle.
+pub fn bubble_fraction(p: usize, microbatches: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    let mf = microbatches.max(1) as f64;
+    (pf - 1.0) / (mf + pf - 1.0)
+}
+
+/// Live microbatches whose activations are simultaneously resident.
+pub fn live_microbatches(sched: PipeSchedule, p: usize, microbatches: usize) -> usize {
+    match sched {
+        PipeSchedule::GPipe => microbatches,
+        PipeSchedule::OneFOneB => microbatches.min(p),
+    }
+}
+
+/// Per-microbatch tensor-parallel communication time (seconds): Megatron
+/// issues 2 fwd + 2 bwd all-reduces of the layer activations per layer,
+/// across the `tp` group (intra-node NVLink).
+pub fn tp_comm_time(
+    model: &ModelCfg,
+    comm: &CommModel,
+    tp: usize,
+    micro_batch: usize,
+    enc_len: u64,
+    dec_len: u64,
+) -> f64 {
+    if tp <= 1 {
+        return 0.0;
+    }
+    let bytes_tok = 2.0 * model.d_model as f64; // fp16 activations
+    let enc_bytes = micro_batch as f64 * enc_len as f64 * bytes_tok;
+    let dec_bytes = micro_batch as f64 * dec_len as f64 * bytes_tok;
+    let per_layer = 4.0; // 2 fwd + 2 bwd
+    let enc_t = model.enc_layers as f64
+        * per_layer
+        * comm.allreduce(enc_bytes, 1, tp);
+    // decoder: self + cross attention double the all-reduce count
+    let dec_t = model.dec_layers as f64
+        * per_layer
+        * 1.5
+        * comm.allreduce(dec_bytes, 1, tp);
+    enc_t + dec_t
+}
+
+/// Pipeline point-to-point time per microbatch: activations of the cut
+/// layer cross between adjacent stages (fwd) and gradients return (bwd).
+pub fn pp_p2p_time(
+    model: &ModelCfg,
+    comm: &CommModel,
+    pp: usize,
+    micro_batch: usize,
+    enc_len: u64,
+    dec_len: u64,
+    crosses_nodes: bool,
+) -> f64 {
+    if pp <= 1 {
+        return 0.0;
+    }
+    let bytes = micro_batch as f64
+        * (enc_len + dec_len) as f64
+        * 2.0
+        * model.d_model as f64;
+    let (bw, lat) = if crosses_nodes {
+        (comm.cluster.ib_bw, comm.cluster.ib_latency)
+    } else {
+        (comm.cluster.node.nvlink_bw, comm.cluster.node.nvlink_latency)
+    };
+    // fwd + bwd transfer per stage boundary
+    2.0 * (pp as f64 - 1.0) * (lat + bytes / bw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::ClusterSpec;
+    use crate::testkit::{forall, PairOf, UsizeIn};
+
+    #[test]
+    fn bubble_formula_known_points() {
+        assert_eq!(bubble_fraction(1, 8), 0.0);
+        assert!((bubble_fraction(4, 1) - 3.0 / 4.0).abs() < 1e-12);
+        assert!((bubble_fraction(4, 13) - 3.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_bubble_shrinks_with_more_microbatches() {
+        let gen = PairOf(UsizeIn { lo: 2, hi: 16 }, UsizeIn { lo: 1, hi: 64 });
+        forall(&gen, |&(p, m)| {
+            let b1 = bubble_fraction(p, m);
+            let b2 = bubble_fraction(p, m + 1);
+            if b2 > b1 {
+                return Err(format!("bubble grew: p={p} m={m}"));
+            }
+            if !(0.0..1.0).contains(&b1) {
+                return Err(format!("bubble out of range: {b1}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn one_f_one_b_caps_live_microbatches() {
+        assert_eq!(live_microbatches(PipeSchedule::GPipe, 4, 16), 16);
+        assert_eq!(live_microbatches(PipeSchedule::OneFOneB, 4, 16), 4);
+        assert_eq!(live_microbatches(PipeSchedule::OneFOneB, 8, 2), 2);
+    }
+
+    #[test]
+    fn enumerate_covers_and_respects_limits() {
+        let cfgs = ParallelCfg::enumerate(16, 8, 4);
+        assert!(cfgs.iter().all(|c| c.total_gpus() == 16));
+        assert!(cfgs.iter().all(|c| c.tp <= 8 && c.pp <= 4));
+        assert!(cfgs.contains(&ParallelCfg { dp: 16, tp: 1, pp: 1 }));
+        assert!(cfgs.contains(&ParallelCfg { dp: 2, tp: 8, pp: 1 }));
+        // no duplicates
+        let mut seen = std::collections::HashSet::new();
+        for c in &cfgs {
+            assert!(seen.insert((c.dp, c.tp, c.pp)));
+        }
+    }
+
+    #[test]
+    fn tp_comm_grows_with_degree_and_zero_at_one() {
+        let model = crate::model::by_name("mt5-xl").unwrap();
+        let comm = CommModel::new(ClusterSpec::lps_pod(1));
+        assert_eq!(tp_comm_time(&model, &comm, 1, 8, 512, 128), 0.0);
+        let t2 = tp_comm_time(&model, &comm, 2, 8, 512, 128);
+        let t8 = tp_comm_time(&model, &comm, 8, 8, 512, 128);
+        assert!(t2 > 0.0 && t8 > t2);
+    }
+
+    #[test]
+    fn pp_p2p_inter_node_slower() {
+        let model = crate::model::by_name("mt5-xl").unwrap();
+        let comm = CommModel::new(ClusterSpec::lps_pod(2));
+        let intra = pp_p2p_time(&model, &comm, 4, 8, 512, 128, false);
+        let inter = pp_p2p_time(&model, &comm, 4, 8, 512, 128, true);
+        assert!(inter > intra);
+    }
+}

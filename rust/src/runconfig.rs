@@ -1,0 +1,212 @@
+//! Run configuration files: the launcher's TOML interface.
+//!
+//! `scalestudy train --config run.toml` materializes a [`TrainerCfg`] +
+//! run geometry from a TOML file (parsed by [`crate::configtoml`] into
+//! the crate's JSON value tree).  Example (see `examples/configs/`):
+//!
+//! ```toml
+//! preset = "tiny"
+//! steps = 300
+//!
+//! [trainer]
+//! ranks = 4
+//! zero_stage = 1
+//! seed = 42
+//! loader_workers = 2
+//! grad_clip = 1.0
+//!
+//! [optimizer]
+//! kind = "adamw"          # adamw | sgd
+//! weight_decay = 0.01
+//!
+//! [schedule]
+//! kind = "invsqrt"        # constant | linear | invsqrt
+//! peak = 8e-3
+//! warmup = 50
+//! ```
+
+use crate::json::Json;
+use crate::train::{LrSchedule, Optimizer, TrainerCfg};
+use anyhow::{bail, Result};
+
+/// A full run description: what to train and how.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub preset: String,
+    pub steps: u64,
+    pub trainer: TrainerCfg,
+    /// Optional CSV output path.
+    pub csv: Option<String>,
+    /// Optional checkpoint save directory.
+    pub save: Option<String>,
+}
+
+impl RunConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let j = crate::configtoml::parse(text)?;
+        Self::from_value(&j)
+    }
+
+    /// Parse from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    fn from_value(j: &Json) -> Result<RunConfig> {
+        let preset = j
+            .get("preset")
+            .as_str()
+            .unwrap_or("tiny")
+            .to_string();
+        let steps = j.get("steps").as_usize().unwrap_or(100) as u64;
+
+        let t = j.get("trainer");
+        let mut cfg = TrainerCfg {
+            ranks: t.get("ranks").as_usize().unwrap_or(4),
+            zero_stage: t.get("zero_stage").as_usize().unwrap_or(1),
+            seed: t.get("seed").as_usize().unwrap_or(42) as u64,
+            loader_workers: t.get("loader_workers").as_usize().unwrap_or(1),
+            grad_clip: t.get("grad_clip").as_f64().unwrap_or(1.0) as f32,
+            ..TrainerCfg::default()
+        };
+        if cfg.ranks == 0 {
+            bail!("trainer.ranks must be >= 1");
+        }
+        if cfg.zero_stage > 1 {
+            bail!("trainer.zero_stage must be 0 or 1 for the executable trainer");
+        }
+
+        let o = j.get("optimizer");
+        cfg.optimizer = match o.get("kind").as_str().unwrap_or("adamw") {
+            "adamw" => {
+                let mut opt = Optimizer::adamw();
+                if let Optimizer::AdamW { ref mut weight_decay, ref mut beta1, ref mut beta2, .. } = opt {
+                    if let Some(wd) = o.get("weight_decay").as_f64() {
+                        *weight_decay = wd as f32;
+                    }
+                    if let Some(b) = o.get("beta1").as_f64() {
+                        *beta1 = b as f32;
+                    }
+                    if let Some(b) = o.get("beta2").as_f64() {
+                        *beta2 = b as f32;
+                    }
+                }
+                opt
+            }
+            "sgd" => Optimizer::sgd(o.get("momentum").as_f64().unwrap_or(0.9) as f32),
+            k => bail!("unknown optimizer.kind '{k}' (adamw|sgd)"),
+        };
+
+        let s = j.get("schedule");
+        let peak = s.get("peak").as_f64().unwrap_or(8e-3) as f32;
+        let warmup = s.get("warmup").as_usize().unwrap_or(50) as u64;
+        cfg.schedule = match s.get("kind").as_str().unwrap_or("invsqrt") {
+            "constant" => LrSchedule::Constant { lr: peak },
+            "linear" => LrSchedule::LinearWarmupDecay {
+                peak,
+                warmup,
+                total_steps: s
+                    .get("total_steps")
+                    .as_usize()
+                    .map(|x| x as u64)
+                    .unwrap_or(steps + steps / 5),
+            },
+            "invsqrt" => LrSchedule::InvSqrt { peak, warmup },
+            k => bail!("unknown schedule.kind '{k}' (constant|linear|invsqrt)"),
+        };
+
+        Ok(RunConfig {
+            preset,
+            steps,
+            trainer: cfg,
+            csv: j.get("csv").as_str().map(|s| s.to_string()),
+            save: j.get("save").as_str().map(|s| s.to_string()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+preset = "micro"
+steps = 25
+csv = "/tmp/run.csv"
+
+[trainer]
+ranks = 3
+zero_stage = 0
+seed = 7
+loader_workers = 2
+grad_clip = 0.5
+
+[optimizer]
+kind = "adamw"
+weight_decay = 0.1
+beta1 = 0.85
+
+[schedule]
+kind = "linear"
+peak = 1e-3
+warmup = 10
+total_steps = 40
+"#;
+
+    #[test]
+    fn full_config_parses() {
+        let rc = RunConfig::from_toml(FULL).unwrap();
+        assert_eq!(rc.preset, "micro");
+        assert_eq!(rc.steps, 25);
+        assert_eq!(rc.csv.as_deref(), Some("/tmp/run.csv"));
+        assert_eq!(rc.trainer.ranks, 3);
+        assert_eq!(rc.trainer.zero_stage, 0);
+        assert_eq!(rc.trainer.seed, 7);
+        assert!((rc.trainer.grad_clip - 0.5).abs() < 1e-9);
+        match rc.trainer.optimizer {
+            Optimizer::AdamW { beta1, weight_decay, .. } => {
+                assert!((beta1 - 0.85).abs() < 1e-6);
+                assert!((weight_decay - 0.1).abs() < 1e-6);
+            }
+            _ => panic!("expected adamw"),
+        }
+        match rc.trainer.schedule {
+            LrSchedule::LinearWarmupDecay { peak, warmup, total_steps } => {
+                assert!((peak - 1e-3).abs() < 1e-9);
+                assert_eq!(warmup, 10);
+                assert_eq!(total_steps, 40);
+            }
+            _ => panic!("expected linear schedule"),
+        }
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let rc = RunConfig::from_toml("preset = \"tiny\"").unwrap();
+        assert_eq!(rc.preset, "tiny");
+        assert_eq!(rc.steps, 100);
+        assert_eq!(rc.trainer.ranks, 4);
+        assert!(matches!(rc.trainer.schedule, LrSchedule::InvSqrt { .. }));
+        assert!(rc.csv.is_none());
+    }
+
+    #[test]
+    fn sgd_config() {
+        let rc = RunConfig::from_toml(
+            "preset = \"micro\"\n[optimizer]\nkind = \"sgd\"\nmomentum = 0.8",
+        )
+        .unwrap();
+        assert_eq!(rc.trainer.optimizer, Optimizer::sgd(0.8));
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(RunConfig::from_toml("[trainer]\nranks = 0").is_err());
+        assert!(RunConfig::from_toml("[trainer]\nzero_stage = 3").is_err());
+        assert!(RunConfig::from_toml("[optimizer]\nkind = \"rmsprop\"").is_err());
+        assert!(RunConfig::from_toml("[schedule]\nkind = \"cyclic\"").is_err());
+        assert!(RunConfig::from_toml("not toml at all").is_err());
+    }
+}

@@ -1,0 +1,443 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from Rust.  Python never runs here — the HLO text is
+//! parsed, compiled and executed by the XLA CPU PJRT client behind the
+//! `xla` crate (see /opt/xla-example/load_hlo for the reference wiring).
+//!
+//! Artifact contract (one per model preset):
+//! * `<preset>_train.hlo.txt` — `(params..., enc, dec, tgt) -> (loss, grads...)`
+//! * `<preset>_eval.hlo.txt`  — `(params..., enc, dec, tgt) -> (loss,)`
+//! * `<preset>_manifest.json` — parameter names/shapes/init-stds in the
+//!   exact positional order of the HLO signature, plus batch geometry.
+//! * `adamw_<chunk>.hlo.txt`  — fused AdamW over flat f32[chunk].
+
+use crate::json::Json;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor's metadata.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub init_std: f32,
+}
+
+/// Parsed `<preset>_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub params: Vec<ParamSpec>,
+    pub total_params: usize,
+    pub batch_size: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+    pub pad_id: i32,
+    pub vocab: usize,
+    pub train_artifact: String,
+    pub eval_artifact: String,
+    pub adamw_artifact: String,
+    pub adamw_chunk: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, preset: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{preset}_manifest.json"));
+        let j = Json::parse_file(&path).context("loading manifest")?;
+        let params = j
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name").as_str().unwrap_or_default().to_string(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    size: p.get("size").as_usize().unwrap_or(0),
+                    init_std: p.get("init_std").as_f64().unwrap_or(0.02) as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            preset: j.get("preset").as_str().unwrap_or(preset).to_string(),
+            total_params: j.get("total_params").as_usize().unwrap_or(0),
+            batch_size: j.path(&["batch", "size"]).as_usize().unwrap_or(0),
+            enc_len: j.path(&["batch", "enc_len"]).as_usize().unwrap_or(0),
+            dec_len: j.path(&["batch", "dec_len"]).as_usize().unwrap_or(0),
+            pad_id: j.get("pad_id").as_i64().unwrap_or(0) as i32,
+            vocab: j.path(&["config", "vocab"]).as_usize().unwrap_or(0),
+            train_artifact: j.get("train_artifact").as_str().unwrap_or_default().to_string(),
+            eval_artifact: j.get("eval_artifact").as_str().unwrap_or_default().to_string(),
+            adamw_artifact: j.get("adamw_artifact").as_str().unwrap_or_default().to_string(),
+            adamw_chunk: j.get("adamw_chunk").as_usize().unwrap_or(65536),
+            params,
+        })
+    }
+
+    /// Sum of parameter sizes — must equal `total_params`.
+    pub fn flat_len(&self) -> usize {
+        self.params.iter().map(|p| p.size).sum()
+    }
+
+    /// (offset, size) of each tensor in the flat parameter vector.
+    pub fn flat_layout(&self) -> Vec<(usize, usize)> {
+        let mut off = 0;
+        self.params
+            .iter()
+            .map(|p| {
+                let o = off;
+                off += p.size;
+                (o, p.size)
+            })
+            .collect()
+    }
+
+    /// Initialize a flat parameter vector exactly like
+    /// `model.init_params` does in python (normals scaled by init_std;
+    /// norm scales start at 1).  The PRNG differs from jax's — initial
+    /// *distributions* match, not bits; trainability is what the e2e
+    /// tests verify.
+    pub fn init_flat(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut flat = Vec::with_capacity(self.flat_len());
+        for p in &self.params {
+            // RMSNorm scales ("…/norm", "final/enc_norm", "final/dec_norm")
+            if p.name.ends_with("norm") {
+                flat.extend(std::iter::repeat(1.0f32).take(p.size));
+            } else {
+                for _ in 0..p.size {
+                    flat.push(rng.normal_f32(p.init_std));
+                }
+            }
+        }
+        flat
+    }
+}
+
+/// A compiled HLO module.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, many compiled modules.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact by file name.
+    pub fn load(&self, file: &str) -> Result<Module> {
+        let path = self.dir.join(file);
+        if !path.exists() {
+            bail!("artifact {} not found — run `make artifacts` first", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Module { exe })
+    }
+}
+
+impl Module {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))
+    }
+}
+
+pub(crate) fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape{shape:?}: {e}"))
+}
+
+pub(crate) fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape{shape:?}: {e}"))
+}
+
+/// One tokenized batch in the artifact's geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub enc: Vec<i32>,
+    pub dec_in: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// The train-step module: `(params…, enc, dec, tgt) -> (loss, grads…)`,
+/// operating on the flat parameter vector.
+///
+/// Input literals are allocated once and refreshed in place each step via
+/// `copy_raw_from` (≈30 MB of allocator traffic per step avoided on the
+/// `tiny` preset; see EXPERIMENTS.md §Perf L3).
+pub struct TrainModule {
+    pub manifest: Manifest,
+    module: Module,
+    inputs: std::cell::RefCell<Vec<xla::Literal>>,
+}
+
+impl TrainModule {
+    pub fn load(rt: &Runtime, manifest: &Manifest) -> Result<TrainModule> {
+        // pre-allocate the input literals (zeros) with the final shapes
+        let mut inputs = Vec::with_capacity(manifest.params.len() + 3);
+        for spec in &manifest.params {
+            inputs.push(lit_f32(&vec![0.0; spec.size], &spec.shape)?);
+        }
+        let be = manifest.batch_size * manifest.enc_len;
+        let bd = manifest.batch_size * manifest.dec_len;
+        inputs.push(lit_i32(&vec![0; be], &[manifest.batch_size, manifest.enc_len])?);
+        inputs.push(lit_i32(&vec![0; bd], &[manifest.batch_size, manifest.dec_len])?);
+        inputs.push(lit_i32(&vec![0; bd], &[manifest.batch_size, manifest.dec_len])?);
+        Ok(TrainModule {
+            manifest: manifest.clone(),
+            module: rt.load(&manifest.train_artifact)?,
+            inputs: std::cell::RefCell::new(inputs),
+        })
+    }
+
+    /// Run one step: returns (loss, flat gradient vector).
+    pub fn step(&self, flat_params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        let mut grads = vec![0.0f32; self.manifest.flat_len()];
+        let loss = self.step_into(flat_params, batch, &mut grads)?;
+        Ok((loss, grads))
+    }
+
+    /// Allocation-light variant: writes gradients into a caller buffer
+    /// and refreshes the cached input literals in place.
+    pub fn step_into(
+        &self,
+        flat_params: &[f32],
+        batch: &Batch,
+        grads_out: &mut [f32],
+    ) -> Result<f32> {
+        let m = &self.manifest;
+        assert_eq!(flat_params.len(), m.flat_len(), "flat param length");
+        assert_eq!(grads_out.len(), m.flat_len(), "grad buffer length");
+        let mut inputs = self.inputs.borrow_mut();
+        let np = m.params.len();
+        for (i, (off, size)) in m.flat_layout().into_iter().enumerate() {
+            inputs[i]
+                .copy_raw_from(&flat_params[off..off + size])
+                .map_err(|e| anyhow!("param upload: {e}"))?;
+        }
+        inputs[np].copy_raw_from(&batch.enc).map_err(|e| anyhow!("enc upload: {e}"))?;
+        inputs[np + 1].copy_raw_from(&batch.dec_in).map_err(|e| anyhow!("dec upload: {e}"))?;
+        inputs[np + 2].copy_raw_from(&batch.targets).map_err(|e| anyhow!("tgt upload: {e}"))?;
+
+        let out = self.module.run(&inputs)?;
+        if out.len() != 1 + m.params.len() {
+            bail!("train artifact returned {} outputs, want {}", out.len(), 1 + m.params.len());
+        }
+        let loss = out[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss readback: {e}"))?;
+        for ((_, (off, size)), lit) in m.params.iter().zip(m.flat_layout()).zip(&out[1..]) {
+            lit.copy_raw_to(&mut grads_out[off..off + size])
+                .map_err(|e| anyhow!("grad readback: {e}"))?;
+        }
+        Ok(loss)
+    }
+}
+
+/// The eval module: loss only.
+pub struct EvalModule {
+    pub manifest: Manifest,
+    module: Module,
+}
+
+impl EvalModule {
+    pub fn load(rt: &Runtime, manifest: &Manifest) -> Result<EvalModule> {
+        Ok(EvalModule { manifest: manifest.clone(), module: rt.load(&manifest.eval_artifact)? })
+    }
+
+    pub fn loss(&self, flat_params: &[f32], batch: &Batch) -> Result<f32> {
+        let m = &self.manifest;
+        let mut inputs = Vec::with_capacity(m.params.len() + 3);
+        for (spec, (off, size)) in m.params.iter().zip(m.flat_layout()) {
+            inputs.push(lit_f32(&flat_params[off..off + size], &spec.shape)?);
+        }
+        inputs.push(lit_i32(&batch.enc, &[m.batch_size, m.enc_len])?);
+        inputs.push(lit_i32(&batch.dec_in, &[m.batch_size, m.dec_len])?);
+        inputs.push(lit_i32(&batch.targets, &[m.batch_size, m.dec_len])?);
+        let out = self.module.run(&inputs)?;
+        out[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss readback: {e}"))
+    }
+}
+
+/// The fused-AdamW module over fixed-size flat chunks
+/// (`adamw_<chunk>.hlo.txt`): `(p, g, m, v, step, lr, wd) -> (p', m', v')`.
+pub struct AdamWModule {
+    module: Module,
+    pub chunk: usize,
+}
+
+impl AdamWModule {
+    pub fn load(rt: &Runtime, manifest: &Manifest) -> Result<AdamWModule> {
+        Ok(AdamWModule { module: rt.load(&manifest.adamw_artifact)?, chunk: manifest.adamw_chunk })
+    }
+
+    /// Apply the update in place over `p`, `m`, `v` (zero-padding the
+    /// tail chunk).
+    pub fn update(
+        &self,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        step: f32,
+        lr: f32,
+        weight_decay: f32,
+    ) -> Result<()> {
+        let n = p.len();
+        let c = self.chunk;
+        let mut buf_p = vec![0.0f32; c];
+        let mut buf_g = vec![0.0f32; c];
+        let mut buf_m = vec![0.0f32; c];
+        let mut buf_v = vec![0.0f32; c];
+        let mut tmp = vec![0.0f32; c];
+        let mut off = 0;
+        while off < n {
+            let len = c.min(n - off);
+            buf_p[..len].copy_from_slice(&p[off..off + len]);
+            buf_g[..len].copy_from_slice(&g[off..off + len]);
+            buf_m[..len].copy_from_slice(&m[off..off + len]);
+            buf_v[..len].copy_from_slice(&v[off..off + len]);
+            if len < c {
+                for b in [&mut buf_p, &mut buf_g, &mut buf_m, &mut buf_v] {
+                    b[len..].fill(0.0);
+                }
+            }
+            let inputs = [
+                lit_f32(&buf_p, &[c])?,
+                lit_f32(&buf_g, &[c])?,
+                lit_f32(&buf_m, &[c])?,
+                lit_f32(&buf_v, &[c])?,
+                lit_f32(&[step], &[1])?,
+                xla::Literal::scalar(lr),
+                xla::Literal::scalar(weight_decay),
+            ];
+            let out = self.module.run(&inputs)?;
+            if out.len() != 3 {
+                bail!("adamw artifact returned {} outputs", out.len());
+            }
+            out[0].copy_raw_to(&mut tmp).map_err(|e| anyhow!("{e}"))?;
+            p[off..off + len].copy_from_slice(&tmp[..len]);
+            out[1].copy_raw_to(&mut tmp).map_err(|e| anyhow!("{e}"))?;
+            m[off..off + len].copy_from_slice(&tmp[..len]);
+            out[2].copy_raw_to(&mut tmp).map_err(|e| anyhow!("{e}"))?;
+            v[off..off + len].copy_from_slice(&tmp[..len]);
+            off += len;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> String {
+        r#"{
+  "preset": "t",
+  "config": {"vocab": 64, "d_model": 8, "d_ff": 16, "num_heads": 2,
+             "enc_layers": 1, "dec_layers": 1},
+  "batch": {"size": 2, "enc_len": 4, "dec_len": 4},
+  "pad_id": 0,
+  "num_params_tensors": 2,
+  "total_params": 520,
+  "params": [
+    {"name": "embed/token", "shape": [64, 8], "init_std": 1.0, "size": 512},
+    {"name": "final/enc_norm", "shape": [8], "init_std": 0.0, "size": 8}
+  ],
+  "train_artifact": "t_train.hlo.txt",
+  "eval_artifact": "t_eval.hlo.txt",
+  "adamw_artifact": "adamw_65536.hlo.txt",
+  "adamw_chunk": 65536
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn manifest_parses_and_layout_consistent() {
+        let dir = std::env::temp_dir().join("scalestudy_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t_manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir, "t").unwrap();
+        assert_eq!(m.preset, "t");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.flat_len(), 520);
+        assert_eq!(m.total_params, 520);
+        assert_eq!(m.flat_layout(), vec![(0, 512), (512, 8)]);
+        assert_eq!(m.batch_size, 2);
+        assert_eq!(m.vocab, 64);
+    }
+
+    #[test]
+    fn init_flat_norms_are_ones_and_weights_scaled() {
+        let dir = std::env::temp_dir().join("scalestudy_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t_manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir, "t").unwrap();
+        let flat = m.init_flat(7);
+        assert_eq!(flat.len(), 520);
+        // norm scale tensor is all ones
+        assert!(flat[512..].iter().all(|&x| x == 1.0));
+        // embedding init has roughly unit std
+        let emb = &flat[..512];
+        let mean: f32 = emb.iter().sum::<f32>() / 512.0;
+        let var: f32 = emb.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 511.0;
+        assert!(mean.abs() < 0.2, "{mean}");
+        assert!((var.sqrt() - 1.0).abs() < 0.2, "{var}");
+        // determinism
+        assert_eq!(flat, m.init_flat(7));
+        assert_ne!(flat, m.init_flat(8));
+    }
+
+    #[test]
+    fn missing_artifact_reports_helpfully() {
+        let dir = std::env::temp_dir().join("scalestudy_missing_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let rt = Runtime::cpu(&dir).unwrap();
+        let err = match rt.load("nope.hlo.txt") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("load of a missing artifact must fail"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

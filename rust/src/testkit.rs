@@ -1,0 +1,265 @@
+//! Property-based testing mini-framework (the vendor set has no proptest).
+//!
+//! `forall` draws `cases` random inputs from a generator, runs the
+//! property, and on failure greedily shrinks the input (via the
+//! generator's `shrink`) before reporting the minimal counterexample.
+//! The seed is printed on failure and can be pinned via the
+//! `SCALESTUDY_PROPTEST_SEED` environment variable for reproduction.
+//!
+//! Used across coordinator invariants: collective-cost monotonicity, ZeRO
+//! memory partitioning, pipeline-schedule correctness, funnel-search
+//! bookkeeping, dataloader ordering, gradient all-reduce equivalence.
+
+use crate::util::Rng;
+
+/// A generator of random values with an optional shrinker.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values, most aggressive first. Default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Number of cases per property (overridable via env).
+pub fn default_cases() -> usize {
+    std::env::var("SCALESTUDY_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run a property over random inputs; panics with the shrunk
+/// counterexample on failure.
+pub fn forall<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(gen: &G, prop: F) {
+    forall_cases(gen, default_cases(), prop)
+}
+
+pub fn forall_cases<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
+    gen: &G,
+    cases: usize,
+    prop: F,
+) {
+    let seed = std::env::var("SCALESTUDY_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // shrink greedily
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {:?}\n  error: {}",
+                best, best_msg
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- basic gens
+
+/// Uniform usize in [lo, hi] with halving shrink toward lo.
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.index(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != self.lo && mid != *v {
+                out.push(mid);
+            }
+            out.push(v - 1);
+        }
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi) with shrink toward lo.
+pub struct F64In {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for F64In {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.lo {
+            vec![self.lo, self.lo + (*v - self.lo) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Log-uniform f64 (positive ranges).
+pub struct LogF64In {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for LogF64In {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.log_range(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.lo * 1.01 {
+            vec![self.lo, (self.lo * *v).sqrt()]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Fixed choice from a slice (no shrink).
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+impl<T: Clone + std::fmt::Debug> Gen for OneOf<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        self.0[rng.index(self.0.len())].clone()
+    }
+}
+
+/// Vec of values from an inner generator with length in [min_len, max_len];
+/// shrinks by halving the length and shrinking elements.
+pub struct VecOf<G: Gen> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = self.min_len + rng.index(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // drop back half
+            let keep = (v.len() / 2).max(self.min_len);
+            out.push(v[..keep].to_vec());
+            // drop first element
+            let mut tail = v.clone();
+            tail.remove(0);
+            if tail.len() >= self.min_len {
+                out.push(tail);
+            }
+        }
+        // shrink one element
+        if let Some(first) = v.first() {
+            for cand in self.inner.shrink(first) {
+                let mut w = v.clone();
+                w[0] = cand;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let gen = UsizeIn { lo: 1, hi: 100 };
+        forall_cases(&gen, 50, |&v| {
+            if (1..=100).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let gen = UsizeIn { lo: 0, hi: 1000 };
+        let result = std::panic::catch_unwind(|| {
+            forall_cases(&gen, 200, |&v| {
+                if v < 17 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        // greedy halving shrink should land on a small counterexample
+        assert!(msg.contains("input:"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let gen = VecOf { inner: F64In { lo: 0.0, hi: 1.0 }, min_len: 2, max_len: 6 };
+        forall_cases(&gen, 50, |v| {
+            if (2..=6).contains(&v.len()) && v.iter().all(|x| (0.0..1.0).contains(x)) {
+                Ok(())
+            } else {
+                Err("bounds violated".into())
+            }
+        });
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let gen = PairOf(UsizeIn { lo: 0, hi: 10 }, UsizeIn { lo: 0, hi: 10 });
+        let shrunk = gen.shrink(&(5, 7));
+        assert!(shrunk.iter().any(|&(a, _)| a < 5));
+        assert!(shrunk.iter().any(|&(_, b)| b < 7));
+    }
+}

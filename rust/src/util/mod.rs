@@ -1,0 +1,60 @@
+//! Small shared substrates: deterministic PRNG and statistics.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Format a byte count as a human-readable string (GiB/MiB/KiB).
+pub fn human_bytes(b: f64) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    const K: f64 = 1024.0;
+    if b >= G {
+        format!("{:.2} GiB", b / G)
+    } else if b >= M {
+        format!("{:.2} MiB", b / M)
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format seconds with an adaptive unit (h/min/s/ms/µs).
+pub fn human_time(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.2} h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.2} min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KiB");
+        assert_eq!(human_bytes(3.5 * 1024.0 * 1024.0), "3.50 MiB");
+        assert_eq!(human_bytes(80.0 * 1024f64.powi(3)), "80.00 GiB");
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(7200.0), "2.00 h");
+        assert_eq!(human_time(90.0), "1.50 min");
+        assert_eq!(human_time(12.0), "12.00 s");
+        assert_eq!(human_time(0.0205), "20.50 ms");
+        assert_eq!(human_time(42e-6), "42.00 µs");
+    }
+}

@@ -1,0 +1,333 @@
+//! ZeRO (Zero Redundancy Optimizer) stage 0–3 memory and communication
+//! model, following Rajbhandari et al. 2020 ("ZeRO: Memory Optimizations
+//! Toward Training Trillion Parameter Models") — the paper's reference
+//! [6] — and the DeepSpeed documentation (reference [2]).
+//!
+//! Notation: Ψ = parameter count, N_d = data-parallel degree.  Mixed
+//! precision with Adam keeps per GPU:
+//!   fp16 parameters  2Ψ bytes
+//!   fp16 gradients   2Ψ bytes
+//!   fp32 master copy + momentum + variance = KΨ bytes, K = 12
+//!
+//! | stage | partitions                  | per-GPU states             | comm volume |
+//! |-------|-----------------------------|-----------------------------|-------------|
+//! | 0     | nothing (plain DDP)         | (2+2+K)Ψ                    | 2Ψ·2B        |
+//! | 1     | optimizer states            | 2Ψ+2Ψ+KΨ/N_d                | 2Ψ·2B        |
+//! | 2     | + gradients                 | 2Ψ+(2+K)Ψ/N_d               | 2Ψ·2B        |
+//! | 3     | + parameters                | (2+2+K)Ψ/N_d                | 3Ψ·2B        |
+//!
+//! (volumes are the ZeRO paper's §7 send+receive totals per GPU: stages
+//! 0–2 cost one gradient all-reduce ≈ reduce-scatter + all-gather of 2Ψ
+//! bytes; stage 3 adds the forward re-all-gather of fp16 parameters, a
+//! 1.5× increase — the mechanism behind Table 1's stage-3 slowdown.)
+
+use crate::comm::CommModel;
+use crate::model::ModelCfg;
+
+/// DeepSpeed ZeRO stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ZeroStage {
+    /// Plain data parallelism (DDP).
+    Stage0,
+    /// Optimizer-state partitioning (P_os).
+    Stage1,
+    /// + gradient partitioning (P_os+g).
+    Stage2,
+    /// + parameter partitioning (P_os+g+p).
+    Stage3,
+}
+
+impl ZeroStage {
+    pub fn from_index(i: usize) -> Option<ZeroStage> {
+        match i {
+            0 => Some(ZeroStage::Stage0),
+            1 => Some(ZeroStage::Stage1),
+            2 => Some(ZeroStage::Stage2),
+            3 => Some(ZeroStage::Stage3),
+            _ => None,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            ZeroStage::Stage0 => 0,
+            ZeroStage::Stage1 => 1,
+            ZeroStage::Stage2 => 2,
+            ZeroStage::Stage3 => 3,
+        }
+    }
+
+    pub fn all() -> [ZeroStage; 4] {
+        [ZeroStage::Stage0, ZeroStage::Stage1, ZeroStage::Stage2, ZeroStage::Stage3]
+    }
+}
+
+/// Optimizer kind (determines K, the fp32-state multiplier).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// Adam/AdamW: fp32 params + momentum + variance -> K = 12.
+    AdamW,
+    /// SGD with momentum: fp32 params + momentum -> K = 8.
+    SgdMomentum,
+    /// Adafactor (factored second moment): ~fp32 params + O(√) factors -> K ≈ 4.
+    Adafactor,
+    /// LAMB: same state as Adam -> K = 12.
+    Lamb,
+}
+
+impl OptimizerKind {
+    /// Bytes of fp32 optimizer state per parameter (the ZeRO "K").
+    pub fn k_bytes(self) -> f64 {
+        match self {
+            OptimizerKind::AdamW | OptimizerKind::Lamb => 12.0,
+            OptimizerKind::SgdMomentum => 8.0,
+            OptimizerKind::Adafactor => 4.5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OptimizerKind::AdamW => "adamw",
+            OptimizerKind::SgdMomentum => "sgd-momentum",
+            OptimizerKind::Adafactor => "adafactor",
+            OptimizerKind::Lamb => "lamb",
+        }
+    }
+}
+
+/// Per-GPU memory (bytes) for model + optimizer states under a stage.
+/// `psi` = parameters (already divided by any tensor/pipeline parallel
+/// degree), `nd` = data-parallel degree.
+pub fn state_bytes_per_gpu(psi: f64, nd: usize, stage: ZeroStage, opt: OptimizerKind) -> f64 {
+    let ndf = nd.max(1) as f64;
+    let k = opt.k_bytes();
+    match stage {
+        ZeroStage::Stage0 => (2.0 + 2.0 + k) * psi,
+        ZeroStage::Stage1 => (2.0 + 2.0) * psi + k * psi / ndf,
+        ZeroStage::Stage2 => 2.0 * psi + (2.0 + k) * psi / ndf,
+        ZeroStage::Stage3 => (2.0 + 2.0 + k) * psi / ndf,
+    }
+}
+
+/// Per-GPU communication volume (bytes, send+receive) for one step.
+pub fn comm_volume_per_step(psi: f64, stage: ZeroStage) -> f64 {
+    let fp16 = 2.0 * psi; // bytes of fp16 parameters/gradients
+    match stage {
+        // gradient all-reduce ≈ reduce-scatter + all-gather of 2Ψ bytes
+        ZeroStage::Stage0 | ZeroStage::Stage1 | ZeroStage::Stage2 => 2.0 * fp16,
+        // + forward parameter all-gather (backward re-gather overlaps the
+        // reduce-scatter in DeepSpeed's schedule): 3Ψ·2B total
+        ZeroStage::Stage3 => 3.0 * fp16,
+    }
+}
+
+/// The concrete collective schedule one training step issues under each
+/// stage, so the simulator can price latency (message counts) as well as
+/// volume.  `layers` controls ZeRO-3 message granularity: parameters are
+/// gathered layer-by-layer, so small layers pay latency many times.
+#[derive(Clone, Debug)]
+pub struct CommOp {
+    pub what: &'static str,
+    pub collective: crate::comm::Collective,
+    pub bytes: f64,
+    /// Number of messages the volume is split into (latency multiplier).
+    pub messages: usize,
+    /// Can this op overlap backward compute? (DeepSpeed buckets gradient
+    /// reduction behind backprop; ZeRO-3 prefetches next-layer gathers.)
+    pub overlappable: bool,
+}
+
+/// Build the per-step schedule for a stage.
+pub fn step_schedule(psi: f64, stage: ZeroStage, layers: usize) -> Vec<CommOp> {
+    use crate::comm::Collective::*;
+    let fp16 = 2.0 * psi;
+    match stage {
+        ZeroStage::Stage0 => vec![CommOp {
+            what: "grad all-reduce",
+            collective: AllReduce,
+            bytes: fp16,
+            messages: 25, // DeepSpeed default bucket ≈ 2^25 elements
+            overlappable: true,
+        }],
+        ZeroStage::Stage1 => vec![
+            CommOp { what: "grad reduce-scatter", collective: ReduceScatter, bytes: fp16, messages: 25, overlappable: true },
+            CommOp { what: "param all-gather", collective: AllGather, bytes: fp16, messages: 25, overlappable: false },
+        ],
+        ZeroStage::Stage2 => vec![
+            CommOp { what: "grad reduce-scatter (32-bit partitions)", collective: ReduceScatter, bytes: fp16, messages: 25, overlappable: true },
+            CommOp { what: "param all-gather", collective: AllGather, bytes: fp16, messages: 25, overlappable: false },
+        ],
+        ZeroStage::Stage3 => vec![
+            CommOp { what: "fwd param all-gather (16-bit partitions)", collective: AllGather, bytes: fp16, messages: layers.max(1), overlappable: true },
+            CommOp { what: "bwd param re-all-gather", collective: AllGather, bytes: fp16, messages: layers.max(1), overlappable: true },
+            CommOp { what: "grad reduce-scatter", collective: ReduceScatter, bytes: fp16, messages: layers.max(1), overlappable: true },
+        ],
+    }
+}
+
+/// Price a schedule in seconds on a comm model: returns
+/// (total_time, overlappable_time).
+pub fn schedule_time(
+    ops: &[CommOp],
+    comm: &CommModel,
+    nodes: usize,
+    gpus_per_node: usize,
+) -> (f64, f64) {
+    let mut total = 0.0;
+    let mut overlappable = 0.0;
+    for op in ops {
+        let per_msg = op.bytes / op.messages.max(1) as f64;
+        let mut t = 0.0;
+        for _ in 0..op.messages {
+            t += comm.time(op.collective, per_msg, nodes, gpus_per_node);
+        }
+        total += t;
+        if op.overlappable {
+            overlappable += t;
+        }
+    }
+    (total, overlappable)
+}
+
+/// Does this configuration fit in GPU memory?  `activation_bytes` is the
+/// peak activation footprint per GPU for the chosen micro-batch.
+pub fn fits_in_hbm(
+    model: &ModelCfg,
+    stage: ZeroStage,
+    opt: OptimizerKind,
+    nd: usize,
+    tp: usize,
+    pp: usize,
+    activation_bytes: f64,
+    hbm_bytes: f64,
+) -> bool {
+    let psi = model.params() as f64 / (tp * pp).max(1) as f64;
+    let states = state_bytes_per_gpu(psi, nd, stage, opt);
+    // fragmentation + workspace margin (cudnn workspaces, NCCL buffers):
+    let margin = 0.90;
+    states + activation_bytes <= hbm_bytes * margin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, OneOf, PairOf, UsizeIn};
+
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+    /// The ZeRO paper's headline example: 7.5B params, N_d = 64.
+    /// Stage 0: 120 GB; stage 1: 31.4 GB; stage 2: 16.6 GB; stage 3: 1.9 GB.
+    #[test]
+    fn zero_paper_figure1_numbers() {
+        let psi = 7.5e9;
+        let nd = 64;
+        let b0 = state_bytes_per_gpu(psi, nd, ZeroStage::Stage0, OptimizerKind::AdamW);
+        let b1 = state_bytes_per_gpu(psi, nd, ZeroStage::Stage1, OptimizerKind::AdamW);
+        let b2 = state_bytes_per_gpu(psi, nd, ZeroStage::Stage2, OptimizerKind::AdamW);
+        let b3 = state_bytes_per_gpu(psi, nd, ZeroStage::Stage3, OptimizerKind::AdamW);
+        assert!((b0 / 1e9 - 120.0).abs() < 1.0, "{}", b0 / 1e9);
+        assert!((b1 / 1e9 - 31.4).abs() < 0.5, "{}", b1 / 1e9);
+        assert!((b2 / 1e9 - 16.6).abs() < 0.5, "{}", b2 / 1e9);
+        assert!((b3 / 1e9 - 1.9).abs() < 0.2, "{}", b3 / 1e9);
+    }
+
+    #[test]
+    fn stage3_comm_is_1_5x_stage2() {
+        let psi = 13e9;
+        let v2 = comm_volume_per_step(psi, ZeroStage::Stage2);
+        let v3 = comm_volume_per_step(psi, ZeroStage::Stage3);
+        assert!((v3 / v2 - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mt5_xxl_memory_fit_requires_zero() {
+        // 13B params on A100-80GB: stage 0/1 cannot fit (16*13e9 = 208GB);
+        // stage 2 fits at N_d >= 32ish; stage 3 fits easily.
+        let m = crate::model::by_name("mt5-xxl").unwrap();
+        let hbm = 80.0 * GB;
+        let act = 20.0 * GB;
+        assert!(!fits_in_hbm(&m, ZeroStage::Stage0, OptimizerKind::AdamW, 16, 1, 1, act, hbm));
+        assert!(!fits_in_hbm(&m, ZeroStage::Stage1, OptimizerKind::AdamW, 16, 1, 1, act, hbm));
+        assert!(fits_in_hbm(&m, ZeroStage::Stage2, OptimizerKind::AdamW, 64, 1, 1, act, hbm));
+        assert!(fits_in_hbm(&m, ZeroStage::Stage3, OptimizerKind::AdamW, 16, 1, 1, act, hbm));
+    }
+
+    #[test]
+    fn prop_memory_monotone_decreasing_in_stage() {
+        let gen = PairOf(
+            UsizeIn { lo: 2, hi: 64 },
+            OneOf(vec![
+                OptimizerKind::AdamW,
+                OptimizerKind::SgdMomentum,
+                OptimizerKind::Adafactor,
+                OptimizerKind::Lamb,
+            ]),
+        );
+        forall(&gen, |&(nd, opt)| {
+            let psi = 1e9;
+            let mut prev = f64::INFINITY;
+            for stage in ZeroStage::all() {
+                let b = state_bytes_per_gpu(psi, nd, stage, opt);
+                if b > prev + 1e-6 {
+                    return Err(format!("stage {stage:?} uses more memory than previous"));
+                }
+                prev = b;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_partitioned_states_scale_inverse_nd() {
+        let gen = UsizeIn { lo: 1, hi: 128 };
+        forall(&gen, |&nd| {
+            let psi = 2e9;
+            let b = state_bytes_per_gpu(psi, nd, ZeroStage::Stage3, OptimizerKind::AdamW);
+            let expect = 16.0 * psi / nd as f64;
+            if (b - expect).abs() / expect > 1e-9 {
+                return Err(format!("stage3 at nd={nd}: {b} != {expect}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schedule_volumes_match_model() {
+        for stage in ZeroStage::all() {
+            let psi = 1e9;
+            let ops = step_schedule(psi, stage, 48);
+            let total: f64 = ops
+                .iter()
+                .map(|o| match o.collective {
+                    // all-reduce moves 2x its buffer size per rank
+                    crate::comm::Collective::AllReduce => 2.0 * o.bytes,
+                    _ => o.bytes,
+                })
+                .sum();
+            let want = comm_volume_per_step(psi, stage);
+            assert!(
+                (total - want).abs() / want < 1e-9,
+                "{stage:?}: schedule {total:.3e} vs model {want:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn stage3_pays_more_latency_messages() {
+        let s2 = step_schedule(1e9, ZeroStage::Stage2, 48);
+        let s3 = step_schedule(1e9, ZeroStage::Stage3, 48);
+        let msgs = |s: &[CommOp]| s.iter().map(|o| o.messages).sum::<usize>();
+        assert!(msgs(&s3) > msgs(&s2));
+    }
+
+    #[test]
+    fn schedule_time_stage3_slower_than_stage2() {
+        let comm = crate::comm::CommModel::new(crate::hardware::ClusterSpec::lps_pod(4));
+        for nodes in [2usize, 4, 8] {
+            let psi = 13e9;
+            let (t2, _) = schedule_time(&step_schedule(psi, ZeroStage::Stage2, 48), &comm, nodes, 8);
+            let (t3, _) = schedule_time(&step_schedule(psi, ZeroStage::Stage3, 48), &comm, nodes, 8);
+            assert!(t3 > t2, "nodes={nodes}: stage3 {t3} <= stage2 {t2}");
+        }
+    }
+}

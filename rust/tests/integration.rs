@@ -1,0 +1,342 @@
+//! Integration tests over the real three-layer path (require
+//! `make artifacts`; they fail with a clear message otherwise — `make
+//! test` guarantees ordering).  All tests use the `micro` preset: its
+//! train artifact compiles in ~2 s on the CPU PJRT client.
+
+use scalestudy::data::{CorpusCfg, TaskGen};
+use scalestudy::metrics::RunLog;
+use scalestudy::runtime::{AdamWModule, EvalModule, Manifest, Runtime, TrainModule};
+use scalestudy::train::{LrSchedule, Optimizer, Trainer, TrainerCfg};
+use scalestudy::util::Rng;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = scalestudy::artifacts_dir();
+    assert!(
+        dir.join("micro_manifest.json").exists(),
+        "artifacts missing at {} — run `make artifacts` first",
+        dir.display()
+    );
+    dir
+}
+
+fn setup() -> (Runtime, Manifest, TaskGen) {
+    let dir = artifacts();
+    let rt = Runtime::cpu(&dir).expect("pjrt client");
+    let manifest = Manifest::load(&dir, "micro").expect("manifest");
+    let task = TaskGen::new(CorpusCfg::for_manifest(&manifest), 7);
+    (rt, manifest, task)
+}
+
+#[test]
+fn manifest_matches_flat_layout() {
+    let (_, manifest, _) = setup();
+    assert_eq!(manifest.flat_len(), manifest.total_params);
+    assert!(manifest.params.len() > 40, "micro has 51 tensors");
+}
+
+#[test]
+fn train_and_eval_losses_consistent() {
+    let (rt, manifest, task) = setup();
+    let train = TrainModule::load(&rt, &manifest).unwrap();
+    let eval = EvalModule::load(&rt, &manifest).unwrap();
+    let params = manifest.init_flat(3);
+    let mut rng = Rng::new(5);
+    let batch = task.batch(&mut rng);
+    let (loss_t, grads) = train.step(&params, &batch).unwrap();
+    let loss_e = eval.loss(&params, &batch).unwrap();
+    // same forward graph -> same loss
+    assert!((loss_t - loss_e).abs() < 1e-4, "{loss_t} vs {loss_e}");
+    // gradient sanity: nonzero, finite, reasonable scale
+    assert!(grads.iter().all(|g| g.is_finite()));
+    let nonzero = grads.iter().filter(|g| **g != 0.0).count();
+    assert!(nonzero > grads.len() / 2, "{nonzero}/{} nonzero", grads.len());
+    // random-vocab initial loss should be near ln(512) = 6.24
+    assert!((3.0..12.0).contains(&loss_t), "initial loss {loss_t}");
+}
+
+#[test]
+fn executable_is_deterministic() {
+    let (rt, manifest, task) = setup();
+    let train = TrainModule::load(&rt, &manifest).unwrap();
+    let params = manifest.init_flat(11);
+    let mut rng = Rng::new(6);
+    let batch = task.batch(&mut rng);
+    let (l1, g1) = train.step(&params, &batch).unwrap();
+    let (l2, g2) = train.step(&params, &batch).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn gradient_direction_decreases_loss() {
+    let (rt, manifest, task) = setup();
+    let train = TrainModule::load(&rt, &manifest).unwrap();
+    let eval = EvalModule::load(&rt, &manifest).unwrap();
+    let mut params = manifest.init_flat(13);
+    let mut rng = Rng::new(8);
+    let batch = task.batch(&mut rng);
+    let (l0, grads) = train.step(&params, &batch).unwrap();
+    // small SGD step along -grad must reduce loss on the same batch
+    for (p, g) in params.iter_mut().zip(&grads) {
+        *p -= 0.05 * g;
+    }
+    let l1 = eval.loss(&params, &batch).unwrap();
+    assert!(l1 < l0, "{l0} -> {l1}");
+}
+
+#[test]
+fn fused_adamw_artifact_matches_rust_optimizer() {
+    let (rt, manifest, _) = setup();
+    let adamw = AdamWModule::load(&rt, &manifest).unwrap();
+    let n = 70_000; // crosses the 65536 chunk boundary
+    let mut rng = Rng::new(17);
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+    let m0: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.01)).collect();
+    let v0: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.001).abs()).collect();
+
+    // HLO path
+    let (mut p1, mut m1, mut v1) = (p0.clone(), m0.clone(), v0.clone());
+    adamw.update(&mut p1, &g, &mut m1, &mut v1, 3.0, 1e-3, 0.01).unwrap();
+
+    // Rust path (the trainer's formula)
+    let (mut p2, mut m2, mut v2) = (p0, m0, v0);
+    let (b1, b2, eps): (f32, f32, f32) = (0.9, 0.999, 1e-8);
+    let bc1 = 1.0 - b1.powf(3.0);
+    let bc2 = 1.0 - b2.powf(3.0);
+    for i in 0..n {
+        m2[i] = b1 * m2[i] + (1.0 - b1) * g[i];
+        v2[i] = b2 * v2[i] + (1.0 - b2) * g[i] * g[i];
+        let mhat = m2[i] / bc1;
+        let vhat = v2[i] / bc2;
+        p2[i] -= 1e-3 * (mhat / (vhat.sqrt() + eps) + 0.01 * p2[i]);
+    }
+    for i in (0..n).step_by(997) {
+        assert!(
+            (p1[i] - p2[i]).abs() < 2e-5,
+            "param {i}: hlo {} vs rust {}",
+            p1[i],
+            p2[i]
+        );
+        assert!((m1[i] - m2[i]).abs() < 1e-6);
+        assert!((v1[i] - v2[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn zero1_and_zero0_produce_identical_training() {
+    // The core ZeRO invariant: sharding optimizer state across ranks must
+    // not change the math — loss trajectories agree bit-for-bit-ish.
+    let (rt, manifest, task) = setup();
+    let mk = |stage: usize| TrainerCfg {
+        ranks: 3,
+        zero_stage: stage,
+        optimizer: Optimizer::adamw(),
+        schedule: LrSchedule::Constant { lr: 5e-3 },
+        grad_clip: 1.0,
+        seed: 99,
+        loader_workers: 0, // serial loader => identical batch streams
+    };
+    let mut t0 = Trainer::new(&rt, &manifest, &task, mk(0)).unwrap();
+    let mut t1 = Trainer::new(&rt, &manifest, &task, mk(1)).unwrap();
+    for step in 0..5 {
+        let l0 = t0.step().unwrap();
+        let l1 = t1.step().unwrap();
+        assert!(
+            (l0 - l1).abs() < 1e-4,
+            "step {step}: stage0 {l0} vs stage1 {l1}"
+        );
+    }
+    // parameters end up identical too (same updates, different sharding)
+    let max_dp = t0
+        .params
+        .iter()
+        .zip(&t1.params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dp < 1e-5, "param divergence {max_dp}");
+    // ...but stage 1 holds 1/ranks of the optimizer state
+    assert!(
+        t1.optimizer_state_bytes() * 3 <= t0.optimizer_state_bytes() + 64,
+        "zero1 {} vs zero0 {}",
+        t1.optimizer_state_bytes(),
+        t0.optimizer_state_bytes()
+    );
+}
+
+#[test]
+fn training_makes_progress_and_is_seed_deterministic() {
+    let (rt, manifest, task) = setup();
+    let cfg = TrainerCfg {
+        ranks: 2,
+        zero_stage: 1,
+        optimizer: Optimizer::adamw(),
+        schedule: LrSchedule::InvSqrt { peak: 2e-2, warmup: 5 },
+        grad_clip: 1.0,
+        seed: 1234,
+        loader_workers: 0,
+    };
+    let mut a = Trainer::new(&rt, &manifest, &task, cfg.clone()).unwrap();
+    let mut b = Trainer::new(&rt, &manifest, &task, cfg).unwrap();
+    let mut log = RunLog::new();
+    a.run(15, &mut log).unwrap();
+    let first = log.records.first().unwrap().loss;
+    let last = log.smoothed_loss(5).unwrap();
+    assert!(last < first - 0.5, "insufficient progress: {first} -> {last}");
+    // determinism across trainer instances
+    let mut log_b = RunLog::new();
+    b.run(15, &mut log_b).unwrap();
+    for (ra, rb) in log.records.iter().zip(&log_b.records) {
+        assert!((ra.loss - rb.loss).abs() < 1e-6, "step {}: {} vs {}", ra.step, ra.loss, rb.loss);
+    }
+}
+
+#[test]
+fn sgd_also_trains() {
+    let (rt, manifest, task) = setup();
+    let cfg = TrainerCfg {
+        ranks: 2,
+        zero_stage: 1,
+        optimizer: Optimizer::sgd(0.9),
+        schedule: LrSchedule::Constant { lr: 0.3 },
+        grad_clip: 1.0,
+        seed: 4321,
+        loader_workers: 0,
+    };
+    let mut t = Trainer::new(&rt, &manifest, &task, cfg).unwrap();
+    let mut log = RunLog::new();
+    t.run(12, &mut log).unwrap();
+    assert!(log.smoothed_loss(4).unwrap() < log.records[0].loss);
+}
+
+#[test]
+fn grad_clip_bounds_update_norm() {
+    let (rt, manifest, task) = setup();
+    let mk = |clip: f32| TrainerCfg {
+        ranks: 1,
+        zero_stage: 1,
+        optimizer: Optimizer::sgd(0.0),
+        schedule: LrSchedule::Constant { lr: 1.0 },
+        grad_clip: clip,
+        seed: 7,
+        loader_workers: 0,
+    };
+    // with sgd(momentum=0), lr=1: |param delta| == |clipped grad|
+    let mut clipped = Trainer::new(&rt, &manifest, &task, mk(0.5)).unwrap();
+    let before = clipped.params.clone();
+    clipped.step().unwrap();
+    let delta_norm: f32 = clipped
+        .params
+        .iter()
+        .zip(&before)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        .sqrt();
+    assert!(delta_norm <= 0.5 + 1e-3, "update norm {delta_norm} exceeds clip");
+}
+
+#[test]
+fn checkpoint_resume_is_bitwise_identical() {
+    // Train 6 steps; checkpoint at step 3; resume in a FRESH trainer and
+    // verify the loss trajectory and final parameters match the
+    // uninterrupted run exactly.
+    let (rt, manifest, task) = setup();
+    let cfg = TrainerCfg {
+        ranks: 2,
+        zero_stage: 1,
+        optimizer: Optimizer::adamw(),
+        schedule: LrSchedule::Constant { lr: 5e-3 },
+        grad_clip: 1.0,
+        seed: 77,
+        loader_workers: 0,
+    };
+    let dir = std::env::temp_dir().join("scalestudy_resume_test");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // uninterrupted reference run
+    let mut reference = Trainer::new(&rt, &manifest, &task, cfg.clone()).unwrap();
+    let mut ref_losses = Vec::new();
+    for _ in 0..6 {
+        ref_losses.push(reference.step().unwrap());
+    }
+
+    // interrupted run: 3 steps, checkpoint, fresh trainer, restore.
+    // NOTE: the serial loader's stream position is part of the state a
+    // real system would also persist; here we advance the fresh loader by
+    // replaying the same number of batches (3 steps x 1 batch per rank).
+    let mut first = Trainer::new(&rt, &manifest, &task, cfg.clone()).unwrap();
+    for i in 0..3 {
+        assert!((first.step().unwrap() - ref_losses[i]).abs() < 1e-6);
+    }
+    first.save_checkpoint(&dir).unwrap();
+    drop(first);
+
+    let mut resumed = Trainer::new(&rt, &manifest, &task, cfg).unwrap();
+    // replay the consumed batches to restore loader positions
+    for _ in 0..3 {
+        resumed.step().unwrap();
+    }
+    resumed.load_checkpoint(&dir).unwrap();
+    assert_eq!(resumed.step_count(), 3);
+    for (i, want) in ref_losses.iter().enumerate().skip(3) {
+        let got = resumed.step().unwrap();
+        assert!(
+            (got - want).abs() < 1e-6,
+            "step {}: resumed {got} vs reference {want}",
+            i + 1
+        );
+    }
+    let max_dp = resumed
+        .params
+        .iter()
+        .zip(&reference.params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dp < 1e-6, "param divergence after resume: {max_dp}");
+}
+
+#[test]
+fn checkpoint_topology_mismatch_rejected() {
+    let (rt, manifest, task) = setup();
+    let mk = |ranks: usize| TrainerCfg {
+        ranks,
+        zero_stage: 1,
+        optimizer: Optimizer::adamw(),
+        schedule: LrSchedule::Constant { lr: 1e-3 },
+        grad_clip: 1.0,
+        seed: 5,
+        loader_workers: 0,
+    };
+    let dir = std::env::temp_dir().join("scalestudy_topo_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut a = Trainer::new(&rt, &manifest, &task, mk(2)).unwrap();
+    a.step().unwrap();
+    a.save_checkpoint(&dir).unwrap();
+    let mut b = Trainer::new(&rt, &manifest, &task, mk(3)).unwrap();
+    let err = b.load_checkpoint(&dir).unwrap_err().to_string();
+    assert!(err.contains("topology"), "{err}");
+}
+
+#[test]
+fn worker_loader_trains_like_serial() {
+    // prefetch workers change arrival order of per-rank streams but not
+    // the ability to learn; loss after N steps is in the same band
+    let (rt, manifest, task) = setup();
+    let mk = |workers: usize| TrainerCfg {
+        ranks: 2,
+        zero_stage: 1,
+        optimizer: Optimizer::adamw(),
+        schedule: LrSchedule::Constant { lr: 1e-2 },
+        grad_clip: 1.0,
+        seed: 31,
+        loader_workers: workers,
+    };
+    let mut serial = Trainer::new(&rt, &manifest, &task, mk(0)).unwrap();
+    let mut par = Trainer::new(&rt, &manifest, &task, mk(2)).unwrap();
+    let (mut ls, mut lp) = (RunLog::new(), RunLog::new());
+    serial.run(12, &mut ls).unwrap();
+    par.run(12, &mut lp).unwrap();
+    let a = ls.smoothed_loss(4).unwrap();
+    let b = lp.smoothed_loss(4).unwrap();
+    assert!((a - b).abs() < 1.0, "serial {a} vs workers {b}");
+}

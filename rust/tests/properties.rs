@@ -1,0 +1,266 @@
+//! Cross-module property tests (no artifacts required): invariants that
+//! tie the analytical models together, fuzzed via `testkit`.
+
+use scalestudy::hardware::ClusterSpec;
+use scalestudy::hpo::{evaluate, space, Template};
+use scalestudy::json::Json;
+use scalestudy::model::{by_name, mt5_zoo};
+use scalestudy::sim::{simulate_step, TrainSetup};
+use scalestudy::testkit::{forall, forall_cases, Gen, OneOf, PairOf, UsizeIn};
+use scalestudy::util::Rng;
+use scalestudy::zero::{comm_volume_per_step, state_bytes_per_gpu, OptimizerKind, ZeroStage};
+
+// ----------------------------------------------------------------- json
+
+/// Random JSON value generator for roundtrip fuzzing.
+struct JsonGen {
+    max_depth: usize,
+}
+
+impl JsonGen {
+    fn value(&self, rng: &mut Rng, depth: usize) -> Json {
+        let choices = if depth >= self.max_depth { 4 } else { 6 };
+        match rng.index(choices) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => {
+                // finite, roundtrippable numbers
+                let x = (rng.range(-1e9, 1e9) * 1000.0).round() / 1000.0;
+                Json::Num(x)
+            }
+            3 => {
+                let len = rng.index(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.index(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\u{263A}' // smiley: exercise multibyte
+                        }
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => {
+                let len = rng.index(4);
+                Json::Arr((0..len).map(|_| self.value(rng, depth + 1)).collect())
+            }
+            _ => {
+                let len = rng.index(4);
+                Json::Obj(
+                    (0..len)
+                        .map(|i| (format!("k{i}_{}", rng.index(100)), self.value(rng, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+}
+
+impl Gen for JsonGen {
+    type Value = Json;
+    fn generate(&self, rng: &mut Rng) -> Json {
+        self.value(rng, 0)
+    }
+}
+
+#[test]
+fn prop_json_roundtrips_compact_and_pretty() {
+    let gen = JsonGen { max_depth: 4 };
+    forall_cases(&gen, 200, |j| {
+        let c = Json::parse(&j.dumps()).map_err(|e| e.to_string())?;
+        if &c != j {
+            return Err(format!("compact roundtrip mismatch: {j:?}"));
+        }
+        let p = Json::parse(&j.pretty()).map_err(|e| e.to_string())?;
+        if &p != j {
+            return Err(format!("pretty roundtrip mismatch: {j:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------------- zero
+
+#[test]
+fn prop_zero_memory_times_nd_bounded_by_total_state() {
+    // per-GPU bytes × N_d can never undercut the single total copy
+    let gen = PairOf(
+        UsizeIn { lo: 1, hi: 256 },
+        OneOf(vec![
+            OptimizerKind::AdamW,
+            OptimizerKind::SgdMomentum,
+            OptimizerKind::Adafactor,
+        ]),
+    );
+    forall(&gen, |&(nd, opt)| {
+        let psi = 1e9;
+        let total_one_copy = (4.0 + opt.k_bytes()) * psi;
+        for stage in ZeroStage::all() {
+            let per_gpu = state_bytes_per_gpu(psi, nd, stage, opt);
+            if per_gpu * (nd as f64) < total_one_copy - 1.0 {
+                return Err(format!(
+                    "{stage:?} nd={nd}: aggregate {} below one full copy {}",
+                    per_gpu * nd as f64,
+                    total_one_copy
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_volume_nondecreasing_in_stage() {
+    for psi in [1e8, 1e9, 13e9] {
+        let mut prev = 0.0;
+        for stage in ZeroStage::all() {
+            let v = comm_volume_per_step(psi, stage);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+}
+
+// ----------------------------------------------------------------- sim
+
+#[test]
+fn prop_sim_breakdown_always_consistent() {
+    let models = mt5_zoo();
+    let gen = PairOf(UsizeIn { lo: 1, hi: 8 }, UsizeIn { lo: 0, hi: 3 });
+    forall(&gen, |&(nodes, stage_i)| {
+        let stage = ZeroStage::from_index(stage_i).unwrap();
+        for model in &models {
+            let st = simulate_step(&TrainSetup::dp_pod(model.clone(), nodes, stage));
+            if !st.fits {
+                continue;
+            }
+            for (name, v) in [
+                ("compute", st.compute),
+                ("exposed", st.exposed_comm),
+                ("bubble", st.bubble),
+                ("optimizer", st.optimizer),
+                ("stall", st.stall),
+            ] {
+                if !(v >= 0.0 && v.is_finite()) {
+                    return Err(format!("{}: {name} = {v} at {nodes}n {stage:?}", model.name));
+                }
+            }
+            if st.exposed_comm > st.total_comm + 1e-9 {
+                return Err(format!("exposed > total at {} {nodes}n", model.name));
+            }
+            if st.micro_batch == 0 || st.num_microbatches == 0 {
+                return Err("fit but zero micro-batch".to_string());
+            }
+            let hbm = 80.0 * 1024f64.powi(3);
+            if st.mem_per_gpu > hbm {
+                return Err(format!("fit but memory {} > HBM", st.mem_per_gpu));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlap_never_hurts_and_stage3_never_faster_than_stage2() {
+    let model = by_name("mt5-xxl").unwrap();
+    let gen = UsizeIn { lo: 1, hi: 8 };
+    forall(&gen, |&nodes| {
+        let mut s2 = TrainSetup::dp_pod(model.clone(), nodes, ZeroStage::Stage2);
+        let mut s3 = TrainSetup::dp_pod(model.clone(), nodes, ZeroStage::Stage3);
+        let t2 = simulate_step(&s2).seconds_per_step();
+        let t3 = simulate_step(&s3).seconds_per_step();
+        if t3 < t2 {
+            return Err(format!("stage3 faster at {nodes} nodes: {t3} < {t2}"));
+        }
+        s2.overlap_comm = false;
+        s3.overlap_comm = false;
+        let t2n = simulate_step(&s2).seconds_per_step();
+        let t3n = simulate_step(&s3).seconds_per_step();
+        if t2n + 1e-9 < t2 || t3n + 1e-9 < t3 {
+            return Err(format!("disabling overlap made things faster at {nodes} nodes"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cluster_rates_monotone() {
+    let c = ClusterSpec::lps_pod(8);
+    let mut prev_bw = f64::INFINITY;
+    let mut prev_st = f64::INFINITY;
+    for n in 1..=8 {
+        let bw = c.effective_ib_bw(n);
+        let st = c.effective_storage_rate(n);
+        assert!(bw <= prev_bw + 1e-9);
+        assert!(st <= prev_st + 1e-9);
+        prev_bw = bw;
+        prev_st = st;
+    }
+}
+
+// ----------------------------------------------------------------- hpo
+
+#[test]
+fn prop_evaluate_deterministic_and_finite_for_feasible() {
+    let dims = space();
+    let model = by_name("mt5-base").unwrap();
+    let gen = UsizeIn { lo: 0, hi: 10_000 };
+    forall_cases(&gen, 40, |&seed| {
+        // random template
+        let mut rng = Rng::new(seed as u64);
+        let t = Template(dims.iter().map(|d| rng.index(d.values.len())).collect());
+        let a = evaluate(&dims, &t, &model, 2);
+        let b = evaluate(&dims, &t, &model, 2);
+        if (a.seconds_per_step - b.seconds_per_step).abs() > 1e-12 {
+            return Err("evaluate not deterministic".to_string());
+        }
+        if a.feasible && !a.seconds_per_step.is_finite() {
+            return Err("feasible but infinite step time".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_template_with_only_changes_one_dim() {
+    let dims = space();
+    let base = Template::baseline(&dims);
+    for d in &dims {
+        for vi in 0..d.values.len() {
+            let t = base.with(&dims, d.name, vi);
+            let diffs = t.0.iter().zip(&base.0).filter(|(a, b)| a != b).count();
+            assert!(diffs <= 1);
+        }
+    }
+}
+
+// ----------------------------------------------------------------- data
+
+#[test]
+fn prop_loader_tokens_always_in_vocab() {
+    use scalestudy::data::{CorpusCfg, TaskGen};
+    let gen = PairOf(UsizeIn { lo: 64, hi: 512 }, UsizeIn { lo: 0, hi: 1000 });
+    forall_cases(&gen, 30, |&(vocab, seed)| {
+        let cfg = CorpusCfg {
+            vocab,
+            batch_size: 2,
+            enc_len: 16,
+            dec_len: 16,
+            zipf_s: 1.1,
+            markov_p: 0.3,
+            pad_frac: 0.5,
+            work_per_token: 0,
+        };
+        let task = TaskGen::new(cfg, seed as u64);
+        let mut rng = Rng::new(seed as u64 + 1);
+        let b = task.batch(&mut rng);
+        for &t in b.enc.iter().chain(&b.dec_in).chain(&b.targets) {
+            if !(0..vocab as i32).contains(&t) {
+                return Err(format!("token {t} outside vocab {vocab}"));
+            }
+        }
+        Ok(())
+    });
+}
