@@ -1,0 +1,58 @@
+//! Auto-parallelism plans for the whole paper zoo: for each of the 5
+//! mt5 models (580 M -> 13 B) at 1/2/4/8 nodes, search the joint
+//! (dp, tp, pp, ZeRO stage, offload, micro-batch cap) space and print the
+//! fastest feasible plan — the planner's answer to the paper's manual
+//! "which stage and how many nodes" study, fully automated.
+//!
+//! All 20 queries share one sweep executor and memo cache (distinct
+//! model x cluster queries do not overlap, so the hit counter mostly
+//! shows where the cache would kick in for repeated studies — the HPO
+//! funnel is where it shines).
+//!
+//! Run: `cargo run --release --example zoo_planner`
+
+use scalestudy::hardware::ClusterSpec;
+use scalestudy::model::mt5_zoo;
+use scalestudy::planner::{plan, PlanSpace};
+use scalestudy::sim::Workload;
+use scalestudy::sweep::{SimCache, Sweep};
+
+fn main() {
+    let nodes = [1usize, 2, 4, 8];
+    let sweep = Sweep::auto();
+    let cache = SimCache::new();
+    let space = PlanSpace::default();
+    let workload = Workload::table1();
+
+    println!(
+        "== fastest feasible plan per model x node count (effective batch {}) ==\n",
+        workload.global_batch
+    );
+    let t0 = std::time::Instant::now();
+    for model in mt5_zoo() {
+        println!("{} ({:.2}B params):", model.name, model.params() as f64 / 1e9);
+        for &n in &nodes {
+            let cluster = ClusterSpec::lps_pod(n);
+            let result = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+            match result.best {
+                Some(best) => println!(
+                    "  {n} node{}: {}  [{} feasible / {} searched, frontier {}]",
+                    if n == 1 { " " } else { "s" },
+                    best.describe(),
+                    result.feasible,
+                    result.evaluated,
+                    result.frontier.len()
+                ),
+                None => println!("  {n} nodes: no feasible plan"),
+            }
+        }
+        println!();
+    }
+    println!(
+        "planned 20 model x cluster queries in {:.0} ms on {} workers ({} simulations, {} cache hits)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        sweep.workers(),
+        cache.misses(),
+        cache.hits()
+    );
+}

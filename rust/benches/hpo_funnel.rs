@@ -1,6 +1,11 @@
 //! Bench E3 — the funneled hyperparameter study: runs the full 205-trial
 //! prune-and-combine search, reports phase structure, improvement over
 //! baseline, the 15-finalist multi-node table, and search wall-time.
+//!
+//! Phases 1 and 3 of the funnel fan out over the parallel sweep executor
+//! (`FunnelCfg::workers = 0` = all cores) with the setup memo cache, so
+//! this bench exercises the multi-core path end to end; a serial run of
+//! the same seed produces bit-identical trials (asserted in the lib tests).
 
 use scalestudy::benchkit::{Bench, Table};
 use scalestudy::hpo::{evaluate, run_funnel, space, FunnelCfg, Template};
@@ -95,6 +100,21 @@ fn main() {
     }
     abl.note("scaling-aware = the paper's future-work proposal: survivors must transfer to 8 nodes before combination. 0 = infeasible.");
     b.table(abl);
+
+    // ---- serial vs parallel funnel wall time (same seed, same trials)
+    let mut speed = Table::new(
+        "funnel wall time: serial vs parallel executor (s)",
+        &["wall s"],
+    );
+    for (label, workers) in [("serial (1 worker)", 1usize), ("parallel (auto)", 0)] {
+        let cfg = FunnelCfg { workers, ..FunnelCfg::default() };
+        let t0 = std::time::Instant::now();
+        let r = run_funnel(&cfg);
+        speed.row(label, vec![t0.elapsed().as_secs_f64()]);
+        assert_eq!(r.trials.len(), 205);
+    }
+    speed.note("identical 205-trial studies; results are bit-identical by construction");
+    b.table(speed);
 
     // search engine micro-bench: single trial evaluation cost
     let t = Template::baseline(&dims);

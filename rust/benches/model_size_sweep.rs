@@ -3,26 +3,55 @@
 //! and ZeRO stages, including the memory-fit frontier (which stage is
 //! *required* at each size — the paper's motivation for progressing
 //! through stages).
+//!
+//! The full model × node × stage grid is priced in one fan-out over the
+//! parallel sweep executor with a shared memo cache, so the all-stage fit
+//! frontier reuses the stage-2/3 pricings instead of re-simulating them.
 
 use scalestudy::benchkit::{Bench, Table};
 use scalestudy::model::mt5_zoo;
-use scalestudy::sim::{simulate_step, TrainSetup};
+use scalestudy::sim::TrainSetup;
+use scalestudy::sweep::{SimCache, Sweep};
 use scalestudy::zero::ZeroStage;
 
 fn main() {
     let mut b = Bench::new("model_size_sweep");
     let nodes = [1usize, 2, 4, 8];
+    let zoo = mt5_zoo();
+    let stages = ZeroStage::all();
+
+    // ---- one parallel fan-out prices the entire model x node x stage grid
+    let sweep = Sweep::auto();
+    let cache = SimCache::new();
+    let mut setups = Vec::with_capacity(zoo.len() * nodes.len() * stages.len());
+    for model in &zoo {
+        for &n in &nodes {
+            for &stage in &stages {
+                setups.push(TrainSetup::dp_pod(model.clone(), n, stage));
+            }
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let priced = sweep.simulate_setups(&cache, &setups);
+    println!(
+        "priced {} configurations in {:.1} ms on {} workers\n",
+        priced.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        sweep.workers()
+    );
+    let cell = |mi: usize, ni: usize, stage: ZeroStage| {
+        &priced[(mi * nodes.len() + ni) * stages.len() + stage.index()]
+    };
 
     for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
         let mut t = Table::new(
             &format!("seconds/step across the zoo, ZeRO stage {}", stage.index()),
             &["1 node", "2 nodes", "4 nodes", "8 nodes"],
         );
-        for model in mt5_zoo() {
-            let row: Vec<f64> = nodes
-                .iter()
-                .map(|&n| {
-                    let st = simulate_step(&TrainSetup::dp_pod(model.clone(), n, stage));
+        for (mi, model) in zoo.iter().enumerate() {
+            let row: Vec<f64> = (0..nodes.len())
+                .map(|ni| {
+                    let st = cell(mi, ni, stage);
                     if st.fits {
                         st.seconds_per_step()
                     } else {
@@ -41,13 +70,12 @@ fn main() {
         "minimum ZeRO stage that fits (9 = nothing fits)",
         &["1 node", "2 nodes", "4 nodes", "8 nodes"],
     );
-    for model in mt5_zoo() {
-        let row: Vec<f64> = nodes
-            .iter()
-            .map(|&n| {
-                ZeroStage::all()
+    for (mi, model) in zoo.iter().enumerate() {
+        let row: Vec<f64> = (0..nodes.len())
+            .map(|ni| {
+                stages
                     .into_iter()
-                    .find(|&s| simulate_step(&TrainSetup::dp_pod(model.clone(), n, s)).fits)
+                    .find(|&s| cell(mi, ni, s).fits)
                     .map(|s| s.index() as f64)
                     .unwrap_or(9.0)
             })
@@ -62,14 +90,15 @@ fn main() {
         "throughput per GPU (samples/s/GPU), stage 2",
         &["1 node", "2 nodes", "4 nodes", "8 nodes"],
     );
-    for model in mt5_zoo() {
+    let global_batch = setups[0].workload.global_batch;
+    for (mi, model) in zoo.iter().enumerate() {
         let row: Vec<f64> = nodes
             .iter()
-            .map(|&n| {
-                let setup = TrainSetup::dp_pod(model.clone(), n, ZeroStage::Stage2);
-                let st = simulate_step(&setup);
+            .enumerate()
+            .map(|(ni, &n)| {
+                let st = cell(mi, ni, ZeroStage::Stage2);
                 if st.fits {
-                    st.throughput(setup.workload.global_batch) / (n * 8) as f64
+                    st.throughput(global_batch) / (n * 8) as f64
                 } else {
                     0.0
                 }

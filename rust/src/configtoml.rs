@@ -10,12 +10,19 @@ use crate::json::Json;
 use std::collections::BTreeMap;
 
 /// Error with line number.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse TOML text into a JSON object tree.
 pub fn parse(text: &str) -> Result<Json, TomlError> {

@@ -32,6 +32,7 @@ use crate::hardware::ClusterSpec;
 use crate::model::{by_name, ModelCfg};
 use crate::parallel::{ParallelCfg, PipeSchedule};
 use crate::sim::{simulate_step, TrainSetup, Workload};
+use crate::sweep::SimCache;
 use crate::util::Rng;
 use crate::zero::{OptimizerKind, ZeroStage};
 
@@ -212,6 +213,11 @@ pub struct FunnelCfg {
     /// Total trial budget across all phases (the paper ran 205).
     pub total_trials: usize,
     pub seed: u64,
+    /// Worker threads for the independent phases (phase 1's one-at-a-time
+    /// sweep and phase 3's finalist grid run through
+    /// [`crate::sweep::Sweep`]); 0 = all cores.  Results are bit-identical
+    /// for every worker count.
+    pub workers: usize,
 }
 
 impl Default for FunnelCfg {
@@ -224,6 +230,7 @@ impl Default for FunnelCfg {
             num_finalists: 15,
             total_trials: 205,
             seed: 2023,
+            workers: 0,
         }
     }
 }
@@ -238,25 +245,31 @@ pub struct FunnelResult {
     pub pruned_dims: Vec<&'static str>,
 }
 
-/// Evaluate a template on `nodes` nodes: build the simulator setup and the
-/// convergence inputs, return the combined score.
-pub fn evaluate(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize) -> Score {
-    let g = |name: &str| t.get(dims, name);
+/// The [`OptimizerKind`] a template selects (shared by the simulator
+/// setup and the convergence scoring so the two can never disagree).
+fn template_optimizer(dims: &[Dim], t: &Template) -> OptimizerKind {
+    match t.get(dims, "optimizer").s() {
+        "adafactor" => OptimizerKind::Adafactor,
+        "sgd" => OptimizerKind::SgdMomentum,
+        "lamb" => OptimizerKind::Lamb,
+        _ => OptimizerKind::AdamW,
+    }
+}
 
-    // ---- simulator setup
+/// Build the simulator [`TrainSetup`] a template describes.  Many
+/// templates differ only in convergence-side dimensions (learning rate,
+/// betas, weight decay, ...) and map to the *same* setup — which is what
+/// makes the sweep executor's memo cache effective across the funnel.
+pub fn template_setup(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize) -> TrainSetup {
+    let g = |name: &str| t.get(dims, name);
     let cluster = ClusterSpec::lps_pod(nodes.max(1));
     let gpus = cluster.total_gpus();
     let tp = (g("tp_degree").i() as usize).min(cluster.node.gpus);
     let pp = (g("pp_degree").i() as usize).min(gpus / tp);
     let dp = (gpus / tp / pp).max(1);
     let stage = ZeroStage::from_index(g("zero_stage").i() as usize).unwrap();
-    let opt = match g("optimizer").s() {
-        "adafactor" => OptimizerKind::Adafactor,
-        "sgd" => OptimizerKind::SgdMomentum,
-        "lamb" => OptimizerKind::Lamb,
-        _ => OptimizerKind::AdamW,
-    };
-    let setup = TrainSetup {
+    let opt = template_optimizer(dims, t);
+    TrainSetup {
         model: model.clone(),
         cluster,
         par: ParallelCfg { dp, tp, pp },
@@ -277,8 +290,37 @@ pub fn evaluate(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize) -> S
         overlap_comm: g("overlap_comm").b(),
         offload: g("cpu_offload").b(),
         grad_bucket_msgs: g("bucket_msgs").i() as usize,
-    };
+        micro_batch_cap: g("micro_batch_cap").i() as usize,
+    }
+}
+
+/// Evaluate a template on `nodes` nodes: build the simulator setup and the
+/// convergence inputs, return the combined score.
+pub fn evaluate(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize) -> Score {
+    let setup = template_setup(dims, t, model, nodes);
     let step = simulate_step(&setup);
+    score_template(dims, t, model, &step)
+}
+
+/// Like [`evaluate`] but prices the setup through a [`SimCache`], so
+/// templates sharing simulator-side dimensions are simulated once.
+/// Bit-identical to [`evaluate`].
+pub fn evaluate_cached(
+    dims: &[Dim],
+    t: &Template,
+    model: &ModelCfg,
+    nodes: usize,
+    cache: &SimCache,
+) -> Score {
+    let setup = template_setup(dims, t, model, nodes);
+    let step = cache.simulate(&setup);
+    score_template(dims, t, model, &step)
+}
+
+/// Combine a priced step with the convergence model into the trial score.
+fn score_template(dims: &[Dim], t: &Template, model: &ModelCfg, step: &crate::sim::StepTime) -> Score {
+    let g = |name: &str| t.get(dims, name);
+    let opt = template_optimizer(dims, t);
 
     // ---- convergence inputs
     let inp = ConvergenceInputs {
@@ -307,7 +349,7 @@ pub fn evaluate(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize) -> S
     };
 
     let lm = LossModel::for_model(model);
-    let target = lm.l_inf + 0.0_f64.max(1.0) * 0.0 + cfg_margin_target(&lm, model);
+    let target = lm.l_inf + cfg_margin_target(&lm, model);
     let steps = lm.steps_to_loss(&inp, target);
 
     Score { seconds_per_step: sps, steps_to_target: steps, feasible: step.fits }
@@ -318,42 +360,73 @@ fn cfg_margin_target(_lm: &LossModel, _model: &ModelCfg) -> f64 {
 }
 
 /// Run the full funneled study.
+///
+/// The independent phases — phase 1's one-at-a-time sweep and phase 3's
+/// finalist × node grid — fan out over the [`crate::sweep::Sweep`] worker
+/// pool; trial ids, ordering and every score are bit-identical to the
+/// serial formulation (asserted by `funnel_parallel_bit_identical_to_serial`).
+/// Phase 2 is adaptive (each step depends on the previous) and stays serial.
 pub fn run_funnel(cfg: &FunnelCfg) -> FunnelResult {
     let dims = space();
     let model = by_name(&cfg.model).expect("unknown model");
+    let sweep = crate::sweep::Sweep::new(cfg.workers);
+    // study-wide memo cache: templates that differ only in convergence-side
+    // dimensions share one simulator pricing
+    let cache = SimCache::new();
     let mut rng = Rng::new(cfg.seed);
     let mut trials: Vec<Trial> = Vec::new();
     let mut id = 0usize;
 
     let run = |t: &Template, phase: &'static str, nodes: usize, trials: &mut Vec<Trial>, id: &mut usize| -> f64 {
-        let score = evaluate(&dims, t, &model, nodes);
+        let score = evaluate_cached(&dims, t, &model, nodes, &cache);
         let obj = score.time_to_train();
         trials.push(Trial { id: *id, phase, template: t.clone(), nodes, score });
         *id += 1;
         obj
     };
 
-    // ---------- phase 1: baseline + one-at-a-time sweep
+    // ---------- phase 1: baseline + one-at-a-time sweep, fanned out in
+    // parallel (the template list is known upfront; enumeration order
+    // matches the old serial loop exactly)
     let baseline = Template::baseline(&dims);
-    let base_obj = run(&baseline, "phase1", cfg.phase1_nodes, &mut trials, &mut id);
-
-    // best value index + gain per dimension
-    let mut best_per_dim: Vec<(usize, f64)> = Vec::with_capacity(dims.len());
+    let mut phase1: Vec<Template> = vec![baseline.clone()];
+    let mut deviation: Vec<Option<(usize, usize)>> = vec![None]; // (dim, value)
     for (di, d) in dims.iter().enumerate() {
-        let mut best = (d.baseline, 0.0f64);
         for vi in 0..d.values.len() {
             if vi == d.baseline {
                 continue;
             }
             let mut t = baseline.clone();
             t.0[di] = vi;
-            let obj = run(&t, "phase1", cfg.phase1_nodes, &mut trials, &mut id);
-            let gain = base_obj - obj;
-            if gain > best.1 {
-                best = (vi, gain);
+            phase1.push(t);
+            deviation.push(Some((di, vi)));
+        }
+    }
+    let scores =
+        sweep.map(&phase1, |_, t| evaluate_cached(&dims, t, &model, cfg.phase1_nodes, &cache));
+    for (t, score) in phase1.iter().zip(&scores) {
+        trials.push(Trial {
+            id,
+            phase: "phase1",
+            template: t.clone(),
+            nodes: cfg.phase1_nodes,
+            score: score.clone(),
+        });
+        id += 1;
+    }
+    let base_obj = scores[0].time_to_train();
+
+    // best value index + gain per dimension (folded in enumeration order,
+    // so ties resolve exactly as the serial loop did)
+    let mut best_per_dim: Vec<(usize, f64)> =
+        dims.iter().map(|d| (d.baseline, 0.0f64)).collect();
+    for (dev, score) in deviation.iter().zip(&scores) {
+        if let Some((di, vi)) = dev {
+            let gain = base_obj - score.time_to_train();
+            if gain > best_per_dim[*di].1 {
+                best_per_dim[*di] = (*vi, gain);
             }
         }
-        best_per_dim.push(best);
     }
 
     // ---------- phase 2: prune & combine
@@ -425,11 +498,18 @@ pub fn run_funnel(cfg: &FunnelCfg) -> FunnelResult {
         .take(cfg.num_finalists)
         .collect();
 
+    // finalist × node grid: independent cells, fanned out in parallel
+    let pairs: Vec<(Template, usize)> = finalists_t
+        .iter()
+        .flat_map(|t| cfg.finalist_nodes.iter().map(move |&n| (t.clone(), n)))
+        .collect();
+    let finalist_scores =
+        sweep.map(&pairs, |_, (t, n)| evaluate_cached(&dims, t, &model, *n, &cache));
     let mut finalists = Vec::new();
-    for t in &finalists_t {
+    for (fi, t) in finalists_t.iter().enumerate() {
         let mut rows = Vec::new();
-        for &n in &cfg.finalist_nodes {
-            let score = evaluate(&dims, t, &model, n);
+        for (ni, &n) in cfg.finalist_nodes.iter().enumerate() {
+            let score = finalist_scores[fi * cfg.finalist_nodes.len() + ni].clone();
             trials.push(Trial { id, phase: "finalist", template: t.clone(), nodes: n, score: score.clone() });
             id += 1;
             rows.push((n, score));
@@ -659,6 +739,30 @@ mod tests {
         assert!(t2.describe(&dims).contains("zero_stage=3"));
     }
 
+    /// The memo-cached evaluation path is bit-identical to the direct one,
+    /// and the cache actually dedups: convergence-only deviations (e.g.
+    /// learning rate) share the baseline's simulator pricing.
+    #[test]
+    fn evaluate_cached_matches_and_dedups() {
+        let dims = space();
+        let model = by_name("mt5-base").unwrap();
+        let cache = SimCache::new();
+        let base = Template::baseline(&dims);
+        let lr_dev = base.with(&dims, "lr_peak", 0);
+        for t in [&base, &lr_dev] {
+            let direct = evaluate(&dims, t, &model, 1);
+            let cached = evaluate_cached(&dims, t, &model, 1, &cache);
+            assert_eq!(
+                direct.seconds_per_step.to_bits(),
+                cached.seconds_per_step.to_bits()
+            );
+            assert_eq!(direct.feasible, cached.feasible);
+        }
+        // both templates map to the same TrainSetup -> one miss, one hit
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
     #[test]
     fn evaluate_baseline_feasible_on_base_model() {
         let dims = space();
@@ -724,6 +828,38 @@ mod tests {
         let b = run_funnel(&FunnelCfg::default());
         assert_eq!(a.best, b.best);
         assert_eq!(a.trials.len(), b.trials.len());
+    }
+
+    /// The parallel fan-out of phases 1 and 3 must be bit-identical to the
+    /// serial execution: same trials, same ids, same scores to the last bit.
+    #[test]
+    fn funnel_parallel_bit_identical_to_serial() {
+        let serial_cfg = FunnelCfg { workers: 1, ..FunnelCfg::default() };
+        let parallel_cfg = FunnelCfg { workers: 4, ..FunnelCfg::default() };
+        let a = run_funnel(&serial_cfg);
+        let b = run_funnel(&parallel_cfg);
+        assert_eq!(a.trials.len(), b.trials.len());
+        for (x, y) in a.trials.iter().zip(&b.trials) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.phase, y.phase);
+            assert_eq!(x.nodes, y.nodes);
+            assert_eq!(x.template, y.template);
+            assert_eq!(
+                x.score.seconds_per_step.to_bits(),
+                y.score.seconds_per_step.to_bits(),
+                "trial {} seconds/step diverged",
+                x.id
+            );
+            assert_eq!(x.score.feasible, y.score.feasible);
+            match (x.score.steps_to_target, y.score.steps_to_target) {
+                (Some(p), Some(q)) => assert_eq!(p.to_bits(), q.to_bits()),
+                (None, None) => {}
+                other => panic!("trial {}: steps_to_target diverged: {other:?}", x.id),
+            }
+        }
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.pruned_dims, b.pruned_dims);
+        assert_eq!(a.finalists.len(), b.finalists.len());
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //!    (A100/DGX cluster specs), [`comm`] (α–β collective cost models),
 //!    [`zero`] (ZeRO stage 0–3 memory/comm), [`parallel`] (TP/PP),
 //!    [`sim`] (step-time simulator), [`convergence`] (loss scaling laws),
-//!    [`hpo`] (funneled prune-and-combine search), [`metrics`].
+//!    [`hpo`] (funneled prune-and-combine search), [`sweep`] (parallel
+//!    trial executor + memo cache), [`planner`] (auto-parallelism search),
+//!    [`metrics`].
 //! 3. **Real runtime** — the three-layer execution path: [`runtime`]
 //!    (PJRT artifact loading/execution), [`data`] (synthetic corpus +
 //!    parallel dataloader), [`train`] (multi-worker data-parallel trainer
@@ -32,12 +34,15 @@ pub mod json;
 pub mod metrics;
 pub mod model;
 pub mod parallel;
+pub mod planner;
 pub mod runconfig;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod testkit;
 pub mod train;
 pub mod util;
+pub mod xla;
 pub mod zero;
 
 /// Crate version (from Cargo.toml).

@@ -56,6 +56,15 @@ fn app() -> App {
                 .opt("resume", "", "restore a checkpoint directory before training"),
         )
         .command(
+            Command::new("plan", "auto-parallelism planner: fastest feasible (dp,tp,pp,ZeRO,offload) plan")
+                .opt("model", "mt5-xxl", "zoo model")
+                .opt("nodes", "8", "node count")
+                .opt("batch", "768", "effective (global) batch size")
+                .opt("max-tp", "8", "max tensor-parallel degree (clamped to GPUs/node)")
+                .opt("max-pp", "4", "max pipeline-parallel degree")
+                .opt("workers", "0", "sweep worker threads (0 = all cores)"),
+        )
+        .command(
             Command::new("simulate", "seconds/step for one configuration")
                 .opt("model", "mt5-xxl", "zoo model")
                 .opt("nodes", "4", "node count")
@@ -83,6 +92,7 @@ fn main() {
                 "table1" => cmd_table1(&m),
                 "sweep" => cmd_sweep(&m),
                 "hpo" => cmd_hpo(&m),
+                "plan" => cmd_plan(&m),
                 "collectives" => cmd_collectives(&m),
                 "train" => cmd_train(&m),
                 "simulate" => cmd_simulate(&m),
@@ -271,6 +281,61 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
     if !save.is_empty() {
         trainer.save_checkpoint(std::path::Path::new(&save))?;
         println!("checkpoint saved to {save} (step {})", trainer.step_count());
+    }
+    Ok(())
+}
+
+fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
+    use scalestudy::planner::{plan, PlanSpace};
+    use scalestudy::sweep::{SimCache, Sweep};
+    let model = by_name(m.get("model")).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let nodes = m.get_usize("nodes")?;
+    let cluster = ClusterSpec::lps_pod(nodes.max(1));
+    let mut workload = scalestudy::sim::Workload::table1();
+    workload.global_batch = m.get_usize("batch")?;
+    let space = PlanSpace {
+        max_tp: m.get_usize("max-tp")?,
+        max_pp: m.get_usize("max-pp")?,
+        ..PlanSpace::default()
+    };
+    let sweep = Sweep::new(m.get_usize("workers")?);
+    let cache = SimCache::new();
+    let t0 = std::time::Instant::now();
+    let result = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "auto-parallelism plan: {} ({:.1}B params), {} nodes ({} GPUs), effective batch {}",
+        model.name,
+        model.params() as f64 / 1e9,
+        nodes,
+        cluster.total_gpus(),
+        workload.global_batch
+    );
+    println!(
+        "searched {} configurations ({} feasible) in {:.0} ms on {} workers, {} cache hits\n",
+        result.evaluated,
+        result.feasible,
+        wall * 1e3,
+        sweep.workers(),
+        cache.hits()
+    );
+    let best = match &result.best {
+        Some(best) => best,
+        None => {
+            println!("no feasible plan — every configuration overflows HBM at this scale");
+            return Ok(());
+        }
+    };
+    println!("best plan:\n  {}\n", best.describe());
+    println!("memory-vs-time Pareto frontier ({} points):", result.frontier.len());
+    println!("  {:<52} {:>10} {:>12}", "plan", "s/step", "mem/GPU");
+    for p in &result.frontier {
+        println!(
+            "  {:<52} {:>10.2} {:>12}",
+            p.label(),
+            p.seconds_per_step(),
+            human_bytes(p.step.mem_per_gpu)
+        );
     }
     Ok(())
 }

@@ -1,0 +1,332 @@
+//! Auto-parallelism planner: exhaustive search over the joint
+//! (dp, tp, pp, ZeRO stage, optimizer, offload, micro-batch cap) space for
+//! a given model × cluster, returning the fastest feasible plan plus the
+//! full memory-vs-seconds-per-step Pareto frontier.
+//!
+//! This is the automation step the surveyed systems converge on (Duan et
+//! al. 2024; Kundu et al. 2024): instead of a human picking a parallel
+//! layout, every factorization of the pod's GPUs is priced by the step
+//! simulator ([`crate::sim`]) and infeasible points (OOM under the shared
+//! [`crate::zero::HBM_SAFETY_MARGIN`]) are discarded.  The space is a few
+//! thousand points per query, so an exhaustive sweep through the
+//! [`crate::sweep`] worker pool answers in well under a second while
+//! staying deterministic.
+//!
+//! Guarantees (property-tested):
+//! * a returned plan always fits HBM (`step.fits`, consistent with
+//!   [`crate::zero::fits_in_hbm`]);
+//! * the best plan is never slower than the dp-only
+//!   [`TrainSetup::dp_pod`] baseline for any stage in the search space,
+//!   because those baselines are themselves points of the space.
+
+use crate::hardware::ClusterSpec;
+use crate::model::ModelCfg;
+use crate::parallel::{ParallelCfg, PipeSchedule};
+use crate::sim::{StepTime, TrainSetup, Workload};
+use crate::sweep::{SimCache, Sweep};
+use crate::util::{human_bytes, human_time};
+use crate::zero::{OptimizerKind, ZeroStage};
+
+/// The dimensions the planner enumerates. Defaults cover the full joint
+/// space of the paper's study.
+#[derive(Clone, Debug)]
+pub struct PlanSpace {
+    pub stages: Vec<ZeroStage>,
+    pub optimizers: Vec<OptimizerKind>,
+    pub offload: Vec<bool>,
+    /// Per-GPU micro-batch caps to try; 0 = auto (largest fit).
+    pub micro_batch_caps: Vec<usize>,
+    /// Upper bound on tensor-parallel degree (clamped to GPUs per node —
+    /// TP across nodes is never sensible on this fabric).
+    pub max_tp: usize,
+    /// Upper bound on pipeline-parallel degree.
+    pub max_pp: usize,
+}
+
+impl Default for PlanSpace {
+    fn default() -> Self {
+        PlanSpace {
+            stages: ZeroStage::all().to_vec(),
+            optimizers: vec![OptimizerKind::AdamW],
+            offload: vec![false, true],
+            micro_batch_caps: vec![0, 4, 16],
+            max_tp: 8,
+            max_pp: 4,
+        }
+    }
+}
+
+/// One priced point of the search space.
+#[derive(Clone, Debug)]
+pub struct PlanPoint {
+    pub setup: TrainSetup,
+    pub step: StepTime,
+}
+
+impl PlanPoint {
+    pub fn seconds_per_step(&self) -> f64 {
+        self.step.seconds_per_step()
+    }
+
+    /// Compact plan label: the swept dimensions only.
+    pub fn label(&self) -> String {
+        let s = &self.setup;
+        format!(
+            "dp={} tp={} pp={} stage{} {}{}{}",
+            s.par.dp,
+            s.par.tp,
+            s.par.pp,
+            s.stage.index(),
+            s.opt.name(),
+            if s.offload { " +offload" } else { "" },
+            if s.micro_batch_cap > 0 {
+                format!(" cap={}", s.micro_batch_cap)
+            } else {
+                String::new()
+            },
+        )
+    }
+
+    /// One-line human description of the plan.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} mb={} accum={} -> {}/step, {} per GPU",
+            self.label(),
+            self.step.micro_batch,
+            self.step.num_microbatches,
+            human_time(self.step.seconds_per_step()),
+            human_bytes(self.step.mem_per_gpu),
+        )
+    }
+}
+
+/// Result of a planning query.
+#[derive(Debug)]
+pub struct PlanResult {
+    /// Fastest feasible plan (None when nothing fits).
+    pub best: Option<PlanPoint>,
+    /// Memory-vs-time Pareto frontier over the feasible points, sorted by
+    /// ascending per-GPU memory (and therefore descending seconds/step).
+    pub frontier: Vec<PlanPoint>,
+    /// Points enumerated (including infeasible ones).
+    pub evaluated: usize,
+    /// Points that fit HBM.
+    pub feasible: usize,
+}
+
+/// Enumerate every [`TrainSetup`] of the joint space for `model` on
+/// `cluster`. Non-swept knobs match [`TrainSetup::dp_pod`] so the dp-only
+/// baselines are exact points of the space.
+pub fn enumerate_setups(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+) -> Vec<TrainSetup> {
+    let gpus = cluster.total_gpus();
+    let max_tp = space.max_tp.min(cluster.node.gpus);
+    let mut out = Vec::new();
+    for par in ParallelCfg::enumerate(gpus, max_tp, space.max_pp) {
+        for &stage in &space.stages {
+            for &opt in &space.optimizers {
+                for &offload in &space.offload {
+                    // ZeRO offload moves *partitioned* optimizer state to
+                    // host RAM; stage 0 keeps nothing partitioned
+                    if offload && stage == ZeroStage::Stage0 {
+                        continue;
+                    }
+                    for &cap in &space.micro_batch_caps {
+                        out.push(TrainSetup {
+                            model: model.clone(),
+                            cluster: cluster.clone(),
+                            par,
+                            stage,
+                            opt,
+                            sched: PipeSchedule::OneFOneB,
+                            workload: workload.clone(),
+                            dataloader_workers: 2,
+                            overlap_comm: true,
+                            offload,
+                            grad_bucket_msgs: 25,
+                            micro_batch_cap: cap,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run a planning query: price the whole space through the sweep executor
+/// and the memo cache, pick the fastest feasible plan (first-seen wins
+/// ties, so results are deterministic for any worker count) and compute
+/// the Pareto frontier.
+pub fn plan(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> PlanResult {
+    let setups = enumerate_setups(model, cluster, workload, space);
+    let steps = sweep.simulate_setups(cache, &setups);
+    let mut best: Option<PlanPoint> = None;
+    let mut feasible = 0usize;
+    let mut points: Vec<PlanPoint> = Vec::new();
+    for (setup, step) in setups.iter().zip(&steps) {
+        if !step.fits {
+            continue;
+        }
+        feasible += 1;
+        let point = PlanPoint { setup: setup.clone(), step: step.clone() };
+        let better = match &best {
+            Some(b) => point.seconds_per_step() < b.seconds_per_step(),
+            None => true,
+        };
+        if better {
+            best = Some(point.clone());
+        }
+        points.push(point);
+    }
+    let frontier = pareto_frontier(points);
+    PlanResult { best, frontier, evaluated: setups.len(), feasible }
+}
+
+/// Convenience: plan for a zoo model on the paper's pod with the Table-1
+/// workload and the default space.
+pub fn plan_pod(model: &ModelCfg, nodes: usize) -> PlanResult {
+    plan(
+        model,
+        &ClusterSpec::lps_pod(nodes.max(1)),
+        &Workload::table1(),
+        &PlanSpace::default(),
+        &Sweep::auto(),
+        &SimCache::new(),
+    )
+}
+
+/// Memory-vs-time Pareto frontier: a point survives iff no other feasible
+/// point has both lower-or-equal memory and strictly lower seconds/step.
+fn pareto_frontier(mut points: Vec<PlanPoint>) -> Vec<PlanPoint> {
+    points.sort_by(|a, b| {
+        a.step
+            .mem_per_gpu
+            .partial_cmp(&b.step.mem_per_gpu)
+            .unwrap()
+            .then(a.seconds_per_step().partial_cmp(&b.seconds_per_step()).unwrap())
+    });
+    let mut out: Vec<PlanPoint> = Vec::new();
+    let mut best_seconds = f64::INFINITY;
+    for p in points {
+        if p.seconds_per_step() < best_seconds {
+            best_seconds = p.seconds_per_step();
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+    use crate::sim::simulate_step;
+
+    #[test]
+    fn planner_finds_feasible_plan_for_every_zoo_model() {
+        for name in ["mt5-small", "mt5-base", "mt5-large", "mt5-xl", "mt5-xxl"] {
+            let model = by_name(name).unwrap();
+            let r = plan_pod(&model, 2);
+            let best = r.best.unwrap_or_else(|| panic!("{name}: no feasible plan"));
+            assert!(best.step.fits);
+            assert!(best.seconds_per_step().is_finite());
+            assert!(r.feasible >= 1);
+            assert!(r.evaluated >= r.feasible);
+            assert!(!r.frontier.is_empty());
+        }
+    }
+
+    #[test]
+    fn best_never_slower_than_dp_pod_baselines() {
+        for name in ["mt5-base", "mt5-xxl"] {
+            let model = by_name(name).unwrap();
+            for nodes in [1usize, 2, 4, 8] {
+                let r = plan_pod(&model, nodes);
+                let best = r.best.as_ref().expect("feasible plan");
+                for stage in ZeroStage::all() {
+                    let base = simulate_step(&TrainSetup::dp_pod(model.clone(), nodes, stage));
+                    if !base.fits {
+                        continue;
+                    }
+                    assert!(
+                        best.seconds_per_step() <= base.seconds_per_step() + 1e-12,
+                        "{name} {nodes}n: planner {} slower than dp stage{} {}",
+                        best.seconds_per_step(),
+                        stage.index(),
+                        base.seconds_per_step()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_is_pareto_and_sorted() {
+        let model = by_name("mt5-xxl").unwrap();
+        let r = plan_pod(&model, 4);
+        let f = &r.frontier;
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[0].step.mem_per_gpu <= w[1].step.mem_per_gpu);
+            assert!(w[0].seconds_per_step() > w[1].seconds_per_step());
+        }
+        // the frontier's fastest point is the best plan's speed
+        let fastest = f.last().unwrap().seconds_per_step();
+        assert_eq!(fastest.to_bits(), r.best.unwrap().seconds_per_step().to_bits());
+    }
+
+    #[test]
+    fn planner_deterministic_across_worker_counts() {
+        let model = by_name("mt5-xl").unwrap();
+        let cluster = ClusterSpec::lps_pod(4);
+        let w = Workload::table1();
+        let space = PlanSpace::default();
+        let serial = plan(&model, &cluster, &w, &space, &Sweep::serial(), &SimCache::new());
+        let par = plan(&model, &cluster, &w, &space, &Sweep::new(8), &SimCache::new());
+        let a = serial.best.unwrap();
+        let b = par.best.unwrap();
+        assert_eq!(a.setup.par, b.setup.par);
+        assert_eq!(a.setup.stage, b.setup.stage);
+        assert_eq!(a.seconds_per_step().to_bits(), b.seconds_per_step().to_bits());
+        assert_eq!(serial.frontier.len(), par.frontier.len());
+        assert_eq!(serial.feasible, par.feasible);
+    }
+
+    #[test]
+    fn nothing_fits_reports_none() {
+        // an impossible query: 13B params, plain DDP, no model sharding of
+        // any kind — 16 bytes/param ~ 206 GB per 80 GB GPU
+        let model = by_name("mt5-xxl").unwrap();
+        let cluster = ClusterSpec::lps_pod(1);
+        let space = PlanSpace {
+            stages: vec![ZeroStage::Stage0],
+            offload: vec![false],
+            max_tp: 1,
+            max_pp: 1,
+            ..PlanSpace::default()
+        };
+        let r = plan(
+            &model,
+            &cluster,
+            &Workload::table1(),
+            &space,
+            &Sweep::serial(),
+            &SimCache::new(),
+        );
+        assert!(r.best.is_none());
+        assert_eq!(r.feasible, 0);
+        assert!(r.frontier.is_empty());
+    }
+}

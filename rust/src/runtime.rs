@@ -12,6 +12,9 @@
 
 use crate::json::Json;
 use crate::util::Rng;
+// Without the real PJRT bindings the API-compatible stub stands in; the
+// artifact-driven integration tests are gated on the `pjrt` feature.
+use crate::xla;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 

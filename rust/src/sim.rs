@@ -68,6 +68,10 @@ pub struct TrainSetup {
     /// analogue; more buckets = better overlap pipelining but more
     /// latency).  ZeRO-3 granularity is per-layer instead.
     pub grad_bucket_msgs: usize,
+    /// Optional cap on the per-GPU micro-batch (0 = auto: the largest that
+    /// fits HBM).  The HPO space sweeps this and the planner uses it to
+    /// trade activation memory against gradient-accumulation overhead.
+    pub micro_batch_cap: usize,
 }
 
 impl TrainSetup {
@@ -87,8 +91,22 @@ impl TrainSetup {
             overlap_comm: true,
             offload: false,
             grad_bucket_msgs: 25,
+            micro_batch_cap: 0,
         }
     }
+}
+
+/// DP process-group placement: TP packs inside a node, DP spans the rest.
+/// Returns `(dp_nodes, dp_gpus_per_node)`.  `dp_nodes` is clamped to the
+/// cluster's node count — without the clamp, tp degrees that do not divide
+/// the node's GPU count (e.g. tp=5 on an 8-GPU node) made
+/// `ceil(dp / dp_gpus_per_node)` exceed the physical node count and priced
+/// collectives on nodes that do not exist.
+pub fn dp_placement(cluster: &ClusterSpec, tp: usize, dp: usize) -> (usize, usize) {
+    let dp_gpus_per_node = (cluster.node.gpus / tp.max(1)).max(1).min(dp.max(1));
+    let dp_nodes =
+        ((dp + dp_gpus_per_node - 1) / dp_gpus_per_node).clamp(1, cluster.nodes.max(1));
+    (dp_nodes, dp_gpus_per_node)
 }
 
 /// Seconds-per-step prediction with the component breakdown.
@@ -170,8 +188,7 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
     let tp = par.tp;
     let pp = par.pp;
     let dp = par.dp;
-    let dp_gpus_per_node = (cluster.node.gpus / tp).max(1).min(dp);
-    let dp_nodes = (dp + dp_gpus_per_node - 1) / dp_gpus_per_node;
+    let (dp_nodes, dp_gpus_per_node) = dp_placement(cluster, tp, dp);
 
     // ---------------- memory fit: choose the largest micro-batch.
     let psi = m.params() as f64 / (tp * pp) as f64;
@@ -187,14 +204,19 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
     let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
     let act_per_sample =
         m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp) as f64 * act_factor;
-    let hbm = cluster.node.gpu.hbm_bytes * 0.90;
+    let hbm = cluster.node.gpu.hbm_bytes * zero::HBM_SAFETY_MARGIN;
 
     let samples_per_rank = (w.global_batch + dp - 1) / dp;
     if samples_per_rank == 0 {
         return StepTime::oom(state_bytes);
     }
+    let fit_cap = if setup.micro_batch_cap > 0 {
+        samples_per_rank.min(setup.micro_batch_cap)
+    } else {
+        samples_per_rank
+    };
     let mut micro_batch = 0usize;
-    for mb in (1..=samples_per_rank).rev() {
+    for mb in (1..=fit_cap).rev() {
         let live = parallel::live_microbatches(
             setup.sched,
             pp,
@@ -215,7 +237,14 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
         return StepTime::oom(state_bytes + act_per_sample);
     }
     let num_micro = (samples_per_rank + micro_batch - 1) / micro_batch;
-    let mem_per_gpu = state_bytes + act_per_sample * micro_batch as f64;
+    // report the same peak the fit check enforced: with pipeline stages,
+    // `live` micro-batches of activations are resident simultaneously
+    let live = parallel::live_microbatches(setup.sched, pp, num_micro).max(1);
+    let mem_per_gpu = if pp > 1 {
+        state_bytes + act_per_sample * micro_batch as f64 * live as f64
+    } else {
+        state_bytes + act_per_sample * micro_batch as f64
+    };
 
     // ---------------- compute
     let flops_per_sample = m.train_flops_per_sample(w.enc_len, w.dec_len);
@@ -344,17 +373,29 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
 /// Reproduce the paper's Table 1 grid: seconds/step for ZeRO stages
 /// {2, 3} × node counts, mt5-xxl, fixed effective batch.  Returns rows
 /// `(stage, Vec<(nodes, seconds_per_step)>)`.
+///
+/// Cells are independent, so they fan out over the parallel sweep
+/// executor; results are bit-identical to the old serial loop (see
+/// `crate::sweep` determinism guarantees).
 pub fn table1_grid(node_counts: &[usize]) -> Vec<(ZeroStage, Vec<(usize, f64)>)> {
     let model = crate::model::by_name("mt5-xxl").expect("zoo model");
-    [ZeroStage::Stage2, ZeroStage::Stage3]
-        .into_iter()
-        .map(|stage| {
+    let stages = [ZeroStage::Stage2, ZeroStage::Stage3];
+    let mut setups = Vec::with_capacity(stages.len() * node_counts.len());
+    for &stage in &stages {
+        for &n in node_counts {
+            setups.push(TrainSetup::dp_pod(model.clone(), n, stage));
+        }
+    }
+    let times = crate::sweep::Sweep::auto()
+        .map(&setups, |_, setup| simulate_step(setup).seconds_per_step());
+    stages
+        .iter()
+        .enumerate()
+        .map(|(si, &stage)| {
             let row = node_counts
                 .iter()
-                .map(|&n| {
-                    let setup = TrainSetup::dp_pod(model.clone(), n, stage);
-                    (n, simulate_step(&setup).seconds_per_step())
-                })
+                .enumerate()
+                .map(|(ni, &n)| (n, times[si * node_counts.len() + ni]))
                 .collect();
             (stage, row)
         })
@@ -475,6 +516,7 @@ mod tests {
             overlap_comm: true,
             offload: false,
             grad_bucket_msgs: 25,
+            micro_batch_cap: 0,
         };
         let t1 = simulate_step(&mk(1));
         let t4 = simulate_step(&mk(4));
@@ -509,10 +551,61 @@ mod tests {
             overlap_comm: true,
             offload: false,
             grad_bucket_msgs: 25,
+            micro_batch_cap: 0,
         };
         let st = simulate_step(&s);
         assert!(st.fits);
         assert!(st.bubble > 0.0);
+    }
+
+    /// Regression for the DP-placement overflow: tp degrees that do not
+    /// divide the node's GPU count must never place the DP group on more
+    /// nodes than the cluster has.
+    #[test]
+    fn dp_placement_never_exceeds_cluster_nodes() {
+        for nodes in [1usize, 2, 4, 8] {
+            let cluster = ClusterSpec::lps_pod(nodes);
+            let gpus = cluster.total_gpus();
+            for tp in 1..=9usize {
+                for dp in 1..=gpus {
+                    if dp * tp > gpus {
+                        continue;
+                    }
+                    let (dp_nodes, dp_gpn) = dp_placement(&cluster, tp, dp);
+                    assert!(
+                        dp_nodes <= nodes,
+                        "tp={tp} dp={dp} on {nodes} nodes placed on {dp_nodes}"
+                    );
+                    assert!(dp_nodes >= 1 && dp_gpn >= 1);
+                }
+            }
+        }
+        // the concrete overflow case: tp=5 on 8-GPU nodes, 2-node cluster,
+        // dp=3 (15 of 16 GPUs used) used to yield dp_nodes = 3 > 2
+        let cluster = ClusterSpec::lps_pod(2);
+        let (dp_nodes, dp_gpn) = dp_placement(&cluster, 5, 3);
+        assert_eq!(dp_gpn, 1);
+        assert_eq!(dp_nodes, 2);
+        // ...and the step simulator accepts the configuration end to end
+        let mut s = TrainSetup::dp_pod(by_name("mt5-large").unwrap(), 2, ZeroStage::Stage2);
+        s.par = ParallelCfg { dp: 3, tp: 5, pp: 1 };
+        let st = simulate_step(&s);
+        assert!(st.seconds_per_step().is_finite());
+    }
+
+    /// The micro-batch cap binds the fit search and inflates accumulation.
+    #[test]
+    fn micro_batch_cap_respected() {
+        let mut s = xxl_setup(4, ZeroStage::Stage2);
+        let auto = simulate_step(&s);
+        assert!(auto.fits && auto.micro_batch > 4);
+        s.micro_batch_cap = 4;
+        let capped = simulate_step(&s);
+        assert!(capped.fits);
+        assert!(capped.micro_batch <= 4);
+        assert!(capped.num_microbatches >= auto.num_microbatches);
+        // capping never changes feasibility of an already-fitting config
+        assert_eq!(capped.fits, auto.fits);
     }
 }
 

@@ -1,0 +1,327 @@
+//! Parallel sweep executor: a std-thread worker pool that fans trial
+//! evaluations out across cores while keeping results **bit-identical to a
+//! serial run**.
+//!
+//! Every study in this repo is a grid or funnel of independent trial
+//! evaluations (`sim::simulate_step`, `hpo::evaluate`); until this module
+//! they all ran one at a time.  The executor supplies:
+//!
+//! * **Worker pool over a bounded queue** — the work queue is the input
+//!   slice itself, drained through an atomic cursor, so there is no
+//!   unbounded buffering and no work stealing to reason about.
+//! * **Deterministic result ordering** — each result is tagged with its
+//!   input index and reassembled in input order, so a run with N workers is
+//!   bit-identical to a run with 1 worker (pure evaluation functions
+//!   compute each trial independently; no cross-trial float accumulation).
+//! * **Per-trial seed splitting** — stochastic trials draw from
+//!   [`Rng::split`](crate::util::Rng::split) streams derived from the
+//!   *trial index*, never from worker identity, so randomness is stable
+//!   under any scheduling.
+//! * **A memo cache keyed on the priced [`TrainSetup`]** — grids and the
+//!   HPO funnel revisit identical configurations constantly (the funnel's
+//!   one-at-a-time phase shares 29 of 30 dimensions with the baseline);
+//!   repeated configurations are never re-simulated.
+//!
+//! Wired into [`sim::table1_grid`](crate::sim::table1_grid), HPO phases 1
+//! and 3 ([`crate::hpo::run_funnel`]), the `model_size_sweep`/`hpo_funnel`
+//! benches and the auto-parallelism planner ([`crate::planner`]).
+
+use crate::sim::{simulate_step, StepTime, TrainSetup};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// The worker-pool executor. Cheap to construct; hold one per study.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    workers: usize,
+}
+
+impl Sweep {
+    /// `workers = 0` means auto (all available cores).
+    pub fn new(workers: usize) -> Sweep {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        Sweep { workers }
+    }
+
+    /// All available cores.
+    pub fn auto() -> Sweep {
+        Sweep::new(0)
+    }
+
+    /// Strictly serial execution (also the fallback for 1-item inputs).
+    pub fn serial() -> Sweep {
+        Sweep::new(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Evaluate `f(index, &item)` for every item, in parallel, returning
+    /// results in input order. `f` must be pure for the determinism
+    /// guarantee to hold (all users here are analytical models).
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.workers <= 1 || n <= 1 {
+            return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n) {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    if tx.send((i, r)).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut tagged: Vec<(usize, R)> = rx.into_iter().collect();
+        tagged.sort_by_key(|&(i, _)| i);
+        tagged.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Like [`Sweep::map`] but hands each trial its own deterministic RNG
+    /// stream, split from `seed` by **trial index** (not worker id), so
+    /// stochastic trials reproduce under any worker count.
+    pub fn map_seeded<T, R, F>(&self, seed: u64, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T, &mut Rng) -> R + Sync,
+    {
+        let root = Rng::new(seed);
+        self.map(items, |i, item| {
+            let mut rng = root.split(i as u64);
+            f(i, item, &mut rng)
+        })
+    }
+
+    /// Price many [`TrainSetup`]s through the memo cache in parallel.
+    pub fn simulate_setups(&self, cache: &SimCache, setups: &[TrainSetup]) -> Vec<StepTime> {
+        self.map(setups, |_, s| cache.simulate(s))
+    }
+}
+
+impl Default for Sweep {
+    fn default() -> Sweep {
+        Sweep::auto()
+    }
+}
+
+/// Canonical hash key for a [`TrainSetup`]: every field that influences
+/// [`simulate_step`], with floats canonicalized to their bit patterns.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SetupKey {
+    model_name: String,
+    fields: Vec<u64>,
+}
+
+impl SetupKey {
+    pub fn of(s: &TrainSetup) -> SetupKey {
+        let m = &s.model;
+        let c = &s.cluster;
+        let w = &s.workload;
+        let fields: Vec<u64> = vec![
+            m.vocab,
+            m.d_model,
+            m.d_ff,
+            m.num_heads,
+            m.d_kv,
+            m.enc_layers,
+            m.dec_layers,
+            m.tied_lm_head as u64,
+            c.nodes as u64,
+            c.node.gpus as u64,
+            c.node.gpu.peak_flops_bf16.to_bits(),
+            c.node.gpu.peak_flops_fp32.to_bits(),
+            c.node.gpu.hbm_bytes.to_bits(),
+            c.node.gpu.hbm_bw.to_bits(),
+            c.node.gpu.achievable_frac.to_bits(),
+            c.node.nvlink_bw.to_bits(),
+            c.node.nvlink_latency.to_bits(),
+            c.node.host_ram_bytes.to_bits(),
+            c.node.pcie_bw.to_bits(),
+            c.ib_bw.to_bits(),
+            c.ib_latency.to_bits(),
+            c.oversub_threshold_nodes as u64,
+            c.oversub_factor.to_bits(),
+            c.storage_samples_per_s.to_bits(),
+            c.storage_threshold_nodes as u64,
+            c.storage_contention.to_bits(),
+            s.par.dp as u64,
+            s.par.tp as u64,
+            s.par.pp as u64,
+            s.stage.index() as u64,
+            s.opt as u64,
+            s.sched as u64,
+            w.global_batch as u64,
+            w.enc_len,
+            w.dec_len,
+            w.ckpt as u64,
+            s.dataloader_workers as u64,
+            s.overlap_comm as u64,
+            s.offload as u64,
+            s.grad_bucket_msgs as u64,
+            s.micro_batch_cap as u64,
+        ];
+        SetupKey { model_name: m.name.clone(), fields }
+    }
+}
+
+/// Thread-safe memo cache over [`simulate_step`]: identical setups are
+/// priced exactly once per cache lifetime.
+#[derive(Default)]
+pub struct SimCache {
+    map: Mutex<HashMap<SetupKey, StepTime>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl SimCache {
+    pub fn new() -> SimCache {
+        SimCache::default()
+    }
+
+    /// Cached [`simulate_step`]. Two threads racing on the same fresh key
+    /// may both price it (the result is identical); the first insert wins.
+    pub fn simulate(&self, setup: &TrainSetup) -> StepTime {
+        let key = SetupKey::of(setup);
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        let st = simulate_step(setup);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().entry(key).or_insert_with(|| st.clone());
+        st
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+    use crate::zero::ZeroStage;
+
+    #[test]
+    fn map_preserves_input_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let out = Sweep::new(8).map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 3
+        });
+        assert_eq!(out, (0..97).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    /// The acceptance property: parallel (>= 4 workers) runs are
+    /// bit-identical to serial, on real simulator pricing.
+    #[test]
+    fn parallel_simulation_bit_identical_to_serial() {
+        let mut setups = Vec::new();
+        for model in ["mt5-base", "mt5-xl", "mt5-xxl"] {
+            let m = by_name(model).unwrap();
+            for nodes in [1usize, 2, 4, 8] {
+                for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
+                    setups.push(TrainSetup::dp_pod(m.clone(), nodes, stage));
+                }
+            }
+        }
+        let serial = Sweep::serial().map(&setups, |_, s| simulate_step(s).seconds_per_step());
+        for workers in [4usize, 8] {
+            let par = Sweep::new(workers).map(&setups, |_, s| simulate_step(s).seconds_per_step());
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "parallel diverged from serial");
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_map_stable_under_worker_count() {
+        let items: Vec<u32> = (0..40).collect();
+        let a = Sweep::serial().map_seeded(7, &items, |_, &x, rng| (x, rng.next_u64()));
+        let b = Sweep::new(6).map_seeded(7, &items, |_, &x, rng| (x, rng.next_u64()));
+        assert_eq!(a, b);
+        // different trials draw from different streams
+        assert_ne!(a[0].1, a[1].1);
+    }
+
+    #[test]
+    fn memo_cache_dedups_identical_setups() {
+        let cache = SimCache::new();
+        let m = by_name("mt5-base").unwrap();
+        let setup = TrainSetup::dp_pod(m.clone(), 2, ZeroStage::Stage2);
+        let a = cache.simulate(&setup);
+        let b = cache.simulate(&setup);
+        assert_eq!(a.seconds_per_step().to_bits(), b.seconds_per_step().to_bits());
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+        // a different stage is a different key
+        let other = TrainSetup::dp_pod(m, 2, ZeroStage::Stage3);
+        cache.simulate(&other);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn cached_sweep_matches_uncached() {
+        let m = by_name("mt5-large").unwrap();
+        let setups: Vec<TrainSetup> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&n| TrainSetup::dp_pod(m.clone(), n, ZeroStage::Stage2))
+            .collect();
+        let cache = SimCache::new();
+        let cached = Sweep::new(4).simulate_setups(&cache, &setups);
+        let plain: Vec<StepTime> = setups.iter().map(simulate_step).collect();
+        for (a, b) in cached.iter().zip(&plain) {
+            assert_eq!(a.seconds_per_step().to_bits(), b.seconds_per_step().to_bits());
+            assert_eq!(a.micro_batch, b.micro_batch);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let empty: Vec<u8> = Vec::new();
+        assert!(Sweep::auto().map(&empty, |_, &x| x).is_empty());
+        let one = [41u8];
+        assert_eq!(Sweep::auto().map(&one, |_, &x| x + 1), vec![42]);
+    }
+}

@@ -24,6 +24,14 @@
 use crate::comm::CommModel;
 use crate::model::ModelCfg;
 
+/// Fraction of HBM usable for model states + activations; the remainder
+/// covers fragmentation and workspaces (cuDNN workspaces, NCCL buffers).
+/// Shared by [`fits_in_hbm`], the step simulator ([`crate::sim`]) and the
+/// auto-parallelism planner ([`crate::planner`]) so the safety margin can
+/// never drift between the memory model and the fit decision (it used to be
+/// hard-coded in two places).
+pub const HBM_SAFETY_MARGIN: f64 = 0.90;
+
 /// DeepSpeed ZeRO stage.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum ZeroStage {
@@ -176,11 +184,10 @@ pub fn schedule_time(
     let mut total = 0.0;
     let mut overlappable = 0.0;
     for op in ops {
+        // every message of an op is identical, so price one and multiply
+        // instead of calling the cost model O(messages) times
         let per_msg = op.bytes / op.messages.max(1) as f64;
-        let mut t = 0.0;
-        for _ in 0..op.messages {
-            t += comm.time(op.collective, per_msg, nodes, gpus_per_node);
-        }
+        let t = op.messages as f64 * comm.time(op.collective, per_msg, nodes, gpus_per_node);
         total += t;
         if op.overlappable {
             overlappable += t;
@@ -203,9 +210,7 @@ pub fn fits_in_hbm(
 ) -> bool {
     let psi = model.params() as f64 / (tp * pp).max(1) as f64;
     let states = state_bytes_per_gpu(psi, nd, stage, opt);
-    // fragmentation + workspace margin (cudnn workspaces, NCCL buffers):
-    let margin = 0.90;
-    states + activation_bytes <= hbm_bytes * margin
+    states + activation_bytes <= hbm_bytes * HBM_SAFETY_MARGIN
 }
 
 #[cfg(test)]
@@ -318,6 +323,38 @@ mod tests {
         let s3 = step_schedule(1e9, ZeroStage::Stage3, 48);
         let msgs = |s: &[CommOp]| s.iter().map(|o| o.messages).sum::<usize>();
         assert!(msgs(&s3) > msgs(&s2));
+    }
+
+    /// The O(1)-per-op pricing must be numerically equivalent to the
+    /// original one-`comm.time`-call-per-message loop it replaced.
+    #[test]
+    fn schedule_time_matches_per_message_loop() {
+        let comm = crate::comm::CommModel::new(crate::hardware::ClusterSpec::lps_pod(8));
+        for stage in ZeroStage::all() {
+            for (nodes, g) in [(1usize, 8usize), (4, 8), (8, 4)] {
+                let ops = step_schedule(13e9, stage, 48);
+                let (total, overlappable) = schedule_time(&ops, &comm, nodes, g);
+                let mut ref_total = 0.0;
+                let mut ref_overlap = 0.0;
+                for op in &ops {
+                    let per = op.bytes / op.messages.max(1) as f64;
+                    let mut t = 0.0;
+                    for _ in 0..op.messages {
+                        t += comm.time(op.collective, per, nodes, g);
+                    }
+                    ref_total += t;
+                    if op.overlappable {
+                        ref_overlap += t;
+                    }
+                }
+                let tol = 1e-9 * ref_total.max(1e-12);
+                assert!(
+                    (total - ref_total).abs() <= tol,
+                    "{stage:?} {nodes}x{g}: {total} vs {ref_total}"
+                );
+                assert!((overlappable - ref_overlap).abs() <= tol);
+            }
+        }
     }
 
     #[test]

@@ -2,6 +2,10 @@
 //! `make artifacts`; they fail with a clear message otherwise — `make
 //! test` guarantees ordering).  All tests use the `micro` preset: its
 //! train artifact compiles in ~2 s on the CPU PJRT client.
+//!
+//! Gated behind the `pjrt` cargo feature (see Cargo.toml
+//! `required-features`): the offline vendor set ships only the stub
+//! `xla` bindings (rust/src/xla.rs), which cannot execute artifacts.
 
 use scalestudy::data::{CorpusCfg, TaskGen};
 use scalestudy::metrics::RunLog;

@@ -5,10 +5,15 @@ use scalestudy::hardware::ClusterSpec;
 use scalestudy::hpo::{evaluate, space, Template};
 use scalestudy::json::Json;
 use scalestudy::model::{by_name, mt5_zoo};
-use scalestudy::sim::{simulate_step, TrainSetup};
+use scalestudy::planner::{plan, PlanSpace};
+use scalestudy::sim::{dp_placement, simulate_step, TrainSetup, Workload};
+use scalestudy::sweep::{SimCache, Sweep};
 use scalestudy::testkit::{forall, forall_cases, Gen, OneOf, PairOf, UsizeIn};
 use scalestudy::util::Rng;
-use scalestudy::zero::{comm_volume_per_step, state_bytes_per_gpu, OptimizerKind, ZeroStage};
+use scalestudy::zero::{
+    comm_volume_per_step, fits_in_hbm, state_bytes_per_gpu, OptimizerKind, ZeroStage,
+    HBM_SAFETY_MARGIN,
+};
 
 // ----------------------------------------------------------------- json
 
@@ -234,6 +239,114 @@ fn prop_template_with_only_changes_one_dim() {
             assert!(diffs <= 1);
         }
     }
+}
+
+// ----------------------------------------------------------------- sweep + planner
+
+/// The executor's core guarantee, fuzzed: any worker count returns
+/// bit-identical results in input order.
+#[test]
+fn prop_sweep_bit_identical_for_any_worker_count() {
+    let gen = PairOf(UsizeIn { lo: 2, hi: 12 }, UsizeIn { lo: 0, hi: 40 });
+    forall_cases(&gen, 20, |&(workers, n_items)| {
+        let items: Vec<u64> = (0..n_items as u64).collect();
+        // a float-heavy pure function (transcendental chains surface any
+        // ordering difference immediately)
+        let f = |i: usize, &x: &u64| ((x as f64 + 1.3).ln() * (i as f64 + 0.7)).sin();
+        let serial = Sweep::serial().map(&items, f);
+        let par = Sweep::new(workers).map(&items, f);
+        if serial.len() != par.len() {
+            return Err("length mismatch".into());
+        }
+        for (a, b) in serial.iter().zip(&par) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("diverged at workers={workers}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The planner's chosen plan always fits HBM — both by the simulator's own
+/// accounting (against the shared safety margin) and by the independent
+/// `zero::fits_in_hbm` model — and is never slower than any feasible
+/// dp-only `dp_pod` baseline.
+#[test]
+fn prop_planner_plan_fits_and_beats_dp_baseline() {
+    let gen = PairOf(
+        OneOf(vec!["mt5-base", "mt5-large", "mt5-xl", "mt5-xxl"]),
+        OneOf(vec![1usize, 2, 4, 8]),
+    );
+    forall_cases(&gen, 12, |&(name, nodes)| {
+        let model = by_name(name).unwrap();
+        let cluster = ClusterSpec::lps_pod(nodes);
+        let space = PlanSpace::default();
+        let r = plan(
+            &model,
+            &cluster,
+            &Workload::table1(),
+            &space,
+            &Sweep::auto(),
+            &SimCache::new(),
+        );
+        let best = match &r.best {
+            Some(b) => b,
+            None => return Err(format!("{name} {nodes}n: no feasible plan")),
+        };
+        if !best.step.fits {
+            return Err("best plan reported as not fitting".into());
+        }
+        let hbm = cluster.node.gpu.hbm_bytes;
+        if best.step.mem_per_gpu > hbm * HBM_SAFETY_MARGIN + 1.0 {
+            return Err(format!(
+                "best plan memory {} exceeds margin",
+                best.step.mem_per_gpu
+            ));
+        }
+        // cross-check against the independent fits_in_hbm model (offload
+        // moves state off-device, which that model does not track)
+        if !best.setup.offload {
+            let s = &best.setup;
+            let psi = model.params() as f64 / (s.par.tp * s.par.pp) as f64;
+            let states = state_bytes_per_gpu(psi, s.par.dp, s.stage, s.opt);
+            let act = best.step.mem_per_gpu - states;
+            if !fits_in_hbm(&model, s.stage, s.opt, s.par.dp, s.par.tp, s.par.pp, act, hbm) {
+                return Err(format!("{name} {nodes}n: fits_in_hbm disagrees"));
+            }
+        }
+        for stage in ZeroStage::all() {
+            let base = simulate_step(&TrainSetup::dp_pod(model.clone(), nodes, stage));
+            if base.fits && best.seconds_per_step() > base.seconds_per_step() + 1e-12 {
+                return Err(format!(
+                    "{name} {nodes}n: plan {} slower than dp stage{} {}",
+                    best.seconds_per_step(),
+                    stage.index(),
+                    base.seconds_per_step()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The placement clamp, fuzzed across cluster shapes and (tp, dp) combos
+/// (including tp values that do not divide the node's GPU count).
+#[test]
+fn prop_dp_placement_within_cluster() {
+    let gen = PairOf(UsizeIn { lo: 1, hi: 8 }, PairOf(UsizeIn { lo: 1, hi: 9 }, UsizeIn { lo: 1, hi: 64 }));
+    forall(&gen, |&(nodes, (tp, dp))| {
+        let cluster = ClusterSpec::lps_pod(nodes);
+        let (dp_nodes, dp_gpn) = dp_placement(&cluster, tp, dp);
+        if dp_nodes > nodes {
+            return Err(format!(
+                "tp={tp} dp={dp} on {nodes} nodes placed on {dp_nodes} nodes"
+            ));
+        }
+        if dp_nodes < 1 || dp_gpn < 1 || dp_gpn > cluster.node.gpus {
+            return Err(format!("degenerate placement ({dp_nodes}, {dp_gpn})"));
+        }
+        Ok(())
+    });
 }
 
 // ----------------------------------------------------------------- data

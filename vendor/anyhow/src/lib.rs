@@ -1,0 +1,165 @@
+//! Offline vendored stand-in for the `anyhow` crate.
+//!
+//! The repro gate forbids network access, so the vendor set carries this
+//! minimal implementation of the subset the study uses: a message-carrying
+//! [`Error`], the [`anyhow!`] / [`bail!`] macros, the [`Context`] extension
+//! trait, and the blanket `From<E: std::error::Error>` conversion that makes
+//! `?` work on `io::Error` and the crate's own parser errors.
+//!
+//! Deliberate simplifications vs the real crate:
+//! * the error is a flat string — the source chain is flattened into the
+//!   message at conversion time instead of being kept as a linked list;
+//! * `{:#}` (alternate) formatting equals plain `{}` formatting;
+//! * no backtrace capture and no downcasting.
+
+use std::fmt;
+
+/// A string-backed error value.
+///
+/// Note: `Error` intentionally does **not** implement `std::error::Error`;
+/// that is what makes the blanket `From` impl below coherent (the same trick
+/// the real `anyhow` uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // flatten the source chain into one message
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`.context(...)` / `.with_context(|| ...)`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| {
+            let inner: Error = e.into();
+            Error { msg: format!("{ctx}: {inner}") }
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let inner: Error = e.into();
+            Error { msg: format!("{}: {inner}", f()) }
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 7;
+        let e = anyhow!("value {x} and {}", 8);
+        assert_eq!(e.to_string(), "value 7 and 8");
+        fn bails() -> Result<()> {
+            bail!("bad {}", "news");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "bad news");
+    }
+
+    #[test]
+    fn context_wraps() {
+        let e: Result<()> = io_fail().context("reading config");
+        assert_eq!(e.unwrap_err().to_string(), "reading config: disk on fire");
+        let e: Result<()> = io_fail().with_context(|| format!("step {}", 3));
+        assert_eq!(e.unwrap_err().to_string(), "step 3: disk on fire");
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let e: Result<()> = Err(anyhow!("inner"));
+        assert_eq!(e.context("outer").unwrap_err().to_string(), "outer: inner");
+    }
+}
