@@ -52,7 +52,11 @@ fn main() {
         let waited = stats.wait_ns.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9;
         println!(
             "{:<22} {:>12.1} {:>13.2}ms",
-            if workers == 0 { "serial (paper's)".to_string() } else { format!("{workers} workers") },
+            if workers == 0 {
+                "serial (paper's)".to_string()
+            } else {
+                format!("{workers} workers")
+            },
             n_batches as f64 / dt,
             waited / n_batches as f64 * 1e3,
         );
@@ -69,5 +73,8 @@ fn main() {
         let par = simulate_step(&setup).stall;
         println!("{nodes:<8} {serial:>14.2}s {par:>15.2}s");
     }
-    println!("\nfinding: input-pipeline stall appears exactly where the paper saw the\n8-node slowdown, and worker parallelism shrinks it.");
+    println!(
+        "\nfinding: input-pipeline stall appears exactly where the paper saw the\n\
+         8-node slowdown, and worker parallelism shrinks it."
+    );
 }

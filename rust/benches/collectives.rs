@@ -43,7 +43,8 @@ fn main() {
             .iter()
             .map(|&n| {
                 let comm = CommModel::new(ClusterSpec::lps_pod(n));
-                let (total, _) = zero::schedule_time(&zero::step_schedule(psi, stage, 48), &comm, n, 8);
+                let (total, _) =
+                    zero::schedule_time(&zero::step_schedule(psi, stage, 48), &comm, n, 8);
                 total
             })
             .collect();

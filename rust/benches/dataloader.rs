@@ -77,7 +77,9 @@ fn main() {
             .collect();
         sim_t.row(&format!("{workers} workers/node"), row);
     }
-    sim_t.note("stall concentrates at 8 nodes (shared front-end saturation), as the paper suspected");
+    sim_t.note(
+        "stall concentrates at 8 nodes (shared front-end saturation), as the paper suspected",
+    );
     b.table(sim_t);
 
     b.finish();

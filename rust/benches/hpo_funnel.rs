@@ -58,7 +58,9 @@ fn main() {
                     .collect(),
             );
         }
-        grid.note("0 = infeasible at that scale; no single template wins every column (no one-size-fits-all)");
+        grid.note(
+            "0 = infeasible at that scale; no template wins every column (no one-size-fits-all)",
+        );
         b.table(grid);
 
         assert_eq!(result.trials.len(), 205);
@@ -98,23 +100,69 @@ fn main() {
                 .collect(),
         );
     }
-    abl.note("scaling-aware = the paper's future-work proposal: survivors must transfer to 8 nodes before combination. 0 = infeasible.");
+    abl.note(
+        "scaling-aware = the paper's future-work idea: survivors must transfer to 8 nodes \
+         before combination. 0 = infeasible.",
+    );
     b.table(abl);
 
-    // ---- serial vs parallel funnel wall time (same seed, same trials)
+    // ---- per-core scaling curve: identical 205-trial studies at
+    // 1/2/4/all workers, each with its own fresh SimCache (fair wall
+    // time), reporting the cache's intra-study hit rate
+    use scalestudy::sweep::SimCache;
     let mut speed = Table::new(
-        "funnel wall time: serial vs parallel executor (s)",
-        &["wall s"],
+        "funnel per-core scaling (same seed, bit-identical trials)",
+        &["wall s", "speedup vs 1w", "SimCache hit %", "sims priced"],
     );
-    for (label, workers) in [("serial (1 worker)", 1usize), ("parallel (auto)", 0)] {
+    let mut serial_wall = f64::NAN;
+    for workers in [1usize, 2, 4, 0] {
         let cfg = FunnelCfg { workers, ..FunnelCfg::default() };
+        let cache = SimCache::new();
         let t0 = std::time::Instant::now();
-        let r = run_funnel(&cfg);
-        speed.row(label, vec![t0.elapsed().as_secs_f64()]);
+        let r = scalestudy::hpo::run_funnel_cached(&cfg, &cache);
+        let wall = t0.elapsed().as_secs_f64();
+        if workers == 1 {
+            serial_wall = wall;
+        }
+        let label = if workers == 0 {
+            "all cores".to_string()
+        } else {
+            format!("{workers} workers")
+        };
+        speed.row(
+            &label,
+            vec![wall, serial_wall / wall, 100.0 * cache.hit_rate(), cache.misses() as f64],
+        );
         assert_eq!(r.trials.len(), 205);
     }
-    speed.note("identical 205-trial studies; results are bit-identical by construction");
+    speed.note(
+        "hit rate = study-internal SimCache dedup (planner seeding + convergence-only \
+         deviations share pricings)",
+    );
     b.table(speed);
+
+    // ---- planner-guided vs blind funnel: trials spent per phase
+    let mut seedtab = Table::new(
+        "planner-guided seeding vs blind sweep (default config)",
+        &["phase1 trials", "phase2 trials", "best TTT (h)"],
+    );
+    for (label, planner_seeded) in [("planner-seeded", true), ("blind", false)] {
+        let cfg = FunnelCfg { planner_seeded, ..FunnelCfg::default() };
+        let r = run_funnel(&cfg);
+        let count = |p: &str| r.trials.iter().filter(|t| t.phase == p).count() as f64;
+        let best = r
+            .finalists
+            .iter()
+            .map(|(_, rows)| {
+                rows.iter().map(|(_, s)| s.time_to_train()).fold(f64::INFINITY, f64::min)
+            })
+            .fold(f64::INFINITY, f64::min);
+        seedtab.row(label, vec![count("phase1"), count("phase2"), best / 3600.0]);
+    }
+    seedtab.note(
+        "seeding moves budget from blindly sweeping parallelism dims into phase-2 combinations",
+    );
+    b.table(seedtab);
 
     // search engine micro-bench: single trial evaluation cost
     let t = Template::baseline(&dims);

@@ -20,9 +20,12 @@ fn main() {
     let zoo = mt5_zoo();
     let stages = ZeroStage::all();
 
-    // ---- one parallel fan-out prices the entire model x node x stage grid
+    // ---- one parallel fan-out prices the entire model x node x stage
+    // grid, through the persistent cross-invocation cache (a re-run of
+    // this bench is all hits)
     let sweep = Sweep::auto();
-    let cache = SimCache::new();
+    let cache = SimCache::load_default();
+    let warm_entries = cache.len();
     let mut setups = Vec::with_capacity(zoo.len() * nodes.len() * stages.len());
     for model in &zoo {
         for &n in &nodes {
@@ -34,11 +37,52 @@ fn main() {
     let t0 = std::time::Instant::now();
     let priced = sweep.simulate_setups(&cache, &setups);
     println!(
-        "priced {} configurations in {:.1} ms on {} workers\n",
+        "priced {} configurations in {:.1} ms on {} workers ({} cache entries preloaded)\n",
         priced.len(),
         t0.elapsed().as_secs_f64() * 1e3,
-        sweep.workers()
+        sweep.workers(),
+        warm_entries,
     );
+
+    // ---- per-core scaling curve + SimCache hit rates (cold vs warm)
+    let mut scaling = Table::new(
+        "executor scaling: grid pricing wall time by worker count",
+        &["cold ms", "warm ms", "cold hit %", "warm hit %", "speedup vs 1w"],
+    );
+    let worker_counts = [1usize, 2, 4, 0];
+    let mut cold_base = f64::NAN;
+    for &wk in &worker_counts {
+        let s = Sweep::new(wk);
+        let cold_cache = SimCache::new();
+        let t0 = std::time::Instant::now();
+        let cold_res = s.simulate_setups(&cold_cache, &setups);
+        let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let cold_hit = 100.0 * cold_cache.hit_rate();
+        let (h1, m1) = (cold_cache.hits(), cold_cache.misses());
+        let t0 = std::time::Instant::now();
+        let warm_res = s.simulate_setups(&cold_cache, &setups);
+        let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (dh, dm) = (cold_cache.hits() - h1, cold_cache.misses() - m1);
+        let warm_hit = 100.0 * dh as f64 / (dh + dm).max(1) as f64;
+        for (x, y) in cold_res.iter().zip(&warm_res) {
+            assert_eq!(
+                x.seconds_per_step().to_bits(),
+                y.seconds_per_step().to_bits(),
+                "warm pass diverged from cold"
+            );
+        }
+        if wk == 1 {
+            cold_base = cold_ms;
+        }
+        scaling.row(
+            &format!("{} workers", if wk == 0 { s.workers() } else { wk }),
+            vec![cold_ms, warm_ms, cold_hit, warm_hit, cold_base / cold_ms],
+        );
+    }
+    scaling.note(
+        "cold = empty SimCache; warm = immediate second pass (all hits); results bit-identical",
+    );
+    b.table(scaling);
     let cell = |mi: usize, ni: usize, stage: ZeroStage| {
         &priced[(mi * nodes.len() + ni) * stages.len() + stage.index()]
     };
@@ -109,5 +153,8 @@ fn main() {
     eff.note("the 8-node column collapses -- the paper's central anomaly, all model sizes");
     b.table(eff);
 
+    if let Err(e) = cache.save_default() {
+        eprintln!("warning: could not persist SimCache: {e:#}");
+    }
     b.finish();
 }

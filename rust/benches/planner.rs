@@ -1,0 +1,110 @@
+//! Bench E8 — the branch-and-bound auto-parallelism planner: per-model
+//! wall time on the enlarged default space (must stay sub-second), bound
+//! pruning ratios, exhaustive-reference comparison, and warm-cache
+//! repeat-query hit rates through the persistent SimCache.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::hardware::ClusterSpec;
+use scalestudy::model::mt5_zoo;
+use scalestudy::planner::{plan, plan_exhaustive, PlanSpace};
+use scalestudy::sim::Workload;
+use scalestudy::sweep::{SimCache, Sweep};
+
+fn main() {
+    let mut b = Bench::new("planner");
+    let cluster = ClusterSpec::lps_pod(8);
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+
+    // ---- cold branch-and-bound planning, per zoo model (8-node query =
+    // the full {1,2,4,8}-node ladder)
+    let mut t = Table::new(
+        "branch-and-bound planning, 8-node query, cold cache",
+        &["space", "priced", "pruned %", "wall ms", "best s/step", "best nodes"],
+    );
+    for model in mt5_zoo() {
+        let cache = SimCache::new();
+        let t0 = std::time::Instant::now();
+        let r = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(
+            wall < 1.0,
+            "{}: planning took {wall:.3}s — the sub-second budget is blown",
+            model.name
+        );
+        let best = r.best.as_ref().expect("feasible plan");
+        t.row(
+            &model.name,
+            vec![
+                r.space_size as f64,
+                r.evaluated as f64,
+                100.0 * r.pruned() as f64 / r.space_size.max(1) as f64,
+                wall * 1e3,
+                best.seconds_per_step(),
+                best.setup.cluster.nodes as f64,
+            ],
+        );
+    }
+    t.note(
+        "space is ~40x the original planner's; sub-second asserted. best nodes < 8 = the \
+         planner rediscovering Table 1's sub-pod win",
+    );
+    b.table(t);
+
+    // ---- pruned vs exhaustive wall time (same query, same cache rules)
+    let mut cmp = Table::new(
+        "branch-and-bound vs exhaustive reference (mt5-xxl, 8-node query)",
+        &["priced", "wall ms"],
+    );
+    let model = mt5_zoo().into_iter().last().unwrap();
+    for exhaustive in [false, true] {
+        let cache = SimCache::new();
+        let t0 = std::time::Instant::now();
+        let r = if exhaustive {
+            plan_exhaustive(&model, &cluster, &workload, &space, &sweep, &cache)
+        } else {
+            plan(&model, &cluster, &workload, &space, &sweep, &cache)
+        };
+        cmp.row(
+            if exhaustive { "exhaustive" } else { "branch-and-bound" },
+            vec![r.evaluated as f64, t0.elapsed().as_secs_f64() * 1e3],
+        );
+    }
+    cmp.note("identical best plan + Pareto frontier (property-tested bit-identical)");
+    b.table(cmp);
+
+    // ---- persistent-cache warm repeat: a second identical query must be
+    // >= 90% hits (the CLI acceptance bar)
+    let cache = SimCache::load_default();
+    let _ = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+    let (h1, m1) = (cache.hits(), cache.misses());
+    let t0 = std::time::Instant::now();
+    let _ = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+    let warm_wall = t0.elapsed().as_secs_f64();
+    let (dh, dm) = (cache.hits() - h1, cache.misses() - m1);
+    let warm_rate = dh as f64 / (dh + dm).max(1) as f64;
+    assert!(
+        warm_rate >= 0.90,
+        "warm repeat query hit rate {warm_rate:.2} below the 90% bar"
+    );
+    let mut warm = Table::new(
+        "warm repeat query (persistent SimCache)",
+        &["hit %", "wall ms"],
+    );
+    warm.row("mt5-xxl 8-node replan", vec![100.0 * warm_rate, warm_wall * 1e3]);
+    b.table(warm);
+    if let Err(e) = cache.save_default() {
+        eprintln!("warning: could not persist SimCache: {e:#}");
+    }
+
+    // ---- single-query latency distribution
+    b.iter("plan(mt5-xl, 8-node ladder, cold cache)", || {
+        let model = scalestudy::model::by_name("mt5-xl").unwrap();
+        let cache = SimCache::new();
+        let r = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+        std::hint::black_box(r);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,106 @@
+//! Bench E9 — executor + cache micro-benches: SimCache hit-path
+//! contention across worker counts (the lock-stripe satellite), cost-aware
+//! `map_chunked` vs plain `map` on ragged trial sets, and persistence
+//! save/load latency.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::model::mt5_zoo;
+use scalestudy::sim::{step_lower_bound, TrainSetup};
+use scalestudy::sweep::{SimCache, Sweep};
+use scalestudy::zero::ZeroStage;
+
+fn main() {
+    let mut b = Bench::new("sweep_cache");
+
+    // ---- contention micro-bench: N workers hammering the hit path of
+    // one shared cache.  The striped map takes one stripe-lock per call,
+    // so throughput should scale with cores instead of serializing.
+    let zoo = mt5_zoo();
+    let mut distinct = Vec::new();
+    for model in &zoo {
+        for nodes in [1usize, 2, 4, 8] {
+            distinct.push(TrainSetup::dp_pod(model.clone(), nodes, ZeroStage::Stage2));
+        }
+    }
+    let cache = SimCache::new();
+    for s in &distinct {
+        cache.simulate(s); // warm: everything below is pure hit-path
+    }
+    let lookups: Vec<usize> = (0..200_000).map(|i| i % distinct.len()).collect();
+    let mut cont = Table::new(
+        "SimCache hit-path contention (200k lookups over a warm cache)",
+        &["wall ms", "lookups/ms", "speedup vs 1w"],
+    );
+    let mut base_ms = f64::NAN;
+    for workers in [1usize, 2, 4, 8] {
+        let sweep = Sweep::new(workers);
+        let t0 = std::time::Instant::now();
+        let out = sweep.map(&lookups, |_, &i| cache.simulate(&distinct[i]).seconds_per_step());
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(out.len(), lookups.len());
+        if workers == 1 {
+            base_ms = ms;
+        }
+        cont.row(
+            &format!("{workers} workers"),
+            vec![ms, lookups.len() as f64 / ms, base_ms / ms],
+        );
+    }
+    cont.note(
+        "pre-refactor this serialized on one global Mutex; stripes let hits proceed in parallel",
+    );
+    b.table(cont);
+
+    // ---- ragged scheduling: mixed 1..8-node setups, longest-first
+    // map_chunked vs plain input-order map (results bit-identical)
+    let mut ragged = Vec::new();
+    for model in &zoo {
+        for nodes in [1usize, 2, 4, 8] {
+            for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
+                for cap in [0usize, 2, 8] {
+                    let mut s = TrainSetup::dp_pod(model.clone(), nodes, stage);
+                    s.micro_batch_cap = cap;
+                    ragged.push(s);
+                }
+            }
+        }
+    }
+    let mut sched = Table::new(
+        "ragged trial scheduling: input-order map vs cost-keyed map_chunked (ms)",
+        &["map", "map_chunked"],
+    );
+    for workers in [2usize, 4, 8] {
+        let sweep = Sweep::new(workers);
+        let t0 = std::time::Instant::now();
+        let a = sweep.map(&ragged, |_, s| scalestudy::sim::simulate_step(s).seconds_per_step());
+        let plain_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = std::time::Instant::now();
+        let c = sweep.map_chunked(&ragged, step_lower_bound, |_, s| {
+            scalestudy::sim::simulate_step(s).seconds_per_step()
+        });
+        let chunked_ms = t0.elapsed().as_secs_f64() * 1e3;
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.to_bits(), y.to_bits(), "map_chunked diverged from map");
+        }
+        sched.row(&format!("{workers} workers"), vec![plain_ms, chunked_ms]);
+    }
+    sched.note("same work, same results; chunked schedules the expensive 8-node trials first");
+    b.table(sched);
+
+    // ---- persistence: save/load round-trip latency at realistic size
+    let path =
+        std::env::temp_dir().join(format!("scalestudy-bench-cache-{}.json", std::process::id()));
+    let p = path.clone();
+    let c2 = &cache;
+    b.iter("SimCache::save (20 entries)", || {
+        c2.save(&p).expect("save");
+    });
+    let p = path.clone();
+    b.iter("SimCache::load (20 entries)", || {
+        let loaded = SimCache::load(&p);
+        std::hint::black_box(loaded.len());
+    });
+    let _ = std::fs::remove_file(&path);
+
+    b.finish();
+}

@@ -22,7 +22,9 @@ fn main() {
     for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
         let row: Vec<f64> = nodes
             .iter()
-            .map(|&n| simulate_step(&TrainSetup::dp_pod(model.clone(), n, stage)).seconds_per_step())
+            .map(|&n| {
+                simulate_step(&TrainSetup::dp_pod(model.clone(), n, stage)).seconds_per_step()
+            })
             .collect();
         t.row(&format!("stage {} (simulated)", stage.index()), row);
         let paper: Vec<f64> = PAPER_TABLE1
@@ -31,7 +33,9 @@ fn main() {
             .collect();
         t.row(&format!("stage {} (paper)", stage.index()), paper);
     }
-    t.note("paper: Benington et al., Table 1. Simulated via crate::sim (DESIGN.md §7 calibration).");
+    t.note(
+        "paper: Benington et al., Table 1. Simulated via crate::sim (DESIGN.md §7 calibration).",
+    );
     b.table(t);
 
     // ---- full-stage ablation (stages 0-3; 0/1 OOM for 13B -> inf)
@@ -53,7 +57,10 @@ fn main() {
             .collect();
         abl.row(&format!("stage {}", stage.index()), row);
     }
-    abl.note("stage 0 cannot hold 13B on 80GB ((2+2+12)*13e9 bytes of replicated states) -> 0 = OOM; stage 1 fits at N_d=16+ and matches stage 2 when grad accumulation is 1");
+    abl.note(
+        "stage 0 cannot hold 13B on 80GB ((2+2+12)*13e9 bytes replicated) -> 0 = OOM; \
+         stage 1 fits at N_d=16+ and matches stage 2 when grad accumulation is 1",
+    );
     b.table(abl);
 
     // ---- shape assertions (who wins, where the crossover falls)

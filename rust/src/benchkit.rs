@@ -118,10 +118,17 @@ impl Bench {
         // honour a quick mode for CI-style runs
         let mut config = BenchConfig::default();
         if std::env::var("SCALESTUDY_BENCH_FAST").is_ok() {
-            config = BenchConfig { warmup_iters: 1, min_iters: 3, max_iters: 10, target_seconds: 0.3 };
+            config =
+                BenchConfig { warmup_iters: 1, min_iters: 3, max_iters: 10, target_seconds: 0.3 };
         }
         println!("== bench: {name} ==");
-        Bench { name, config, measurements: Vec::new(), tables: Vec::new(), t_start: Instant::now() }
+        Bench {
+            name,
+            config,
+            measurements: Vec::new(),
+            tables: Vec::new(),
+            t_start: Instant::now(),
+        }
     }
 
     /// Time `f` (seconds per call) under the configured loop.

@@ -59,7 +59,8 @@ impl Command {
         }
         s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
         for o in &self.opts {
-            let meta = if o.is_flag { String::new() } else { format!(" <{}>", o.name.to_uppercase()) };
+            let meta =
+                if o.is_flag { String::new() } else { format!(" <{}>", o.name.to_uppercase()) };
             let dflt = match &o.default {
                 Some(d) => format!(" [default: {d}]"),
                 None if !o.is_flag => " [required]".to_string(),
@@ -146,7 +147,10 @@ impl App {
     }
 
     pub fn overview(&self) -> String {
-        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n", self.prog, self.about, self.prog);
+        let mut s = format!(
+            "{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n",
+            self.prog, self.about, self.prog
+        );
         for c in &self.commands {
             s.push_str(&format!("  {:<22} {}\n", c.name, c.about));
         }

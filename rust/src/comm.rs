@@ -32,7 +32,12 @@ impl Collective {
     }
 
     pub fn all() -> [Collective; 4] {
-        [Collective::AllReduce, Collective::AllGather, Collective::ReduceScatter, Collective::Broadcast]
+        [
+            Collective::AllReduce,
+            Collective::AllGather,
+            Collective::ReduceScatter,
+            Collective::Broadcast,
+        ]
     }
 }
 

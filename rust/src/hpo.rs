@@ -218,6 +218,14 @@ pub struct FunnelCfg {
     /// [`crate::sweep::Sweep`]); 0 = all cores.  Results are bit-identical
     /// for every worker count.
     pub workers: usize,
+    /// Seed the parallelism dimensions (tp/pp/ZeRO stage/offload/
+    /// micro-batch cap) from the auto-parallelism planner's Pareto
+    /// frontier instead of sweeping them blindly in phase 1.  The
+    /// planner's analytical pricing is free relative to a cluster trial
+    /// (and shares the study's [`SimCache`]), so the trials it saves flow
+    /// into phase 2's combination budget — spent on convergence-side
+    /// dimensions only.
+    pub planner_seeded: bool,
 }
 
 impl Default for FunnelCfg {
@@ -231,6 +239,7 @@ impl Default for FunnelCfg {
             total_trials: 205,
             seed: 2023,
             workers: 0,
+            planner_seeded: true,
         }
     }
 }
@@ -318,7 +327,12 @@ pub fn evaluate_cached(
 }
 
 /// Combine a priced step with the convergence model into the trial score.
-fn score_template(dims: &[Dim], t: &Template, model: &ModelCfg, step: &crate::sim::StepTime) -> Score {
+fn score_template(
+    dims: &[Dim],
+    t: &Template,
+    model: &ModelCfg,
+    step: &crate::sim::StepTime,
+) -> Score {
     let g = |name: &str| t.get(dims, name);
     let opt = template_optimizer(dims, t);
 
@@ -359,26 +373,93 @@ fn cfg_margin_target(_lm: &LossModel, _model: &ModelCfg) -> f64 {
     0.55
 }
 
-/// Run the full funneled study.
+/// The planner-guided seeding (ROADMAP "planner-guided HPO"): run the
+/// auto-parallelism planner on the baseline template's workload and
+/// collect, per parallelism dimension, the value indices that appear on
+/// the memory-vs-time Pareto frontier (plus the best plan).  Phase 1 then
+/// sweeps only those deviations — values the planner proves dominated
+/// never consume a trial.  The planner query itself is analytical and
+/// shares `cache`, so its pricings are reused by the funnel's own trials.
+fn planner_seeded_dims(
+    dims: &[Dim],
+    model: &ModelCfg,
+    baseline: &Template,
+    nodes: usize,
+    sweep: &crate::sweep::Sweep,
+    cache: &SimCache,
+) -> std::collections::HashMap<&'static str, std::collections::HashSet<usize>> {
+    let g = |name: &str| baseline.get(dims, name);
+    let workload = Workload {
+        global_batch: g("global_batch").i() as usize,
+        enc_len: g("enc_len").i() as u64,
+        dec_len: g("dec_len").i() as u64,
+        ckpt: g("activation_ckpt").b(),
+    };
+    let dim = |name: &str| dims.iter().find(|d| d.name == name).expect("unknown dim");
+    let pspace = crate::planner::PlanSpace {
+        stages: ZeroStage::all().to_vec(),
+        optimizers: vec![template_optimizer(dims, baseline)],
+        offload: vec![false, true],
+        micro_batch_caps: dim("micro_batch_cap").values.iter().map(|v| v.i() as usize).collect(),
+        schedules: vec![PipeSchedule::OneFOneB],
+        nodes: Vec::new(),
+        max_tp: dim("tp_degree").values.iter().map(|v| v.i() as usize).max().unwrap_or(8),
+        max_pp: dim("pp_degree").values.iter().map(|v| v.i() as usize).max().unwrap_or(4),
+    };
+    let cluster = ClusterSpec::lps_pod(nodes.max(1));
+    let r = crate::planner::plan(model, &cluster, &workload, &pspace, sweep, cache);
+
+    let mut allowed: std::collections::HashMap<&'static str, std::collections::HashSet<usize>> =
+        std::collections::HashMap::new();
+    for name in ["tp_degree", "pp_degree", "zero_stage", "cpu_offload", "micro_batch_cap"] {
+        allowed.insert(dim(name).name, std::collections::HashSet::new());
+    }
+    let mut add = |name: &str, want: i64| {
+        let d = dim(name);
+        if let Some(vi) = d.values.iter().position(|v| v.i() == want) {
+            allowed.get_mut(d.name).unwrap().insert(vi);
+        }
+    };
+    for p in r.frontier.iter().chain(r.best.iter()) {
+        let s = &p.setup;
+        add("tp_degree", s.par.tp as i64);
+        add("pp_degree", s.par.pp as i64);
+        add("zero_stage", s.stage.index() as i64);
+        add("cpu_offload", s.offload as i64);
+        add("micro_batch_cap", s.micro_batch_cap as i64);
+    }
+    allowed
+}
+
+/// Run the full funneled study with a fresh study-local [`SimCache`].
+pub fn run_funnel(cfg: &FunnelCfg) -> FunnelResult {
+    run_funnel_cached(cfg, &SimCache::new())
+}
+
+/// Run the full funneled study, pricing every simulator query through
+/// `cache` — the CLI passes the persistent cross-invocation cache so a
+/// repeated study is nearly free on the simulator side.
 ///
 /// The independent phases — phase 1's one-at-a-time sweep and phase 3's
 /// finalist × node grid — fan out over the [`crate::sweep::Sweep`] worker
 /// pool; trial ids, ordering and every score are bit-identical to the
 /// serial formulation (asserted by `funnel_parallel_bit_identical_to_serial`).
 /// Phase 2 is adaptive (each step depends on the previous) and stays serial.
-pub fn run_funnel(cfg: &FunnelCfg) -> FunnelResult {
+pub fn run_funnel_cached(cfg: &FunnelCfg, cache: &SimCache) -> FunnelResult {
     let dims = space();
     let model = by_name(&cfg.model).expect("unknown model");
     let sweep = crate::sweep::Sweep::new(cfg.workers);
-    // study-wide memo cache: templates that differ only in convergence-side
-    // dimensions share one simulator pricing
-    let cache = SimCache::new();
     let mut rng = Rng::new(cfg.seed);
     let mut trials: Vec<Trial> = Vec::new();
     let mut id = 0usize;
 
-    let run = |t: &Template, phase: &'static str, nodes: usize, trials: &mut Vec<Trial>, id: &mut usize| -> f64 {
-        let score = evaluate_cached(&dims, t, &model, nodes, &cache);
+    let run = |t: &Template,
+               phase: &'static str,
+               nodes: usize,
+               trials: &mut Vec<Trial>,
+               id: &mut usize|
+     -> f64 {
+        let score = evaluate_cached(&dims, t, &model, nodes, cache);
         let obj = score.time_to_train();
         trials.push(Trial { id: *id, phase, template: t.clone(), nodes, score });
         *id += 1;
@@ -387,14 +468,27 @@ pub fn run_funnel(cfg: &FunnelCfg) -> FunnelResult {
 
     // ---------- phase 1: baseline + one-at-a-time sweep, fanned out in
     // parallel (the template list is known upfront; enumeration order
-    // matches the old serial loop exactly)
+    // matches the old serial loop exactly).  With planner seeding, the
+    // parallelism dimensions only sweep their Pareto-relevant values.
     let baseline = Template::baseline(&dims);
+    let seeded = if cfg.planner_seeded {
+        Some(planner_seeded_dims(&dims, &model, &baseline, cfg.phase1_nodes, &sweep, cache))
+    } else {
+        None
+    };
     let mut phase1: Vec<Template> = vec![baseline.clone()];
     let mut deviation: Vec<Option<(usize, usize)>> = vec![None]; // (dim, value)
     for (di, d) in dims.iter().enumerate() {
         for vi in 0..d.values.len() {
             if vi == d.baseline {
                 continue;
+            }
+            if let Some(allowed) = &seeded {
+                if let Some(set) = allowed.get(d.name) {
+                    if !set.contains(&vi) {
+                        continue;
+                    }
+                }
             }
             let mut t = baseline.clone();
             t.0[di] = vi;
@@ -403,7 +497,7 @@ pub fn run_funnel(cfg: &FunnelCfg) -> FunnelResult {
         }
     }
     let scores =
-        sweep.map(&phase1, |_, t| evaluate_cached(&dims, t, &model, cfg.phase1_nodes, &cache));
+        sweep.map(&phase1, |_, t| evaluate_cached(&dims, t, &model, cfg.phase1_nodes, cache));
     for (t, score) in phase1.iter().zip(&scores) {
         trials.push(Trial {
             id,
@@ -498,19 +592,31 @@ pub fn run_funnel(cfg: &FunnelCfg) -> FunnelResult {
         .take(cfg.num_finalists)
         .collect();
 
-    // finalist × node grid: independent cells, fanned out in parallel
+    // finalist × node grid: independent cells, fanned out in parallel.
+    // The grid is ragged (8-node cells cost more than 4-node cells), so
+    // the fan-out schedules longest-expected-first via the analytical
+    // step lower bound — results stay bit-identical to input order.
     let pairs: Vec<(Template, usize)> = finalists_t
         .iter()
         .flat_map(|t| cfg.finalist_nodes.iter().map(move |&n| (t.clone(), n)))
         .collect();
-    let finalist_scores =
-        sweep.map(&pairs, |_, (t, n)| evaluate_cached(&dims, t, &model, *n, &cache));
+    let finalist_scores = sweep.map_chunked(
+        &pairs,
+        |(t, n)| crate::sim::step_lower_bound(&template_setup(&dims, t, &model, *n)),
+        |_, (t, n)| evaluate_cached(&dims, t, &model, *n, cache),
+    );
     let mut finalists = Vec::new();
     for (fi, t) in finalists_t.iter().enumerate() {
         let mut rows = Vec::new();
         for (ni, &n) in cfg.finalist_nodes.iter().enumerate() {
             let score = finalist_scores[fi * cfg.finalist_nodes.len() + ni].clone();
-            trials.push(Trial { id, phase: "finalist", template: t.clone(), nodes: n, score: score.clone() });
+            trials.push(Trial {
+                id,
+                phase: "finalist",
+                template: t.clone(),
+                nodes: n,
+                score: score.clone(),
+            });
             id += 1;
             rows.push((n, score));
         }
@@ -548,7 +654,12 @@ pub struct SearchOutcome {
     pub best_at_nodes: Vec<(usize, f64)>,
 }
 
-fn score_at_nodes(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: &[usize]) -> Vec<(usize, f64)> {
+fn score_at_nodes(
+    dims: &[Dim],
+    t: &Template,
+    model: &ModelCfg,
+    nodes: &[usize],
+) -> Vec<(usize, f64)> {
     nodes
         .iter()
         .map(|&n| (n, evaluate(dims, t, model, n).time_to_train()))
@@ -828,6 +939,42 @@ mod tests {
         let b = run_funnel(&FunnelCfg::default());
         assert_eq!(a.best, b.best);
         assert_eq!(a.trials.len(), b.trials.len());
+    }
+
+    /// The ROADMAP "planner-guided HPO" item: seeding the parallelism
+    /// dimensions from the planner's Pareto frontier must (a) spend fewer
+    /// phase-1 trials on them, freeing budget for phase 2, and (b) end no
+    /// worse than the blind funnel under the funnel's own selection
+    /// criterion (best finalist's best-node time-to-train) on the default
+    /// config.
+    #[test]
+    fn planner_seeded_funnel_no_worse_and_cheaper_phase1() {
+        let seeded = run_funnel(&FunnelCfg::default());
+        let blind = run_funnel(&FunnelCfg { planner_seeded: false, ..FunnelCfg::default() });
+        let phase1 = |r: &FunnelResult| r.trials.iter().filter(|t| t.phase == "phase1").count();
+        let phase2 = |r: &FunnelResult| r.trials.iter().filter(|t| t.phase == "phase2").count();
+        assert!(
+            phase1(&seeded) < phase1(&blind),
+            "seeding must shrink phase 1: {} vs {}",
+            phase1(&seeded),
+            phase1(&blind)
+        );
+        assert!(phase2(&seeded) > phase2(&blind), "saved trials must flow into phase 2");
+        assert_eq!(seeded.trials.len(), blind.trials.len(), "same total budget");
+        let best_score = |r: &FunnelResult| {
+            r.finalists
+                .iter()
+                .map(|(_, rows)| {
+                    rows.iter().map(|(_, s)| s.time_to_train()).fold(f64::INFINITY, f64::min)
+                })
+                .fold(f64::INFINITY, f64::min)
+        };
+        let s = best_score(&seeded);
+        let b = best_score(&blind);
+        assert!(
+            s <= b * (1.0 + 1e-9),
+            "planner seeding made the funnel worse: {s} vs {b}"
+        );
     }
 
     /// The parallel fan-out of phases 1 and 3 must be bit-identical to the

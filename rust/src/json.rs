@@ -124,6 +124,27 @@ impl Json {
         Ok(Json::parse(&text)?)
     }
 
+    /// Pretty-print to `path` atomically: write a sibling temp file, then
+    /// rename over the target, so readers never observe a torn file even
+    /// if the writer dies mid-write (the persistent SimCache depends on
+    /// this).  Parent directories are created as needed.
+    pub fn write_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.pretty())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display())
+        })?;
+        Ok(())
+    }
+
     /// Compact serialization.
     pub fn dumps(&self) -> String {
         let mut s = String::new();
@@ -462,5 +483,19 @@ mod tests {
     #[test]
     fn get_on_non_object_is_null() {
         assert_eq!(*Json::Num(1.0).get("x"), Json::Null);
+    }
+
+    #[test]
+    fn write_file_roundtrips_and_replaces() {
+        let dir = std::env::temp_dir().join(format!("scalestudy-json-{}", std::process::id()));
+        let path = dir.join("nested").join("out.json");
+        let j = Json::parse(r#"{"a": [1, 2], "b": "x"}"#).unwrap();
+        j.write_file(&path).unwrap();
+        assert_eq!(Json::parse_file(&path).unwrap(), j);
+        // overwriting an existing file goes through the same rename path
+        let j2 = Json::parse("[3]").unwrap();
+        j2.write_file(&path).unwrap();
+        assert_eq!(Json::parse_file(&path).unwrap(), j2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

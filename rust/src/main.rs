@@ -34,7 +34,8 @@ fn app() -> App {
             Command::new("hpo", "funneled prune-and-combine hyperparameter search (E3)")
                 .opt("model", "mt5-base", "zoo model to optimize")
                 .opt("trials", "205", "total trial budget")
-                .opt("seed", "2023", "search seed"),
+                .opt("seed", "2023", "search seed")
+                .flag("blind", "disable planner-guided seeding of the parallelism dims"),
         )
         .command(
             Command::new("collectives", "collective cost sweep (E5)")
@@ -56,13 +57,18 @@ fn app() -> App {
                 .opt("resume", "", "restore a checkpoint directory before training"),
         )
         .command(
-            Command::new("plan", "auto-parallelism planner: fastest feasible (dp,tp,pp,ZeRO,offload) plan")
+            Command::new(
+                "plan",
+                "auto-parallelism planner: fastest feasible (nodes,dp,tp,pp,ZeRO,offload) plan",
+            )
                 .opt("model", "mt5-xxl", "zoo model")
-                .opt("nodes", "8", "node count")
+                .opt("nodes", "8", "pod size (the planner may recommend a sub-pod)")
                 .opt("batch", "768", "effective (global) batch size")
                 .opt("max-tp", "8", "max tensor-parallel degree (clamped to GPUs/node)")
-                .opt("max-pp", "4", "max pipeline-parallel degree")
-                .opt("workers", "0", "sweep worker threads (0 = all cores)"),
+                .opt("max-pp", "8", "max pipeline-parallel degree")
+                .opt("workers", "0", "sweep worker threads (0 = all cores)")
+                .flag("exact-nodes", "only plan for the full pod (skip the sub-pod ladder)")
+                .flag("no-cache", "skip the persistent SimCache under target/"),
         )
         .command(
             Command::new("simulate", "seconds/step for one configuration")
@@ -125,13 +131,34 @@ fn cmd_table1(m: &Matches) -> anyhow::Result<()> {
         print!("{n:>10}");
     }
     println!();
-    for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
-        print!("stage {:<10}", stage.index());
-        for &n in &nodes {
-            let st = simulate_step(&TrainSetup::dp_pod(model.clone(), n, stage));
-            print!("{:>10.2}", st.seconds_per_step());
+    // the canonical mt5-xxl grid goes through the persistent SimCache (a
+    // repeated invocation is all hits); other models price directly
+    if model.name == "mt5-xxl" {
+        let cache = scalestudy::sweep::SimCache::load_default();
+        for (stage, row) in scalestudy::sim::table1_grid_cached(&nodes, &cache) {
+            print!("stage {:<10}", stage.index());
+            for (_, t) in row {
+                print!("{t:>10.2}");
+            }
+            println!();
         }
-        println!();
+        println!(
+            "(SimCache: {:.0}% hit rate, {} entries)",
+            100.0 * cache.hit_rate(),
+            cache.len()
+        );
+        if let Err(e) = cache.save_default() {
+            eprintln!("warning: could not persist SimCache: {e:#}");
+        }
+    } else {
+        for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
+            print!("stage {:<10}", stage.index());
+            for &n in &nodes {
+                let st = simulate_step(&TrainSetup::dp_pod(model.clone(), n, stage));
+                print!("{:>10.2}", st.seconds_per_step());
+            }
+            println!();
+        }
     }
     println!("\npaper (mt5-xxl):");
     for (n, p2, p3) in PAPER_TABLE1 {
@@ -170,11 +197,22 @@ fn cmd_hpo(m: &Matches) -> anyhow::Result<()> {
         model: m.get("model").to_string(),
         total_trials: m.get_usize("trials")?,
         seed: m.get_u64("seed")?,
+        planner_seeded: !m.flag("blind"),
         ..hpo::FunnelCfg::default()
     };
-    let result = hpo::run_funnel(&cfg);
+    let cache = scalestudy::sweep::SimCache::load_default();
+    let result = hpo::run_funnel_cached(&cfg, &cache);
     let dims = hpo::space();
-    println!("{} trials run; {} dims pruned", result.trials.len(), result.pruned_dims.len());
+    println!(
+        "{} trials run; {} dims pruned; SimCache {:.0}% hit rate ({} entries)",
+        result.trials.len(),
+        result.pruned_dims.len(),
+        100.0 * cache.hit_rate(),
+        cache.len()
+    );
+    if let Err(e) = cache.save_default() {
+        eprintln!("warning: could not persist SimCache: {e:#}");
+    }
     println!("best template: {}", result.best.describe(&dims));
     for (i, (t, rows)) in result.finalists.iter().take(5).enumerate() {
         let cells: Vec<String> = rows
@@ -293,13 +331,18 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     let cluster = ClusterSpec::lps_pod(nodes.max(1));
     let mut workload = scalestudy::sim::Workload::table1();
     workload.global_batch = m.get_usize("batch")?;
-    let space = PlanSpace {
+    let mut space = PlanSpace {
         max_tp: m.get_usize("max-tp")?,
         max_pp: m.get_usize("max-pp")?,
         ..PlanSpace::default()
     };
+    if m.flag("exact-nodes") {
+        space.nodes = vec![cluster.nodes];
+    }
     let sweep = Sweep::new(m.get_usize("workers")?);
-    let cache = SimCache::new();
+    let persist = !m.flag("no-cache");
+    let cache = if persist { SimCache::load_default() } else { SimCache::new() };
+    let warm_entries = cache.len();
     let t0 = std::time::Instant::now();
     let result = plan(&model, &cluster, &workload, &space, &sweep, &cache);
     let wall = t0.elapsed().as_secs_f64();
@@ -312,13 +355,28 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
         workload.global_batch
     );
     println!(
-        "searched {} configurations ({} feasible) in {:.0} ms on {} workers, {} cache hits\n",
+        "space {} points; priced {} ({} feasible), bounds pruned {} ({:.0}%) \
+         in {:.0} ms on {} workers",
+        result.space_size,
         result.evaluated,
         result.feasible,
+        result.pruned(),
+        100.0 * result.pruned() as f64 / result.space_size.max(1) as f64,
         wall * 1e3,
         sweep.workers(),
-        cache.hits()
     );
+    println!(
+        "SimCache: {:.0}% hit rate ({} hits / {} misses; {} entries loaded from disk)\n",
+        100.0 * cache.hit_rate(),
+        cache.hits(),
+        cache.misses(),
+        warm_entries,
+    );
+    if persist {
+        if let Err(e) = cache.save_default() {
+            eprintln!("warning: could not persist SimCache: {e:#}");
+        }
+    }
     let best = match &result.best {
         Some(best) => best,
         None => {

@@ -63,7 +63,11 @@ impl RunLog {
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "step,loss,lr,seconds,tokens_per_s")?;
         for r in &self.records {
-            writeln!(f, "{},{:.6},{:.3e},{:.4},{:.1}", r.step, r.loss, r.lr, r.seconds, r.tokens_per_s)?;
+            writeln!(
+                f,
+                "{},{:.6},{:.3e},{:.4},{:.1}",
+                r.step, r.loss, r.lr, r.seconds, r.tokens_per_s
+            )?;
         }
         Ok(())
     }

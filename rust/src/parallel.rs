@@ -77,6 +77,30 @@ pub fn live_microbatches(sched: PipeSchedule, p: usize, microbatches: usize) -> 
     }
 }
 
+/// Smallest activation-residency multiplier any micro-batch choice can
+/// achieve: a provable lower bound on
+/// `mb * live_microbatches(sched, p, ceil(spr / mb))` over every
+/// `mb in 1..=spr` (and on plain `mb` when `p <= 1`, matching the step
+/// simulator's accounting).  Backs the planner's memory lower bound:
+/// multiplying the per-sample activation bytes by this can never exceed
+/// the activation footprint the simulator charges for any micro-batch.
+///
+/// Proof sketch (property-tested in this module): for 1F1B,
+/// `mb * min(p, ceil(spr/mb)) >= min(p, spr)` — the `p` branch gives
+/// `mb*p >= p`, the ceil branch gives `mb*ceil(spr/mb) >= spr`; `mb = 1`
+/// attains `min(p, spr)`.  For GPipe, `mb * ceil(spr/mb) >= spr`, attained
+/// whenever `mb` divides `spr`.
+pub fn min_live_multiplier(sched: PipeSchedule, p: usize, samples_per_rank: usize) -> usize {
+    let spr = samples_per_rank.max(1);
+    if p <= 1 {
+        return 1;
+    }
+    match sched {
+        PipeSchedule::OneFOneB => p.min(spr),
+        PipeSchedule::GPipe => spr,
+    }
+}
+
 /// Per-microbatch tensor-parallel communication time (seconds): Megatron
 /// issues 2 fwd + 2 bwd all-reduces of the layer activations per layer,
 /// across the `tp` group (intra-node NVLink).
@@ -167,6 +191,32 @@ mod tests {
         assert_eq!(live_microbatches(PipeSchedule::GPipe, 4, 16), 16);
         assert_eq!(live_microbatches(PipeSchedule::OneFOneB, 4, 16), 4);
         assert_eq!(live_microbatches(PipeSchedule::OneFOneB, 8, 2), 2);
+    }
+
+    /// `min_live_multiplier` is a true lower bound on the activation
+    /// multiplier the step simulator charges, for every micro-batch size.
+    #[test]
+    fn prop_min_live_multiplier_is_lower_bound() {
+        let gen = PairOf(UsizeIn { lo: 1, hi: 12 }, UsizeIn { lo: 1, hi: 200 });
+        forall(&gen, |&(p, spr)| {
+            for sched in [PipeSchedule::OneFOneB, PipeSchedule::GPipe] {
+                let lb = min_live_multiplier(sched, p, spr);
+                for mb in 1..=spr {
+                    let m = (spr + mb - 1) / mb;
+                    let mult = if p > 1 {
+                        mb * live_microbatches(sched, p, m).max(1)
+                    } else {
+                        mb
+                    };
+                    if lb > mult {
+                        return Err(format!(
+                            "{sched:?} p={p} spr={spr} mb={mb}: bound {lb} > actual {mult}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -82,7 +82,9 @@ impl RunConfig {
         cfg.optimizer = match o.get("kind").as_str().unwrap_or("adamw") {
             "adamw" => {
                 let mut opt = Optimizer::adamw();
-                if let Optimizer::AdamW { ref mut weight_decay, ref mut beta1, ref mut beta2, .. } = opt {
+                if let Optimizer::AdamW { ref mut weight_decay, ref mut beta1, ref mut beta2, .. } =
+                    opt
+                {
                     if let Some(wd) = o.get("weight_decay").as_f64() {
                         *weight_decay = wd as f32;
                     }

@@ -26,9 +26,13 @@
 //! and 3 ([`crate::hpo::run_funnel`]), the `model_size_sweep`/`hpo_funnel`
 //! benches and the auto-parallelism planner ([`crate::planner`]).
 
+use crate::json::Json;
 use crate::sim::{simulate_step, StepTime, TrainSetup};
 use crate::util::Rng;
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -102,6 +106,65 @@ impl Sweep {
         tagged.into_iter().map(|(_, r)| r).collect()
     }
 
+    /// Like [`Sweep::map`], but schedules trials in **descending order of
+    /// a caller-supplied cost estimate** (longest-expected-first),
+    /// dispatching contiguous chunks of the schedule per worker grab so
+    /// the cursor is touched O(n / chunk) times instead of O(n).
+    ///
+    /// Ragged trial sets — HPO finalists priced at 8 nodes next to 1-node
+    /// trials, planner spaces mixing 13B and 580M models — tail-block the
+    /// plain input-order queue: a worker that draws the most expensive
+    /// trial last idles every other core behind it.  Scheduling by
+    /// predicted cost (the planner's [`crate::sim::step_lower_bound`] is
+    /// the natural key) puts the long poles first.  Results are still
+    /// tagged with their *input* index and reassembled in input order, so
+    /// the output is bit-identical to [`Sweep::map`] and to a serial run
+    /// for any worker count (property-tested on mixed-node-count setups).
+    pub fn map_chunked<T, R, C, F>(&self, items: &[T], cost: C, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        C: Fn(&T) -> f64,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.workers <= 1 || n <= 1 {
+            return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        }
+        let costs: Vec<f64> = items.iter().map(&cost).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        // descending cost, ties by input index: deterministic schedule
+        order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]).then(a.cmp(&b)));
+        let chunk = (n / (self.workers * 8)).max(1);
+        let cursor = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n) {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let f = &f;
+                let order = &order;
+                scope.spawn(move || loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for &i in &order[start..end] {
+                        let r = f(i, &items[i]);
+                        if tx.send((i, r)).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut tagged: Vec<(usize, R)> = rx.into_iter().collect();
+        tagged.sort_by_key(|&(i, _)| i);
+        tagged.into_iter().map(|(_, r)| r).collect()
+    }
+
     /// Like [`Sweep::map`] but hands each trial its own deterministic RNG
     /// stream, split from `seed` by **trial index** (not worker id), so
     /// stochastic trials reproduce under any worker count.
@@ -118,9 +181,13 @@ impl Sweep {
         })
     }
 
-    /// Price many [`TrainSetup`]s through the memo cache in parallel.
+    /// Price many [`TrainSetup`]s through the memo cache in parallel,
+    /// longest-expected-first (keyed by the analytical
+    /// [`crate::sim::step_lower_bound`]) so ragged setup lists keep every
+    /// core busy.  Output order and values are bit-identical to a serial
+    /// in-order run.
     pub fn simulate_setups(&self, cache: &SimCache, setups: &[TrainSetup]) -> Vec<StepTime> {
-        self.map(setups, |_, s| cache.simulate(s))
+        self.map_chunked(setups, crate::sim::step_lower_bound, |_, s| cache.simulate(s))
     }
 }
 
@@ -132,7 +199,7 @@ impl Default for Sweep {
 
 /// Canonical hash key for a [`TrainSetup`]: every field that influences
 /// [`simulate_step`], with floats canonicalized to their bit patterns.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SetupKey {
     model_name: String,
     fields: Vec<u64>,
@@ -190,31 +257,74 @@ impl SetupKey {
     }
 }
 
+/// On-disk schema version for the persistent cache.  Bump whenever the
+/// simulator's pricing or [`SetupKey`] layout changes; files written under
+/// any other version (or any earlier malformed file) are discarded and the
+/// cache starts empty.
+pub const SIMCACHE_SCHEMA_VERSION: u64 = 1;
+
+/// Lock stripes for the memo map.  High-worker sweeps used to serialize
+/// on one `Mutex<HashMap>`; with striping, concurrent lookups contend
+/// only when their keys hash to the same stripe (1/16 of the time).
+const SIMCACHE_STRIPES: usize = 16;
+
 /// Thread-safe memo cache over [`simulate_step`]: identical setups are
 /// priced exactly once per cache lifetime.
-#[derive(Default)]
+///
+/// The map is sharded into [`SIMCACHE_STRIPES`] lock stripes and every
+/// [`SimCache::simulate`] call takes **exactly one** stripe-lock
+/// acquisition — a hit clones the entry under its stripe, a miss prices
+/// the setup while holding the stripe (so a racing thread on the same key
+/// waits for the priced result instead of duplicating the simulation,
+/// while all other stripes stay available).  The hit/miss counters are
+/// exact under any interleaving.
+///
+/// The cache is also **persistent across processes**: [`SimCache::save`]
+/// serializes the `SetupKey → StepTime` map through [`crate::json`] (all
+/// floats as exact bit patterns, so a reloaded entry is bit-identical,
+/// including non-finite OOM markers) and [`SimCache::load`] restores it,
+/// falling back to an empty cache on a missing, corrupt, truncated or
+/// schema-mismatched file.  The CLI `plan`/`table1`/`hpo` paths and the
+/// benches keep it at [`SimCache::default_path`] under `target/`, making
+/// repeated invocations nearly free.
 pub struct SimCache {
-    map: Mutex<HashMap<SetupKey, StepTime>>,
+    stripes: Vec<Mutex<HashMap<SetupKey, StepTime>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
 
+impl Default for SimCache {
+    fn default() -> SimCache {
+        SimCache::new()
+    }
+}
+
 impl SimCache {
     pub fn new() -> SimCache {
-        SimCache::default()
+        SimCache {
+            stripes: (0..SIMCACHE_STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
     }
 
-    /// Cached [`simulate_step`]. Two threads racing on the same fresh key
-    /// may both price it (the result is identical); the first insert wins.
+    fn stripe_of(&self, key: &SetupKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    /// Cached [`simulate_step`]: one stripe-lock acquisition per call.
     pub fn simulate(&self, setup: &TrainSetup) -> StepTime {
         let key = SetupKey::of(setup);
-        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+        let mut map = self.stripes[self.stripe_of(&key)].lock().unwrap();
+        if let Some(hit) = map.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return hit.clone();
         }
         let st = simulate_step(setup);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.map.lock().unwrap().entry(key).or_insert_with(|| st.clone());
+        map.insert(key, st.clone());
         st
     }
 
@@ -226,13 +336,162 @@ impl SimCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Hit fraction of all `simulate` calls so far (0.0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits(), self.misses());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    // ------------------------------------------------- persistence
+
+    /// Default on-disk location (override with `SCALESTUDY_SIMCACHE`).
+    pub fn default_path() -> PathBuf {
+        std::env::var("SCALESTUDY_SIMCACHE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("target/pallas_simcache.json"))
+    }
+
+    /// Load the cache at [`SimCache::default_path`] (empty on any failure).
+    pub fn load_default() -> SimCache {
+        SimCache::load(&SimCache::default_path())
+    }
+
+    /// Save to [`SimCache::default_path`].
+    pub fn save_default(&self) -> anyhow::Result<()> {
+        self.save(&SimCache::default_path())
+    }
+
+    /// Load a cache from `path`.  Any failure — missing file, truncated
+    /// or corrupt JSON, wrong schema version, malformed entry — degrades
+    /// to an empty cache (a stale pricing must never survive a schema
+    /// change; a cold start merely re-simulates).
+    pub fn load(path: &Path) -> SimCache {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => return SimCache::new(),
+        };
+        let json = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(_) => return SimCache::new(),
+        };
+        SimCache::from_json(&json).unwrap_or_default()
+    }
+
+    /// Serialize and write atomically (temp file + rename), so a crashed
+    /// writer can never leave a half-written cache behind.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    /// The full map as a versioned JSON tree, entries sorted by key for
+    /// deterministic output.
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(SetupKey, StepTime)> = Vec::new();
+        for stripe in &self.stripes {
+            for (k, v) in stripe.lock().unwrap().iter() {
+                entries.push((k.clone(), v.clone()));
+            }
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let entries: Vec<Json> = entries
+            .into_iter()
+            .map(|(k, st)| {
+                Json::obj(vec![
+                    ("model", Json::Str(k.model_name)),
+                    ("fields", Json::Arr(k.fields.iter().map(|&x| hex_u64(x)).collect())),
+                    ("step", step_to_json(&st)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(SIMCACHE_SCHEMA_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Rebuild from [`SimCache::to_json`] output.  `None` on schema
+    /// mismatch or any malformed entry.
+    pub fn from_json(json: &Json) -> Option<SimCache> {
+        if json.get("schema").as_usize()? as u64 != SIMCACHE_SCHEMA_VERSION {
+            return None;
+        }
+        let cache = SimCache::new();
+        for e in json.get("entries").as_arr()? {
+            let model_name = e.get("model").as_str()?.to_string();
+            let fields: Option<Vec<u64>> =
+                e.get("fields").as_arr()?.iter().map(parse_hex_u64).collect();
+            let key = SetupKey { model_name, fields: fields? };
+            let st = step_from_json(e.get("step"))?;
+            cache.stripes[cache.stripe_of(&key)].lock().unwrap().insert(key, st);
+        }
+        Some(cache)
+    }
+}
+
+/// A `u64` as an exact 16-digit hex string.  JSON numbers go through f64
+/// (53-bit mantissa) and would silently corrupt bit patterns above 2^53,
+/// so every u64 — including f64 bit patterns, which also keeps non-finite
+/// OOM markers representable — rides as a string.
+fn hex_u64(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+fn parse_hex_u64(j: &Json) -> Option<u64> {
+    let s = j.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn hex_f64(x: f64) -> Json {
+    hex_u64(x.to_bits())
+}
+
+fn parse_hex_f64(j: &Json) -> Option<f64> {
+    parse_hex_u64(j).map(f64::from_bits)
+}
+
+fn step_to_json(st: &StepTime) -> Json {
+    Json::obj(vec![
+        ("micro_batch", Json::Num(st.micro_batch as f64)),
+        ("num_microbatches", Json::Num(st.num_microbatches as f64)),
+        ("compute", hex_f64(st.compute)),
+        ("exposed_comm", hex_f64(st.exposed_comm)),
+        ("total_comm", hex_f64(st.total_comm)),
+        ("bubble", hex_f64(st.bubble)),
+        ("optimizer", hex_f64(st.optimizer)),
+        ("stall", hex_f64(st.stall)),
+        ("mem_per_gpu", hex_f64(st.mem_per_gpu)),
+        ("fits", Json::Bool(st.fits)),
+    ])
+}
+
+fn step_from_json(j: &Json) -> Option<StepTime> {
+    Some(StepTime {
+        micro_batch: j.get("micro_batch").as_usize()?,
+        num_microbatches: j.get("num_microbatches").as_usize()?,
+        compute: parse_hex_f64(j.get("compute"))?,
+        exposed_comm: parse_hex_f64(j.get("exposed_comm"))?,
+        total_comm: parse_hex_f64(j.get("total_comm"))?,
+        bubble: parse_hex_f64(j.get("bubble"))?,
+        optimizer: parse_hex_f64(j.get("optimizer"))?,
+        stall: parse_hex_f64(j.get("stall"))?,
+        mem_per_gpu: parse_hex_f64(j.get("mem_per_gpu"))?,
+        fits: j.get("fits").as_bool()?,
+    })
 }
 
 #[cfg(test)]
@@ -323,5 +582,132 @@ mod tests {
         assert!(Sweep::auto().map(&empty, |_, &x| x).is_empty());
         let one = [41u8];
         assert_eq!(Sweep::auto().map(&one, |_, &x| x + 1), vec![42]);
+        assert!(Sweep::auto().map_chunked(&empty, |_| 0.0, |_, &x| x).is_empty());
+        assert_eq!(Sweep::auto().map_chunked(&one, |_| 0.0, |_, &x| x + 1), vec![42]);
+    }
+
+    /// Cost-keyed scheduling must not change results: output is in input
+    /// order and bit-identical to `map`, whatever the cost key says.
+    #[test]
+    fn map_chunked_preserves_input_order_and_values() {
+        let items: Vec<u64> = (0..123).collect();
+        let f = |i: usize, &x: &u64| ((x as f64 + 0.5).sqrt() * (i as f64 + 1.0)).ln();
+        let plain = Sweep::serial().map(&items, f);
+        for workers in [2usize, 8] {
+            // adversarial cost keys: constant, reversed, and NaN-laced
+            for cost in [
+                (|_: &u64| 1.0) as fn(&u64) -> f64,
+                |&x: &u64| -(x as f64),
+                |&x: &u64| if x % 7 == 0 { f64::NAN } else { x as f64 },
+            ] {
+                let out = Sweep::new(workers).map_chunked(&items, cost, f);
+                assert_eq!(out.len(), plain.len());
+                for (a, b) in plain.iter().zip(&out) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("scalestudy-simcache-{tag}-{}", std::process::id()))
+    }
+
+    /// save -> load -> every key returns a bit-identical StepTime,
+    /// including the non-finite OOM marker entries.
+    #[test]
+    fn persistence_roundtrip_bit_identical() {
+        let cache = SimCache::new();
+        let mut setups = Vec::new();
+        for name in ["mt5-base", "mt5-xxl"] {
+            let m = by_name(name).unwrap();
+            for nodes in [1usize, 4] {
+                for stage in ZeroStage::all() {
+                    setups.push(TrainSetup::dp_pod(m.clone(), nodes, stage));
+                }
+            }
+        }
+        let originals: Vec<StepTime> = setups.iter().map(|s| cache.simulate(s)).collect();
+        assert!(originals.iter().any(|st| !st.fits), "want an OOM marker in the set");
+        let path = tmp_path("roundtrip");
+        cache.save(&path).unwrap();
+        let loaded = SimCache::load(&path);
+        assert_eq!(loaded.len(), cache.len());
+        for (setup, orig) in setups.iter().zip(&originals) {
+            let again = loaded.simulate(setup);
+            assert_eq!(orig.micro_batch, again.micro_batch);
+            assert_eq!(orig.num_microbatches, again.num_microbatches);
+            assert_eq!(orig.fits, again.fits);
+            for (a, b) in [
+                (orig.compute, again.compute),
+                (orig.exposed_comm, again.exposed_comm),
+                (orig.total_comm, again.total_comm),
+                (orig.bubble, again.bubble),
+                (orig.optimizer, again.optimizer),
+                (orig.stall, again.stall),
+                (orig.mem_per_gpu, again.mem_per_gpu),
+            ] {
+                assert_eq!(a.to_bits(), b.to_bits(), "float field diverged after reload");
+            }
+        }
+        // every reload lookup was a hit: nothing re-simulated
+        assert_eq!(loaded.misses(), 0);
+        assert_eq!(loaded.hits(), setups.len());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_or_truncated_file_degrades_to_empty() {
+        let path = tmp_path("corrupt");
+        for garbage in ["", "{", "not json at all", "{\"schema\": 1, \"entries\": [{]}"] {
+            std::fs::write(&path, garbage).unwrap();
+            let c = SimCache::load(&path);
+            assert!(c.is_empty(), "garbage {garbage:?} must load as empty");
+        }
+        // structurally valid JSON with a malformed entry is discarded too
+        let bad_entry =
+            r#"{"schema": 1, "entries": [{"model": "x", "fields": ["zz"], "step": {}}]}"#;
+        std::fs::write(&path, bad_entry).unwrap();
+        assert!(SimCache::load(&path).is_empty());
+        // missing file entirely
+        let _ = std::fs::remove_file(&path);
+        assert!(SimCache::load(&path).is_empty());
+    }
+
+    #[test]
+    fn schema_version_mismatch_discards_cache() {
+        let cache = SimCache::new();
+        let m = by_name("mt5-base").unwrap();
+        cache.simulate(&TrainSetup::dp_pod(m, 2, ZeroStage::Stage2));
+        let json = cache.to_json();
+        let path = tmp_path("schema");
+        // rewrite the schema field to a future version
+        let mut obj = match json {
+            crate::json::Json::Obj(o) => o,
+            _ => panic!("cache json must be an object"),
+        };
+        obj.insert(
+            "schema".to_string(),
+            crate::json::Json::Num((SIMCACHE_SCHEMA_VERSION + 1) as f64),
+        );
+        crate::json::Json::Obj(obj).write_file(&path).unwrap();
+        assert!(SimCache::load(&path).is_empty(), "future schema must be discarded");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The striped map keeps hit/miss counters exact under concurrency:
+    /// N threads × K lookups over D distinct setups = exactly D misses.
+    #[test]
+    fn striped_counters_exact_under_contention() {
+        let cache = SimCache::new();
+        let m = by_name("mt5-large").unwrap();
+        let distinct: Vec<TrainSetup> = (1..=8)
+            .map(|n| TrainSetup::dp_pod(m.clone(), n, ZeroStage::Stage2))
+            .collect();
+        let lookups: Vec<usize> = (0..400).map(|i| i % distinct.len()).collect();
+        Sweep::new(8).map(&lookups, |_, &i| cache.simulate(&distinct[i]).seconds_per_step());
+        assert_eq!(cache.misses(), distinct.len());
+        assert_eq!(cache.hits(), lookups.len() - distinct.len());
+        assert_eq!(cache.len(), distinct.len());
     }
 }

@@ -145,7 +145,12 @@ pub struct Trainer {
 impl Trainer {
     /// Build a trainer over a preset's artifacts: compiles one executable
     /// per rank, shards the optimizer state, seeds per-rank loaders.
-    pub fn new(rt: &Runtime, manifest: &Manifest, task: &TaskGen, cfg: TrainerCfg) -> Result<Trainer> {
+    pub fn new(
+        rt: &Runtime,
+        manifest: &Manifest,
+        task: &TaskGen,
+        cfg: TrainerCfg,
+    ) -> Result<Trainer> {
         if cfg.ranks == 0 {
             bail!("need at least one rank");
         }
@@ -174,11 +179,21 @@ impl Trainer {
                 grads: vec![0.0; n],
                 loader,
                 opt_m: vec![0.0; state_len],
-                opt_v: vec![0.0; state_len * usize::from(matches!(cfg.optimizer, Optimizer::AdamW { .. }))],
+                opt_v: vec![
+                    0.0;
+                    state_len * usize::from(matches!(cfg.optimizer, Optimizer::AdamW { .. }))
+                ],
                 shard,
             });
         }
-        Ok(Trainer { cfg, manifest: manifest.clone(), ranks, params, avg_grads: vec![0.0; n], step: 0 })
+        Ok(Trainer {
+            cfg,
+            manifest: manifest.clone(),
+            ranks,
+            params,
+            avg_grads: vec![0.0; n],
+            step: 0,
+        })
     }
 
     pub fn step_count(&self) -> u64 {
@@ -320,7 +335,11 @@ impl Trainer {
     /// of the paper's era).
     pub fn restore(&mut self, state: &crate::checkpoint::TrainState) -> Result<()> {
         if state.preset != self.manifest.preset {
-            bail!("checkpoint is for preset {}, trainer runs {}", state.preset, self.manifest.preset);
+            bail!(
+                "checkpoint is for preset {}, trainer runs {}",
+                state.preset,
+                self.manifest.preset
+            );
         }
         if state.ranks != self.ranks.len() || state.zero_stage != self.cfg.zero_stage {
             bail!(

@@ -72,7 +72,16 @@ impl Summary {
     /// Compute a summary; `xs` need not be sorted. Empty input -> all NaN.
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
-            return Summary { n: 0, mean: f64::NAN, std: f64::NAN, min: f64::NAN, p50: f64::NAN, p90: f64::NAN, p99: f64::NAN, max: f64::NAN };
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                p50: f64::NAN,
+                p90: f64::NAN,
+                p99: f64::NAN,
+                max: f64::NAN,
+            };
         }
         let mut v = xs.to_vec();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -117,6 +117,34 @@ pub fn state_bytes_per_gpu(psi: f64, nd: usize, stage: ZeroStage, opt: Optimizer
     }
 }
 
+/// Provably-optimistic per-GPU memory lower bound for a configuration:
+/// the ZeRO-partitioned states (with the same offload discount the step
+/// simulator applies — partitioned fp32 optimizer state moves to host
+/// RAM) plus `min_activation_bytes`, the smallest activation footprint
+/// any micro-batch choice can keep resident (see
+/// [`crate::parallel::min_live_multiplier`]).  If this already exceeds
+/// the usable HBM, the configuration is infeasible for *every*
+/// micro-batch — the planner prunes it without pricing
+/// ([`crate::planner`]).
+pub fn memory_lower_bound(
+    psi: f64,
+    nd: usize,
+    stage: ZeroStage,
+    opt: OptimizerKind,
+    offload: bool,
+    min_activation_bytes: f64,
+) -> f64 {
+    let states = state_bytes_per_gpu(psi, nd, stage, opt);
+    let states = if offload {
+        // identical to the simulator's offload accounting, so the bound
+        // can never exceed the simulator's own state footprint
+        states - opt.k_bytes() * psi / nd.max(1) as f64
+    } else {
+        states
+    };
+    states + min_activation_bytes
+}
+
 /// Per-GPU communication volume (bytes, send+receive) for one step.
 pub fn comm_volume_per_step(psi: f64, stage: ZeroStage) -> f64 {
     let fp16 = 2.0 * psi; // bytes of fp16 parameters/gradients
@@ -158,17 +186,59 @@ pub fn step_schedule(psi: f64, stage: ZeroStage, layers: usize) -> Vec<CommOp> {
             overlappable: true,
         }],
         ZeroStage::Stage1 => vec![
-            CommOp { what: "grad reduce-scatter", collective: ReduceScatter, bytes: fp16, messages: 25, overlappable: true },
-            CommOp { what: "param all-gather", collective: AllGather, bytes: fp16, messages: 25, overlappable: false },
+            CommOp {
+                what: "grad reduce-scatter",
+                collective: ReduceScatter,
+                bytes: fp16,
+                messages: 25,
+                overlappable: true,
+            },
+            CommOp {
+                what: "param all-gather",
+                collective: AllGather,
+                bytes: fp16,
+                messages: 25,
+                overlappable: false,
+            },
         ],
         ZeroStage::Stage2 => vec![
-            CommOp { what: "grad reduce-scatter (32-bit partitions)", collective: ReduceScatter, bytes: fp16, messages: 25, overlappable: true },
-            CommOp { what: "param all-gather", collective: AllGather, bytes: fp16, messages: 25, overlappable: false },
+            CommOp {
+                what: "grad reduce-scatter (32-bit partitions)",
+                collective: ReduceScatter,
+                bytes: fp16,
+                messages: 25,
+                overlappable: true,
+            },
+            CommOp {
+                what: "param all-gather",
+                collective: AllGather,
+                bytes: fp16,
+                messages: 25,
+                overlappable: false,
+            },
         ],
         ZeroStage::Stage3 => vec![
-            CommOp { what: "fwd param all-gather (16-bit partitions)", collective: AllGather, bytes: fp16, messages: layers.max(1), overlappable: true },
-            CommOp { what: "bwd param re-all-gather", collective: AllGather, bytes: fp16, messages: layers.max(1), overlappable: true },
-            CommOp { what: "grad reduce-scatter", collective: ReduceScatter, bytes: fp16, messages: layers.max(1), overlappable: true },
+            CommOp {
+                what: "fwd param all-gather (16-bit partitions)",
+                collective: AllGather,
+                bytes: fp16,
+                messages: layers.max(1),
+                overlappable: true,
+            },
+            CommOp {
+                what: "bwd param re-all-gather",
+                collective: AllGather,
+                bytes: fp16,
+                messages: layers.max(1),
+                overlappable: true,
+            },
+            CommOp {
+                what: "grad reduce-scatter",
+                collective: ReduceScatter,
+                bytes: fp16,
+                messages: layers.max(1),
+                overlappable: true,
+            },
         ],
     }
 }
@@ -357,13 +427,38 @@ mod tests {
         }
     }
 
+    /// The memory lower bound matches `state_bytes_per_gpu` plus the
+    /// activation floor, never exceeds the unmodified state bytes when
+    /// offloading, and is monotone in the activation term.
+    #[test]
+    fn memory_lower_bound_consistent_with_states() {
+        let gen = PairOf(UsizeIn { lo: 1, hi: 64 }, UsizeIn { lo: 0, hi: 3 });
+        forall(&gen, |&(nd, stage_i)| {
+            let stage = ZeroStage::from_index(stage_i).unwrap();
+            let psi = 3e9;
+            let act = 2.0 * GB;
+            let plain = memory_lower_bound(psi, nd, stage, OptimizerKind::AdamW, false, act);
+            let states = state_bytes_per_gpu(psi, nd, stage, OptimizerKind::AdamW);
+            if (plain - (states + act)).abs() > 1.0 {
+                return Err(format!("stage {stage:?} nd={nd}: bound != states + act"));
+            }
+            let off = memory_lower_bound(psi, nd, stage, OptimizerKind::AdamW, true, act);
+            if off > plain {
+                return Err("offload bound above non-offload bound".to_string());
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn schedule_time_stage3_slower_than_stage2() {
         let comm = crate::comm::CommModel::new(crate::hardware::ClusterSpec::lps_pod(4));
         for nodes in [2usize, 4, 8] {
             let psi = 13e9;
-            let (t2, _) = schedule_time(&step_schedule(psi, ZeroStage::Stage2, 48), &comm, nodes, 8);
-            let (t3, _) = schedule_time(&step_schedule(psi, ZeroStage::Stage3, 48), &comm, nodes, 8);
+            let (t2, _) =
+                schedule_time(&step_schedule(psi, ZeroStage::Stage2, 48), &comm, nodes, 8);
+            let (t3, _) =
+                schedule_time(&step_schedule(psi, ZeroStage::Stage3, 48), &comm, nodes, 8);
             assert!(t3 > t2, "nodes={nodes}: stage3 {t3} <= stage2 {t2}");
         }
     }

@@ -5,8 +5,10 @@ use scalestudy::hardware::ClusterSpec;
 use scalestudy::hpo::{evaluate, space, Template};
 use scalestudy::json::Json;
 use scalestudy::model::{by_name, mt5_zoo};
-use scalestudy::planner::{plan, PlanSpace};
-use scalestudy::sim::{dp_placement, simulate_step, TrainSetup, Workload};
+use scalestudy::planner::{plan, plan_exhaustive, PlanSpace};
+use scalestudy::sim::{
+    dp_placement, memory_lower_bound, simulate_step, step_lower_bound, TrainSetup, Workload,
+};
 use scalestudy::sweep::{SimCache, Sweep};
 use scalestudy::testkit::{forall, forall_cases, Gen, OneOf, PairOf, UsizeIn};
 use scalestudy::util::Rng;
@@ -329,11 +331,183 @@ fn prop_planner_plan_fits_and_beats_dp_baseline() {
     });
 }
 
+/// THE branch-and-bound acceptance property: for every zoo model ×
+/// {1,2,4,8}-node query on the enlarged default space, the pruned search
+/// returns a best plan and Pareto frontier **bit-identical** to the
+/// exhaustive sweep, while pricing strictly fewer points than the space
+/// holds on every xl/xxl query.
+#[test]
+fn prop_bnb_bit_identical_to_exhaustive_and_prunes_large_models() {
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    for model in mt5_zoo() {
+        for nodes in [1usize, 2, 4, 8] {
+            let cluster = ClusterSpec::lps_pod(nodes);
+            // shared cache: the exhaustive pass reuses the pruned pass's
+            // pricings (bit-identical by the cache round-trip guarantee)
+            let cache = SimCache::new();
+            let bnb = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+            let exact = plan_exhaustive(&model, &cluster, &workload, &space, &sweep, &cache);
+            let tag = format!("{} {nodes}n", model.name);
+
+            assert_eq!(bnb.space_size, exact.space_size, "{tag}: space size");
+            assert!(bnb.evaluated <= bnb.space_size, "{tag}: evaluated > space");
+            match (&bnb.best, &exact.best) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.setup.cluster.nodes, b.setup.cluster.nodes, "{tag}: best nodes");
+                    assert_eq!(a.setup.par, b.setup.par, "{tag}: best par");
+                    assert_eq!(a.setup.stage, b.setup.stage, "{tag}: best stage");
+                    assert_eq!(a.setup.opt, b.setup.opt, "{tag}: best optimizer");
+                    assert_eq!(a.setup.offload, b.setup.offload, "{tag}: best offload");
+                    assert_eq!(a.setup.sched, b.setup.sched, "{tag}: best sched");
+                    assert_eq!(a.setup.micro_batch_cap, b.setup.micro_batch_cap, "{tag}: cap");
+                    assert_eq!(
+                        a.seconds_per_step().to_bits(),
+                        b.seconds_per_step().to_bits(),
+                        "{tag}: best seconds diverged"
+                    );
+                    assert_eq!(
+                        a.step.mem_per_gpu.to_bits(),
+                        b.step.mem_per_gpu.to_bits(),
+                        "{tag}: best memory diverged"
+                    );
+                }
+                other => panic!("{tag}: best presence diverged: {other:?}"),
+            }
+            assert_eq!(bnb.frontier.len(), exact.frontier.len(), "{tag}: frontier size");
+            for (a, b) in bnb.frontier.iter().zip(&exact.frontier) {
+                assert_eq!(a.setup.cluster.nodes, b.setup.cluster.nodes, "{tag}: frontier nodes");
+                assert_eq!(a.setup.par, b.setup.par, "{tag}: frontier par");
+                assert_eq!(a.setup.stage, b.setup.stage, "{tag}: frontier stage");
+                assert_eq!(a.setup.micro_batch_cap, b.setup.micro_batch_cap, "{tag}: frontier cap");
+                assert_eq!(
+                    a.seconds_per_step().to_bits(),
+                    b.seconds_per_step().to_bits(),
+                    "{tag}: frontier seconds diverged"
+                );
+                assert_eq!(
+                    a.step.mem_per_gpu.to_bits(),
+                    b.step.mem_per_gpu.to_bits(),
+                    "{tag}: frontier memory diverged"
+                );
+            }
+            if model.name == "mt5-xl" || model.name == "mt5-xxl" {
+                assert!(
+                    bnb.evaluated < bnb.space_size,
+                    "{tag}: bounds must prune the large-model query ({} of {})",
+                    bnb.evaluated,
+                    bnb.space_size
+                );
+            }
+        }
+    }
+}
+
+/// Bound soundness, fuzzed over the planner's enumeration: the analytical
+/// time bound never exceeds the simulated step time, and a memory bound
+/// above the HBM margin always coincides with an OOM verdict.
+#[test]
+fn prop_lower_bounds_sound_on_enumerated_space() {
+    use scalestudy::planner::enumerate_setups;
+    let gen = PairOf(
+        OneOf(vec!["mt5-base", "mt5-xl", "mt5-xxl"]),
+        OneOf(vec![1usize, 2, 8]),
+    );
+    forall_cases(&gen, 6, |&(name, nodes)| {
+        let model = by_name(name).unwrap();
+        let cluster = ClusterSpec::lps_pod(nodes);
+        let hbm = cluster.node.gpu.hbm_bytes * HBM_SAFETY_MARGIN;
+        for setup in enumerate_setups(&model, &cluster, &Workload::table1(), &PlanSpace::default())
+        {
+            let st = simulate_step(&setup);
+            let tlb = step_lower_bound(&setup);
+            let mlb = memory_lower_bound(&setup);
+            if tlb > st.seconds_per_step() {
+                return Err(format!(
+                    "{name} {nodes}n {:?}: time bound {tlb} > {}",
+                    setup.par,
+                    st.seconds_per_step()
+                ));
+            }
+            if st.fits && mlb > st.mem_per_gpu + 1.0 {
+                return Err(format!("{name} {nodes}n {:?}: mem bound above actual", setup.par));
+            }
+            if mlb > hbm && st.fits {
+                return Err(format!("{name} {nodes}n {:?}: OOM-proof wrong", setup.par));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The ragged-trial acceptance property: `map_chunked` with the
+/// analytical cost key stays bit-identical to serial execution at
+/// 1/4/8 workers on mixed-node-count (ragged) trial sets.
+#[test]
+fn prop_map_chunked_bit_identical_on_ragged_trials() {
+    let mut setups = Vec::new();
+    for model in ["mt5-base", "mt5-xl", "mt5-xxl"] {
+        let m = by_name(model).unwrap();
+        for nodes in [1usize, 2, 4, 6, 8] {
+            for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
+                setups.push(TrainSetup::dp_pod(m.clone(), nodes, stage));
+            }
+        }
+    }
+    let serial = Sweep::serial().map(&setups, |_, s| simulate_step(s).seconds_per_step());
+    for workers in [1usize, 4, 8] {
+        let chunked = Sweep::new(workers).map_chunked(&setups, step_lower_bound, |_, s| {
+            simulate_step(s).seconds_per_step()
+        });
+        assert_eq!(serial.len(), chunked.len());
+        for (i, (a, b)) in serial.iter().zip(&chunked).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "trial {i} diverged at {workers} workers"
+            );
+        }
+    }
+}
+
+/// Persistent-cache round-trip through a real sweep: save → load →
+/// every pricing is returned bit-identically from disk.
+#[test]
+fn prop_simcache_roundtrip_preserves_sweep_results() {
+    let cache = SimCache::new();
+    let mut setups = Vec::new();
+    for (mi, model) in mt5_zoo().into_iter().enumerate() {
+        for nodes in [1usize, 2, 4, 8] {
+            let stage = if (mi + nodes) % 2 == 0 { ZeroStage::Stage2 } else { ZeroStage::Stage3 };
+            setups.push(TrainSetup::dp_pod(model.clone(), nodes, stage));
+        }
+    }
+    let original = Sweep::auto().simulate_setups(&cache, &setups);
+    let path = std::env::temp_dir()
+        .join(format!("scalestudy-prop-cache-{}.json", std::process::id()));
+    cache.save(&path).expect("save");
+    let reloaded = SimCache::load(&path);
+    let again = Sweep::auto().simulate_setups(&reloaded, &setups);
+    assert_eq!(reloaded.misses(), 0, "reloaded cache must answer everything from disk");
+    for (a, b) in original.iter().zip(&again) {
+        assert_eq!(a.seconds_per_step().to_bits(), b.seconds_per_step().to_bits());
+        assert_eq!(a.mem_per_gpu.to_bits(), b.mem_per_gpu.to_bits());
+        assert_eq!(a.micro_batch, b.micro_batch);
+        assert_eq!(a.fits, b.fits);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
 /// The placement clamp, fuzzed across cluster shapes and (tp, dp) combos
 /// (including tp values that do not divide the node's GPU count).
 #[test]
 fn prop_dp_placement_within_cluster() {
-    let gen = PairOf(UsizeIn { lo: 1, hi: 8 }, PairOf(UsizeIn { lo: 1, hi: 9 }, UsizeIn { lo: 1, hi: 64 }));
+    let gen = PairOf(
+        UsizeIn { lo: 1, hi: 8 },
+        PairOf(UsizeIn { lo: 1, hi: 9 }, UsizeIn { lo: 1, hi: 64 }),
+    );
     forall(&gen, |&(nodes, (tp, dp))| {
         let cluster = ClusterSpec::lps_pod(nodes);
         let (dp_nodes, dp_gpn) = dp_placement(&cluster, tp, dp);
