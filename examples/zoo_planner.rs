@@ -1,19 +1,21 @@
-//! Auto-parallelism plans for the whole paper zoo: for each of the 5
-//! mt5 models (580 M -> 13 B) at 1/2/4/8 nodes, search the joint
-//! (dp, tp, pp, ZeRO stage, offload, micro-batch cap) space and print the
-//! fastest feasible plan — the planner's answer to the paper's manual
-//! "which stage and how many nodes" study, fully automated.
+//! Auto-parallelism plans for the whole paper zoo plus its MoE variants:
+//! for each model at 1/2/4/8 nodes, search the joint (dp, tp, pp, sp, ep,
+//! ZeRO stage, offload, micro-batch cap) space and print the fastest
+//! feasible plan — the planner's answer to the paper's manual "which
+//! stage and how many nodes" study, fully automated.  A final section
+//! re-plans on a mixed-generation pod (A100 + previous-gen V100 nodes) to
+//! show heterogeneity changing the winning layout.
 //!
-//! All 20 queries share one sweep executor and memo cache.  With the
-//! default sub-pod ladder, a model's 8-node query re-visits the
-//! {1,2,4}-node subtrees its earlier queries already priced, so the hit
-//! counter shows real cross-query reuse (and the branch-and-bound bounds
-//! prune most of what is left).
+//! All queries share one sweep executor and memo cache.  With the default
+//! sub-pod ladder, a model's 8-node query re-visits the {1,2,4}-node
+//! subtrees its earlier queries already priced, so the hit counter shows
+//! real cross-query reuse (and the branch-and-bound bounds prune most of
+//! what is left).
 //!
 //! Run: `cargo run --release --example zoo_planner`
 
 use scalestudy::hardware::ClusterSpec;
-use scalestudy::model::mt5_zoo;
+use scalestudy::model::{moe_zoo, mt5_zoo};
 use scalestudy::planner::{plan, PlanSpace};
 use scalestudy::sim::Workload;
 use scalestudy::sweep::{SimCache, Sweep};
@@ -30,11 +32,13 @@ fn main() {
         workload.global_batch
     );
     let t0 = std::time::Instant::now();
-    for model in mt5_zoo() {
+    let mut queries = 0usize;
+    for model in mt5_zoo().into_iter().chain(moe_zoo()) {
         println!("{} ({:.2}B params):", model.name, model.params() as f64 / 1e9);
         for &n in &nodes {
             let cluster = ClusterSpec::lps_pod(n);
             let result = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+            queries += 1;
             match result.best {
                 Some(best) => println!(
                     "  {n} node{}: {}  [priced {} of {} ({} feasible), frontier {}]",
@@ -50,8 +54,22 @@ fn main() {
         }
         println!();
     }
+
+    println!("== mixed-generation pod: 4x DGX-A100 + 4x DGX-1V (V100-32GB) ==\n");
+    let mixed = ClusterSpec::mixed_pod(4, 4);
+    for model in mt5_zoo() {
+        let homo = plan(&model, &ClusterSpec::lps_pod(4), &workload, &space, &sweep, &cache);
+        let het = plan(&model, &mixed, &workload, &space, &sweep, &cache);
+        queries += 2;
+        if let (Some(h), Some(x)) = (homo.best, het.best) {
+            println!("{}:", model.name);
+            println!("  4x A100 only : {}", h.describe());
+            println!("  mixed pod    : {}", x.describe());
+        }
+    }
+
     println!(
-        "planned 20 queries in {:.0} ms on {} workers ({} simulations, {} cache hits)",
+        "\nplanned {queries} queries in {:.0} ms on {} workers ({} simulations, {} cache hits)",
         t0.elapsed().as_secs_f64() * 1e3,
         sweep.workers(),
         cache.misses(),

@@ -153,6 +153,34 @@ fn main() {
     eff.note("the 8-node column collapses -- the paper's central anomaly, all model sizes");
     b.table(eff);
 
+    // MoE zoo: per-GPU memory with and without expert parallelism at one
+    // node — the ep axis is what brings the big expert banks into range
+    let mut moe = Table::new(
+        "MoE zoo per-GPU memory (GB), 1 node, stage 1",
+        &["params B", "ep=1 mem", "ep=max mem", "fits ep=1", "fits ep=max"],
+    );
+    for model in scalestudy::model::moe_zoo() {
+        let ep_max = (model.experts as usize).min(8);
+        let mk = |ep: usize| scalestudy::sim::TrainSetup {
+            par: scalestudy::parallel::ParallelCfg { dp: 8 / ep, tp: 1, pp: 1, sp: 1, ep },
+            ..TrainSetup::dp_pod(model.clone(), 1, ZeroStage::Stage1)
+        };
+        let plain = cache.simulate(&mk(1));
+        let sharded = cache.simulate(&mk(ep_max));
+        moe.row(
+            &model.name,
+            vec![
+                model.params() as f64 / 1e9,
+                plain.mem_per_gpu / 1e9,
+                sharded.mem_per_gpu / 1e9,
+                plain.fits as usize as f64,
+                sharded.fits as usize as f64,
+            ],
+        );
+    }
+    moe.note("ep shards the expert FFNs; all-to-all dispatch priced in the step time");
+    b.table(moe);
+
     if let Err(e) = cache.save_default() {
         eprintln!("warning: could not persist SimCache: {e:#}");
     }

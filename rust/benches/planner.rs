@@ -52,6 +52,49 @@ fn main() {
     );
     b.table(t);
 
+    // ---- the new axes: MoE models (expert parallelism) and a
+    // mixed-generation pod (heterogeneous node groups)
+    let mut axes = Table::new(
+        "sp/ep axes + mixed-generation pod, cold cache",
+        &["space", "priced", "wall ms", "best s/step"],
+    );
+    for model in scalestudy::model::moe_zoo() {
+        let cache = SimCache::new();
+        let t0 = std::time::Instant::now();
+        let r = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+        let wall = t0.elapsed().as_secs_f64();
+        let best = r.best.as_ref().expect("feasible MoE plan");
+        axes.row(
+            &format!("{} 8n", model.name),
+            vec![
+                r.space_size as f64,
+                r.evaluated as f64,
+                wall * 1e3,
+                best.seconds_per_step(),
+            ],
+        );
+    }
+    let mixed = ClusterSpec::mixed_pod(4, 4);
+    for model in ["mt5-large", "mt5-xxl"] {
+        let model = scalestudy::model::by_name(model).unwrap();
+        let cache = SimCache::new();
+        let t0 = std::time::Instant::now();
+        let r = plan(&model, &mixed, &workload, &space, &sweep, &cache);
+        let wall = t0.elapsed().as_secs_f64();
+        let best = r.best.as_ref().expect("feasible mixed-pod plan");
+        axes.row(
+            &format!("{} mixed 4+4", model.name),
+            vec![
+                r.space_size as f64,
+                r.evaluated as f64,
+                wall * 1e3,
+                best.seconds_per_step(),
+            ],
+        );
+    }
+    axes.note("MoE rows enumerate ep; mixed rows price extension nodes at V100 limits");
+    b.table(axes);
+
     // ---- pruned vs exhaustive wall time (same query, same cache rules)
     let mut cmp = Table::new(
         "branch-and-bound vs exhaustive reference (mt5-xxl, 8-node query)",

@@ -19,6 +19,8 @@ pub enum Collective {
     AllGather,
     ReduceScatter,
     Broadcast,
+    /// Balanced personalized exchange (MoE expert dispatch/combine).
+    AllToAll,
 }
 
 impl Collective {
@@ -28,15 +30,17 @@ impl Collective {
             Collective::AllGather => "all-gather",
             Collective::ReduceScatter => "reduce-scatter",
             Collective::Broadcast => "broadcast",
+            Collective::AllToAll => "all-to-all",
         }
     }
 
-    pub fn all() -> [Collective; 4] {
+    pub fn all() -> [Collective; 5] {
         [
             Collective::AllReduce,
             Collective::AllGather,
             Collective::ReduceScatter,
             Collective::Broadcast,
+            Collective::AllToAll,
         ]
     }
 }
@@ -75,6 +79,16 @@ pub mod ring {
         }
         (p as f64 - 1.0) * lat + n / bw
     }
+
+    /// Balanced all-to-all of an `n`-byte per-rank buffer (pairwise
+    /// exchange: p-1 rounds, n/p bytes to each peer).
+    pub fn alltoall(n: f64, p: usize, bw: f64, lat: f64) -> f64 {
+        if p <= 1 || n <= 0.0 {
+            return 0.0;
+        }
+        let pf = p as f64;
+        (pf - 1.0) * lat + n * (pf - 1.0) / (pf * bw)
+    }
 }
 
 /// A data-parallel process-group topology: `nodes` × `gpus_per_node`
@@ -85,8 +99,20 @@ pub struct CommModel {
 }
 
 impl CommModel {
+    /// Build a cost model for `cluster`.  Mixed-generation clusters are
+    /// normalized to their [`ClusterSpec::limiting_view`] — synchronous
+    /// collectives run at the weakest participating link — which is the
+    /// identity for homogeneous pods.
     pub fn new(cluster: ClusterSpec) -> CommModel {
-        CommModel { cluster }
+        CommModel { cluster: cluster.limiting_view() }
+    }
+
+    /// Wrap a cluster that is *already* a limiting view (the step
+    /// simulator and bounds collapse once and share it), skipping the
+    /// redundant re-collapse-and-clone of [`CommModel::new`].
+    pub fn from_view(view: ClusterSpec) -> CommModel {
+        debug_assert!(view.extra_groups.is_empty(), "from_view expects a collapsed view");
+        CommModel { cluster: view }
     }
 
     fn nv_bw(&self) -> f64 {
@@ -154,6 +180,23 @@ impl CommModel {
             + ring::broadcast(n, g, self.nv_bw(), self.nv_lat())
     }
 
+    /// Hierarchical all-to-all of an `n`-byte per-rank buffer (MoE
+    /// dispatch/combine): the slice destined for same-node peers moves on
+    /// NVLink, the rest crosses the fabric as a node-level exchange.
+    pub fn alltoall(&self, n: f64, nodes: usize, g: usize) -> f64 {
+        if nodes <= 1 {
+            return ring::alltoall(n, g, self.nv_bw(), self.nv_lat());
+        }
+        let p = (nodes * g) as f64;
+        // a balanced exchange sends equal shares to all p-1 peers, of
+        // which (nodes-1)*g sit off-node
+        let off = n * ((nodes - 1) * g) as f64 / (p - 1.0).max(1.0);
+        let on = n - off;
+        let ib_bw = self.cluster.effective_ib_bw(nodes);
+        ring::alltoall(on, g, self.nv_bw(), self.nv_lat())
+            + ring::alltoall(off, nodes, ib_bw, self.ib_lat())
+    }
+
     /// Dispatch by enum (bench sweeps).
     pub fn time(&self, c: Collective, n: f64, nodes: usize, g: usize) -> f64 {
         match c {
@@ -161,6 +204,7 @@ impl CommModel {
             Collective::AllGather => self.allgather(n, nodes, g),
             Collective::ReduceScatter => self.reducescatter(n, nodes, g),
             Collective::Broadcast => self.broadcast(n, nodes, g),
+            Collective::AllToAll => self.alltoall(n, nodes, g),
         }
     }
 
@@ -274,6 +318,33 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn alltoall_costs_between_gather_and_reduce() {
+        // flat identity: an all-to-all moves the same per-rank volume as
+        // an all-gather of the same buffer
+        let (n, p, bw, lat) = (2e8, 16, 100e9, 1e-6);
+        let a2a = ring::alltoall(n, p, bw, lat);
+        let ag = ring::allgather(n, p, bw, lat);
+        assert!((a2a - ag).abs() / ag < 1e-9);
+        // hierarchical: crossing nodes is slower than staying inside one
+        let m = model(4);
+        let intra = m.alltoall(1e8, 1, 8);
+        let inter = m.alltoall(1e8, 4, 8);
+        assert!(inter > intra);
+        assert_eq!(m.alltoall(1e8, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn mixed_generation_cluster_prices_at_weakest_link() {
+        let homo = CommModel::new(ClusterSpec::lps_pod(4));
+        let mixed = CommModel::new(ClusterSpec::mixed_pod(2, 2));
+        for c in Collective::all() {
+            let th = homo.time(c, 1e9, 4, 8);
+            let tm = mixed.time(c, 1e9, 4, 8);
+            assert!(tm >= th, "{c:?}: mixed pod priced faster than A100 pod");
+        }
     }
 
     #[test]

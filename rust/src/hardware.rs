@@ -40,6 +40,19 @@ impl GpuSpec {
         }
     }
 
+    /// NVIDIA V100-SXM2-32GB (previous generation: fp16 tensor cores, no
+    /// bf16 — `peak_flops_bf16` carries the fp16 tensor-core rate).
+    pub fn v100_32g() -> GpuSpec {
+        GpuSpec {
+            name: "V100-SXM2-32GB".into(),
+            peak_flops_bf16: 125e12,
+            peak_flops_fp32: 15.7e12,
+            hbm_bytes: 32.0 * 1024f64.powi(3),
+            hbm_bw: 0.9e12,
+            achievable_frac: 0.35,
+        }
+    }
+
     /// Sustained training throughput (FLOP/s) after the achievable factor.
     pub fn sustained_flops(&self) -> f64 {
         self.peak_flops_bf16 * self.achievable_frac
@@ -74,13 +87,50 @@ impl NodeSpec {
             pcie_bw: 25e9,
         }
     }
+
+    /// DGX-1V: 8×V100-32GB, NVLink2 hybrid-cube mesh (no NVSwitch — lower
+    /// achievable all-reduce bandwidth), 512 GB host RAM, PCIe gen3.
+    pub fn dgx1_v100() -> NodeSpec {
+        NodeSpec {
+            gpus: 8,
+            gpu: GpuSpec::v100_32g(),
+            nvlink_bw: 110e9,
+            nvlink_latency: 5e-6,
+            host_ram_bytes: 0.5 * 1024f64.powi(4),
+            pcie_bw: 12e9,
+        }
+    }
 }
 
-/// The cluster: homogeneous nodes plus the inter-node fabric.
+/// One homogeneous group of nodes inside a (possibly mixed-generation)
+/// cluster: `nodes` identical chassis plus the per-node fabric injection
+/// bandwidth its NICs achieve.  All groups of a cluster must expose the
+/// same GPU count per node so parallel-degree factorizations stay uniform.
 #[derive(Clone, Debug)]
-pub struct ClusterSpec {
+pub struct NodeGroup {
     pub nodes: usize,
     pub node: NodeSpec,
+    /// Per-node injection bandwidth into the shared fabric (bytes/s).
+    pub ib_bw: f64,
+}
+
+/// The cluster: a primary node group plus the inter-node fabric, and —
+/// for mixed-generation pods — any number of extra heterogeneous node
+/// groups ([`ClusterSpec::extra_groups`]).  Synchronous training runs at
+/// the pace of the slowest participant, so pricing collapses a mixed pod
+/// to its [`ClusterSpec::limiting_view`]: the field-wise most constrained
+/// node spec (slowest sustained FLOPs, smallest HBM, weakest links) over
+/// every participating group.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// Nodes in the primary group (the whole cluster when homogeneous).
+    pub nodes: usize,
+    /// Primary group node type.
+    pub node: NodeSpec,
+    /// Heterogeneous extension groups (empty = homogeneous pod).
+    /// Placement fills the primary group first, then these in order
+    /// ([`ClusterSpec::take_nodes`]).
+    pub extra_groups: Vec<NodeGroup>,
     /// Per-node injection bandwidth into the IB fabric (bytes/s).
     pub ib_bw: f64,
     /// Inter-node latency (seconds) per message.
@@ -119,6 +169,7 @@ impl ClusterSpec {
         ClusterSpec {
             nodes,
             node: NodeSpec::dgx_a100(),
+            extra_groups: Vec::new(),
             ib_bw: 6e9,
             ib_latency: 5e-6,
             oversub_threshold_nodes: 4,
@@ -129,26 +180,127 @@ impl ClusterSpec {
         }
     }
 
-    pub fn total_gpus(&self) -> usize {
-        self.nodes * self.node.gpus
+    /// A mixed-generation pod: `a100_nodes` DGX-A100 chassis on the
+    /// paper's fabric plus `v100_nodes` previous-generation DGX-1V
+    /// chassis on EDR-era NICs (half the A100 pod's effective rate).
+    pub fn mixed_pod(a100_nodes: usize, v100_nodes: usize) -> ClusterSpec {
+        let mut c = ClusterSpec::lps_pod(a100_nodes.max(1));
+        if v100_nodes > 0 {
+            c.extra_groups.push(NodeGroup {
+                nodes: v100_nodes,
+                node: NodeSpec::dgx1_v100(),
+                ib_bw: 3e9,
+            });
+        }
+        c
     }
 
-    /// Effective per-node IB bandwidth when `active` nodes exchange data
-    /// concurrently (spine contention model).
-    pub fn effective_ib_bw(&self, active: usize) -> f64 {
-        if active > self.oversub_threshold_nodes {
-            // linear degradation from threshold to full oversubscription
-            let over = (active - self.oversub_threshold_nodes) as f64
-                / (self.nodes.max(active) - self.oversub_threshold_nodes).max(1) as f64;
-            self.ib_bw / (1.0 + (self.oversub_factor - 1.0) * over)
-        } else {
-            self.ib_bw
+    /// Nodes across every group.
+    pub fn total_nodes(&self) -> usize {
+        self.nodes + self.extra_groups.iter().map(|g| g.nodes).sum::<usize>()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.total_nodes() * self.node.gpus
+    }
+
+    /// The most constrained node spec among all groups: synchronous
+    /// training is gated by the slowest GPU (the FLOPs pair comes from
+    /// the group with the lowest *sustained* rate), a shard must fit the
+    /// smallest HBM, and collectives run at the weakest link.  For a
+    /// homogeneous cluster this is the primary node spec unchanged.
+    pub fn limiting_node(&self) -> NodeSpec {
+        let mut n = self.node.clone();
+        for g in &self.extra_groups {
+            let gn = &g.node;
+            debug_assert_eq!(gn.gpus, n.gpus, "node groups must share the per-node GPU count");
+            if gn.gpu.sustained_flops() < n.gpu.sustained_flops() {
+                n.gpu.peak_flops_bf16 = gn.gpu.peak_flops_bf16;
+                n.gpu.achievable_frac = gn.gpu.achievable_frac;
+            }
+            n.gpu.peak_flops_fp32 = n.gpu.peak_flops_fp32.min(gn.gpu.peak_flops_fp32);
+            n.gpu.hbm_bytes = n.gpu.hbm_bytes.min(gn.gpu.hbm_bytes);
+            n.gpu.hbm_bw = n.gpu.hbm_bw.min(gn.gpu.hbm_bw);
+            n.nvlink_bw = n.nvlink_bw.min(gn.nvlink_bw);
+            n.nvlink_latency = n.nvlink_latency.max(gn.nvlink_latency);
+            n.host_ram_bytes = n.host_ram_bytes.min(gn.host_ram_bytes);
+            n.pcie_bw = n.pcie_bw.min(gn.pcie_bw);
+        }
+        n
+    }
+
+    /// Weakest per-node fabric injection bandwidth among all groups.
+    pub fn limiting_ib_bw(&self) -> f64 {
+        self.extra_groups.iter().fold(self.ib_bw, |bw, g| bw.min(g.ib_bw))
+    }
+
+    /// Smallest per-GPU HBM among all groups — the memory-fit ceiling,
+    /// without materializing a whole [`ClusterSpec::limiting_view`].
+    pub fn limiting_hbm_bytes(&self) -> f64 {
+        self.extra_groups
+            .iter()
+            .fold(self.node.gpu.hbm_bytes, |h, g| h.min(g.node.gpu.hbm_bytes))
+    }
+
+    /// The homogeneous cluster a synchronous step effectively runs on:
+    /// every node priced as the [`ClusterSpec::limiting_node`], the
+    /// fabric at the [`ClusterSpec::limiting_ib_bw`].  A homogeneous
+    /// cluster maps to an identical clone, so pricing through this view
+    /// is bit-identical to pricing the cluster directly.
+    pub fn limiting_view(&self) -> ClusterSpec {
+        if self.extra_groups.is_empty() {
+            return self.clone();
+        }
+        ClusterSpec {
+            nodes: self.total_nodes(),
+            node: self.limiting_node(),
+            extra_groups: Vec::new(),
+            ib_bw: self.limiting_ib_bw(),
+            ..self.clone()
         }
     }
 
-    /// Aggregate HBM across the cluster (bytes).
+    /// The sub-cluster of the first `n` nodes in placement order: the
+    /// primary group first, then the extra groups in declaration order.
+    /// Groups that contribute nothing are dropped, so a sub-pod that fits
+    /// inside the primary group prices exactly like a homogeneous pod.
+    pub fn take_nodes(&self, n: usize) -> ClusterSpec {
+        let n = n.clamp(1, self.total_nodes().max(1));
+        let primary = n.min(self.nodes).max(1);
+        let mut left = n - primary.min(n);
+        let mut groups = Vec::new();
+        for g in &self.extra_groups {
+            if left == 0 {
+                break;
+            }
+            let take = left.min(g.nodes);
+            groups.push(NodeGroup { nodes: take, ..g.clone() });
+            left -= take;
+        }
+        ClusterSpec { nodes: primary, extra_groups: groups, ..self.clone() }
+    }
+
+    /// Effective per-node IB bandwidth when `active` nodes exchange data
+    /// concurrently (spine contention model); mixed-generation pods run
+    /// at the weakest group's injection rate.
+    pub fn effective_ib_bw(&self, active: usize) -> f64 {
+        let ib = self.limiting_ib_bw();
+        if active > self.oversub_threshold_nodes {
+            // linear degradation from threshold to full oversubscription
+            let over = (active - self.oversub_threshold_nodes) as f64
+                / (self.total_nodes().max(active) - self.oversub_threshold_nodes).max(1) as f64;
+            ib / (1.0 + (self.oversub_factor - 1.0) * over)
+        } else {
+            ib
+        }
+    }
+
+    /// Aggregate HBM across the cluster (bytes), per-group exact.
     pub fn total_hbm(&self) -> f64 {
-        self.total_gpus() as f64 * self.node.gpu.hbm_bytes
+        let primary = (self.nodes * self.node.gpus) as f64 * self.node.gpu.hbm_bytes;
+        self.extra_groups.iter().fold(primary, |acc, g| {
+            acc + (g.nodes * g.node.gpus) as f64 * g.node.gpu.hbm_bytes
+        })
     }
 
     /// Aggregate storage/dataloader front-end rate (samples/s) with
@@ -204,5 +356,58 @@ mod tests {
             assert!(bw <= prev + 1e-9);
             prev = bw;
         }
+    }
+
+    #[test]
+    fn homogeneous_limiting_view_is_identity() {
+        let c = ClusterSpec::lps_pod(4);
+        let v = c.limiting_view();
+        assert_eq!(v.nodes, c.nodes);
+        assert_eq!(v.node.gpu.hbm_bytes.to_bits(), c.node.gpu.hbm_bytes.to_bits());
+        assert_eq!(v.ib_bw.to_bits(), c.ib_bw.to_bits());
+        assert_eq!(
+            v.node.gpu.sustained_flops().to_bits(),
+            c.node.gpu.sustained_flops().to_bits()
+        );
+        assert!(v.extra_groups.is_empty());
+    }
+
+    #[test]
+    fn mixed_pod_limits_to_the_weakest_group() {
+        let c = ClusterSpec::mixed_pod(2, 2);
+        assert_eq!(c.total_nodes(), 4);
+        assert_eq!(c.total_gpus(), 32);
+        let lim = c.limiting_node();
+        let v100 = NodeSpec::dgx1_v100();
+        assert_eq!(lim.gpu.hbm_bytes.to_bits(), v100.gpu.hbm_bytes.to_bits());
+        assert_eq!(
+            lim.gpu.sustained_flops().to_bits(),
+            v100.gpu.sustained_flops().to_bits()
+        );
+        assert_eq!(lim.nvlink_bw.to_bits(), v100.nvlink_bw.to_bits());
+        assert!(c.limiting_ib_bw() < ClusterSpec::lps_pod(2).ib_bw);
+        // aggregate HBM is per-group exact: 16×80 GiB + 16×32 GiB
+        let want = 16.0 * (80.0 + 32.0) * 1024f64.powi(3);
+        assert!((c.total_hbm() - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn take_nodes_fills_primary_group_first() {
+        let c = ClusterSpec::mixed_pod(2, 2);
+        let one = c.take_nodes(1);
+        assert_eq!((one.nodes, one.extra_groups.len()), (1, 0));
+        // a sub-pod inside the primary group prices as pure A100
+        assert_eq!(
+            one.limiting_node().gpu.hbm_bytes.to_bits(),
+            GpuSpec::a100_80g().hbm_bytes.to_bits()
+        );
+        let two = c.take_nodes(2);
+        assert_eq!((two.nodes, two.extra_groups.len()), (2, 0));
+        let three = c.take_nodes(3);
+        assert_eq!(three.nodes, 2);
+        assert_eq!(three.extra_groups[0].nodes, 1);
+        assert_eq!(three.total_nodes(), 3);
+        // clamped to the cluster size
+        assert_eq!(c.take_nodes(99).total_nodes(), 4);
     }
 }

@@ -96,7 +96,10 @@ pub struct Dim {
     pub baseline: usize,
 }
 
-/// The 30-dimension search space of the study.
+/// The search space: the paper's 30 hyperparameter dimensions plus the
+/// two planner-native parallelism axes added with the widened planner
+/// (sequence- and expert-parallel degrees), which the planner-seeded
+/// funnel prunes from its Pareto frontier like tp/pp.
 pub fn space() -> Vec<Dim> {
     use Val::*;
     let d = |name, values: Vec<Val>, baseline| Dim { name, values, baseline };
@@ -122,6 +125,8 @@ pub fn space() -> Vec<Dim> {
         d("bucket_msgs", vec![I(5), I(25), I(100)], 1),
         d("tp_degree", vec![I(1), I(2), I(4), I(8)], 0),
         d("pp_degree", vec![I(1), I(2), I(4)], 0),
+        d("sp_degree", vec![I(1), I(2), I(4)], 0),
+        d("ep_degree", vec![I(1), I(2), I(4), I(8)], 0),
         d("pipe_schedule", vec![S("1f1b"), S("gpipe")], 0),
         d("activation_ckpt", vec![B(true), B(false)], 0),
         d("dataloader_workers", vec![I(1), I(2), I(4), I(8)], 1),
@@ -274,14 +279,28 @@ pub fn template_setup(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize
     let cluster = ClusterSpec::lps_pod(nodes.max(1));
     let gpus = cluster.total_gpus();
     let tp = (g("tp_degree").i() as usize).min(cluster.node.gpus);
-    let pp = (g("pp_degree").i() as usize).min(gpus / tp);
-    let dp = (gpus / tp / pp).max(1);
+    // the sp group shares the node's NVLink domain with tp
+    let sp = (g("sp_degree").i() as usize).clamp(1, (cluster.node.gpus / tp).max(1));
+    let pp = (g("pp_degree").i() as usize).min(gpus / tp / sp).max(1);
+    // ep only applies to MoE models, within the remaining GPUs, and must
+    // divide the expert count so every rank holds whole experts
+    let ep = if model.is_moe() {
+        let cap = (gpus / (tp * sp * pp)).max(1);
+        let mut e = (g("ep_degree").i() as usize).clamp(1, cap);
+        while e > 1 && model.experts % e as u64 != 0 {
+            e -= 1;
+        }
+        e
+    } else {
+        1
+    };
+    let dp = (gpus / (tp * sp * pp * ep)).max(1);
     let stage = ZeroStage::from_index(g("zero_stage").i() as usize).unwrap();
     let opt = template_optimizer(dims, t);
     TrainSetup {
         model: model.clone(),
         cluster,
-        par: ParallelCfg { dp, tp, pp },
+        par: ParallelCfg { dp, tp, pp, sp, ep },
         stage,
         opt,
         sched: if g("pipe_schedule").s() == "gpipe" {
@@ -405,13 +424,23 @@ fn planner_seeded_dims(
         nodes: Vec::new(),
         max_tp: dim("tp_degree").values.iter().map(|v| v.i() as usize).max().unwrap_or(8),
         max_pp: dim("pp_degree").values.iter().map(|v| v.i() as usize).max().unwrap_or(4),
+        max_sp: dim("sp_degree").values.iter().map(|v| v.i() as usize).max().unwrap_or(4),
+        max_ep: dim("ep_degree").values.iter().map(|v| v.i() as usize).max().unwrap_or(8),
     };
     let cluster = ClusterSpec::lps_pod(nodes.max(1));
     let r = crate::planner::plan(model, &cluster, &workload, &pspace, sweep, cache);
 
     let mut allowed: std::collections::HashMap<&'static str, std::collections::HashSet<usize>> =
         std::collections::HashMap::new();
-    for name in ["tp_degree", "pp_degree", "zero_stage", "cpu_offload", "micro_batch_cap"] {
+    for name in [
+        "tp_degree",
+        "pp_degree",
+        "sp_degree",
+        "ep_degree",
+        "zero_stage",
+        "cpu_offload",
+        "micro_batch_cap",
+    ] {
         allowed.insert(dim(name).name, std::collections::HashSet::new());
     }
     let mut add = |name: &str, want: i64| {
@@ -424,6 +453,8 @@ fn planner_seeded_dims(
         let s = &p.setup;
         add("tp_degree", s.par.tp as i64);
         add("pp_degree", s.par.pp as i64);
+        add("sp_degree", s.par.sp as i64);
+        add("ep_degree", s.par.ep as i64);
         add("zero_stage", s.stage.index() as i64);
         add("cpu_offload", s.offload as i64);
         add("micro_batch_cap", s.micro_batch_cap as i64);
@@ -828,9 +859,14 @@ mod tests {
     use super::*;
 
     #[test]
-    fn space_is_30_dimensional_with_unique_names() {
+    fn space_is_paper_30_plus_planner_axes_with_unique_names() {
         let dims = space();
-        assert_eq!(dims.len(), 30, "the paper sweeps 30 hyperparameters");
+        // the paper sweeps 30 hyperparameters; the widened planner adds
+        // its two parallelism axes (sequence- and expert-parallel degree)
+        assert_eq!(dims.len(), 32);
+        for planner_dim in ["sp_degree", "ep_degree"] {
+            assert!(dims.iter().any(|d| d.name == planner_dim), "missing {planner_dim}");
+        }
         let mut names = std::collections::HashSet::new();
         for d in &dims {
             assert!(names.insert(d.name), "duplicate dim {}", d.name);

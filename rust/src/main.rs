@@ -61,14 +61,22 @@ fn app() -> App {
                 "plan",
                 "auto-parallelism planner: fastest feasible (nodes,dp,tp,pp,ZeRO,offload) plan",
             )
-                .opt("model", "mt5-xxl", "zoo model")
+                .opt("model", "mt5-xxl", "zoo model (incl. MoE variants, e.g. mt5-base-moe32)")
                 .opt("nodes", "8", "pod size (the planner may recommend a sub-pod)")
+                .opt("v100-nodes", "0", "extra previous-generation DGX-1V nodes (mixed pod)")
                 .opt("batch", "768", "effective (global) batch size")
                 .opt("max-tp", "8", "max tensor-parallel degree (clamped to GPUs/node)")
                 .opt("max-pp", "8", "max pipeline-parallel degree")
+                .opt("max-sp", "4", "max sequence-parallel degree (tp*sp <= GPUs/node)")
+                .opt("max-ep", "8", "max expert-parallel degree (MoE models only)")
                 .opt("workers", "0", "sweep worker threads (0 = all cores)")
                 .flag("exact-nodes", "only plan for the full pod (skip the sub-pod ladder)")
                 .flag("no-cache", "skip the persistent SimCache under target/"),
+        )
+        .command(
+            Command::new("cache", "inspect, bound, and merge the persistent SimCache")
+                .opt("merge", "", "merge another cache file into the default cache")
+                .flag("clear", "delete the default cache file"),
         )
         .command(
             Command::new("simulate", "seconds/step for one configuration")
@@ -77,6 +85,8 @@ fn app() -> App {
                 .opt("stage", "2", "ZeRO stage (0-3)")
                 .opt("tp", "1", "tensor-parallel degree")
                 .opt("pp", "1", "pipeline-parallel degree")
+                .opt("sp", "1", "sequence-parallel degree")
+                .opt("ep", "1", "expert-parallel degree (MoE models)")
                 .opt("batch", "768", "effective batch size")
                 .flag("no-overlap", "disable comm/compute overlap"),
         )
@@ -99,6 +109,7 @@ fn main() {
                 "sweep" => cmd_sweep(&m),
                 "hpo" => cmd_hpo(&m),
                 "plan" => cmd_plan(&m),
+                "cache" => cmd_cache(&m),
                 "collectives" => cmd_collectives(&m),
                 "train" => cmd_train(&m),
                 "simulate" => cmd_simulate(&m),
@@ -328,16 +339,23 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     use scalestudy::sweep::{SimCache, Sweep};
     let model = by_name(m.get("model")).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
     let nodes = m.get_usize("nodes")?;
-    let cluster = ClusterSpec::lps_pod(nodes.max(1));
+    let v100_nodes = m.get_usize("v100-nodes")?;
+    let cluster = if v100_nodes > 0 {
+        ClusterSpec::mixed_pod(nodes.max(1), v100_nodes)
+    } else {
+        ClusterSpec::lps_pod(nodes.max(1))
+    };
     let mut workload = scalestudy::sim::Workload::table1();
     workload.global_batch = m.get_usize("batch")?;
     let mut space = PlanSpace {
         max_tp: m.get_usize("max-tp")?,
         max_pp: m.get_usize("max-pp")?,
+        max_sp: m.get_usize("max-sp")?,
+        max_ep: m.get_usize("max-ep")?,
         ..PlanSpace::default()
     };
     if m.flag("exact-nodes") {
-        space.nodes = vec![cluster.nodes];
+        space.nodes = vec![cluster.total_nodes()];
     }
     let sweep = Sweep::new(m.get_usize("workers")?);
     let persist = !m.flag("no-cache");
@@ -347,11 +365,16 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     let result = plan(&model, &cluster, &workload, &space, &sweep, &cache);
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "auto-parallelism plan: {} ({:.1}B params), {} nodes ({} GPUs), effective batch {}",
+        "auto-parallelism plan: {} ({:.1}B params), {} nodes ({} GPUs{}), effective batch {}",
         model.name,
         model.params() as f64 / 1e9,
-        nodes,
+        cluster.total_nodes(),
         cluster.total_gpus(),
+        if v100_nodes > 0 {
+            format!(", {v100_nodes} of them previous-gen DGX-1V")
+        } else {
+            String::new()
+        },
         workload.global_batch
     );
     println!(
@@ -398,6 +421,42 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_cache(m: &Matches) -> anyhow::Result<()> {
+    use scalestudy::sweep::SimCache;
+    let path = SimCache::default_path();
+    if m.flag("clear") {
+        match std::fs::remove_file(&path) {
+            Ok(()) => println!("removed {}", path.display()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                println!("nothing to clear at {}", path.display())
+            }
+            Err(e) => return Err(anyhow::anyhow!("removing {}: {e}", path.display())),
+        }
+        return Ok(());
+    }
+    let cache = SimCache::load_default();
+    println!("{} entries at {}", cache.len(), path.display());
+    let other_path = m.get("merge");
+    if !other_path.is_empty() {
+        let other = SimCache::load(std::path::Path::new(other_path));
+        if other.is_empty() {
+            println!(
+                "{other_path}: no usable entries (missing, corrupt, or an older schema — \
+                 the newest schema wins a merge)"
+            );
+        }
+        let added = cache.merge(&other);
+        println!(
+            "merged {added} of {} entries from {other_path}; {} entries now resident",
+            other.len(),
+            cache.len()
+        );
+        cache.save_default()?;
+        println!("saved {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_simulate(m: &Matches) -> anyhow::Result<()> {
     let model = by_name(m.get("model")).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
     let nodes = m.get_usize("nodes")?;
@@ -406,8 +465,11 @@ fn cmd_simulate(m: &Matches) -> anyhow::Result<()> {
     let mut setup = TrainSetup::dp_pod(model, nodes, stage);
     let tp = m.get_usize("tp")?;
     let pp = m.get_usize("pp")?;
+    let sp = m.get_usize("sp")?;
+    let ep = m.get_usize("ep")?;
     let gpus = setup.cluster.total_gpus();
-    setup.par = scalestudy::parallel::ParallelCfg { dp: gpus / tp / pp, tp, pp };
+    let inner = (tp * pp * sp * ep).max(1);
+    setup.par = scalestudy::parallel::ParallelCfg { dp: (gpus / inner).max(1), tp, pp, sp, ep };
     setup.workload.global_batch = m.get_usize("batch")?;
     setup.overlap_comm = !m.flag("no-overlap");
     let st = simulate_step(&setup);
@@ -416,7 +478,7 @@ fn cmd_simulate(m: &Matches) -> anyhow::Result<()> {
         return Ok(());
     }
     println!(
-        "model {}, {} nodes, stage {}, dp={} tp={tp} pp={pp}",
+        "model {}, {} nodes, stage {}, dp={} tp={tp} pp={pp} sp={sp} ep={ep}",
         setup.model.name,
         nodes,
         stage.index(),

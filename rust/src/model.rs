@@ -26,6 +26,14 @@ pub struct ModelCfg {
     /// mt5 (T5 v1.1) keeps a *separate* LM head; the runnable presets tie
     /// it to the embedding (python/compile/model.py convention).
     pub tied_lm_head: bool,
+    /// Mixture-of-experts width: number of routed expert FFNs per MoE
+    /// layer (0 or 1 = dense model, the mt5 default).
+    pub experts: u64,
+    /// Experts each token is routed to (Switch = 1, GShard-style = 2).
+    pub top_k: u64,
+    /// Every `moe_every`-th FFN is a routed MoE layer (Switch convention:
+    /// 2 = every other layer).  Ignored for dense models.
+    pub moe_every: u64,
 }
 
 impl ModelCfg {
@@ -57,11 +65,60 @@ impl ModelCfg {
         2 * 32 * self.num_heads
     }
 
+    /// Is this a mixture-of-experts variant?
+    pub fn is_moe(&self) -> bool {
+        self.experts > 1
+    }
+
+    /// Routed MoE layers in the encoder stack.
+    pub fn moe_enc_layers(&self) -> u64 {
+        if self.is_moe() {
+            self.enc_layers / self.moe_every.max(1)
+        } else {
+            0
+        }
+    }
+
+    /// Routed MoE layers in the decoder stack.
+    pub fn moe_dec_layers(&self) -> u64 {
+        if self.is_moe() {
+            self.dec_layers / self.moe_every.max(1)
+        } else {
+            0
+        }
+    }
+
+    /// Weights of one (gated-GELU) FFN, norm excluded.
+    fn ffn_weight_params(&self) -> u64 {
+        3 * self.d_model * self.d_ff
+    }
+
+    /// Expert FFN weights — the slice of the parameter count an
+    /// expert-parallel degree shards (each of `ep` ranks keeps
+    /// `experts / ep` expert FFNs).  Zero for dense models.
+    pub fn expert_params(&self) -> u64 {
+        (self.moe_enc_layers() + self.moe_dec_layers()) * self.experts * self.ffn_weight_params()
+    }
+
+    /// Parameters every rank replicates regardless of expert parallelism
+    /// (attention, embeddings, routers, norms, dense FFNs).
+    pub fn dense_params(&self) -> u64 {
+        self.params() - self.expert_params()
+    }
+
     /// Total parameter count.
     pub fn params(&self) -> u64 {
         let enc = self.enc_layers * (self.attn_params() + self.ffn_params());
         let dec = self.dec_layers * (2 * self.attn_params() + self.ffn_params());
-        self.embed_params() + enc + dec + self.relpos_params() + 2 * self.d_model
+        // MoE layers swap the single FFN for `experts` routed FFNs plus a
+        // d_model -> experts router
+        let moe_extra = if self.is_moe() {
+            (self.moe_enc_layers() + self.moe_dec_layers())
+                * ((self.experts - 1) * self.ffn_weight_params() + self.d_model * self.experts)
+        } else {
+            0
+        };
+        self.embed_params() + enc + dec + moe_extra + self.relpos_params() + 2 * self.d_model
     }
 
     /// Non-embedding parameters (the N that matmul FLOPs scale with).
@@ -94,19 +151,39 @@ impl ModelCfg {
                 + attn_scores(sd, se)
                 + ffn(sd));
         let logits = 2.0 * sd * d * self.vocab as f64;
-        let fwd = enc + dec + logits;
+        // MoE layers run top_k expert FFNs per token instead of one, plus
+        // the router matmul (d_model -> experts)
+        let moe = if self.is_moe() {
+            let k_extra = self.top_k as f64 - 1.0;
+            let router = |s: f64| 2.0 * s * d * self.experts as f64;
+            self.moe_enc_layers() as f64 * (k_extra * ffn(se) + router(se))
+                + self.moe_dec_layers() as f64 * (k_extra * ffn(sd) + router(sd))
+        } else {
+            0.0
+        };
+        let fwd = enc + dec + logits + moe;
         3.0 * fwd // fwd + bwd(≈2× fwd)
     }
 
     /// Bytes of activation memory per sample in mixed precision (fp16
     /// activations; Megatron-style ≈ 34·s·d bytes per layer, decoder
-    /// layers ×1.5 for the extra cross-attention block).
+    /// layers ×1.5 for the extra cross-attention block).  MoE layers hold
+    /// top_k copies of the FFN-side activations (≈ 18·s·d of the 34).
     pub fn activation_bytes_per_sample(&self, enc_len: u64, dec_len: u64) -> f64 {
         let d = self.d_model as f64;
         let per_tok_layer = 34.0 * d;
         let enc = self.enc_layers as f64 * enc_len as f64 * per_tok_layer;
         let dec = self.dec_layers as f64 * dec_len as f64 * per_tok_layer * 1.5;
-        enc + dec
+        let moe = if self.is_moe() {
+            let ffn_tok = 18.0 * d;
+            (self.top_k as f64 - 1.0)
+                * ffn_tok
+                * (self.moe_enc_layers() as f64 * enc_len as f64
+                    + self.moe_dec_layers() as f64 * dec_len as f64)
+        } else {
+            0.0
+        };
+        enc + dec + moe
     }
 }
 
@@ -123,6 +200,9 @@ pub fn mt5_zoo() -> Vec<ModelCfg> {
         enc_layers: layers,
         dec_layers: layers,
         tied_lm_head: false,
+        experts: 0,
+        top_k: 0,
+        moe_every: 0,
     };
     vec![
         m("mt5-small", 512, 1024, 6, 64, 8),
@@ -148,6 +228,9 @@ pub fn runnable_presets() -> Vec<ModelCfg> {
         enc_layers: layers,
         dec_layers: layers,
         tied_lm_head: true,
+        experts: 0,
+        top_k: 0,
+        moe_every: 0,
     };
     vec![
         m("micro", 512, 128, 256, 4, 2),
@@ -156,9 +239,37 @@ pub fn runnable_presets() -> Vec<ModelCfg> {
     ]
 }
 
-/// Look up a zoo model or a runnable preset by name.
+/// Switch/GShard-style mixture-of-experts variants of the mt5 backbones:
+/// every other FFN becomes a bank of routed experts.  These widen the
+/// planner's search (the expert-parallel axis shards the expert FFNs) but
+/// are kept out of [`mt5_zoo`] — the paper's 5 dense models — so the
+/// Table-1 fidelity suite is untouched.
+pub fn moe_zoo() -> Vec<ModelCfg> {
+    let variant = |base: &str, experts: u64, top_k: u64| {
+        let mut m = mt5_zoo()
+            .into_iter()
+            .find(|m| m.name == base)
+            .expect("moe variant of unknown backbone");
+        m.name = format!("{base}-moe{experts}");
+        m.experts = experts;
+        m.top_k = top_k;
+        m.moe_every = 2;
+        m
+    };
+    vec![
+        variant("mt5-base", 32, 2),
+        variant("mt5-large", 16, 2),
+        variant("mt5-xl", 8, 1),
+    ]
+}
+
+/// Look up a zoo model, an MoE variant, or a runnable preset by name.
 pub fn by_name(name: &str) -> Option<ModelCfg> {
-    mt5_zoo().into_iter().chain(runnable_presets()).find(|m| m.name == name)
+    mt5_zoo()
+        .into_iter()
+        .chain(moe_zoo())
+        .chain(runnable_presets())
+        .find(|m| m.name == name)
 }
 
 #[cfg(test)]
@@ -228,5 +339,50 @@ mod tests {
         let a1 = m.activation_bytes_per_sample(512, 128);
         let a2 = m.activation_bytes_per_sample(1024, 256);
         assert!(a1 > 0.0 && a2 > 1.9 * a1);
+    }
+
+    /// MoE accounting: many more parameters than the dense backbone, but
+    /// only top_k/experts of the expert weights active per token — FLOPs
+    /// grow by roughly top_k - 1 extra FFN passes, not by the expert count.
+    #[test]
+    fn moe_variants_grow_params_much_faster_than_flops() {
+        for moe in moe_zoo() {
+            let base_name = moe.name.split("-moe").next().unwrap();
+            let dense = by_name(base_name).unwrap();
+            assert!(moe.is_moe());
+            let p_ratio = moe.params() as f64 / dense.params() as f64;
+            let f_ratio = moe.train_flops_per_sample(1024, 256)
+                / dense.train_flops_per_sample(1024, 256);
+            assert!(p_ratio > 2.0, "{}: params ratio {p_ratio}", moe.name);
+            assert!(
+                f_ratio < p_ratio / 2.0,
+                "{}: flops ratio {f_ratio} not sparse vs params {p_ratio}",
+                moe.name
+            );
+            // the expert slice is the dominant share and ep-shardable
+            assert!(moe.expert_params() > moe.dense_params());
+            assert_eq!(moe.dense_params() + moe.expert_params(), moe.params());
+            // dense models have no expert slice
+            assert_eq!(dense.expert_params(), 0);
+            assert_eq!(dense.dense_params(), dense.params());
+        }
+    }
+
+    #[test]
+    fn moe_zoo_resolvable_and_distinct() {
+        for m in moe_zoo() {
+            let looked = by_name(&m.name).expect("moe model by_name");
+            assert_eq!(looked.params(), m.params());
+            assert!(m.moe_enc_layers() > 0 && m.moe_dec_layers() > 0);
+            // MoE activations exceed the dense backbone's only for top_k > 1
+            let dense_act = ModelCfg { experts: 0, ..m.clone() }
+                .activation_bytes_per_sample(1024, 256);
+            let moe_act = m.activation_bytes_per_sample(1024, 256);
+            if m.top_k > 1 {
+                assert!(moe_act > dense_act);
+            } else {
+                assert_eq!(moe_act.to_bits(), dense_act.to_bits());
+            }
+        }
     }
 }

@@ -12,36 +12,93 @@
 use crate::comm::CommModel;
 use crate::model::ModelCfg;
 
-/// Degrees of each parallelism axis. `dp × tp × pp` == total GPUs.
+/// Degrees of each parallelism axis.
+/// `dp × tp × pp × sp × ep` == total GPUs:
+///
+/// * `sp` — sequence/context parallelism (Megatron-SP / ring-attention
+///   style): the sp group splits every sample's token dimension, so
+///   activations and per-rank compute shrink by sp while parameters are
+///   replicated (a per-step gradient all-reduce across the group) and
+///   each layer pays a ring all-gather/reduce-scatter pair.  The group
+///   lives on NVLink next to TP (`tp · sp ≤ GPUs/node`).
+/// * `ep` — expert parallelism (GShard/Switch): each of the ep ranks
+///   keeps `experts / ep` routed FFNs; tokens reach their expert through
+///   all-to-all dispatch/combine.  Only meaningful for MoE models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParallelCfg {
     pub dp: usize,
     pub tp: usize,
     pub pp: usize,
+    pub sp: usize,
+    pub ep: usize,
 }
 
 impl ParallelCfg {
     pub fn data_only(dp: usize) -> ParallelCfg {
-        ParallelCfg { dp, tp: 1, pp: 1 }
+        ParallelCfg { dp, tp: 1, pp: 1, sp: 1, ep: 1 }
+    }
+
+    /// A (dp, tp, pp) layout with no sequence/expert parallelism — the
+    /// pre-sp/ep constructor, kept for the dense call sites.
+    pub fn dtp(dp: usize, tp: usize, pp: usize) -> ParallelCfg {
+        ParallelCfg { dp, tp, pp, sp: 1, ep: 1 }
     }
 
     pub fn total_gpus(&self) -> usize {
-        self.dp * self.tp * self.pp
+        self.dp * self.tp * self.pp * self.sp * self.ep
     }
 
     /// All factorizations of `gpus` into (dp, tp, pp) with tp bounded by
-    /// gpus-per-node (TP across nodes is never sensible on this fabric).
+    /// gpus-per-node (TP across nodes is never sensible on this fabric);
+    /// sp and ep stay 1.
     pub fn enumerate(gpus: usize, max_tp: usize, max_pp: usize) -> Vec<ParallelCfg> {
+        Self::enumerate_ext(gpus, usize::MAX, max_tp, max_pp, 1, 1, 0)
+    }
+
+    /// All factorizations of `gpus` into (dp, tp, pp, sp, ep):
+    /// * `tp ≤ max_tp`, `pp ≤ max_pp` as in [`ParallelCfg::enumerate`];
+    /// * `sp ≤ max_sp` and `tp · sp ≤ gpus_per_node` (the sequence-
+    ///   parallel group shares the node's NVLink domain with TP);
+    /// * `ep ≤ max_ep`, only for MoE models (`experts > 1`), and `ep`
+    ///   must divide the expert count so every rank holds whole experts.
+    pub fn enumerate_ext(
+        gpus: usize,
+        gpus_per_node: usize,
+        max_tp: usize,
+        max_pp: usize,
+        max_sp: usize,
+        max_ep: usize,
+        experts: u64,
+    ) -> Vec<ParallelCfg> {
         let mut out = Vec::new();
         for tp in divisors(gpus) {
             if tp > max_tp {
                 continue;
             }
-            for pp in divisors(gpus / tp) {
-                if pp > max_pp {
+            for sp in divisors(gpus / tp) {
+                if sp > max_sp || tp * sp > gpus_per_node {
                     continue;
                 }
-                out.push(ParallelCfg { dp: gpus / tp / pp, tp, pp });
+                for pp in divisors(gpus / tp / sp) {
+                    if pp > max_pp {
+                        continue;
+                    }
+                    for ep in divisors(gpus / tp / sp / pp) {
+                        if ep > max_ep {
+                            continue;
+                        }
+                        if ep > 1 && (experts <= 1 || experts % ep as u64 != 0) {
+                            continue;
+                        }
+                        out.push(ParallelCfg {
+                            dp: gpus / tp / sp / pp / ep,
+                            tp,
+                            pp,
+                            sp,
+                            ep,
+                        });
+                    }
+                }
             }
         }
         out
@@ -128,6 +185,66 @@ pub fn tp_comm_time(
         * 1.5
         * comm.allreduce(dec_bytes, 1, tp);
     enc_t + dec_t
+}
+
+/// Per-microbatch sequence-parallel communication time (seconds):
+/// Megatron-SP replaces each of TP's per-layer synchronization points
+/// with a ring all-gather (entering the full-sequence region) and a
+/// reduce-scatter (leaving it) over the sp group — same volume as the
+/// all-reduce it replaces, paid 4× per layer across forward+backward,
+/// decoder layers ×1.5 for cross-attention.  The group is intra-node by
+/// construction (`tp · sp ≤ GPUs/node`), so it runs on NVLink.
+pub fn sp_comm_time(
+    model: &ModelCfg,
+    comm: &CommModel,
+    sp: usize,
+    micro_batch: usize,
+    enc_len: u64,
+    dec_len: u64,
+) -> f64 {
+    if sp <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = (comm.cluster.node.nvlink_bw, comm.cluster.node.nvlink_latency);
+    let bytes_tok = 2.0 * model.d_model as f64; // fp16 activations
+    let enc_bytes = micro_batch as f64 * enc_len as f64 * bytes_tok;
+    let dec_bytes = micro_batch as f64 * dec_len as f64 * bytes_tok;
+    let per_layer = 4.0; // 2 fwd + 2 bwd sync points
+    let pair = |bytes: f64| {
+        crate::comm::ring::allgather(bytes, sp, bw, lat)
+            + crate::comm::ring::reducescatter(bytes, sp, bw, lat)
+    };
+    let enc_t = model.enc_layers as f64 * per_layer * pair(enc_bytes);
+    let dec_t = model.dec_layers as f64 * per_layer * 1.5 * pair(dec_bytes);
+    enc_t + dec_t
+}
+
+/// Per-microbatch expert-parallel communication time (seconds): each MoE
+/// layer routes every token's activation to its expert's rank and back
+/// (all-to-all dispatch + combine), mirrored in backward — 4 exchanges
+/// per routed layer of `top_k` activation copies.  The ep group spans
+/// `(ep_nodes, ep_gpus_per_node)` as placed by the caller.
+pub fn ep_comm_time(
+    model: &ModelCfg,
+    comm: &CommModel,
+    ep: usize,
+    ep_nodes: usize,
+    ep_gpus_per_node: usize,
+    micro_batch: usize,
+    enc_len: u64,
+    dec_len: u64,
+) -> f64 {
+    if ep <= 1 || !model.is_moe() {
+        return 0.0;
+    }
+    let bytes_tok = 2.0 * model.d_model as f64 * model.top_k as f64;
+    let enc_bytes = micro_batch as f64 * enc_len as f64 * bytes_tok;
+    let dec_bytes = micro_batch as f64 * dec_len as f64 * bytes_tok;
+    let per_layer = 4.0; // dispatch + combine, forward + backward
+    model.moe_enc_layers() as f64 * per_layer * comm.alltoall(enc_bytes, ep_nodes, ep_gpus_per_node)
+        + model.moe_dec_layers() as f64
+            * per_layer
+            * comm.alltoall(dec_bytes, ep_nodes, ep_gpus_per_node)
 }
 
 /// Pipeline point-to-point time per microbatch: activations of the cut
@@ -223,13 +340,42 @@ mod tests {
     fn enumerate_covers_and_respects_limits() {
         let cfgs = ParallelCfg::enumerate(16, 8, 4);
         assert!(cfgs.iter().all(|c| c.total_gpus() == 16));
-        assert!(cfgs.iter().all(|c| c.tp <= 8 && c.pp <= 4));
-        assert!(cfgs.contains(&ParallelCfg { dp: 16, tp: 1, pp: 1 }));
-        assert!(cfgs.contains(&ParallelCfg { dp: 2, tp: 8, pp: 1 }));
+        assert!(cfgs.iter().all(|c| c.tp <= 8 && c.pp <= 4 && c.sp == 1 && c.ep == 1));
+        assert!(cfgs.contains(&ParallelCfg::dtp(16, 1, 1)));
+        assert!(cfgs.contains(&ParallelCfg::dtp(2, 8, 1)));
         // no duplicates
         let mut seen = std::collections::HashSet::new();
         for c in &cfgs {
             assert!(seen.insert((c.dp, c.tp, c.pp)));
+        }
+    }
+
+    /// The widened factorization: every point multiplies out to the GPU
+    /// count, sp shares the NVLink domain with tp, and ep only appears in
+    /// divisors of the expert count.
+    #[test]
+    fn enumerate_ext_respects_sp_and_ep_constraints() {
+        let dense = ParallelCfg::enumerate_ext(64, 8, 8, 8, 4, 8, 0);
+        assert!(dense.iter().all(|c| c.total_gpus() == 64 && c.ep == 1));
+        assert!(dense.iter().all(|c| c.tp * c.sp <= 8 && c.sp <= 4));
+        assert!(dense.iter().any(|c| c.sp > 1), "sp axis must appear for dense models");
+        // sp=1/ep=1 slice reproduces the original enumeration exactly
+        let old = ParallelCfg::enumerate(64, 8, 8);
+        let slice: Vec<ParallelCfg> =
+            dense.iter().copied().filter(|c| c.sp == 1 && c.ep == 1).collect();
+        assert_eq!(old, slice);
+
+        let moe = ParallelCfg::enumerate_ext(64, 8, 8, 8, 4, 8, 32);
+        assert!(moe.iter().any(|c| c.ep > 1), "ep axis must appear for MoE models");
+        assert!(moe.iter().all(|c| c.ep == 1 || 32 % c.ep as u64 == 0));
+        assert!(moe.len() > dense.len());
+        // an 8-expert model rejects ep degrees that split an expert
+        let moe8 = ParallelCfg::enumerate_ext(64, 8, 8, 8, 1, 16, 8);
+        assert!(moe8.iter().all(|c| c.ep <= 8));
+        // no duplicates anywhere
+        let mut seen = std::collections::HashSet::new();
+        for c in &moe {
+            assert!(seen.insert((c.dp, c.tp, c.pp, c.sp, c.ep)));
         }
     }
 
@@ -250,5 +396,31 @@ mod tests {
         let intra = pp_p2p_time(&model, &comm, 4, 8, 512, 128, false);
         let inter = pp_p2p_time(&model, &comm, 4, 8, 512, 128, true);
         assert!(inter > intra);
+    }
+
+    #[test]
+    fn sp_comm_zero_at_one_and_costs_like_the_allreduce_it_replaces() {
+        let model = crate::model::by_name("mt5-xl").unwrap();
+        let comm = CommModel::new(ClusterSpec::lps_pod(1));
+        assert_eq!(sp_comm_time(&model, &comm, 1, 8, 512, 128), 0.0);
+        // the AG+RS pair's volume equals the TP all-reduce's (ring
+        // identity), so equal degrees cost the same per sync point
+        let sp_t = sp_comm_time(&model, &comm, 4, 8, 512, 128);
+        let tp_t = tp_comm_time(&model, &comm, 4, 8, 512, 128);
+        assert!(sp_t > 0.0);
+        assert!((sp_t - tp_t).abs() / tp_t < 1e-9, "sp {sp_t} vs tp {tp_t}");
+    }
+
+    #[test]
+    fn ep_comm_only_for_moe_and_grows_across_nodes() {
+        let comm = CommModel::new(ClusterSpec::lps_pod(2));
+        let dense = crate::model::by_name("mt5-base").unwrap();
+        assert_eq!(ep_comm_time(&dense, &comm, 8, 2, 4, 8, 512, 128), 0.0);
+        let moe = crate::model::by_name("mt5-base-moe32").unwrap();
+        assert_eq!(ep_comm_time(&moe, &comm, 1, 1, 1, 8, 512, 128), 0.0);
+        let intra = ep_comm_time(&moe, &comm, 8, 1, 8, 8, 512, 128);
+        let inter = ep_comm_time(&moe, &comm, 16, 2, 8, 8, 512, 128);
+        assert!(intra > 0.0);
+        assert!(inter > intra, "node-crossing dispatch must cost more");
     }
 }

@@ -46,7 +46,7 @@
 use crate::hardware::ClusterSpec;
 use crate::model::ModelCfg;
 use crate::parallel::{ParallelCfg, PipeSchedule};
-use crate::sim::{memory_lower_bound, step_lower_bound, StepTime, TrainSetup, Workload};
+use crate::sim::{lower_bounds, StepTime, TrainSetup, Workload};
 use crate::sweep::{SimCache, Sweep};
 use crate::util::{human_bytes, human_time};
 use crate::zero::{OptimizerKind, ZeroStage};
@@ -78,6 +78,12 @@ pub struct PlanSpace {
     pub max_tp: usize,
     /// Upper bound on pipeline-parallel degree.
     pub max_pp: usize,
+    /// Upper bound on the sequence-parallel degree (the sp group shares
+    /// the NVLink domain with TP: `tp · sp ≤ GPUs/node`).
+    pub max_sp: usize,
+    /// Upper bound on the expert-parallel degree (only MoE models
+    /// enumerate ep > 1, and ep must divide the expert count).
+    pub max_ep: usize,
 }
 
 impl Default for PlanSpace {
@@ -91,19 +97,22 @@ impl Default for PlanSpace {
             nodes: vec![1, 2, 4, 8],
             max_tp: 8,
             max_pp: 8,
+            max_sp: 4,
+            max_ep: 8,
         }
     }
 }
 
 impl PlanSpace {
-    /// The candidate node counts for a query against `cluster`.
+    /// The candidate node counts for a query against `cluster` (clamped
+    /// to the total across every node group of a mixed-generation pod).
     fn node_counts(&self, cluster: &ClusterSpec) -> Vec<usize> {
         if self.nodes.is_empty() {
-            return vec![cluster.nodes.max(1)];
+            return vec![cluster.total_nodes().max(1)];
         }
         let mut out: Vec<usize> = Vec::new();
         for &n in &self.nodes {
-            let n = n.clamp(1, cluster.nodes.max(1));
+            let n = n.clamp(1, cluster.total_nodes().max(1));
             if !out.contains(&n) {
                 out.push(n);
             }
@@ -128,11 +137,14 @@ impl PlanPoint {
     pub fn label(&self) -> String {
         let s = &self.setup;
         format!(
-            "{}n dp={} tp={} pp={} stage{} {}{}{}{}",
-            s.cluster.nodes,
+            "{}n{} dp={} tp={} pp={}{}{} stage{} {}{}{}{}",
+            s.cluster.total_nodes(),
+            if s.cluster.extra_groups.is_empty() { "" } else { "*" },
             s.par.dp,
             s.par.tp,
             s.par.pp,
+            if s.par.sp > 1 { format!(" sp={}", s.par.sp) } else { String::new() },
+            if s.par.ep > 1 { format!(" ep={}", s.par.ep) } else { String::new() },
             s.stage.index(),
             s.opt.name(),
             if s.offload { " +offload" } else { "" },
@@ -184,14 +196,21 @@ impl PlanResult {
 }
 
 /// A branch of the search tree: every axis fixed except the micro-batch
-/// cap.  All children share one optimistic `(time, memory)` bound pair
-/// because neither bound depends on the cap.
+/// cap.  The bounds are now cap-aware (see [`step_lower_bound`]), so each
+/// child carries its own `(time, memory)` pair; the branch-level pair is
+/// the member-wise minimum, which is what makes skipping the whole branch
+/// sound.  `hbm` is the usable per-GPU memory of this branch's
+/// (sub-)cluster — heterogeneous sub-pods that reach into a weaker node
+/// group have a smaller ceiling than the primary group alone.
 struct Branch {
     /// Enumeration index of the first child in the flattened space.
     base_index: usize,
     setups: Vec<TrainSetup>,
+    time_lbs: Vec<f64>,
+    mem_lbs: Vec<f64>,
     time_lb: f64,
     mem_lb: f64,
+    hbm: f64,
 }
 
 /// Enumerate the branches of the joint space for `model` on `cluster`.
@@ -206,10 +225,21 @@ fn enumerate_branches(
     let mut out = Vec::new();
     let mut index = 0usize;
     for n in space.node_counts(cluster) {
-        let sub = ClusterSpec { nodes: n, ..cluster.clone() };
+        // the first n nodes in placement order: primary group first, then
+        // any heterogeneous extension groups
+        let sub = cluster.take_nodes(n);
         let gpus = sub.total_gpus();
         let max_tp = space.max_tp.min(sub.node.gpus);
-        for par in ParallelCfg::enumerate(gpus, max_tp, space.max_pp) {
+        let hbm = sub.limiting_hbm_bytes() * crate::zero::HBM_SAFETY_MARGIN;
+        for par in ParallelCfg::enumerate_ext(
+            gpus,
+            sub.node.gpus,
+            max_tp,
+            space.max_pp,
+            space.max_sp,
+            space.max_ep,
+            model.experts,
+        ) {
             for &stage in &space.stages {
                 for &opt in &space.optimizers {
                     for &offload in &space.offload {
@@ -237,11 +267,24 @@ fn enumerate_branches(
                                     micro_batch_cap: cap,
                                 })
                                 .collect();
-                            let time_lb = step_lower_bound(&setups[0]);
-                            let mem_lb = memory_lower_bound(&setups[0]);
+                            // one fit search yields both bounds per child
+                            let (time_lbs, mem_lbs): (Vec<f64>, Vec<f64>) =
+                                setups.iter().map(lower_bounds).unzip();
+                            let time_lb =
+                                time_lbs.iter().copied().fold(f64::INFINITY, f64::min);
+                            let mem_lb =
+                                mem_lbs.iter().copied().fold(f64::INFINITY, f64::min);
                             let base_index = index;
                             index += setups.len();
-                            out.push(Branch { base_index, setups, time_lb, mem_lb });
+                            out.push(Branch {
+                                base_index,
+                                setups,
+                                time_lbs,
+                                mem_lbs,
+                                time_lb,
+                                mem_lb,
+                                hbm,
+                            });
                         }
                     }
                 }
@@ -321,7 +364,6 @@ pub fn plan(
 ) -> PlanResult {
     let branches = enumerate_branches(model, cluster, workload, space);
     let space_size: usize = branches.iter().map(|b| b.setups.len()).sum();
-    let hbm = cluster.node.gpu.hbm_bytes * crate::zero::HBM_SAFETY_MARGIN;
 
     // expand in ascending-optimistic-time order so strong incumbents are
     // priced early and the dominance prune bites as soon as possible
@@ -334,31 +376,37 @@ pub fn plan(
     let mut priced: Vec<(usize, PlanPoint)> = Vec::new();
     let mut evaluated = 0usize;
     for wave in order.chunks(WAVE_BRANCHES) {
-        let live: Vec<&Branch> = wave
-            .iter()
-            .map(|&bi| &branches[bi])
-            .filter(|b| b.mem_lb <= hbm && !probe.dominates(b.mem_lb, b.time_lb))
-            .collect();
-        if live.is_empty() {
+        // two prune levels, both exact: the whole branch via the
+        // member-wise minimum bounds, then each surviving child via its
+        // own cap-aware pair (a child skipped here is provably OOM or
+        // frontier-dominated, so best and frontier cannot change)
+        let mut wave_items: Vec<(usize, &TrainSetup, f64)> = Vec::new();
+        for &bi in wave {
+            let b = &branches[bi];
+            if b.mem_lb > b.hbm || probe.dominates(b.mem_lb, b.time_lb) {
+                continue;
+            }
+            for (ci, setup) in b.setups.iter().enumerate() {
+                if b.mem_lbs[ci] > b.hbm || probe.dominates(b.mem_lbs[ci], b.time_lbs[ci]) {
+                    continue;
+                }
+                wave_items.push((b.base_index + ci, setup, b.time_lbs[ci]));
+            }
+        }
+        if wave_items.is_empty() {
             continue;
         }
-        let wave_setups: Vec<&TrainSetup> = live.iter().flat_map(|b| &b.setups).collect();
         let steps = sweep.map_chunked(
-            &wave_setups,
-            |s| step_lower_bound(s),
-            |_, s| cache.simulate(s),
+            &wave_items,
+            |&(_, _, cost)| cost,
+            |_, &(_, setup, _)| cache.simulate(setup),
         );
-        evaluated += wave_setups.len();
-        let mut k = 0usize;
-        for b in &live {
-            for (ci, setup) in b.setups.iter().enumerate() {
-                let step = steps[k].clone();
-                k += 1;
-                if step.fits {
-                    probe.insert(step.mem_per_gpu, step.seconds_per_step());
-                }
-                priced.push((b.base_index + ci, PlanPoint { setup: setup.clone(), step }));
+        evaluated += wave_items.len();
+        for (&(index, setup, _), step) in wave_items.iter().zip(steps) {
+            if step.fits {
+                probe.insert(step.mem_per_gpu, step.seconds_per_step());
             }
+            priced.push((index, PlanPoint { setup: setup.clone(), step }));
         }
     }
 
@@ -596,6 +644,33 @@ mod tests {
         let clamped = PlanSpace { nodes: vec![4, 4, 99], ..PlanSpace::default() };
         let sizes = enumerate_setups(&model, &cluster, &Workload::table1(), &clamped);
         assert!(sizes.iter().all(|s| s.cluster.nodes == 4 || s.cluster.nodes == 8));
+    }
+
+    /// The widened space enumerates the sequence- and expert-parallel
+    /// axes: sp > 1 points for every model, ep > 1 only for MoE models,
+    /// and the planner still finds feasible plans across the MoE zoo.
+    #[test]
+    fn space_spans_sp_and_ep_and_moe_models_plan() {
+        let workload = Workload::table1();
+        let space = PlanSpace::default();
+        let dense = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(2);
+        let pts = enumerate_setups(&dense, &cluster, &workload, &space);
+        assert!(pts.iter().any(|s| s.par.sp > 1), "sp axis missing for dense model");
+        assert!(pts.iter().all(|s| s.par.ep == 1), "dense model must never shard experts");
+        assert!(pts.iter().all(|s| s.par.tp * s.par.sp <= 8));
+        for model in crate::model::moe_zoo() {
+            let pts = enumerate_setups(&model, &cluster, &workload, &space);
+            assert!(pts.iter().any(|s| s.par.ep > 1), "{}: ep axis missing", model.name);
+            assert!(
+                pts.iter().all(|s| s.par.ep == 1 || model.experts % s.par.ep as u64 == 0),
+                "{}: ep must divide the expert count",
+                model.name
+            );
+            let r = plan(&model, &cluster, &workload, &space, &Sweep::auto(), &SimCache::new());
+            let best = r.best.unwrap_or_else(|| panic!("{}: no feasible plan", model.name));
+            assert!(best.step.fits && best.seconds_per_step().is_finite());
+        }
     }
 
     /// Satellite regression: the frontier must not panic on non-finite

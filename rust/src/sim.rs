@@ -96,17 +96,75 @@ impl TrainSetup {
     }
 }
 
-/// DP process-group placement: TP packs inside a node, DP spans the rest.
-/// Returns `(dp_nodes, dp_gpus_per_node)`.  `dp_nodes` is clamped to the
-/// cluster's node count — without the clamp, tp degrees that do not divide
-/// the node's GPU count (e.g. tp=5 on an 8-GPU node) made
-/// `ceil(dp / dp_gpus_per_node)` exceed the physical node count and priced
-/// collectives on nodes that do not exist.
+/// Process-group placement for a group of `size` ranks whose members each
+/// occupy `inner` GPUs (the NVLink-resident model-parallel block packed
+/// below them).  Returns `(group_nodes, group_ranks_per_node)`, with the
+/// node count clamped to the cluster — without the clamp, inner degrees
+/// that do not divide the node's GPU count (e.g. tp=5 on an 8-GPU node)
+/// made `ceil(size / ranks_per_node)` exceed the physical node count and
+/// priced collectives on nodes that do not exist.
+pub fn group_placement(cluster: &ClusterSpec, inner: usize, size: usize) -> (usize, usize) {
+    let ranks_per_node = (cluster.node.gpus / inner.max(1)).max(1).min(size.max(1));
+    let group_nodes =
+        ((size + ranks_per_node - 1) / ranks_per_node).clamp(1, cluster.total_nodes().max(1));
+    (group_nodes, ranks_per_node)
+}
+
+/// DP process-group placement: the model-parallel block (tp here; the
+/// step simulator passes tp·sp·ep) packs inside a node, DP spans the
+/// rest.  Kept as the named entry point for the original regression
+/// tests; [`group_placement`] is the general form.
 pub fn dp_placement(cluster: &ClusterSpec, tp: usize, dp: usize) -> (usize, usize) {
-    let dp_gpus_per_node = (cluster.node.gpus / tp.max(1)).max(1).min(dp.max(1));
-    let dp_nodes =
-        ((dp + dp_gpus_per_node - 1) / dp_gpus_per_node).clamp(1, cluster.nodes.max(1));
-    (dp_nodes, dp_gpus_per_node)
+    group_placement(cluster, tp, dp)
+}
+
+/// The shared micro-batch memory-fit search: the largest `mb ≤ fit_cap`
+/// whose activations fit next to the states, exactly as the step
+/// simulator charges them.  Returns `(micro_batch, num_microbatches,
+/// mem_per_gpu)`, or `None` when no micro-batch fits.  Factored out of
+/// [`simulate_step`] so [`memory_lower_bound`] and [`step_lower_bound`]
+/// reuse the *identical* float expressions — the planner's cap-aware
+/// bounds are exact, not merely conservative (ROADMAP "bound tightening").
+fn fit_micro_batch(
+    sched: PipeSchedule,
+    pp: usize,
+    samples_per_rank: usize,
+    fit_cap: usize,
+    state_bytes: f64,
+    act_per_sample: f64,
+    hbm: f64,
+) -> Option<(usize, usize, f64)> {
+    let mut micro_batch = 0usize;
+    for mb in (1..=fit_cap).rev() {
+        let live = parallel::live_microbatches(
+            sched,
+            pp,
+            (samples_per_rank + mb - 1) / mb,
+        )
+        .max(1);
+        let act = if pp > 1 {
+            act_per_sample * mb as f64 * live as f64
+        } else {
+            act_per_sample * mb as f64
+        };
+        if state_bytes + act <= hbm {
+            micro_batch = mb;
+            break;
+        }
+    }
+    if micro_batch == 0 {
+        return None;
+    }
+    let num_micro = (samples_per_rank + micro_batch - 1) / micro_batch;
+    // the same peak the fit check enforced: with pipeline stages, `live`
+    // micro-batches of activations are resident simultaneously
+    let live = parallel::live_microbatches(sched, pp, num_micro).max(1);
+    let mem_per_gpu = if pp > 1 {
+        state_bytes + act_per_sample * micro_batch as f64 * live as f64
+    } else {
+        state_bytes + act_per_sample * micro_batch as f64
+    };
+    Some((micro_batch, num_micro, mem_per_gpu))
 }
 
 /// Seconds-per-step prediction with the component breakdown.
@@ -173,8 +231,13 @@ const OVERLAP_EFFICIENCY: f64 = 0.85;
 pub fn simulate_step(setup: &TrainSetup) -> StepTime {
     let m = &setup.model;
     let w = &setup.workload;
-    let cluster = &setup.cluster;
-    let comm = CommModel::new(cluster.clone());
+    // a mixed-generation cluster runs a synchronous step at the pace of
+    // its slowest participant: price against the limiting view (the
+    // identity for homogeneous pods, so dense/homogeneous results are
+    // bit-identical to the pre-heterogeneity simulator); collapsed once,
+    // shared with the comm model by borrow
+    let comm = CommModel::from_view(setup.cluster.limiting_view());
+    let cluster = &comm.cluster;
     let par = setup.par;
     let gpus = cluster.total_gpus();
     assert!(
@@ -182,28 +245,26 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
         "parallel degrees {par:?} exceed cluster of {gpus} GPUs"
     );
 
-    // ---------------- placement: TP inside a node, PP across node groups,
-    // DP over the rest.  The DP process group spans `dp_nodes` nodes with
-    // `dp_gpus_per_node` ranks per node.
+    // ---------------- placement: TP and SP inside a node, PP across node
+    // groups, EP over tp·sp blocks, DP over the rest.  The DP process
+    // group spans `dp_nodes` nodes with `dp_gpus_per_node` ranks per node.
     let tp = par.tp;
     let pp = par.pp;
+    let sp = par.sp;
+    let ep = par.ep;
     let dp = par.dp;
-    let (dp_nodes, dp_gpus_per_node) = dp_placement(cluster, tp, dp);
+    let (dp_nodes, dp_gpus_per_node) = group_placement(cluster, tp * sp * ep, dp);
 
     // ---------------- memory fit: choose the largest micro-batch.
-    let psi = m.params() as f64 / (tp * pp) as f64;
-    let state_bytes = {
-        let b = zero::state_bytes_per_gpu(psi, dp, setup.stage, setup.opt);
-        if setup.offload {
-            // optimizer fp32 states move to host RAM
-            b - setup.opt.k_bytes() * psi / dp.max(1) as f64
-        } else {
-            b
-        }
-    };
+    // tp/pp shard every weight; ep additionally shards the expert FFNs;
+    // sp replicates weights but splits the token dimension of activations.
+    let psi = m.dense_params() as f64 / (tp * pp) as f64
+        + m.expert_params() as f64 / (tp * pp * ep) as f64;
+    let state_bytes =
+        zero::state_bytes_with_offload(psi, dp, setup.stage, setup.opt, setup.offload);
     let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
     let act_per_sample =
-        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp) as f64 * act_factor;
+        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp * sp) as f64 * act_factor;
     let hbm = cluster.node.gpu.hbm_bytes * zero::HBM_SAFETY_MARGIN;
 
     let samples_per_rank = (w.global_batch + dp - 1) / dp;
@@ -215,41 +276,24 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
     } else {
         samples_per_rank
     };
-    let mut micro_batch = 0usize;
-    for mb in (1..=fit_cap).rev() {
-        let live = parallel::live_microbatches(
-            setup.sched,
-            pp,
-            (samples_per_rank + mb - 1) / mb,
-        )
-        .max(1);
-        let act = if pp > 1 {
-            act_per_sample * mb as f64 * live as f64
-        } else {
-            act_per_sample * mb as f64
-        };
-        if state_bytes + act <= hbm {
-            micro_batch = mb;
-            break;
-        }
-    }
-    if micro_batch == 0 {
-        return StepTime::oom(state_bytes + act_per_sample);
-    }
-    let num_micro = (samples_per_rank + micro_batch - 1) / micro_batch;
-    // report the same peak the fit check enforced: with pipeline stages,
-    // `live` micro-batches of activations are resident simultaneously
-    let live = parallel::live_microbatches(setup.sched, pp, num_micro).max(1);
-    let mem_per_gpu = if pp > 1 {
-        state_bytes + act_per_sample * micro_batch as f64 * live as f64
-    } else {
-        state_bytes + act_per_sample * micro_batch as f64
+    let (micro_batch, num_micro, mem_per_gpu) = match fit_micro_batch(
+        setup.sched,
+        pp,
+        samples_per_rank,
+        fit_cap,
+        state_bytes,
+        act_per_sample,
+        hbm,
+    ) {
+        Some(fit) => fit,
+        None => return StepTime::oom(state_bytes + act_per_sample),
     };
 
     // ---------------- compute
     let flops_per_sample = m.train_flops_per_sample(w.enc_len, w.dec_len);
     let ckpt_factor = if w.ckpt { CKPT_COMPUTE_FACTOR } else { 1.0 };
-    let sustained = cluster.node.gpu.sustained_flops() * (tp * pp) as f64;
+    // sp ranks each process 1/sp of every sample's tokens
+    let sustained = cluster.node.gpu.sustained_flops() * (tp * pp * sp) as f64;
     // charge compute for the actual samples (the last micro-batch may be
     // partial); the per-micro figure is only used for bubble accounting
     let compute = flops_per_sample * samples_per_rank as f64 * ckpt_factor / sustained;
@@ -300,10 +344,38 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
             exposed_always += 2.0 * t_ag;
         }
     }
+    // sp ranks replicate every weight: their gradients average across the
+    // sp group once per step (bucketed, NVLink, overlaps backward — same
+    // shape as the stage-0 reduction)
+    if sp > 1 {
+        let per = fp16 / buckets as f64;
+        let t = buckets as f64
+            * crate::comm::ring::allreduce(
+                per,
+                sp,
+                cluster.node.nvlink_bw,
+                cluster.node.nvlink_latency,
+            );
+        total_comm += t;
+        overlappable += t;
+    }
 
-    // ---------------- tensor/pipeline parallel communication
+    // ---------------- tensor/sequence/expert/pipeline parallel comm
     let tp_comm = parallel::tp_comm_time(m, &comm, tp, micro_batch, w.enc_len, w.dec_len)
         * num_micro as f64;
+    let sp_comm = parallel::sp_comm_time(m, &comm, sp, micro_batch, w.enc_len, w.dec_len)
+        * num_micro as f64;
+    let (ep_nodes, ep_gpn) = group_placement(cluster, tp * sp, ep);
+    let ep_comm = parallel::ep_comm_time(
+        m,
+        &comm,
+        ep,
+        ep_nodes,
+        ep_gpn,
+        micro_batch,
+        w.enc_len,
+        w.dec_len,
+    ) * num_micro as f64;
     let pp_comm = parallel::pp_p2p_time(
         m,
         &comm,
@@ -313,8 +385,9 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
         w.dec_len,
         pp > 1 && cluster.nodes > 1,
     ) * num_micro as f64;
-    total_comm += tp_comm + pp_comm;
-    exposed_always += tp_comm + pp_comm; // blocking in Megatron-style TP
+    total_comm += tp_comm + sp_comm + ep_comm + pp_comm;
+    // blocking in Megatron-style TP/SP; MoE dispatch gates the expert FFN
+    exposed_always += tp_comm + sp_comm + ep_comm + pp_comm;
 
     // ---------------- overlap accounting
     let exposed_comm = if setup.overlap_comm {
@@ -327,7 +400,7 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
     // ---------------- pipeline bubble
     let bubble_frac = parallel::bubble_fraction(pp, num_micro);
     let bubble = if pp > 1 {
-        (compute + tp_comm) * bubble_frac / (1.0 - bubble_frac)
+        (compute + tp_comm + sp_comm) * bubble_frac / (1.0 - bubble_frac)
     } else {
         0.0
     };
@@ -383,104 +456,151 @@ const BOUND_FLOOR_SLACK: f64 = 1.0 - 1e-9;
 /// Cheap, provably-optimistic lower bound on
 /// `simulate_step(setup).seconds_per_step()` — the branch-and-bound
 /// pruning bound for [`crate::planner`] and the longest-first cost key
-/// for [`crate::sweep::Sweep::map_chunked`].  It sums only terms no
-/// micro-batch choice can avoid:
+/// for [`crate::sweep::Sweep::map_chunked`].
+///
+/// The bound is **micro-batch-cap aware** (ROADMAP "bound tightening"):
+/// it runs the simulator's own memory-fit search ([`fit_micro_batch`],
+/// identical float expressions), so the micro-batch and accumulation
+/// count it prices are the *exact* values the simulator will choose, not
+/// a conservative floor.  On top of the exact fit it sums:
 ///
 /// * the pure-compute roofline (identical expression to the simulator's
 ///   `compute` term, so it holds bit-for-bit);
 /// * the exact optimizer-update time (micro-batch independent);
-/// * always-exposed communication floors: the ZeRO-1/2 post-step
-///   parameter all-gather; ZeRO-3's per-micro-batch re-gathers at the
-///   *minimum possible* accumulation count (micro-batch capped by what
-///   raw HBM admits next to the states); the latency and total-volume
-///   parts of blocking TP all-reduces and PP point-to-point transfers
-///   (volume uses `mb · num_micro ≥ samples_per_rank`);
+/// * always-exposed communication: the ZeRO-1/2 post-step parameter
+///   all-gather, ZeRO-3's per-micro-batch re-gathers, and the blocking
+///   TP/SP/EP/PP terms — all priced through the same functions as the
+///   simulator at the exact accumulation count;
+/// * an **overlap-aware exposed-comm floor**: the overlappable ZeRO
+///   traffic that provably cannot hide behind backward compute
+///   (`max(0, overlappable − backward·OVERLAP_EFFICIENCY)`) — this is
+///   what lets stall-free mid-size models prune deeply instead of
+///   pricing 60–95% of the space;
 /// * the shared input-pipeline floor: a step can never finish before the
 ///   data for it loads (`seconds = busy + stall ≥ load_time`).
 ///
-/// Soundness (`bound ≤ simulate_step(s).seconds_per_step()` for every
-/// setup) is property-tested across the planner's whole default space.
+/// It omits only the pipeline bubble and the stall remainder, so it
+/// remains a true lower bound.  Soundness
+/// (`bound ≤ simulate_step(s).seconds_per_step()` for every setup) is
+/// property-tested across the planner's whole default space, including
+/// sp > 1, ep > 1 and mixed-generation clusters.
 pub fn step_lower_bound(setup: &TrainSetup) -> f64 {
+    lower_bounds(setup).0
+}
+
+/// Both planner bounds from **one** memory-fit search: returns
+/// `(step_lower_bound, memory_lower_bound)`.  The planner's branch
+/// enumeration computes a bound pair for every child of the space, so
+/// sharing the fit (the dominant cost) halves enumeration time; the two
+/// values are identical to the standalone functions.
+pub fn lower_bounds(setup: &TrainSetup) -> (f64, f64) {
     let m = &setup.model;
     let w = &setup.workload;
-    let cluster = &setup.cluster;
-    let (tp, pp, dp) = (setup.par.tp, setup.par.pp, setup.par.dp);
+    let (tp, pp, sp, ep, dp) =
+        (setup.par.tp, setup.par.pp, setup.par.sp, setup.par.ep, setup.par.dp);
+
+    // ---- the exact memory fit (same expressions as the simulator): a
+    // failed fit is a provable OOM, priced at +∞ seconds there too
+    let psi = m.dense_params() as f64 / (tp * pp) as f64
+        + m.expert_params() as f64 / (tp * pp * ep) as f64;
+    let state = zero::state_bytes_with_offload(psi, dp, setup.stage, setup.opt, setup.offload);
+    let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
+    let act =
+        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp * sp) as f64 * act_factor;
+    let hbm = setup.cluster.limiting_hbm_bytes() * zero::HBM_SAFETY_MARGIN;
     let samples_per_rank = (w.global_batch + dp - 1) / dp.max(1);
     if samples_per_rank == 0 {
-        return f64::INFINITY;
+        return (f64::INFINITY, state);
     }
-    let spr = samples_per_rank as f64;
+    let fit_cap = if setup.micro_batch_cap > 0 {
+        samples_per_rank.min(setup.micro_batch_cap)
+    } else {
+        samples_per_rank
+    };
+    let (mb, nm, mem) =
+        match fit_micro_batch(setup.sched, pp, samples_per_rank, fit_cap, state, act, hbm) {
+            Some(fit) => fit,
+            None => {
+                // the smallest footprint the fit rejected: mb = 1 attains
+                // the minimal live-microbatch product for both schedules,
+                // so this provably exceeds the HBM margin
+                let min_mult = parallel::min_live_multiplier(setup.sched, pp, samples_per_rank);
+                return (f64::INFINITY, state + act * min_mult as f64);
+            }
+        };
+
+    let cluster = setup.cluster.limiting_view();
     let flops_per_sample = m.train_flops_per_sample(w.enc_len, w.dec_len);
     let ckpt_factor = if w.ckpt { CKPT_COMPUTE_FACTOR } else { 1.0 };
-    let sustained = cluster.node.gpu.sustained_flops() * (tp * pp) as f64;
-    let compute = flops_per_sample * spr * ckpt_factor / sustained;
+    let sustained = cluster.node.gpu.sustained_flops() * (tp * pp * sp) as f64;
+    let compute = flops_per_sample * samples_per_rank as f64 * ckpt_factor / sustained;
 
-    // ---- minimum possible gradient-accumulation steps: the micro-batch
-    // can never exceed what raw HBM admits next to the states (the +1
-    // absorbs float rounding at the fit boundary, keeping the bound safe)
-    let psi = m.params() as f64 / (tp * pp) as f64;
-    let state = {
-        let b = zero::state_bytes_per_gpu(psi, dp, setup.stage, setup.opt);
-        if setup.offload {
-            b - setup.opt.k_bytes() * psi / dp.max(1) as f64
-        } else {
-            b
-        }
-    };
-    let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
-    let act = m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp) as f64 * act_factor;
-    let hbm = cluster.node.gpu.hbm_bytes * zero::HBM_SAFETY_MARGIN;
-    if state + act > hbm {
-        // provably OOM for every micro-batch (the memory bound agrees);
-        // the simulator prices such a setup at +∞ seconds
-        return f64::INFINITY;
-    }
-    let mb_ub = (((hbm - state) / act) as usize + 1).min(samples_per_rank).max(1);
-    let nm_lb = (samples_per_rank + mb_ub - 1) / mb_ub;
-
-    // ---- always-exposed communication floors
-    let comm = CommModel::new(cluster.clone());
-    let (dp_nodes, dp_gpn) = dp_placement(cluster, tp, dp);
+    // ---- always-exposed communication at the exact accumulation count,
+    // mirroring the simulator's pricing functions term by term
+    let comm = CommModel::from_view(cluster);
+    let cluster = &comm.cluster;
+    let (dp_nodes, dp_gpn) = group_placement(cluster, tp * sp * ep, dp);
     let fp16 = 2.0 * psi;
-    use crate::comm::Collective::AllGather;
+    let buckets = setup.grad_bucket_msgs.max(1);
+    let price = |collective: crate::comm::Collective, bytes: f64, msgs: usize| -> f64 {
+        let per = bytes / msgs.max(1) as f64;
+        msgs as f64 * comm.time(collective, per, dp_nodes, dp_gpn)
+    };
+    use crate::comm::Collective::{AllGather, AllReduce, ReduceScatter};
     let mut floor = 0.0;
+    // the overlappable ZeRO traffic, for the overlap-aware exposed floor
+    let mut overlappable = 0.0;
     match setup.stage {
-        ZeroStage::Stage0 => {}
-        ZeroStage::Stage1 | ZeroStage::Stage2 => {
-            let buckets = setup.grad_bucket_msgs.max(1);
-            let per = fp16 / buckets as f64;
-            floor += buckets as f64 * comm.time(AllGather, per, dp_nodes, dp_gpn);
+        ZeroStage::Stage0 => {
+            overlappable += price(AllReduce, fp16, buckets);
+        }
+        ZeroStage::Stage1 => {
+            overlappable += price(ReduceScatter, fp16, buckets);
+            floor += price(AllGather, fp16, buckets);
+        }
+        ZeroStage::Stage2 => {
+            overlappable += price(ReduceScatter, fp16, buckets) * nm as f64;
+            floor += price(AllGather, fp16, buckets);
         }
         ZeroStage::Stage3 => {
-            let msgs = ((m.enc_layers + m.dec_layers) as usize).max(1);
-            let per = fp16 / msgs as f64;
-            floor +=
-                2.0 * (msgs as f64 * comm.time(AllGather, per, dp_nodes, dp_gpn)) * nm_lb as f64;
+            let layers = (m.enc_layers + m.dec_layers) as usize;
+            floor += 2.0 * (price(AllGather, fp16, layers) * nm as f64);
+            overlappable += price(ReduceScatter, fp16, layers) * nm as f64;
         }
     }
-    if tp > 1 {
-        let (bw, lat) = (cluster.node.nvlink_bw, cluster.node.nvlink_latency);
-        let bytes_tok = 2.0 * m.d_model as f64;
-        let lat_term = 2.0 * (tp as f64 - 1.0) * lat;
-        let vol = |total_bytes: f64| 2.0 * total_bytes * (tp as f64 - 1.0) / (tp as f64 * bw);
-        let enc = m.enc_layers as f64
-            * 4.0
-            * (lat_term * nm_lb as f64 + vol(spr * w.enc_len as f64 * bytes_tok));
-        let dec = m.dec_layers as f64
-            * 4.0
-            * 1.5
-            * (lat_term * nm_lb as f64 + vol(spr * w.dec_len as f64 * bytes_tok));
-        floor += enc + dec;
+    if sp > 1 {
+        let per = fp16 / buckets as f64;
+        overlappable += buckets as f64
+            * crate::comm::ring::allreduce(
+                per,
+                sp,
+                cluster.node.nvlink_bw,
+                cluster.node.nvlink_latency,
+            );
     }
-    if pp > 1 {
-        let (bw, lat) = if cluster.nodes > 1 {
-            (cluster.ib_bw, cluster.ib_latency)
-        } else {
-            (cluster.node.nvlink_bw, cluster.node.nvlink_latency)
-        };
-        let bytes_tok = (w.enc_len + w.dec_len) as f64 * 2.0 * m.d_model as f64;
-        floor += 2.0 * (pp as f64 - 1.0) * (lat * nm_lb as f64 + spr * bytes_tok / bw);
-    }
+    floor += parallel::tp_comm_time(m, &comm, tp, mb, w.enc_len, w.dec_len) * nm as f64;
+    floor += parallel::sp_comm_time(m, &comm, sp, mb, w.enc_len, w.dec_len) * nm as f64;
+    let (ep_nodes, ep_gpn) = group_placement(cluster, tp * sp, ep);
+    floor += parallel::ep_comm_time(m, &comm, ep, ep_nodes, ep_gpn, mb, w.enc_len, w.dec_len)
+        * nm as f64;
+    floor += parallel::pp_p2p_time(
+        m,
+        &comm,
+        pp,
+        mb,
+        w.enc_len,
+        w.dec_len,
+        pp > 1 && cluster.nodes > 1,
+    ) * nm as f64;
+
+    // ---- overlap-aware exposed floor: backward compute can hide at most
+    // backward · OVERLAP_EFFICIENCY seconds of the overlappable traffic
+    let backward = compute * 2.0 / 3.0;
+    let exposed_overlap = if setup.overlap_comm {
+        (overlappable * BOUND_FLOOR_SLACK - backward * OVERLAP_EFFICIENCY).max(0.0)
+    } else {
+        overlappable * BOUND_FLOOR_SLACK
+    };
 
     // ---- exact optimizer term (micro-batch independent)
     let shard = psi / dp.max(1) as f64;
@@ -497,39 +617,50 @@ pub fn step_lower_bound(setup: &TrainSetup) -> f64 {
     let node_rate = worker_rate.min(per_node_rate * 4.0);
     let load_time = w.global_batch as f64 / (node_rate * cluster.nodes as f64);
 
-    let busy_bound = compute + floor * BOUND_FLOOR_SLACK + optimizer;
-    busy_bound.max(load_time * BOUND_FLOOR_SLACK)
+    let busy_bound = compute + floor * BOUND_FLOOR_SLACK + exposed_overlap + optimizer;
+    (busy_bound.max(load_time * BOUND_FLOOR_SLACK), mem)
 }
 
-/// Matching per-GPU memory lower bound: no micro-batch choice can keep
-/// less than this resident, so `memory_lower_bound(s) > hbm_bytes *
-/// zero::HBM_SAFETY_MARGIN` proves the setup OOMs without simulating it.
-/// The state term mirrors the simulator expression-for-expression; the
-/// activation floor collapses the simulator's `(act · mb) · live` product
-/// into one `act · min_mult` multiply (see
-/// [`crate::parallel::min_live_multiplier`]), a rearrangement that can
-/// round an ulp differently, so it carries the same
-/// [`BOUND_FLOOR_SLACK`]-style relative margin as the time bound's
-/// communication floors — keeping the bound provably below every child's
-/// actual footprint in float semantics, not just real-number semantics.
+/// Matching per-GPU memory bound: runs the simulator's own memory-fit
+/// search ([`fit_micro_batch`], identical float expressions), so for a
+/// fitting configuration it returns **exactly** the footprint the
+/// simulator reports (the micro-batch-aware activation term of ROADMAP's
+/// "bound tightening").  When nothing fits it returns the smallest
+/// footprint the fit search rejected — `state + act ·`
+/// [`crate::parallel::min_live_multiplier`], which mb = 1 attains for
+/// both schedules — so `memory_lower_bound(s) > hbm_bytes *
+/// zero::HBM_SAFETY_MARGIN` holds exactly when the setup OOMs, with zero
+/// conservatism (also for pipelined configurations, where the live
+/// multiplier, not one sample, is what overflows).
 pub fn memory_lower_bound(setup: &TrainSetup) -> f64 {
     let m = &setup.model;
     let w = &setup.workload;
-    let (tp, pp, dp) = (setup.par.tp, setup.par.pp, setup.par.dp);
-    let psi = m.params() as f64 / (tp * pp) as f64;
+    let (tp, pp, sp, ep, dp) =
+        (setup.par.tp, setup.par.pp, setup.par.sp, setup.par.ep, setup.par.dp);
+    let psi = m.dense_params() as f64 / (tp * pp) as f64
+        + m.expert_params() as f64 / (tp * pp * ep) as f64;
+    let state = zero::state_bytes_with_offload(psi, dp, setup.stage, setup.opt, setup.offload);
     let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
     let act_per_sample =
-        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp) as f64 * act_factor;
+        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp * sp) as f64 * act_factor;
     let samples_per_rank = (w.global_batch + dp - 1) / dp.max(1);
-    let min_mult = parallel::min_live_multiplier(setup.sched, pp, samples_per_rank);
-    zero::memory_lower_bound(
-        psi,
-        dp,
-        setup.stage,
-        setup.opt,
-        setup.offload,
-        act_per_sample * min_mult as f64 * BOUND_FLOOR_SLACK,
-    )
+    if samples_per_rank == 0 {
+        return state;
+    }
+    let hbm = setup.cluster.limiting_hbm_bytes() * zero::HBM_SAFETY_MARGIN;
+    let fit_cap = if setup.micro_batch_cap > 0 {
+        samples_per_rank.min(setup.micro_batch_cap)
+    } else {
+        samples_per_rank
+    };
+    match fit_micro_batch(setup.sched, pp, samples_per_rank, fit_cap, state, act_per_sample, hbm)
+    {
+        Some((_, _, mem)) => mem,
+        None => {
+            let min_mult = parallel::min_live_multiplier(setup.sched, pp, samples_per_rank);
+            state + act_per_sample * min_mult as f64
+        }
+    }
 }
 
 /// Reproduce the paper's Table 1 grid: seconds/step for ZeRO stages
@@ -682,7 +813,7 @@ mod tests {
         let mk = |tp: usize| TrainSetup {
             model: model.clone(),
             cluster: cluster.clone(),
-            par: ParallelCfg { dp: 8 / tp, tp, pp: 1 },
+            par: ParallelCfg::dtp(8 / tp, tp, 1),
             stage: ZeroStage::Stage1,
             opt: OptimizerKind::AdamW,
             sched: PipeSchedule::OneFOneB,
@@ -717,7 +848,7 @@ mod tests {
         let s = TrainSetup {
             model,
             cluster,
-            par: ParallelCfg { dp: 4, tp: 1, pp: 4 },
+            par: ParallelCfg::dtp(4, 1, 4),
             stage: ZeroStage::Stage1,
             opt: OptimizerKind::AdamW,
             sched: PipeSchedule::OneFOneB,
@@ -763,7 +894,7 @@ mod tests {
         assert_eq!(dp_nodes, 2);
         // ...and the step simulator accepts the configuration end to end
         let mut s = TrainSetup::dp_pod(by_name("mt5-large").unwrap(), 2, ZeroStage::Stage2);
-        s.par = ParallelCfg { dp: 3, tp: 5, pp: 1 };
+        s.par = ParallelCfg::dtp(3, 5, 1);
         let st = simulate_step(&s);
         assert!(st.seconds_per_step().is_finite());
     }
@@ -819,6 +950,103 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Sequence parallelism splits activations and adds its AG/RS pair:
+    /// same GPU count, sp=2 must shrink the activation footprint (states
+    /// fixed via stage 0) and issue more communication.
+    #[test]
+    fn sequence_parallelism_splits_activations_and_pays_comm() {
+        let model = by_name("mt5-large").unwrap();
+        let mk = |dp: usize, sp: usize| TrainSetup {
+            par: ParallelCfg { dp, tp: 1, pp: 1, sp, ep: 1 },
+            workload: Workload { global_batch: 64, enc_len: 1024, dec_len: 256, ckpt: true },
+            micro_batch_cap: 8,
+            ..TrainSetup::dp_pod(model.clone(), 1, ZeroStage::Stage0)
+        };
+        let plain = simulate_step(&mk(8, 1));
+        let seq = simulate_step(&mk(4, 2));
+        assert!(plain.fits && seq.fits);
+        // same states at stage 0; activations halve per rank
+        let act_plain = plain.mem_per_gpu
+            - zero::state_bytes_per_gpu(model.params() as f64, 8, ZeroStage::Stage0,
+                OptimizerKind::AdamW);
+        let act_seq = seq.mem_per_gpu
+            - zero::state_bytes_per_gpu(model.params() as f64, 4, ZeroStage::Stage0,
+                OptimizerKind::AdamW);
+        assert!(act_seq < act_plain, "sp must shrink activations: {act_seq} vs {act_plain}");
+        // the ring AG/RS pair plus the replicated-grad all-reduce appear
+        assert!(seq.total_comm > 0.0);
+        assert!(seq.seconds_per_step().is_finite());
+    }
+
+    /// Expert parallelism shards the expert FFNs: a MoE model whose
+    /// states overflow one GPU fits once ep spreads the experts, and the
+    /// all-to-all dispatch shows up in the comm total.
+    #[test]
+    fn expert_parallelism_shards_expert_states_and_pays_alltoall() {
+        let model = by_name("mt5-xl-moe8").unwrap();
+        let mk = |ep: usize| TrainSetup {
+            par: ParallelCfg { dp: 1, tp: 1, pp: 1, sp: 1, ep },
+            workload: Workload { global_batch: 64, enc_len: 512, dec_len: 128, ckpt: true },
+            ..TrainSetup::dp_pod(model.clone(), 1, ZeroStage::Stage1)
+        };
+        let no_ep = simulate_step(&mk(1));
+        assert!(!no_ep.fits, "~9B MoE params at stage 1, dp=1 cannot fit 80 GB");
+        let with_ep = simulate_step(&mk(8));
+        assert!(with_ep.fits, "ep=8 shards the expert FFNs into range");
+        assert!(with_ep.total_comm > 0.0);
+        // the bounds stay sound and exact on the new axis
+        assert!(step_lower_bound(&mk(8)) <= with_ep.seconds_per_step());
+        assert_eq!(memory_lower_bound(&mk(8)).to_bits(), with_ep.mem_per_gpu.to_bits());
+        // and the OOM proof agrees with the simulator's verdict
+        let hbm = ClusterSpec::lps_pod(1).node.gpu.hbm_bytes * zero::HBM_SAFETY_MARGIN;
+        assert!(memory_lower_bound(&mk(1)) > hbm);
+    }
+
+    /// A mixed-generation cluster prices at the slowest participant: the
+    /// same layout on 2×A100+2×V100 can never beat 4×A100, and memory is
+    /// fit against the smallest HBM (32 GB).
+    #[test]
+    fn mixed_generation_cluster_prices_at_slowest_participant() {
+        let model = by_name("mt5-large").unwrap();
+        let homo = TrainSetup::dp_pod(model.clone(), 4, ZeroStage::Stage2);
+        let mut mixed = homo.clone();
+        mixed.cluster = ClusterSpec::mixed_pod(2, 2);
+        let th = simulate_step(&homo);
+        let tm = simulate_step(&mixed);
+        assert!(th.fits && tm.fits);
+        assert!(
+            tm.seconds_per_step() > th.seconds_per_step(),
+            "mixed pod must be slower: {} vs {}",
+            tm.seconds_per_step(),
+            th.seconds_per_step()
+        );
+        let v100_hbm = 32.0 * 1024f64.powi(3) * zero::HBM_SAFETY_MARGIN;
+        assert!(tm.mem_per_gpu <= v100_hbm + 1.0, "shard must fit the weakest group's HBM");
+        // bounds stay sound under heterogeneity
+        assert!(step_lower_bound(&mixed) <= tm.seconds_per_step());
+        assert!(memory_lower_bound(&mixed) <= tm.mem_per_gpu + 1.0);
+    }
+
+    /// The cap-aware bounds are exact on the memory side and respect the
+    /// micro-batch cap on the time side: a cap that forces many more
+    /// accumulation steps must raise the time bound.
+    #[test]
+    fn bounds_are_cap_aware() {
+        let mut s = xxl_setup(4, ZeroStage::Stage2);
+        let auto = simulate_step(&s);
+        assert_eq!(memory_lower_bound(&s).to_bits(), auto.mem_per_gpu.to_bits());
+        let auto_lb = step_lower_bound(&s);
+        s.micro_batch_cap = 1;
+        let capped = simulate_step(&s);
+        assert_eq!(memory_lower_bound(&s).to_bits(), capped.mem_per_gpu.to_bits());
+        let capped_lb = step_lower_bound(&s);
+        assert!(
+            capped_lb > auto_lb,
+            "cap=1 inflates accumulation: bound {capped_lb} must exceed auto {auto_lb}"
+        );
+        assert!(capped_lb <= capped.seconds_per_step());
     }
 
     #[test]

@@ -117,6 +117,28 @@ pub fn state_bytes_per_gpu(psi: f64, nd: usize, stage: ZeroStage, opt: Optimizer
     }
 }
 
+/// [`state_bytes_per_gpu`] with the simulator's ZeRO-offload discount
+/// applied: offloading moves the dp-partitioned fp32 optimizer shard
+/// (KΨ/N_d bytes) to host RAM.  `psi` may itself be an
+/// expert-parallel-sharded count (dense/(tp·pp) + expert/(tp·pp·ep)) —
+/// the stage formulas are linear in Ψ, so sharded slices compose.
+/// Shared by the step simulator and both planner bounds so the offload
+/// accounting can never drift between them.
+pub fn state_bytes_with_offload(
+    psi: f64,
+    nd: usize,
+    stage: ZeroStage,
+    opt: OptimizerKind,
+    offload: bool,
+) -> f64 {
+    let b = state_bytes_per_gpu(psi, nd, stage, opt);
+    if offload {
+        b - opt.k_bytes() * psi / nd.max(1) as f64
+    } else {
+        b
+    }
+}
+
 /// Provably-optimistic per-GPU memory lower bound for a configuration:
 /// the ZeRO-partitioned states (with the same offload discount the step
 /// simulator applies — partitioned fp32 optimizer state moves to host
@@ -134,15 +156,9 @@ pub fn memory_lower_bound(
     offload: bool,
     min_activation_bytes: f64,
 ) -> f64 {
-    let states = state_bytes_per_gpu(psi, nd, stage, opt);
-    let states = if offload {
-        // identical to the simulator's offload accounting, so the bound
-        // can never exceed the simulator's own state footprint
-        states - opt.k_bytes() * psi / nd.max(1) as f64
-    } else {
-        states
-    };
-    states + min_activation_bytes
+    // identical to the simulator's offload accounting, so the bound can
+    // never exceed the simulator's own state footprint
+    state_bytes_with_offload(psi, nd, stage, opt, offload) + min_activation_bytes
 }
 
 /// Per-GPU communication volume (bytes, send+receive) for one step.

@@ -4,7 +4,7 @@
 use scalestudy::hardware::ClusterSpec;
 use scalestudy::hpo::{evaluate, space, Template};
 use scalestudy::json::Json;
-use scalestudy::model::{by_name, mt5_zoo};
+use scalestudy::model::{by_name, moe_zoo, mt5_zoo};
 use scalestudy::planner::{plan, plan_exhaustive, PlanSpace};
 use scalestudy::sim::{
     dp_placement, memory_lower_bound, simulate_step, step_lower_bound, TrainSetup, Workload,
@@ -403,6 +403,196 @@ fn prop_bnb_bit_identical_to_exhaustive_and_prunes_large_models() {
             }
         }
     }
+}
+
+/// Shared helper: assert the pruned search is bit-identical to the
+/// exhaustive reference on one (model, cluster) query.
+fn assert_bnb_matches_exhaustive(model: &scalestudy::model::ModelCfg, cluster: &ClusterSpec) {
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let cache = SimCache::new();
+    let bnb = plan(model, cluster, &workload, &space, &sweep, &cache);
+    let exact = plan_exhaustive(model, cluster, &workload, &space, &sweep, &cache);
+    let tag = format!("{} on {} nodes", model.name, cluster.total_nodes());
+    assert_eq!(bnb.space_size, exact.space_size, "{tag}: space size");
+    match (&bnb.best, &exact.best) {
+        (None, None) => {}
+        (Some(a), Some(b)) => {
+            assert_eq!(a.setup.cluster.total_nodes(), b.setup.cluster.total_nodes(), "{tag}");
+            assert_eq!(a.setup.par, b.setup.par, "{tag}: best par");
+            assert_eq!(a.setup.stage, b.setup.stage, "{tag}: best stage");
+            assert_eq!(a.setup.micro_batch_cap, b.setup.micro_batch_cap, "{tag}: cap");
+            assert_eq!(
+                a.seconds_per_step().to_bits(),
+                b.seconds_per_step().to_bits(),
+                "{tag}: best seconds diverged"
+            );
+        }
+        other => panic!("{tag}: best presence diverged: {other:?}"),
+    }
+    assert_eq!(bnb.frontier.len(), exact.frontier.len(), "{tag}: frontier size");
+    for (a, b) in bnb.frontier.iter().zip(&exact.frontier) {
+        assert_eq!(a.setup.par, b.setup.par, "{tag}: frontier par");
+        assert_eq!(
+            a.seconds_per_step().to_bits(),
+            b.seconds_per_step().to_bits(),
+            "{tag}: frontier seconds diverged"
+        );
+        assert_eq!(
+            a.step.mem_per_gpu.to_bits(),
+            b.step.mem_per_gpu.to_bits(),
+            "{tag}: frontier memory diverged"
+        );
+    }
+}
+
+/// The widened axes keep the branch-and-bound exact: MoE models (ep > 1
+/// in the space) and sequence parallelism stay bit-identical to the
+/// exhaustive reference.
+#[test]
+fn prop_bnb_bit_identical_on_moe_models() {
+    for model in moe_zoo() {
+        for nodes in [1usize, 2] {
+            assert_bnb_matches_exhaustive(&model, &ClusterSpec::lps_pod(nodes));
+        }
+    }
+}
+
+/// ...and so do mixed-generation clusters, where sub-pods that reach into
+/// the weaker group carry a different HBM ceiling and roofline per branch.
+#[test]
+fn prop_bnb_bit_identical_on_mixed_generation_cluster() {
+    let mixed = ClusterSpec::mixed_pod(2, 2);
+    for name in ["mt5-large", "mt5-xxl", "mt5-base-moe32"] {
+        assert_bnb_matches_exhaustive(&by_name(name).unwrap(), &mixed);
+    }
+}
+
+/// Bound soundness on the new axes: every enumerated point with sp > 1,
+/// ep > 1, or a heterogeneous cluster keeps `time bound ≤ simulated
+/// seconds`, the memory bound at-or-below the simulated footprint, and
+/// the OOM proof in agreement with the simulator's verdict.
+#[test]
+fn prop_lower_bounds_sound_on_new_axes() {
+    use scalestudy::planner::enumerate_setups;
+    let cases: Vec<(&str, ClusterSpec)> = vec![
+        ("mt5-base-moe32", ClusterSpec::lps_pod(2)),
+        ("mt5-xl-moe8", ClusterSpec::lps_pod(1)),
+        ("mt5-large", ClusterSpec::mixed_pod(1, 1)),
+        ("mt5-large-moe16", ClusterSpec::mixed_pod(2, 2)),
+    ];
+    for (name, cluster) in cases {
+        let model = by_name(name).unwrap();
+        let mut saw_sp = false;
+        let mut saw_ep = false;
+        for setup in enumerate_setups(&model, &cluster, &Workload::table1(), &PlanSpace::default())
+        {
+            saw_sp |= setup.par.sp > 1;
+            saw_ep |= setup.par.ep > 1;
+            let st = simulate_step(&setup);
+            let tlb = step_lower_bound(&setup);
+            let mlb = memory_lower_bound(&setup);
+            assert!(
+                tlb <= st.seconds_per_step(),
+                "{name} {:?}: time bound {tlb} > {}",
+                setup.par,
+                st.seconds_per_step()
+            );
+            if st.fits {
+                assert!(
+                    mlb <= st.mem_per_gpu + 1.0,
+                    "{name} {:?}: mem bound above actual",
+                    setup.par
+                );
+            }
+            // each setup's own (sub-)cluster carries its memory ceiling —
+            // sub-pods inside the primary group have the larger A100 one
+            let own_hbm =
+                setup.cluster.limiting_view().node.gpu.hbm_bytes * HBM_SAFETY_MARGIN;
+            if mlb > own_hbm {
+                assert!(!st.fits, "{name} {:?}: OOM-proof wrong", setup.par);
+            }
+        }
+        assert!(saw_sp, "{name}: space never enumerated sp > 1");
+        if model.is_moe() {
+            assert!(saw_ep, "{name}: MoE space never enumerated ep > 1");
+        }
+    }
+}
+
+/// Heterogeneous-cluster memory regression: no plan the planner returns —
+/// best or frontier — ever places a shard a participating group's HBM
+/// cannot hold (the V100 group's 32 GB is the binding ceiling as soon as
+/// a plan reaches past the A100 group).
+#[test]
+fn hetero_plans_never_overflow_the_weakest_participating_group() {
+    let cluster = ClusterSpec::mixed_pod(2, 2);
+    let v100_hbm = 32.0 * 1024f64.powi(3) * HBM_SAFETY_MARGIN;
+    for name in ["mt5-base", "mt5-large", "mt5-xl"] {
+        let model = by_name(name).unwrap();
+        let r = plan(
+            &model,
+            &cluster,
+            &Workload::table1(),
+            &PlanSpace::default(),
+            &Sweep::auto(),
+            &SimCache::new(),
+        );
+        let best = r.best.expect("feasible plan on the mixed pod");
+        for p in r.frontier.iter().chain(std::iter::once(&best)) {
+            let own_limit =
+                p.setup.cluster.limiting_view().node.gpu.hbm_bytes * HBM_SAFETY_MARGIN;
+            assert!(
+                p.step.mem_per_gpu <= own_limit + 1.0,
+                "{name}: plan {} overflows its own sub-cluster limit",
+                p.label()
+            );
+            if p.setup.cluster.total_nodes() > 2 {
+                assert!(
+                    p.step.mem_per_gpu <= v100_hbm + 1.0,
+                    "{name}: plan {} reaches the V100 group but overflows 32 GB",
+                    p.label()
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance assertion: a mixed-generation cluster demonstrably
+/// changes the winning plan for at least one zoo model versus the
+/// homogeneous pod of the same node count.
+#[test]
+fn mixed_generation_changes_the_winning_plan() {
+    let homo_pod = ClusterSpec::lps_pod(4);
+    let mixed_pod = ClusterSpec::mixed_pod(2, 2);
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let mut changed = Vec::new();
+    for model in mt5_zoo() {
+        let homo = plan(&model, &homo_pod, &workload, &space, &sweep, &SimCache::new());
+        let mixed = plan(&model, &mixed_pod, &workload, &space, &sweep, &SimCache::new());
+        if let (Some(h), Some(x)) = (&homo.best, &mixed.best) {
+            let key = |p: &scalestudy::planner::PlanPoint| {
+                (
+                    p.setup.cluster.total_nodes(),
+                    p.setup.par,
+                    p.setup.stage.index(),
+                    p.setup.opt.name(),
+                    p.setup.offload,
+                    p.setup.micro_batch_cap,
+                )
+            };
+            if key(h) != key(x) {
+                changed.push(model.name.clone());
+            }
+        }
+    }
+    assert!(
+        !changed.is_empty(),
+        "a mixed-generation cluster must change the winning plan for some zoo model"
+    );
 }
 
 /// Bound soundness, fuzzed over the planner's enumeration: the analytical
