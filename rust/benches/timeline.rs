@@ -1,0 +1,111 @@
+//! Bench E9 — the event-driven pipeline timeline engine: per-schedule
+//! step breakdowns (measured bubble vs the scalar fraction the old model
+//! assumed), the interleaved-1F1B win at pp >= 4, and the engine's own
+//! simulation latency on the heaviest shapes the planner prices.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::model::by_name;
+use scalestudy::parallel::{ParallelCfg, PipeSchedule};
+use scalestudy::sim::{simulate_step, TrainSetup};
+use scalestudy::zero::ZeroStage;
+
+fn pipe_setup(
+    name: &str,
+    nodes: usize,
+    pp: usize,
+    sched: PipeSchedule,
+    cap: usize,
+) -> TrainSetup {
+    let mut s = TrainSetup::dp_pod(by_name(name).unwrap(), nodes, ZeroStage::Stage1);
+    let gpus = s.cluster.total_gpus();
+    s.par = ParallelCfg::dtp(gpus / pp, 1, pp);
+    s.sched = sched;
+    s.micro_batch_cap = cap;
+    s
+}
+
+fn main() {
+    let mut b = Bench::new("timeline");
+
+    // ---- schedule comparison: measured bubble / exposed / total per
+    // schedule at pp = 4 and pp = 8 (mt5-xl, 2 nodes)
+    let mut t = Table::new(
+        "schedules at a glance (mt5-xl, 2 nodes, stage 1, cap=2)",
+        &["pp", "bubble s", "exposed s", "p2p s", "s/step"],
+    );
+    let mut intl_strictly_wins = false;
+    for pp in [4usize, 8] {
+        let mut per_sched = Vec::new();
+        for sched in [
+            PipeSchedule::OneFOneB,
+            PipeSchedule::GPipe,
+            PipeSchedule::Interleaved1F1B,
+        ] {
+            let st = simulate_step(&pipe_setup("mt5-xl", 2, pp, sched, 2));
+            assert!(st.fits);
+            t.row(
+                &format!("{sched:?}"),
+                vec![pp as f64, st.bubble, st.exposed_comm, st.p2p_comm,
+                    st.seconds_per_step()],
+            );
+            per_sched.push(st);
+        }
+        // the tentpole's acceptance: interleaving strictly shrinks the
+        // measured bubble vs 1F1B at pp >= 4 (same micro-batch)
+        if per_sched[2].micro_batch == per_sched[0].micro_batch
+            && per_sched[2].bubble < per_sched[0].bubble
+        {
+            intl_strictly_wins = true;
+        }
+    }
+    assert!(
+        intl_strictly_wins,
+        "interleaved-1F1B must strictly reduce the bubble at pp >= 4"
+    );
+    t.note("bubble is measured stage idle from the event timeline, not (p-1)/(m+p-1)");
+    b.table(t);
+
+    // ---- overlap semantics: serializing the streams exposes everything
+    let mut ovl = Table::new(
+        "stream serialization (mt5-xxl dp-only, stage 2)",
+        &["overlap s/step", "serialized s/step", "exposed delta s"],
+    );
+    for nodes in [2usize, 4, 8] {
+        let base = TrainSetup::dp_pod(by_name("mt5-xxl").unwrap(), nodes, ZeroStage::Stage2);
+        let mut ser = base.clone();
+        ser.overlap_comm = false;
+        let a = simulate_step(&base);
+        let s = simulate_step(&ser);
+        assert!(s.seconds_per_step() >= a.seconds_per_step() - 1e-9);
+        ovl.row(
+            &format!("{nodes} nodes"),
+            vec![
+                a.seconds_per_step(),
+                s.seconds_per_step(),
+                s.exposed_comm - a.exposed_comm,
+            ],
+        );
+    }
+    b.table(ovl);
+
+    // ---- engine latency on the heaviest planner shapes (large
+    // accumulation counts = the most events)
+    b.iter("simulate_step(mt5-xl, pp=8, cap=1, 768 micro-batches)", || {
+        let mut s = pipe_setup("mt5-xl", 1, 8, PipeSchedule::OneFOneB, 1);
+        s.par = ParallelCfg::dtp(1, 1, 8);
+        let st = simulate_step(&s);
+        std::hint::black_box(st);
+    });
+    b.iter("simulate_step(mt5-xl, interleaved pp=8, cap=1)", || {
+        let mut s = pipe_setup("mt5-xl", 1, 8, PipeSchedule::Interleaved1F1B, 1);
+        s.par = ParallelCfg::dtp(1, 1, 8);
+        let st = simulate_step(&s);
+        std::hint::black_box(st);
+    });
+    b.iter("simulate_step(mt5-xxl dp-only: degenerate closed form)", || {
+        let s = TrainSetup::dp_pod(by_name("mt5-xxl").unwrap(), 4, ZeroStage::Stage2);
+        std::hint::black_box(simulate_step(&s));
+    });
+
+    b.finish();
+}

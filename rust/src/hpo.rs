@@ -127,7 +127,7 @@ pub fn space() -> Vec<Dim> {
         d("pp_degree", vec![I(1), I(2), I(4)], 0),
         d("sp_degree", vec![I(1), I(2), I(4)], 0),
         d("ep_degree", vec![I(1), I(2), I(4), I(8)], 0),
-        d("pipe_schedule", vec![S("1f1b"), S("gpipe")], 0),
+        d("pipe_schedule", vec![S("1f1b"), S("gpipe"), S("interleaved")], 0),
         d("activation_ckpt", vec![B(true), B(false)], 0),
         d("dataloader_workers", vec![I(1), I(2), I(4), I(8)], 1),
         d("prefetch_depth", vec![I(1), I(4), I(16)], 1),
@@ -303,11 +303,7 @@ pub fn template_setup(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize
         par: ParallelCfg { dp, tp, pp, sp, ep },
         stage,
         opt,
-        sched: if g("pipe_schedule").s() == "gpipe" {
-            PipeSchedule::GPipe
-        } else {
-            PipeSchedule::OneFOneB
-        },
+        sched: PipeSchedule::parse(g("pipe_schedule").s()).expect("pipe_schedule dim value"),
         workload: Workload {
             global_batch: g("global_batch").i() as usize,
             enc_len: g("enc_len").i() as u64,
@@ -319,6 +315,7 @@ pub fn template_setup(dims: &[Dim], t: &Template, model: &ModelCfg, nodes: usize
         offload: g("cpu_offload").b(),
         grad_bucket_msgs: g("bucket_msgs").i() as usize,
         micro_batch_cap: g("micro_batch_cap").i() as usize,
+        zero3_prefetch: false,
     }
 }
 

@@ -12,6 +12,7 @@
 //!    [`model`] (mt5 zoo + FLOP/memory accounting), [`hardware`]
 //!    (A100/DGX cluster specs), [`comm`] (α–β collective cost models),
 //!    [`zero`] (ZeRO stage 0–3 memory/comm), [`parallel`] (TP/PP),
+//!    [`timeline`] (event-driven pipeline engine),
 //!    [`sim`] (step-time simulator), [`convergence`] (loss scaling laws),
 //!    [`hpo`] (funneled prune-and-combine search), [`sweep`] (parallel
 //!    trial executor + memo cache), [`planner`] (auto-parallelism search),
@@ -40,6 +41,7 @@ pub mod runtime;
 pub mod sim;
 pub mod sweep;
 pub mod testkit;
+pub mod timeline;
 pub mod train;
 pub mod util;
 pub mod xla;

@@ -88,7 +88,9 @@ fn app() -> App {
                 .opt("sp", "1", "sequence-parallel degree")
                 .opt("ep", "1", "expert-parallel degree (MoE models)")
                 .opt("batch", "768", "effective batch size")
-                .flag("no-overlap", "disable comm/compute overlap"),
+                .opt("sched", "1f1b", "pipeline schedule: 1f1b, gpipe, or interleaved")
+                .flag("no-overlap", "disable comm/compute overlap (serializes the streams)")
+                .flag("z3-prefetch", "overlap the ZeRO-3 bwd re-gather with backward compute"),
         )
         .command(Command::new("zoo", "list the model zoo with parameter accounting"))
         .command(
@@ -472,6 +474,9 @@ fn cmd_simulate(m: &Matches) -> anyhow::Result<()> {
     setup.par = scalestudy::parallel::ParallelCfg { dp: (gpus / inner).max(1), tp, pp, sp, ep };
     setup.workload.global_batch = m.get_usize("batch")?;
     setup.overlap_comm = !m.flag("no-overlap");
+    setup.zero3_prefetch = m.flag("z3-prefetch");
+    setup.sched = scalestudy::parallel::PipeSchedule::parse(m.get("sched"))
+        .ok_or_else(|| anyhow::anyhow!("sched must be 1f1b, gpipe, or interleaved"))?;
     let st = simulate_step(&setup);
     if !st.fits {
         println!("configuration does NOT fit: needs {} per GPU", human_bytes(st.mem_per_gpu));
@@ -488,8 +493,17 @@ fn cmd_simulate(m: &Matches) -> anyhow::Result<()> {
     println!("  grad-accum steps    {}", st.num_microbatches);
     println!("  compute             {}", human_time(st.compute));
     println!("  exposed comm        {}", human_time(st.exposed_comm));
+    println!("    grad/comm-stream  {}", human_time(st.exposed_grad_comm));
+    println!("    blocking/gathers  {}", human_time(st.exposed_blocking_comm));
     println!("  total comm issued   {}", human_time(st.total_comm));
-    println!("  pipeline bubble     {}", human_time(st.bubble));
+    // the timeline-measured idle, NOT the closed-form (p-1)/(m+p-1)
+    // fraction (degenerate when the micro-batch count < pipeline depth)
+    println!(
+        "  pipeline bubble     {} (measured idle frac {:.1}%, critical stage {})",
+        human_time(st.bubble),
+        100.0 * st.bubble / st.seconds_per_step(),
+        st.critical_stage
+    );
     println!("  optimizer           {}", human_time(st.optimizer));
     println!("  input stall         {}", human_time(st.stall));
     println!("  memory per GPU      {}", human_bytes(st.mem_per_gpu));

@@ -126,6 +126,22 @@ impl ModelCfg {
         self.params() - self.embed_params()
     }
 
+    /// Non-embedding parameters *active per token*: for MoE models only
+    /// `top_k` of each layer's `experts` routed FFNs run, so the inactive
+    /// `(experts − top_k)` expert FFNs per MoE layer are excluded.  Equal
+    /// to [`ModelCfg::params_nonembed`] for dense models.  This is the
+    /// compute-side N the sparse scaling law keys on
+    /// ([`crate::convergence::LossModel::for_model`]).
+    pub fn active_params_nonembed(&self) -> u64 {
+        if !self.is_moe() {
+            return self.params_nonembed();
+        }
+        let inactive = (self.moe_enc_layers() + self.moe_dec_layers())
+            * (self.experts - self.top_k)
+            * self.ffn_weight_params();
+        self.params_nonembed() - inactive
+    }
+
     /// Training FLOPs for one sample of (enc_len, dec_len) tokens:
     /// forward + backward ≈ 3 × forward; forward counts every matmul
     /// (projections, attention scores, FFN, logits) at 2 flops per MAC.
@@ -365,6 +381,29 @@ mod tests {
             // dense models have no expert slice
             assert_eq!(dense.expert_params(), 0);
             assert_eq!(dense.dense_params(), dense.params());
+        }
+    }
+
+    /// Active parameters: dense models are the identity; MoE models keep
+    /// the dense trunk plus top_k of each expert bank.
+    #[test]
+    fn active_params_between_dense_trunk_and_total() {
+        for m in mt5_zoo() {
+            assert_eq!(m.active_params_nonembed(), m.params_nonembed());
+        }
+        for m in moe_zoo() {
+            let active = m.active_params_nonembed();
+            assert!(active < m.params_nonembed(), "{}: inactive experts excluded", m.name);
+            let trunk = m.dense_params() - m.embed_params();
+            assert!(active > trunk / 2, "{}: active must include the trunk", m.name);
+            // exactly top_k of experts FFNs per MoE layer stay active
+            let expect = m.params_nonembed()
+                - (m.moe_enc_layers() + m.moe_dec_layers())
+                    * (m.experts - m.top_k)
+                    * 3
+                    * m.d_model
+                    * m.d_ff;
+            assert_eq!(active, expect);
         }
     }
 

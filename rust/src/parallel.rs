@@ -114,9 +114,35 @@ fn divisors(n: usize) -> Vec<usize> {
 pub enum PipeSchedule {
     GPipe,
     OneFOneB,
+    /// Megatron-style interleaved 1F1B: each rank hosts
+    /// [`INTERLEAVE_DEGREE`] virtual stages (model chunks), shrinking the
+    /// warmup/cooldown bubble by that factor at the cost of
+    /// `INTERLEAVE_DEGREE`× the p2p crossings and a deeper in-flight
+    /// window (≈ 2·pp live micro-batches instead of pp).
+    Interleaved1F1B,
 }
 
-/// Bubble fraction of a step: share of time stages sit idle.
+impl PipeSchedule {
+    /// The one place schedule names are parsed (CLI `--sched`, the HPO
+    /// `pipe_schedule` dimension) — `None` for anything unrecognized, so
+    /// callers decide between erroring and defaulting explicitly.
+    pub fn parse(name: &str) -> Option<PipeSchedule> {
+        match name {
+            "1f1b" => Some(PipeSchedule::OneFOneB),
+            "gpipe" => Some(PipeSchedule::GPipe),
+            "interleaved" | "intl" => Some(PipeSchedule::Interleaved1F1B),
+            _ => None,
+        }
+    }
+}
+
+/// Virtual stages (model chunks) per rank under
+/// [`PipeSchedule::Interleaved1F1B`].
+pub const INTERLEAVE_DEGREE: usize = 2;
+
+/// Bubble fraction of a step: share of time stages sit idle (the plain
+/// GPipe/1F1B fraction; see [`bubble_fraction_sched`] for the
+/// schedule-aware form).
 pub fn bubble_fraction(p: usize, microbatches: usize) -> f64 {
     if p <= 1 {
         return 0.0;
@@ -126,11 +152,34 @@ pub fn bubble_fraction(p: usize, microbatches: usize) -> f64 {
     (pf - 1.0) / (mf + pf - 1.0)
 }
 
+/// Schedule-aware bubble fraction: interleaving divides the warmup term
+/// by [`INTERLEAVE_DEGREE`] (Narayanan et al. 2021).  Used only by the
+/// closed-form reference; the production path measures idle from the
+/// event timeline ([`crate::timeline`]).
+pub fn bubble_fraction_sched(sched: PipeSchedule, p: usize, microbatches: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    let mf = microbatches.max(1) as f64;
+    match sched {
+        PipeSchedule::Interleaved1F1B => {
+            (pf - 1.0) / (INTERLEAVE_DEGREE as f64 * mf + pf - 1.0)
+        }
+        _ => (pf - 1.0) / (mf + pf - 1.0),
+    }
+}
+
 /// Live microbatches whose activations are simultaneously resident.
+/// Interleaved-1F1B's chunk-major warmup keeps up to 2·p micro-batches in
+/// flight (the schedule's documented memory cost; the timeline engine's
+/// measured peak never exceeds this — property-tested in
+/// [`crate::timeline`]).
 pub fn live_microbatches(sched: PipeSchedule, p: usize, microbatches: usize) -> usize {
     match sched {
         PipeSchedule::GPipe => microbatches,
         PipeSchedule::OneFOneB => microbatches.min(p),
+        PipeSchedule::Interleaved1F1B => microbatches.min(2 * p),
     }
 }
 
@@ -154,6 +203,10 @@ pub fn min_live_multiplier(sched: PipeSchedule, p: usize, samples_per_rank: usiz
     }
     match sched {
         PipeSchedule::OneFOneB => p.min(spr),
+        // same argument as 1F1B with the live cap at 2p: the `2p` branch
+        // gives mb·2p ≥ 2p, the ceil branch gives mb·ceil(spr/mb) ≥ spr;
+        // mb = 1 attains min(2p, spr)
+        PipeSchedule::Interleaved1F1B => (2 * p).min(spr),
         PipeSchedule::GPipe => spr,
     }
 }
@@ -247,6 +300,31 @@ pub fn ep_comm_time(
             * comm.alltoall(dec_bytes, ep_nodes, ep_gpus_per_node)
 }
 
+/// Seconds for ONE stage-boundary crossing of a micro-batch's cut-layer
+/// activations (or the returning gradients — same bytes).  The single
+/// source of the p2p transfer model: [`pp_p2p_time`] multiplies it by
+/// the plain-schedule crossing count and the timeline engine
+/// ([`crate::timeline`]) uses it as the dependency-edge delay.
+pub fn pp_hop_time(
+    model: &ModelCfg,
+    comm: &CommModel,
+    micro_batch: usize,
+    enc_len: u64,
+    dec_len: u64,
+    crosses_nodes: bool,
+) -> f64 {
+    let bytes = micro_batch as f64
+        * (enc_len + dec_len) as f64
+        * 2.0
+        * model.d_model as f64;
+    let (bw, lat) = if crosses_nodes {
+        (comm.cluster.ib_bw, comm.cluster.ib_latency)
+    } else {
+        (comm.cluster.node.nvlink_bw, comm.cluster.node.nvlink_latency)
+    };
+    lat + bytes / bw
+}
+
 /// Pipeline point-to-point time per microbatch: activations of the cut
 /// layer cross between adjacent stages (fwd) and gradients return (bwd).
 pub fn pp_p2p_time(
@@ -261,17 +339,9 @@ pub fn pp_p2p_time(
     if pp <= 1 {
         return 0.0;
     }
-    let bytes = micro_batch as f64
-        * (enc_len + dec_len) as f64
-        * 2.0
-        * model.d_model as f64;
-    let (bw, lat) = if crosses_nodes {
-        (comm.cluster.ib_bw, comm.cluster.ib_latency)
-    } else {
-        (comm.cluster.node.nvlink_bw, comm.cluster.node.nvlink_latency)
-    };
     // fwd + bwd transfer per stage boundary
-    2.0 * (pp as f64 - 1.0) * (lat + bytes / bw)
+    2.0 * (pp as f64 - 1.0)
+        * pp_hop_time(model, comm, micro_batch, enc_len, dec_len, crosses_nodes)
 }
 
 #[cfg(test)]
@@ -308,6 +378,28 @@ mod tests {
         assert_eq!(live_microbatches(PipeSchedule::GPipe, 4, 16), 16);
         assert_eq!(live_microbatches(PipeSchedule::OneFOneB, 4, 16), 4);
         assert_eq!(live_microbatches(PipeSchedule::OneFOneB, 8, 2), 2);
+        // interleaving's deeper window: 2p, still bounded by m
+        assert_eq!(live_microbatches(PipeSchedule::Interleaved1F1B, 4, 16), 8);
+        assert_eq!(live_microbatches(PipeSchedule::Interleaved1F1B, 4, 3), 3);
+    }
+
+    #[test]
+    fn pipe_schedule_parse_is_the_single_source() {
+        assert_eq!(PipeSchedule::parse("1f1b"), Some(PipeSchedule::OneFOneB));
+        assert_eq!(PipeSchedule::parse("gpipe"), Some(PipeSchedule::GPipe));
+        assert_eq!(PipeSchedule::parse("interleaved"), Some(PipeSchedule::Interleaved1F1B));
+        assert_eq!(PipeSchedule::parse("intl"), Some(PipeSchedule::Interleaved1F1B));
+        assert_eq!(PipeSchedule::parse("interlaved"), None, "typos must not default");
+    }
+
+    #[test]
+    fn interleaved_bubble_fraction_shrinks() {
+        let plain = bubble_fraction_sched(PipeSchedule::OneFOneB, 4, 8);
+        let intl = bubble_fraction_sched(PipeSchedule::Interleaved1F1B, 4, 8);
+        assert!((plain - bubble_fraction(4, 8)).abs() < 1e-15);
+        assert!(intl < plain);
+        assert!((intl - 3.0 / 19.0).abs() < 1e-12);
+        assert_eq!(bubble_fraction_sched(PipeSchedule::Interleaved1F1B, 1, 8), 0.0);
     }
 
     /// `min_live_multiplier` is a true lower bound on the activation
@@ -316,7 +408,11 @@ mod tests {
     fn prop_min_live_multiplier_is_lower_bound() {
         let gen = PairOf(UsizeIn { lo: 1, hi: 12 }, UsizeIn { lo: 1, hi: 200 });
         forall(&gen, |&(p, spr)| {
-            for sched in [PipeSchedule::OneFOneB, PipeSchedule::GPipe] {
+            for sched in [
+                PipeSchedule::OneFOneB,
+                PipeSchedule::GPipe,
+                PipeSchedule::Interleaved1F1B,
+            ] {
                 let lb = min_live_multiplier(sched, p, spr);
                 for mb in 1..=spr {
                     let m = (spr + mb - 1) / mb;

@@ -63,8 +63,11 @@ pub struct PlanSpace {
     pub offload: Vec<bool>,
     /// Per-GPU micro-batch caps to try; 0 = auto (largest fit).
     pub micro_batch_caps: Vec<usize>,
-    /// Pipeline schedules to try (1F1B bounds live activations; GPipe
-    /// keeps every micro-batch resident but has the same bubble).
+    /// Pipeline schedules to try: 1F1B bounds live activations, GPipe
+    /// keeps every micro-batch resident, and interleaved-1F1B splits each
+    /// stage into virtual chunks — a smaller measured bubble for a deeper
+    /// in-flight window and more p2p crossings (priced by the timeline
+    /// engine, [`crate::timeline`]).
     pub schedules: Vec<PipeSchedule>,
     /// Candidate node counts: the planner may recommend running on a
     /// *subset* of the queried cluster — the paper's own Table 1 shows 4
@@ -93,7 +96,11 @@ impl Default for PlanSpace {
             optimizers: vec![OptimizerKind::AdamW, OptimizerKind::Adafactor],
             offload: vec![false, true],
             micro_batch_caps: vec![0, 1, 2, 4, 8, 16, 32],
-            schedules: vec![PipeSchedule::OneFOneB, PipeSchedule::GPipe],
+            schedules: vec![
+                PipeSchedule::OneFOneB,
+                PipeSchedule::GPipe,
+                PipeSchedule::Interleaved1F1B,
+            ],
             nodes: vec![1, 2, 4, 8],
             max_tp: 8,
             max_pp: 8,
@@ -148,7 +155,11 @@ impl PlanPoint {
             s.stage.index(),
             s.opt.name(),
             if s.offload { " +offload" } else { "" },
-            if s.sched == PipeSchedule::GPipe { " gpipe" } else { "" },
+            match s.sched {
+                PipeSchedule::GPipe => " gpipe",
+                PipeSchedule::Interleaved1F1B => " intl",
+                PipeSchedule::OneFOneB => "",
+            },
             if s.micro_batch_cap > 0 {
                 format!(" cap={}", s.micro_batch_cap)
             } else {
@@ -265,6 +276,7 @@ fn enumerate_branches(
                                     offload,
                                     grad_bucket_msgs: 25,
                                     micro_batch_cap: cap,
+                                    zero3_prefetch: false,
                                 })
                                 .collect();
                             // one fit search yields both bounds per child

@@ -5,26 +5,43 @@
 //! ("(1) Seconds per step, which we use to project an expected time to
 //! train").
 //!
-//! Mechanics mirror DeepSpeed's execution:
-//! * per-GPU micro-batch chosen as the largest that fits HBM next to the
-//!   ZeRO-partitioned states (gradient accumulation supplies the rest of
-//!   the fixed *effective batch size*);
-//! * ZeRO 0/1: gradients accumulate locally, one reduce(-scatter) per
-//!   step; ZeRO 2: gradients are partitioned, so every micro-batch pays a
-//!   reduce-scatter; ZeRO 3 additionally re-all-gathers fp16 parameters in
-//!   forward *and* backward of every micro-batch;
-//! * gradient reduction overlaps backward compute (DeepSpeed bucketing);
-//!   ZeRO-3 gathers are modelled as exposed (prefetch in the paper's
-//!   DeepSpeed version hid little of it — see DESIGN.md §7);
-//! * the input pipeline is a shared front-end ([`ClusterSpec::storage_samples_per_s`])
-//!   with per-node worker parallelism; un-hidden loading time appears as
-//!   `stall` (the paper: "the lack of parallelism in dataloaders ... may
-//!   cause slow down in training speed when scaling to multiple nodes").
+//! Since PR 4 the core is the **event-driven pipeline timeline engine**
+//! ([`crate::timeline`]): every (stage, micro-batch, fwd/bwd) task of the
+//! chosen schedule — GPipe, 1F1B, or interleaved-1F1B — is scheduled on
+//! per-stage compute/comm streams, p2p transfers delay dependency edges,
+//! and the overlappable communication classes drain against backward
+//! compute on the comm stream.  The pipeline bubble and the exposed
+//! communication are **measured from the event timeline**, not assumed
+//! from the scalar `(p-1)/(m+p-1)` fraction and the
+//! `overlappable − backward·0.85` heuristic the closed form used.
+//!
+//! Communication classes (shared by the engine, the closed-form test
+//! reference, and the planner bounds through one [`comm_classes`] split):
+//!
+//! * **comm stream (overlappable)** — ZeRO bucketed gradient
+//!   reduce-scatter/all-reduce, the backward halves of the SP ring pairs
+//!   and MoE all-to-all, the SP replicated-gradient all-reduce, and —
+//!   with [`TrainSetup::zero3_prefetch`] — the ZeRO-3 backward re-gather;
+//! * **blocking (inside compute tasks)** — Megatron TP all-reduces, the
+//!   forward halves of SP ring and MoE all-to-all, the ZeRO-3 forward
+//!   gather, and (paper-era default) the ZeRO-3 backward re-gather, which
+//!   the paper's DeepSpeed version issued synchronously at the layer
+//!   boundary (DESIGN.md §7 — prefetch "hid little of it");
+//! * **post-step** — the ZeRO-1/2 parameter all-gather after the
+//!   optimizer update, always exposed;
+//! * **p2p** — stage-boundary activation/gradient transfers, charged as
+//!   dependency-edge delays (they surface as measured bubble).
+//!
+//! For `pp == 1` and for `overlap_comm == false` the engine degenerates
+//! to the scalar closed form exactly (bit-identical through shared
+//! expressions; asserted in the tests), so the paper's Table-1 cells are
+//! unchanged by the refactor.
 
 use crate::comm::CommModel;
 use crate::hardware::ClusterSpec;
 use crate::model::ModelCfg;
-use crate::parallel::{self, ParallelCfg, PipeSchedule};
+use crate::parallel::{self, ParallelCfg, PipeSchedule, INTERLEAVE_DEGREE};
+use crate::timeline::{self, OVERLAP_EFFICIENCY};
 use crate::zero::{self, OptimizerKind, ZeroStage};
 
 /// Workload: what one optimization step must process.
@@ -59,7 +76,8 @@ pub struct TrainSetup {
     /// Per-node dataloader worker processes (1 = the serial loader the
     /// paper suspects; more workers raise the per-node ingest ceiling).
     pub dataloader_workers: usize,
-    /// Overlap gradient reduction with backward compute.
+    /// Overlap gradient reduction with backward compute.  `false`
+    /// serializes the compute and comm streams in the timeline engine.
     pub overlap_comm: bool,
     /// ZeRO CPU offload of optimizer states (stage >= 1).
     pub offload: bool,
@@ -72,6 +90,12 @@ pub struct TrainSetup {
     /// fits HBM).  The HPO space sweeps this and the planner uses it to
     /// trade activation memory against gradient-accumulation overhead.
     pub micro_batch_cap: usize,
+    /// Modern ZeRO-3 prefetch: ride the backward parameter re-gather on
+    /// the comm stream (overlapping backward compute) instead of the
+    /// paper-era synchronous layer-boundary gather.  Off by default —
+    /// the reproduced DeepSpeed version exposed it (DESIGN.md §7) — and
+    /// the engine makes flipping it on strictly helpful (tested).
+    pub zero3_prefetch: bool,
 }
 
 impl TrainSetup {
@@ -92,6 +116,7 @@ impl TrainSetup {
             offload: false,
             grad_bucket_msgs: 25,
             micro_batch_cap: 0,
+            zero3_prefetch: false,
         }
     }
 }
@@ -176,11 +201,14 @@ pub struct StepTime {
     pub num_microbatches: usize,
     /// Pure compute (fwd+bwd(+recompute)) seconds.
     pub compute: f64,
-    /// Communication seconds that could not hide behind compute.
+    /// Communication seconds that could not hide behind compute
+    /// (= `exposed_grad_comm + exposed_blocking_comm`).
     pub exposed_comm: f64,
-    /// Total communication seconds issued (incl. the hidden part).
+    /// Total communication seconds issued (incl. the hidden part and the
+    /// p2p edge transfers).
     pub total_comm: f64,
-    /// Pipeline bubble seconds.
+    /// Pipeline bubble seconds — measured idle time of the critical stage
+    /// in the event timeline (not the scalar fraction).
     pub bubble: f64,
     /// Optimizer update + (optional) offload traffic seconds.
     pub optimizer: f64,
@@ -190,6 +218,17 @@ pub struct StepTime {
     pub mem_per_gpu: f64,
     /// Whether the configuration fits HBM at all.
     pub fits: bool,
+    /// Exposed share of the comm-stream (gradient/re-gather) classes on
+    /// the critical stage.
+    pub exposed_grad_comm: f64,
+    /// Exposed blocking collectives (TP / forward halves / ZeRO-3 gathers
+    /// / post-step all-gather) on the critical stage.
+    pub exposed_blocking_comm: f64,
+    /// p2p seconds issued per rank (edge transfers; they surface as
+    /// bubble, never as exposed comm).
+    pub p2p_comm: f64,
+    /// Pipeline stage whose finish time set the step's critical path.
+    pub critical_stage: usize,
 }
 
 impl StepTime {
@@ -215,6 +254,10 @@ impl StepTime {
             stall: 0.0,
             mem_per_gpu: mem_needed,
             fits: false,
+            exposed_grad_comm: 0.0,
+            exposed_blocking_comm: 0.0,
+            p2p_comm: 0.0,
+            critical_stage: 0,
         }
     }
 }
@@ -224,18 +267,181 @@ impl StepTime {
 /// selective checkpointing measurements).
 const CKPT_COMPUTE_FACTOR: f64 = 1.10;
 const CKPT_MEMORY_FACTOR: f64 = 0.25;
-/// Fraction of backward-phase compute usable to hide overlappable comm.
-const OVERLAP_EFFICIENCY: f64 = 0.85;
 
-/// Price one training step.
+/// The per-step communication volumes split into the timeline engine's
+/// classes — ONE function shared by [`simulate_step`], the closed-form
+/// test reference, and [`lower_bounds`], so the three can never disagree
+/// on what is overlappable.
+struct CommClasses {
+    /// Blocking comm inside each micro-batch's forward task (per-stage
+    /// layer share for TP/SP/EP; full per-rank bytes for ZeRO-3 gathers).
+    blocking_fwd_micro: f64,
+    /// Blocking comm inside each micro-batch's backward task.
+    blocking_bwd_micro: f64,
+    /// Comm-stream seconds enqueued at each micro-batch's backward.
+    ovl_micro: f64,
+    /// Comm-stream seconds streamed across the whole backward phase.
+    ovl_step: f64,
+    /// Post-step parameter all-gather (ZeRO-1/2), always exposed.
+    post_ag: f64,
+    /// p2p seconds per stage-boundary crossing.
+    hop: f64,
+    /// p2p seconds issued per rank per step (schedule-aware crossing
+    /// count: interleaving multiplies the boundaries).
+    p2p_total: f64,
+    /// Every communication second issued per rank per step.
+    total_comm: f64,
+}
+
+fn comm_classes(
+    setup: &TrainSetup,
+    comm: &CommModel,
+    psi: f64,
+    micro_batch: usize,
+    num_micro: usize,
+) -> CommClasses {
+    let m = &setup.model;
+    let w = &setup.workload;
+    let cluster = &comm.cluster;
+    let (tp, pp, sp, ep, dp) =
+        (setup.par.tp, setup.par.pp, setup.par.sp, setup.par.ep, setup.par.dp);
+    let (dp_nodes, dp_gpn) = group_placement(cluster, tp * sp * ep, dp);
+    let fp16 = 2.0 * psi;
+    let layers = (m.enc_layers + m.dec_layers) as usize;
+    let buckets = setup.grad_bucket_msgs.max(1);
+    let price = |collective: crate::comm::Collective, bytes: f64, msgs: usize| -> f64 {
+        let per = bytes / msgs.max(1) as f64;
+        msgs as f64 * comm.time(collective, per, dp_nodes, dp_gpn)
+    };
+    use crate::comm::Collective::*;
+    let mut ovl_step = 0.0;
+    let mut ovl_micro = 0.0;
+    let mut post_ag = 0.0;
+    let mut ag3_fwd_micro = 0.0;
+    let mut ag3_bwd_micro = 0.0;
+    match setup.stage {
+        ZeroStage::Stage0 => {
+            // one bucketed all-reduce per step, streamed across backward
+            ovl_step += price(AllReduce, fp16, buckets);
+        }
+        ZeroStage::Stage1 => {
+            ovl_step += price(ReduceScatter, fp16, buckets);
+            post_ag += price(AllGather, fp16, buckets);
+        }
+        ZeroStage::Stage2 => {
+            // partitioned gradients: reduce-scatter per micro-batch
+            ovl_micro += price(ReduceScatter, fp16, buckets);
+            post_ag += price(AllGather, fp16, buckets);
+        }
+        ZeroStage::Stage3 => {
+            ovl_micro += price(ReduceScatter, fp16, layers);
+            if setup.zero3_prefetch {
+                // modern prefetch: the bwd re-gather rides the comm stream
+                ovl_micro += price(AllGather, fp16, layers);
+            } else {
+                // paper-era DeepSpeed: gathers block at the layer boundary
+                ag3_bwd_micro += price(AllGather, fp16, layers);
+            }
+            ag3_fwd_micro += price(AllGather, fp16, layers);
+        }
+    }
+    // sp ranks replicate every weight: their gradients average across the
+    // sp group once per step (bucketed, NVLink, comm stream)
+    if sp > 1 {
+        let per = fp16 / buckets as f64;
+        ovl_step += buckets as f64
+            * crate::comm::ring::allreduce(
+                per,
+                sp,
+                cluster.node.nvlink_bw,
+                cluster.node.nvlink_latency,
+            );
+    }
+    let tpc = parallel::tp_comm_time(m, comm, tp, micro_batch, w.enc_len, w.dec_len);
+    let spc = parallel::sp_comm_time(m, comm, sp, micro_batch, w.enc_len, w.dec_len);
+    let (ep_nodes, ep_gpn) = group_placement(cluster, tp * sp, ep);
+    let epc = parallel::ep_comm_time(
+        m,
+        comm,
+        ep,
+        ep_nodes,
+        ep_gpn,
+        micro_batch,
+        w.enc_len,
+        w.dec_len,
+    );
+    // a stage runs 1/pp of the layers, so it pays 1/pp of the per-layer
+    // activation collectives; forward halves block forward, TP's backward
+    // half blocks backward, SP/EP backward halves ride the comm stream
+    let ppf = pp as f64;
+    let blocking_fwd_micro = (0.5 * tpc + 0.5 * spc + 0.5 * epc) / ppf + ag3_fwd_micro;
+    let blocking_bwd_micro = 0.5 * tpc / ppf + ag3_bwd_micro;
+    ovl_micro += (0.5 * spc + 0.5 * epc) / ppf;
+    let (hop, p2p_total) = if pp > 1 {
+        let crosses = cluster.nodes > 1;
+        let hop =
+            parallel::pp_hop_time(m, comm, micro_batch, w.enc_len, w.dec_len, crosses);
+        let crossings = if setup.sched == PipeSchedule::Interleaved1F1B {
+            2.0 * (INTERLEAVE_DEGREE * pp - 1) as f64
+        } else {
+            2.0 * (pp - 1) as f64
+        };
+        (hop, crossings * hop * num_micro as f64)
+    } else {
+        (0.0, 0.0)
+    };
+    let nmf = num_micro as f64;
+    let total_comm = ovl_step
+        + ovl_micro * nmf
+        + post_ag
+        + (blocking_fwd_micro + blocking_bwd_micro) * nmf
+        + p2p_total;
+    CommClasses {
+        blocking_fwd_micro,
+        blocking_bwd_micro,
+        ovl_micro,
+        ovl_step,
+        post_ag,
+        hop,
+        p2p_total,
+        total_comm,
+    }
+}
+
+/// The single-stage (pp = 1) closed-form exposure: the serial chain has
+/// no idle gaps, so the comm stream hides exactly
+/// `min(overlappable, backward · OVERLAP_EFFICIENCY)` — the expressions
+/// the engine provably collapses to.  Returns `(exposed_grad, blocking)`.
+fn scalar_exposure(cc: &CommClasses, num_micro: usize, bwd_total: f64, overlap: bool) -> (f64, f64) {
+    let nmf = num_micro as f64;
+    let blocking = (cc.blocking_fwd_micro + cc.blocking_bwd_micro) * nmf;
+    let ovl = cc.ovl_step + cc.ovl_micro * nmf;
+    let eg = if overlap { ovl - (bwd_total * OVERLAP_EFFICIENCY).min(ovl) } else { ovl };
+    (eg, blocking)
+}
+
+/// Price one training step through the timeline engine (the scalar path
+/// for the degenerate single-stage pipeline, where they coincide).
 pub fn simulate_step(setup: &TrainSetup) -> StepTime {
+    simulate_with(setup, true)
+}
+
+/// The kept closed-form path: scalar overlap heuristic + schedule-aware
+/// bubble fraction.  Bit-identical to [`simulate_step`] for pp = 1 (both
+/// evaluate [`scalar_exposure`] on the same [`comm_classes`]); the
+/// reference the timeline is property-tested against elsewhere.
+#[cfg(test)]
+fn simulate_step_reference(setup: &TrainSetup) -> StepTime {
+    simulate_with(setup, false)
+}
+
+fn simulate_with(setup: &TrainSetup, use_engine: bool) -> StepTime {
     let m = &setup.model;
     let w = &setup.workload;
     // a mixed-generation cluster runs a synchronous step at the pace of
     // its slowest participant: price against the limiting view (the
-    // identity for homogeneous pods, so dense/homogeneous results are
-    // bit-identical to the pre-heterogeneity simulator); collapsed once,
-    // shared with the comm model by borrow
+    // identity for homogeneous pods); collapsed once, shared with the
+    // comm model by borrow
     let comm = CommModel::from_view(setup.cluster.limiting_view());
     let cluster = &comm.cluster;
     let par = setup.par;
@@ -246,14 +452,12 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
     );
 
     // ---------------- placement: TP and SP inside a node, PP across node
-    // groups, EP over tp·sp blocks, DP over the rest.  The DP process
-    // group spans `dp_nodes` nodes with `dp_gpus_per_node` ranks per node.
+    // groups, EP over tp·sp blocks, DP over the rest.
     let tp = par.tp;
     let pp = par.pp;
     let sp = par.sp;
     let ep = par.ep;
     let dp = par.dp;
-    let (dp_nodes, dp_gpus_per_node) = group_placement(cluster, tp * sp * ep, dp);
 
     // ---------------- memory fit: choose the largest micro-batch.
     // tp/pp shard every weight; ep additionally shards the expert FFNs;
@@ -294,116 +498,41 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
     let ckpt_factor = if w.ckpt { CKPT_COMPUTE_FACTOR } else { 1.0 };
     // sp ranks each process 1/sp of every sample's tokens
     let sustained = cluster.node.gpu.sustained_flops() * (tp * pp * sp) as f64;
-    // charge compute for the actual samples (the last micro-batch may be
-    // partial); the per-micro figure is only used for bubble accounting
     let compute = flops_per_sample * samples_per_rank as f64 * ckpt_factor / sustained;
-    let backward_compute = compute * 2.0 / 3.0;
+    let fwd_total = compute / 3.0;
+    let bwd_total = compute * 2.0 / 3.0;
 
-    // ---------------- ZeRO communication over the DP group
-    let fp16 = 2.0 * psi;
-    let layers = (m.enc_layers + m.dec_layers) as usize;
-    let mut total_comm = 0.0;
-    let mut overlappable = 0.0;
-    let mut exposed_always = 0.0;
-    let price = |collective: crate::comm::Collective, bytes: f64, msgs: usize| -> f64 {
-        let per = bytes / msgs.max(1) as f64;
-        msgs as f64 * comm.time(collective, per, dp_nodes, dp_gpus_per_node)
-    };
-    use crate::comm::Collective::*;
-    let buckets = setup.grad_bucket_msgs.max(1);
-    match setup.stage {
-        ZeroStage::Stage0 => {
-            // one bucketed all-reduce per step, overlaps backward
-            let t = price(AllReduce, fp16, buckets);
-            total_comm += t;
-            overlappable += t;
-        }
-        ZeroStage::Stage1 => {
-            let t_rs = price(ReduceScatter, fp16, buckets);
-            let t_ag = price(AllGather, fp16, buckets);
-            total_comm += t_rs + t_ag;
-            overlappable += t_rs;
-            exposed_always += t_ag; // post-step param gather blocks
-        }
-        ZeroStage::Stage2 => {
-            // partitioned gradients: reduce-scatter per micro-batch
-            let t_rs = price(ReduceScatter, fp16, buckets) * num_micro as f64;
-            let t_ag = price(AllGather, fp16, buckets);
-            total_comm += t_rs + t_ag;
-            overlappable += t_rs;
-            exposed_always += t_ag;
-        }
-        ZeroStage::Stage3 => {
-            // parameter gathers in fwd + bwd of every micro-batch, plus
-            // per-micro-batch reduce-scatter; the paper-era DeepSpeed
-            // exposed most of the gather time (see DESIGN.md §7)
-            let t_ag = price(AllGather, fp16, layers) * num_micro as f64;
-            let t_rs = price(ReduceScatter, fp16, layers) * num_micro as f64;
-            total_comm += 2.0 * t_ag + t_rs;
-            overlappable += t_rs;
-            exposed_always += 2.0 * t_ag;
-        }
-    }
-    // sp ranks replicate every weight: their gradients average across the
-    // sp group once per step (bucketed, NVLink, overlaps backward — same
-    // shape as the stage-0 reduction)
-    if sp > 1 {
-        let per = fp16 / buckets as f64;
-        let t = buckets as f64
-            * crate::comm::ring::allreduce(
-                per,
-                sp,
-                cluster.node.nvlink_bw,
-                cluster.node.nvlink_latency,
-            );
-        total_comm += t;
-        overlappable += t;
-    }
-
-    // ---------------- tensor/sequence/expert/pipeline parallel comm
-    let tp_comm = parallel::tp_comm_time(m, &comm, tp, micro_batch, w.enc_len, w.dec_len)
-        * num_micro as f64;
-    let sp_comm = parallel::sp_comm_time(m, &comm, sp, micro_batch, w.enc_len, w.dec_len)
-        * num_micro as f64;
-    let (ep_nodes, ep_gpn) = group_placement(cluster, tp * sp, ep);
-    let ep_comm = parallel::ep_comm_time(
-        m,
-        &comm,
-        ep,
-        ep_nodes,
-        ep_gpn,
-        micro_batch,
-        w.enc_len,
-        w.dec_len,
-    ) * num_micro as f64;
-    let pp_comm = parallel::pp_p2p_time(
-        m,
-        &comm,
-        pp,
-        micro_batch,
-        w.enc_len,
-        w.dec_len,
-        pp > 1 && cluster.nodes > 1,
-    ) * num_micro as f64;
-    total_comm += tp_comm + sp_comm + ep_comm + pp_comm;
-    // blocking in Megatron-style TP/SP; MoE dispatch gates the expert FFN
-    exposed_always += tp_comm + sp_comm + ep_comm + pp_comm;
-
-    // ---------------- overlap accounting
-    let exposed_comm = if setup.overlap_comm {
-        let hidden = (backward_compute * OVERLAP_EFFICIENCY).min(overlappable);
-        exposed_always + (overlappable - hidden)
+    // ---------------- communication classes + the timeline
+    let cc = comm_classes(setup, &comm, psi, micro_batch, num_micro);
+    let (exposed_grad, engine_blocking, bubble, critical_stage) = if pp <= 1 {
+        // degenerate single-stage pipeline: the engine provably collapses
+        // to the closed form — evaluate it directly (bit-exact)
+        let (eg, eb) = scalar_exposure(&cc, num_micro, bwd_total, setup.overlap_comm);
+        (eg, eb, 0.0, 0usize)
+    } else if use_engine {
+        let out = timeline::simulate_pipeline(&timeline::PipeInputs {
+            sched: setup.sched,
+            pp,
+            num_micro,
+            fwd_total,
+            bwd_total,
+            blocking_fwd_micro: cc.blocking_fwd_micro,
+            blocking_bwd_micro: cc.blocking_bwd_micro,
+            ovl_micro: cc.ovl_micro,
+            ovl_step: cc.ovl_step,
+            hop: cc.hop,
+            overlap: setup.overlap_comm,
+        });
+        (out.exposed_grad, out.exposed_blocking, out.bubble, out.critical_stage)
     } else {
-        exposed_always + overlappable
+        // the closed-form reference: scalar overlap + formula bubble
+        let (eg, eb) = scalar_exposure(&cc, num_micro, bwd_total, setup.overlap_comm);
+        let frac = parallel::bubble_fraction_sched(setup.sched, pp, num_micro);
+        let bubble = (compute + eb) * frac / (1.0 - frac);
+        (eg, eb, bubble, 0usize)
     };
-
-    // ---------------- pipeline bubble
-    let bubble_frac = parallel::bubble_fraction(pp, num_micro);
-    let bubble = if pp > 1 {
-        (compute + tp_comm + sp_comm) * bubble_frac / (1.0 - bubble_frac)
-    } else {
-        0.0
-    };
+    let exposed_blocking = engine_blocking + cc.post_ag;
+    let exposed_comm = exposed_grad + exposed_blocking;
 
     // ---------------- optimizer update
     let shard = psi / dp.max(1) as f64;
@@ -434,20 +563,25 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
         num_microbatches: num_micro,
         compute,
         exposed_comm,
-        total_comm,
+        total_comm: cc.total_comm,
         bubble,
         optimizer,
         stall,
         mem_per_gpu,
         fits: true,
+        exposed_grad_comm: exposed_grad,
+        exposed_blocking_comm: exposed_blocking,
+        p2p_comm: cc.p2p_total,
+        critical_stage,
     }
 }
 
 /// Relative slack applied to the lower bound's communication and
 /// input-pipeline floor terms.  Those floors are algebraic rearrangements
 /// of the simulator's sums (e.g. `Σ mb·num_micro ≥ samples_per_rank`
-/// collapsed into one volume term), so they can land within a few ulps of
-/// the true value with the opposite rounding; a 1e-9 relative margin is
+/// collapsed into one volume term, and the engine's per-task accumulation
+/// replayed as aggregates), so they can land within a few ulps of the
+/// true value with the opposite rounding; a 1e-9 relative margin is
 /// ~10⁷ ulps — far beyond any accumulated float error — while costing the
 /// bound nothing measurable.  The compute and optimizer terms mirror the
 /// simulator expression-for-expression and need no slack.
@@ -456,34 +590,37 @@ const BOUND_FLOOR_SLACK: f64 = 1.0 - 1e-9;
 /// Cheap, provably-optimistic lower bound on
 /// `simulate_step(setup).seconds_per_step()` — the branch-and-bound
 /// pruning bound for [`crate::planner`] and the longest-first cost key
-/// for [`crate::sweep::Sweep::map_chunked`].
+/// for [`crate::sweep::Sweep::map_chunked`], re-proved against the
+/// timeline engine.
 ///
-/// The bound is **micro-batch-cap aware** (ROADMAP "bound tightening"):
-/// it runs the simulator's own memory-fit search ([`fit_micro_batch`],
-/// identical float expressions), so the micro-batch and accumulation
-/// count it prices are the *exact* values the simulator will choose, not
-/// a conservative floor.  On top of the exact fit it sums:
+/// The bound is **micro-batch-cap aware**: it runs the simulator's own
+/// memory-fit search ([`fit_micro_batch`], identical float expressions),
+/// so the micro-batch and accumulation count it prices are the *exact*
+/// values the simulator will choose.  On top of the exact fit it sums:
 ///
-/// * the pure-compute roofline (identical expression to the simulator's
-///   `compute` term, so it holds bit-for-bit);
+/// * the pure-compute roofline (identical expression, holds bit-for-bit
+///   — every stage computes the full per-rank total, so the critical
+///   stage's wall time can never undercut it);
 /// * the exact optimizer-update time (micro-batch independent);
-/// * always-exposed communication: the ZeRO-1/2 post-step parameter
-///   all-gather, ZeRO-3's per-micro-batch re-gathers, and the blocking
-///   TP/SP/EP/PP terms — all priced through the same functions as the
-///   simulator at the exact accumulation count;
-/// * an **overlap-aware exposed-comm floor**: the overlappable ZeRO
-///   traffic that provably cannot hide behind backward compute
-///   (`max(0, overlappable − backward·OVERLAP_EFFICIENCY)`) — this is
-///   what lets stall-free mid-size models prune deeply instead of
-///   pricing 60–95% of the space;
+/// * the blocking-comm floor: every stage pays its full per-stage share
+///   of the blocking classes ([`comm_classes`]) inside its task
+///   durations, plus the post-step all-gather;
+/// * the **overlap-aware comm-stream floor**: the engine drains at most
+///   `OVERLAP_EFFICIENCY · backward` seconds behind backward windows and
+///   the rest behind idle time, so
+///   `exposed_grad + bubble ≥ overlappable − 0.85·backward` — the bound
+///   adds `max(0, overlappable − backward·OVERLAP_EFFICIENCY)` (the full
+///   overlappable sum with overlap disabled, where the streams
+///   serialize);
 /// * the shared input-pipeline floor: a step can never finish before the
 ///   data for it loads (`seconds = busy + stall ≥ load_time`).
 ///
-/// It omits only the pipeline bubble and the stall remainder, so it
-/// remains a true lower bound.  Soundness
+/// It omits the p2p edge delays and any idle beyond the drain argument
+/// (both only ever add time), so it remains a true lower bound for every
+/// schedule including interleaved-1F1B.  Soundness
 /// (`bound ≤ simulate_step(s).seconds_per_step()` for every setup) is
 /// property-tested across the planner's whole default space, including
-/// sp > 1, ep > 1 and mixed-generation clusters.
+/// sp > 1, ep > 1, mixed-generation clusters and all three schedules.
 pub fn step_lower_bound(setup: &TrainSetup) -> f64 {
     lower_bounds(setup).0
 }
@@ -522,7 +659,7 @@ pub fn lower_bounds(setup: &TrainSetup) -> (f64, f64) {
             Some(fit) => fit,
             None => {
                 // the smallest footprint the fit rejected: mb = 1 attains
-                // the minimal live-microbatch product for both schedules,
+                // the minimal live-microbatch product for every schedule,
                 // so this provably exceeds the HBM margin
                 let min_mult = parallel::min_live_multiplier(setup.sched, pp, samples_per_rank);
                 return (f64::INFINITY, state + act * min_mult as f64);
@@ -535,71 +672,23 @@ pub fn lower_bounds(setup: &TrainSetup) -> (f64, f64) {
     let sustained = cluster.node.gpu.sustained_flops() * (tp * pp * sp) as f64;
     let compute = flops_per_sample * samples_per_rank as f64 * ckpt_factor / sustained;
 
-    // ---- always-exposed communication at the exact accumulation count,
-    // mirroring the simulator's pricing functions term by term
+    // ---- the engine's comm classes at the exact accumulation count,
+    // through the same split as the simulator
     let comm = CommModel::from_view(cluster);
     let cluster = &comm.cluster;
-    let (dp_nodes, dp_gpn) = group_placement(cluster, tp * sp * ep, dp);
-    let fp16 = 2.0 * psi;
-    let buckets = setup.grad_bucket_msgs.max(1);
-    let price = |collective: crate::comm::Collective, bytes: f64, msgs: usize| -> f64 {
-        let per = bytes / msgs.max(1) as f64;
-        msgs as f64 * comm.time(collective, per, dp_nodes, dp_gpn)
-    };
-    use crate::comm::Collective::{AllGather, AllReduce, ReduceScatter};
-    let mut floor = 0.0;
-    // the overlappable ZeRO traffic, for the overlap-aware exposed floor
-    let mut overlappable = 0.0;
-    match setup.stage {
-        ZeroStage::Stage0 => {
-            overlappable += price(AllReduce, fp16, buckets);
-        }
-        ZeroStage::Stage1 => {
-            overlappable += price(ReduceScatter, fp16, buckets);
-            floor += price(AllGather, fp16, buckets);
-        }
-        ZeroStage::Stage2 => {
-            overlappable += price(ReduceScatter, fp16, buckets) * nm as f64;
-            floor += price(AllGather, fp16, buckets);
-        }
-        ZeroStage::Stage3 => {
-            let layers = (m.enc_layers + m.dec_layers) as usize;
-            floor += 2.0 * (price(AllGather, fp16, layers) * nm as f64);
-            overlappable += price(ReduceScatter, fp16, layers) * nm as f64;
-        }
-    }
-    if sp > 1 {
-        let per = fp16 / buckets as f64;
-        overlappable += buckets as f64
-            * crate::comm::ring::allreduce(
-                per,
-                sp,
-                cluster.node.nvlink_bw,
-                cluster.node.nvlink_latency,
-            );
-    }
-    floor += parallel::tp_comm_time(m, &comm, tp, mb, w.enc_len, w.dec_len) * nm as f64;
-    floor += parallel::sp_comm_time(m, &comm, sp, mb, w.enc_len, w.dec_len) * nm as f64;
-    let (ep_nodes, ep_gpn) = group_placement(cluster, tp * sp, ep);
-    floor += parallel::ep_comm_time(m, &comm, ep, ep_nodes, ep_gpn, mb, w.enc_len, w.dec_len)
-        * nm as f64;
-    floor += parallel::pp_p2p_time(
-        m,
-        &comm,
-        pp,
-        mb,
-        w.enc_len,
-        w.dec_len,
-        pp > 1 && cluster.nodes > 1,
-    ) * nm as f64;
+    let cc = comm_classes(setup, &comm, psi, mb, nm);
+    let nmf = nm as f64;
+    let floor = (cc.blocking_fwd_micro + cc.blocking_bwd_micro) * nmf + cc.post_ag;
+    let ovl = cc.ovl_step + cc.ovl_micro * nmf;
 
-    // ---- overlap-aware exposed floor: backward compute can hide at most
-    // backward · OVERLAP_EFFICIENCY seconds of the overlappable traffic
+    // ---- overlap-aware comm-stream floor: backward windows drain at
+    // most backward · OVERLAP_EFFICIENCY, idle drain is covered by the
+    // bubble the bound omits (see the drain argument in the docs)
     let backward = compute * 2.0 / 3.0;
     let exposed_overlap = if setup.overlap_comm {
-        (overlappable * BOUND_FLOOR_SLACK - backward * OVERLAP_EFFICIENCY).max(0.0)
+        (ovl * BOUND_FLOOR_SLACK - backward * OVERLAP_EFFICIENCY).max(0.0)
     } else {
-        overlappable * BOUND_FLOOR_SLACK
+        ovl * BOUND_FLOOR_SLACK
     };
 
     // ---- exact optimizer term (micro-batch independent)
@@ -624,11 +713,10 @@ pub fn lower_bounds(setup: &TrainSetup) -> (f64, f64) {
 /// Matching per-GPU memory bound: runs the simulator's own memory-fit
 /// search ([`fit_micro_batch`], identical float expressions), so for a
 /// fitting configuration it returns **exactly** the footprint the
-/// simulator reports (the micro-batch-aware activation term of ROADMAP's
-/// "bound tightening").  When nothing fits it returns the smallest
+/// simulator reports.  When nothing fits it returns the smallest
 /// footprint the fit search rejected — `state + act ·`
 /// [`crate::parallel::min_live_multiplier`], which mb = 1 attains for
-/// both schedules — so `memory_lower_bound(s) > hbm_bytes *
+/// every schedule — so `memory_lower_bound(s) > hbm_bytes *
 /// zero::HBM_SAFETY_MARGIN` holds exactly when the setup OOMs, with zero
 /// conservatism (also for pipelined configurations, where the live
 /// multiplier, not one sample, is what overflows).
@@ -725,6 +813,12 @@ mod tests {
         TrainSetup::dp_pod(by_name("mt5-xxl").unwrap(), nodes, stage)
     }
 
+    fn pp_setup(name: &str, nodes: usize, par: ParallelCfg, stage: ZeroStage) -> TrainSetup {
+        let mut s = TrainSetup::dp_pod(by_name(name).unwrap(), nodes, stage);
+        s.par = par;
+        s
+    }
+
     #[test]
     fn breakdown_components_nonnegative_and_sum() {
         let st = simulate_step(&xxl_setup(4, ZeroStage::Stage2));
@@ -735,6 +829,11 @@ mod tests {
         let sum = st.compute + st.exposed_comm + st.bubble + st.optimizer + st.stall;
         assert!((st.seconds_per_step() - sum).abs() < 1e-12);
         assert!(st.exposed_comm <= st.total_comm + 1e-9);
+        // the new breakdown fields decompose the exposure exactly
+        assert_eq!(
+            (st.exposed_grad_comm + st.exposed_blocking_comm).to_bits(),
+            st.exposed_comm.to_bits()
+        );
     }
 
     /// Table 1 SHAPE: stage 2 beats stage 3 at every node count, 4 nodes
@@ -775,6 +874,90 @@ mod tests {
                     "nodes={nodes}: simulated {t:.2}s vs paper {p:.2}s (ratio {ratio:.2})"
                 );
             }
+        }
+    }
+
+    /// THE degeneracy guarantee: for pp = 1 the timeline engine equals
+    /// the closed-form reference **bit-exactly** (shared expressions),
+    /// and feeding the same single-stage problem through the event
+    /// engine itself lands on the identical exposure (the fluid drain
+    /// provably collapses to `min(overlappable, 0.85·backward)`).
+    #[test]
+    fn timeline_degenerates_to_closed_form_at_pp1() {
+        for name in ["mt5-small", "mt5-base", "mt5-xxl"] {
+            for stage in ZeroStage::all() {
+                for overlap in [true, false] {
+                    let mut s = TrainSetup::dp_pod(by_name(name).unwrap(), 2, stage);
+                    s.overlap_comm = overlap;
+                    let engine = simulate_step(&s);
+                    let reference = simulate_step_reference(&s);
+                    if !engine.fits {
+                        assert!(!reference.fits);
+                        continue;
+                    }
+                    assert_eq!(
+                        engine.seconds_per_step().to_bits(),
+                        reference.seconds_per_step().to_bits(),
+                        "{name} {stage:?} overlap={overlap}: pp=1 must be bit-identical"
+                    );
+                    assert_eq!(engine.bubble.to_bits(), 0.0f64.to_bits());
+                    // the raw event engine agrees with the scalar collapse
+                    let comm = CommModel::from_view(s.cluster.limiting_view());
+                    let psi = s.model.params() as f64;
+                    let cc = comm_classes(&s, &comm, psi, engine.micro_batch,
+                        engine.num_microbatches);
+                    let bwd_total = engine.compute * 2.0 / 3.0;
+                    let out = crate::timeline::simulate_pipeline(&crate::timeline::PipeInputs {
+                        sched: s.sched,
+                        pp: 1,
+                        num_micro: engine.num_microbatches,
+                        fwd_total: engine.compute / 3.0,
+                        bwd_total,
+                        blocking_fwd_micro: cc.blocking_fwd_micro,
+                        blocking_bwd_micro: cc.blocking_bwd_micro,
+                        ovl_micro: cc.ovl_micro,
+                        ovl_step: cc.ovl_step,
+                        hop: 0.0,
+                        overlap,
+                    });
+                    let (eg_ref, _) =
+                        scalar_exposure(&cc, engine.num_microbatches, bwd_total, overlap);
+                    let tol = 1e-9 * eg_ref.abs().max(1e-12);
+                    assert!(
+                        (out.exposed_grad - eg_ref).abs() <= tol,
+                        "{name} {stage:?}: engine {} vs scalar {}",
+                        out.exposed_grad,
+                        eg_ref
+                    );
+                    assert!(out.bubble < 1e-9, "pp=1 chain must have no idle");
+                }
+            }
+        }
+    }
+
+    /// Satellite invariant: `overlap_comm = false` serializes the
+    /// streams — every issued communication second except the p2p edge
+    /// transfers is exposed, bit-exactly.
+    #[test]
+    fn no_overlap_serializes_streams() {
+        for (name, par) in [
+            ("mt5-xxl", ParallelCfg::data_only(32)),
+            ("mt5-xl", ParallelCfg::dtp(4, 2, 4)),
+        ] {
+            let mut s = pp_setup(name, 4, par, ZeroStage::Stage2);
+            s.overlap_comm = false;
+            let st = simulate_step(&s);
+            assert!(st.fits);
+            // exposed + p2p == total: nothing hidden anywhere
+            let residual = st.total_comm - st.exposed_comm - st.p2p_comm;
+            assert!(
+                residual.abs() <= 1e-9 * st.total_comm.max(1e-12),
+                "{name}: hidden residual {residual} with overlap off"
+            );
+            // and overlapping can only help
+            s.overlap_comm = true;
+            let on = simulate_step(&s);
+            assert!(on.seconds_per_step() <= st.seconds_per_step() + 1e-9);
         }
     }
 
@@ -823,6 +1006,7 @@ mod tests {
             offload: false,
             grad_bucket_msgs: 25,
             micro_batch_cap: 0,
+            zero3_prefetch: false,
         };
         let t1 = simulate_step(&mk(1));
         let t4 = simulate_step(&mk(4));
@@ -858,10 +1042,135 @@ mod tests {
             offload: false,
             grad_bucket_msgs: 25,
             micro_batch_cap: 0,
+            zero3_prefetch: false,
         };
         let st = simulate_step(&s);
         assert!(st.fits);
         assert!(st.bubble > 0.0);
+        // p2p transfers are issued and accounted
+        assert!(st.p2p_comm > 0.0);
+        assert!(st.critical_stage < 4);
+    }
+
+    /// The interleaved schedule's whole point, asserted at zoo scale: at
+    /// pp = 4 with a pinned micro-batch it strictly shrinks the measured
+    /// bubble vs 1F1B (and the step gets faster), at the cost of a deeper
+    /// in-flight window and more p2p crossings.
+    #[test]
+    fn interleaved_strictly_reduces_bubble_vs_1f1b() {
+        let mut strict_wins = 0usize;
+        for (name, nodes) in [("mt5-large", 2usize), ("mt5-xl", 2)] {
+            let gpus = nodes * 8;
+            for pp in [4usize, 8] {
+                let mut a = pp_setup(name, nodes, ParallelCfg::dtp(gpus / pp, 1, pp),
+                    ZeroStage::Stage1);
+                a.micro_batch_cap = 2;
+                let mut b = a.clone();
+                b.sched = PipeSchedule::Interleaved1F1B;
+                let sa = simulate_step(&a);
+                let sb = simulate_step(&b);
+                assert!(sa.fits && sb.fits);
+                if sa.micro_batch == sb.micro_batch && sb.bubble < sa.bubble {
+                    strict_wins += 1;
+                    assert!(sb.seconds_per_step() < sa.seconds_per_step());
+                }
+                // the extra p2p crossings are charged
+                assert!(sb.p2p_comm > sa.p2p_comm);
+            }
+        }
+        assert!(strict_wins >= 1, "interleaving must strictly win somewhere at pp >= 4");
+    }
+
+    /// Satellite regression: with num_micro < pp the pre-PR closed form
+    /// printed a degenerate bubble — `(compute + tp + sp) · frac/(1−frac)`
+    /// blows up as (p−1)/m and multiplies the *whole-model* TP comm in,
+    /// though each stage only runs 1/pp of the layers.  `simulate_step`
+    /// (and hence `scalestudy simulate`) now reports the idle measured
+    /// from the event timeline, which undercuts that formula.
+    #[test]
+    fn degenerate_bubble_measured_not_formula() {
+        let mut s = pp_setup("mt5-xl", 2, ParallelCfg::dtp(1, 2, 8), ZeroStage::Stage1);
+        s.workload.global_batch = 4; // samples/rank = 4 < pp = 8
+        let st = simulate_step(&s);
+        assert!(st.fits);
+        assert!(st.num_microbatches < 8, "need the degenerate m < pp regime");
+        // reconstruct the scalar the old closed form reported
+        let comm = CommModel::from_view(s.cluster.limiting_view());
+        let w = &s.workload;
+        let nm = st.num_microbatches as f64;
+        let tpc = parallel::tp_comm_time(&s.model, &comm, s.par.tp, st.micro_batch,
+            w.enc_len, w.dec_len) * nm;
+        let spc = parallel::sp_comm_time(&s.model, &comm, s.par.sp, st.micro_batch,
+            w.enc_len, w.dec_len) * nm;
+        let frac = parallel::bubble_fraction(s.par.pp, st.num_microbatches);
+        let old_formula = (st.compute + tpc + spc) * frac / (1.0 - frac);
+        assert!(
+            st.bubble < old_formula,
+            "timeline bubble {} must undercut the degenerate formula {}",
+            st.bubble,
+            old_formula
+        );
+    }
+
+    /// The engine stays within a property-tested band of the closed-form
+    /// reference across pipeline layouts (it only removes mis-attributed
+    /// time: measured idle + edge-delayed p2p vs formula bubble + fully
+    /// exposed p2p).
+    #[test]
+    fn timeline_within_band_of_reference() {
+        for name in ["mt5-large", "mt5-xxl"] {
+            for nodes in [1usize, 2, 4] {
+                let gpus = nodes * 8;
+                for pp in [2usize, 4, 8] {
+                    if gpus % pp != 0 {
+                        continue;
+                    }
+                    for sched in [
+                        PipeSchedule::OneFOneB,
+                        PipeSchedule::GPipe,
+                        PipeSchedule::Interleaved1F1B,
+                    ] {
+                        let mut s = pp_setup(
+                            name,
+                            nodes,
+                            ParallelCfg::dtp(gpus / pp, 1, pp),
+                            ZeroStage::Stage1,
+                        );
+                        s.sched = sched;
+                        let engine = simulate_step(&s);
+                        let reference = simulate_step_reference(&s);
+                        if !engine.fits {
+                            continue;
+                        }
+                        let ratio = engine.seconds_per_step() / reference.seconds_per_step();
+                        // the scalar reference under-counts real warmup +
+                        // p2p fill in small-m regimes, so the engine sits
+                        // above it there; the band bounds the divergence
+                        assert!(
+                            (0.5..=3.0).contains(&ratio),
+                            "{name} {nodes}n pp={pp} {sched:?}: ratio {ratio}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Modern ZeRO-3 prefetch rides the re-gather on the comm stream —
+    /// never slower, strictly faster where backward has headroom.
+    #[test]
+    fn zero3_prefetch_hides_regather() {
+        let mut strict = false;
+        for nodes in [2usize, 4, 8] {
+            let base = xxl_setup(nodes, ZeroStage::Stage3);
+            let mut pf = base.clone();
+            pf.zero3_prefetch = true;
+            let a = simulate_step(&base);
+            let b = simulate_step(&pf);
+            assert!(b.seconds_per_step() <= a.seconds_per_step() + 1e-12);
+            strict |= b.seconds_per_step() < a.seconds_per_step() - 1e-9;
+        }
+        assert!(strict, "prefetch must strictly help at some node count");
     }
 
     /// Regression for the DP-placement overflow: tp degrees that do not
@@ -900,10 +1209,8 @@ mod tests {
     }
 
     /// Soundness of the branch-and-bound bounds across a dense slice of
-    /// the planner's space: the time bound never exceeds the simulated
-    /// step time, the memory bound never exceeds the simulated footprint
-    /// of a fitting config, and a memory bound above the HBM margin
-    /// always coincides with an OOM verdict.
+    /// the planner's space — re-proved against the timeline engine, all
+    /// three schedules included.
     #[test]
     fn lower_bounds_sound_across_planner_slice() {
         use crate::parallel::ParallelCfg;
@@ -914,7 +1221,11 @@ mod tests {
                 let hbm = cluster.node.gpu.hbm_bytes * zero::HBM_SAFETY_MARGIN;
                 for par in ParallelCfg::enumerate(cluster.total_gpus(), 8, 8) {
                     for stage in [ZeroStage::Stage0, ZeroStage::Stage2, ZeroStage::Stage3] {
-                        for sched in [PipeSchedule::OneFOneB, PipeSchedule::GPipe] {
+                        for sched in [
+                            PipeSchedule::OneFOneB,
+                            PipeSchedule::GPipe,
+                            PipeSchedule::Interleaved1F1B,
+                        ] {
                             for cap in [0usize, 2, 16] {
                                 let mut s = TrainSetup::dp_pod(model.clone(), nodes, stage);
                                 s.par = par;

@@ -210,7 +210,7 @@ impl SetupKey {
         let m = &s.model;
         let c = &s.cluster;
         let w = &s.workload;
-        let fields: Vec<u64> = vec![
+        let mut fields: Vec<u64> = vec![
             m.vocab,
             m.d_model,
             m.d_ff,
@@ -254,6 +254,7 @@ impl SetupKey {
             s.offload as u64,
             s.grad_bucket_msgs as u64,
             s.micro_batch_cap as u64,
+            s.zero3_prefetch as u64,
             m.experts,
             m.top_k,
             m.moe_every,
@@ -285,8 +286,11 @@ impl SetupKey {
 /// any other version (or any earlier malformed file) are discarded and the
 /// cache starts empty.  v2: sp/ep parallel axes, MoE model fields,
 /// heterogeneous node groups in the key; per-entry insertion sequence for
-/// the eviction policy.
-pub const SIMCACHE_SCHEMA_VERSION: u64 = 2;
+/// the eviction policy.  v3: the timeline engine re-priced pipelined
+/// setups, [`StepTime`] grew the exposed-comm/critical-path breakdown
+/// fields, and the key grew `zero3_prefetch` + the interleaved schedule —
+/// v2 files load empty so no stale scalar-model pricing survives.
+pub const SIMCACHE_SCHEMA_VERSION: u64 = 3;
 
 /// Default bound on resident entries (~a few hundred MB on disk at the
 /// extreme); override with `SCALESTUDY_SIMCACHE_MAX` (0 = unbounded).
@@ -659,6 +663,10 @@ fn step_to_json(st: &StepTime) -> Json {
         ("stall", hex_f64(st.stall)),
         ("mem_per_gpu", hex_f64(st.mem_per_gpu)),
         ("fits", Json::Bool(st.fits)),
+        ("exposed_grad_comm", hex_f64(st.exposed_grad_comm)),
+        ("exposed_blocking_comm", hex_f64(st.exposed_blocking_comm)),
+        ("p2p_comm", hex_f64(st.p2p_comm)),
+        ("critical_stage", Json::Num(st.critical_stage as f64)),
     ])
 }
 
@@ -674,6 +682,10 @@ fn step_from_json(j: &Json) -> Option<StepTime> {
         stall: parse_hex_f64(j.get("stall"))?,
         mem_per_gpu: parse_hex_f64(j.get("mem_per_gpu"))?,
         fits: j.get("fits").as_bool()?,
+        exposed_grad_comm: parse_hex_f64(j.get("exposed_grad_comm"))?,
+        exposed_blocking_comm: parse_hex_f64(j.get("exposed_blocking_comm"))?,
+        p2p_comm: parse_hex_f64(j.get("p2p_comm"))?,
+        critical_stage: j.get("critical_stage").as_usize()?,
     })
 }
 
@@ -829,9 +841,14 @@ mod tests {
                 (orig.optimizer, again.optimizer),
                 (orig.stall, again.stall),
                 (orig.mem_per_gpu, again.mem_per_gpu),
+                // the v3 breakdown fields survive bit-exactly too
+                (orig.exposed_grad_comm, again.exposed_grad_comm),
+                (orig.exposed_blocking_comm, again.exposed_blocking_comm),
+                (orig.p2p_comm, again.p2p_comm),
             ] {
                 assert_eq!(a.to_bits(), b.to_bits(), "float field diverged after reload");
             }
+            assert_eq!(orig.critical_stage, again.critical_stage);
         }
         // every reload lookup was a hit: nothing re-simulated
         assert_eq!(loaded.misses(), 0);
@@ -842,23 +859,35 @@ mod tests {
     #[test]
     fn corrupt_or_truncated_file_degrades_to_empty() {
         let path = tmp_path("corrupt");
-        for garbage in ["", "{", "not json at all", "{\"schema\": 2, \"entries\": [{]}"] {
+        for garbage in ["", "{", "not json at all", "{\"schema\": 3, \"entries\": [{]}"] {
             std::fs::write(&path, garbage).unwrap();
             let c = SimCache::load(&path);
             assert!(c.is_empty(), "garbage {garbage:?} must load as empty");
         }
         // structurally valid JSON with a malformed entry is discarded too
         let bad_entry =
-            r#"{"schema": 2, "entries": [{"model": "x", "fields": ["zz"], "step": {}}]}"#;
+            r#"{"schema": 3, "entries": [{"model": "x", "fields": ["zz"], "step": {}}]}"#;
         std::fs::write(&path, bad_entry).unwrap();
         assert!(SimCache::load(&path).is_empty());
-        // a previous-schema file (v1: no seq, old key layout) is discarded
-        let old_schema = r#"{"schema": 1, "entries": []}"#;
-        std::fs::write(&path, old_schema).unwrap();
-        assert!(SimCache::load(&path).is_empty());
+        // previous-schema files (v1/v2: scalar-model pricing, old key
+        // layout, no breakdown fields) are discarded — stale caches load
+        // empty so the newest schema wins any merge by construction
+        for old_schema in [r#"{"schema": 1, "entries": []}"#, r#"{"schema": 2, "entries": []}"#] {
+            std::fs::write(&path, old_schema).unwrap();
+            assert!(SimCache::load(&path).is_empty());
+        }
         // missing file entirely
         let _ = std::fs::remove_file(&path);
         assert!(SimCache::load(&path).is_empty());
+        // and merging an old-schema file is a no-op: it loads empty, so
+        // the newest schema wins the merge by construction
+        std::fs::write(&path, r#"{"schema": 2, "entries": []}"#).unwrap();
+        let fresh = SimCache::new();
+        fresh.simulate(&TrainSetup::dp_pod(by_name("mt5-base").unwrap(), 1, ZeroStage::Stage2));
+        let before = fresh.len();
+        assert_eq!(fresh.merge(&SimCache::load(&path)), 0);
+        assert_eq!(fresh.len(), before);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

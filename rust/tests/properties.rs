@@ -338,6 +338,11 @@ fn prop_planner_plan_fits_and_beats_dp_baseline() {
 /// holds on every xl/xxl query.
 #[test]
 fn prop_bnb_bit_identical_to_exhaustive_and_prunes_large_models() {
+    // CI/tooling satellite: the widened sweep (interleaved schedule axis
+    // + timeline-engine pricing) must stay inside the tier-1 gate's time
+    // budget under [profile.test] opt-level=2 — a coarse wall guard
+    // catches an accidental return to debug-speed property sweeps
+    let sweep_start = std::time::Instant::now();
     let workload = Workload::table1();
     let space = PlanSpace::default();
     let sweep = Sweep::auto();
@@ -403,6 +408,11 @@ fn prop_bnb_bit_identical_to_exhaustive_and_prunes_large_models() {
             }
         }
     }
+    assert!(
+        sweep_start.elapsed().as_secs() < 600,
+        "bnb-vs-exhaustive sweep blew the tier-1 time budget: {:?}",
+        sweep_start.elapsed()
+    );
 }
 
 /// Shared helper: assert the pruned search is bit-identical to the
@@ -486,10 +496,12 @@ fn prop_lower_bounds_sound_on_new_axes() {
         let model = by_name(name).unwrap();
         let mut saw_sp = false;
         let mut saw_ep = false;
+        let mut saw_intl = false;
         for setup in enumerate_setups(&model, &cluster, &Workload::table1(), &PlanSpace::default())
         {
             saw_sp |= setup.par.sp > 1;
             saw_ep |= setup.par.ep > 1;
+            saw_intl |= setup.sched == scalestudy::parallel::PipeSchedule::Interleaved1F1B;
             let st = simulate_step(&setup);
             let tlb = step_lower_bound(&setup);
             let mlb = memory_lower_bound(&setup);
@@ -515,6 +527,7 @@ fn prop_lower_bounds_sound_on_new_axes() {
             }
         }
         assert!(saw_sp, "{name}: space never enumerated sp > 1");
+        assert!(saw_intl, "{name}: space never enumerated the interleaved schedule");
         if model.is_moe() {
             assert!(saw_ep, "{name}: MoE space never enumerated ep > 1");
         }
