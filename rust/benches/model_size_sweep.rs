@@ -36,13 +36,17 @@ fn main() {
     }
     let t0 = std::time::Instant::now();
     let priced = sweep.simulate_setups(&cache, &setups);
+    let grid_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
         "priced {} configurations in {:.1} ms on {} workers ({} cache entries preloaded)\n",
         priced.len(),
-        t0.elapsed().as_secs_f64() * 1e3,
+        grid_ms,
         sweep.workers(),
         warm_entries,
     );
+    b.metric("grid_points", setups.len() as f64);
+    b.metric("grid_wall_ms", grid_ms);
+    b.metric("simcache_hit_rate", cache.hit_rate());
 
     // ---- per-core scaling curve + SimCache hit rates (cold vs warm)
     let mut scaling = Table::new(

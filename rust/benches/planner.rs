@@ -12,6 +12,9 @@ use scalestudy::sweep::{SimCache, Sweep};
 
 fn main() {
     let mut b = Bench::new("planner");
+    // perf-gate failures are deferred until after b.finish() so a tripped
+    // budget still writes the artifact that explains it
+    let mut gate_failures: Vec<String> = Vec::new();
     let cluster = ClusterSpec::lps_pod(8);
     let workload = Workload::table1();
     let space = PlanSpace::default();
@@ -28,14 +31,15 @@ fn main() {
         let t0 = std::time::Instant::now();
         let r = plan(&model, &cluster, &workload, &space, &sweep, &cache);
         let wall = t0.elapsed().as_secs_f64();
-        // the timeline engine prices pipelined points by event simulation
-        // (the old closed form was O(1) there), so the budget is 2s now;
-        // pp=1 points — the bulk of every query — stay on the closed form
-        assert!(
-            wall < 2.0,
-            "{}: planning took {wall:.3}s — the 2-second budget is blown",
-            model.name
-        );
+        // memoized skeletons + scratch arenas took the event engine off
+        // the allocation path, so the PR-4 2-second budget tightens back
+        // to 1s; pp=1 points — the bulk of every query — stay closed-form
+        if wall >= 1.0 {
+            gate_failures.push(format!(
+                "{}: planning took {wall:.3}s — the 1-second budget is blown",
+                model.name
+            ));
+        }
         let best = r.best.as_ref().expect("feasible plan");
         t.row(
             &model.name,
@@ -130,16 +134,19 @@ fn main() {
     let warm_wall = t0.elapsed().as_secs_f64();
     let (dh, dm) = (cache.hits() - h1, cache.misses() - m1);
     let warm_rate = dh as f64 / (dh + dm).max(1) as f64;
-    assert!(
-        warm_rate >= 0.90,
-        "warm repeat query hit rate {warm_rate:.2} below the 90% bar"
-    );
+    if warm_rate < 0.90 {
+        gate_failures
+            .push(format!("warm repeat query hit rate {warm_rate:.2} below the 90% bar"));
+    }
     let mut warm = Table::new(
         "warm repeat query (persistent SimCache)",
         &["hit %", "wall ms"],
     );
     warm.row("mt5-xxl 8-node replan", vec![100.0 * warm_rate, warm_wall * 1e3]);
     b.table(warm);
+    b.metric("warm_replan_hit_rate", warm_rate);
+    b.metric("warm_replan_wall_ms", warm_wall * 1e3);
+    b.metric("skeleton_hit_rate", scalestudy::timeline::skeletons().hit_rate());
     if let Err(e) = cache.save_default() {
         eprintln!("warning: could not persist SimCache: {e:#}");
     }
@@ -152,5 +159,11 @@ fn main() {
         std::hint::black_box(r);
     });
 
+    // artifact first, then the deferred perf gates
     b.finish();
+    assert!(
+        gate_failures.is_empty(),
+        "planner perf gates tripped:\n{}",
+        gate_failures.join("\n")
+    );
 }

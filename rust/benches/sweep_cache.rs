@@ -50,6 +50,8 @@ fn main() {
         "pre-refactor this serialized on one global Mutex; stripes let hits proceed in parallel",
     );
     b.table(cont);
+    b.metric("hit_path_lookups_per_ms_1w", lookups.len() as f64 / base_ms);
+    b.metric("simcache_hit_rate", cache.hit_rate());
 
     // ---- ragged scheduling: mixed 1..8-node setups, longest-first
     // map_chunked vs plain input-order map (results bit-identical)

@@ -1,13 +1,21 @@
 //! Bench E9 — the event-driven pipeline timeline engine: per-schedule
 //! step breakdowns (measured bubble vs the scalar fraction the old model
-//! assumed), the interleaved-1F1B win at pp >= 4, and the engine's own
-//! simulation latency on the heaviest shapes the planner prices.
+//! assumed), the interleaved-1F1B win at pp >= 4, the engine's own
+//! simulation latency on the heaviest shapes the planner prices, and —
+//! since the zero-allocation refactor — repeated-shape pricing
+//! throughput over the warm skeleton cache, with a regression floor
+//! checked against the committed `rust/benches/baselines/
+//! BENCH_timeline.json`.
 
 use scalestudy::benchkit::{Bench, Table};
+use scalestudy::json::Json;
 use scalestudy::model::by_name;
 use scalestudy::parallel::{ParallelCfg, PipeSchedule};
 use scalestudy::sim::{simulate_step, TrainSetup};
+use scalestudy::sweep::SimCache;
+use scalestudy::timeline::{self, PipeInputs};
 use scalestudy::zero::ZeroStage;
+use std::time::Instant;
 
 fn pipe_setup(
     name: &str,
@@ -24,8 +32,41 @@ fn pipe_setup(
     s
 }
 
+/// One engine problem of the bench's repeated shape, with durations
+/// varied per index so every call is distinct work on the same skeleton.
+fn shaped_input(i: usize) -> PipeInputs {
+    let k = 1.0 + (i % 256) as f64 * 0.003;
+    PipeInputs {
+        sched: PipeSchedule::Interleaved1F1B,
+        pp: 4,
+        num_micro: 24,
+        fwd_total: 8.0 * k,
+        bwd_total: 16.0 * k,
+        blocking_fwd_micro: 0.011 * k,
+        blocking_bwd_micro: 0.007 * k,
+        ovl_micro: 0.019 * k,
+        ovl_step: 0.23 * k,
+        hop: 0.004 * k,
+        overlap: true,
+    }
+}
+
+/// Seconds per call for `f` over `n` calls, timed directly (the floor
+/// comparison wants one stable scalar, not a distribution).
+fn time_per_call<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
 fn main() {
     let mut b = Bench::new("timeline");
+    // perf-gate failures are DEFERRED until after b.finish() so a tripped
+    // gate still writes the BENCH_timeline.json artifact whose numbers
+    // explain it (the CI upload step runs with `always()`)
+    let mut gate_failures: Vec<String> = Vec::new();
 
     // ---- schedule comparison: measured bubble / exposed / total per
     // schedule at pp = 4 and pp = 8 (mt5-xl, 2 nodes)
@@ -50,8 +91,8 @@ fn main() {
             );
             per_sched.push(st);
         }
-        // the tentpole's acceptance: interleaving strictly shrinks the
-        // measured bubble vs 1F1B at pp >= 4 (same micro-batch)
+        // the PR-4 tentpole's acceptance: interleaving strictly shrinks
+        // the measured bubble vs 1F1B at pp >= 4 (same micro-batch)
         if per_sched[2].micro_batch == per_sched[0].micro_batch
             && per_sched[2].bubble < per_sched[0].bubble
         {
@@ -88,6 +129,113 @@ fn main() {
     }
     b.table(ovl);
 
+    // ---- THE perf tentpole: repeated-shape pipelined pricing on the
+    // warm skeleton cache vs the cold rebuild-everything path (the
+    // pre-memoization engine's cost, kept as `simulate_pipeline_uncached`)
+    let inputs: Vec<PipeInputs> = (0..256).map(shaped_input).collect();
+    // warm the skeleton + this thread's arena
+    let warm_ref = timeline::simulate_pipeline(&inputs[0]);
+    let (h0, m0) = (timeline::skeletons().hits(), timeline::skeletons().misses());
+    let mut i = 0usize;
+    let warm_per_call = time_per_call(2048, || {
+        let out = timeline::simulate_pipeline(&inputs[i % inputs.len()]);
+        std::hint::black_box(out.makespan);
+        i += 1;
+    });
+    let (h1, m1) = (timeline::skeletons().hits(), timeline::skeletons().misses());
+    if m1 != m0 {
+        gate_failures
+            .push(format!("repeated-shape pricing rebuilt the skeleton ({} new misses)", m1 - m0));
+    }
+    if h1 - h0 != 2048 {
+        gate_failures.push(format!("expected 2048 warm skeleton hits, saw {}", h1 - h0));
+    }
+    let mut j = 0usize;
+    let cold_per_call = time_per_call(256, || {
+        let out = timeline::simulate_pipeline_uncached(&inputs[j % inputs.len()]);
+        std::hint::black_box(out.makespan);
+        j += 1;
+    });
+    // cold and warm paths price bit-identically
+    let cold_ref = timeline::simulate_pipeline_uncached(&inputs[0]);
+    assert_eq!(warm_ref.makespan.to_bits(), cold_ref.makespan.to_bits());
+    assert_eq!(warm_ref.exposed_grad.to_bits(), cold_ref.exposed_grad.to_bits());
+    let warm_pts = 1.0 / warm_per_call;
+    let cold_pts = 1.0 / cold_per_call;
+    let mut perf = Table::new(
+        "repeated-shape pricing (interleaved pp=4, m=24, 256 distinct duration sets)",
+        &["points/s", "µs/point"],
+    );
+    perf.row("warm skeleton + arena", vec![warm_pts, warm_per_call * 1e6]);
+    perf.row("cold rebuild (pre-memoization cost)", vec![cold_pts, cold_per_call * 1e6]);
+    perf.note("bit-identical outputs; the warm path allocates nothing in steady state");
+    b.table(perf);
+    b.metric("repeated_shape_points_per_s", warm_pts);
+    b.metric("uncached_points_per_s", cold_pts);
+    b.metric("warm_speedup_x", warm_pts / cold_pts);
+    // the warm path must stay decisively faster than rebuilding — both
+    // sides are measured in the same run, so the ratio is noise-tolerant
+    // where an absolute wall-clock assert would not be
+    if warm_pts < 2.0 * cold_pts {
+        gate_failures.push(format!(
+            "warm repeated-shape pricing only {:.2}x the cold rebuild path",
+            warm_pts / cold_pts
+        ));
+    }
+    b.metric("skeleton_hit_rate", timeline::skeletons().hit_rate());
+    let (clears, grows) = timeline::scratch_stats();
+    b.metric("arena_clears", clears as f64);
+    b.metric("arena_grows", grows as f64);
+
+    // ---- sim-level repeated shapes: distinct TrainSetups sharing one
+    // skeleton (bucket-count variations), priced cold through a fresh
+    // SimCache — comm classes + engine, skeleton construction amortized
+    let sim_setups: Vec<TrainSetup> = (0..64)
+        .map(|k| {
+            let mut s = pipe_setup("mt5-xl", 2, 4, PipeSchedule::Interleaved1F1B, 2);
+            s.grad_bucket_msgs = 20 + k; // distinct SimCache keys, same shape
+            s
+        })
+        .collect();
+    let cache = SimCache::new();
+    let t0 = Instant::now();
+    let priced = scalestudy::sim::simulate_batch(
+        &scalestudy::sweep::Sweep::serial(),
+        &cache,
+        &sim_setups,
+    );
+    let sim_wall = t0.elapsed().as_secs_f64();
+    assert!(priced.iter().all(|st| st.fits));
+    assert_eq!(cache.misses(), sim_setups.len(), "distinct keys must all price");
+    b.metric("sim_repeated_shape_points_per_s", sim_setups.len() as f64 / sim_wall);
+
+    // ---- regression smoke (CI satellite): the warm throughput must not
+    // drop below the committed floor, with a generous 2x guard band so
+    // runner noise cannot trip it.  In fast mode (CI) a missing baseline
+    // is a hard error — the gate must not silently self-disable.
+    let baseline = std::path::Path::new("rust/benches/baselines/BENCH_timeline.json");
+    if !baseline.exists() && std::env::var("SCALESTUDY_BENCH_FAST").is_ok() {
+        gate_failures.push(format!(
+            "regression baseline {} not found — run the bench from the repo root",
+            baseline.display()
+        ));
+    }
+    if baseline.exists() {
+        let base = Json::parse_file(baseline).expect("committed baseline parses");
+        let floor = base
+            .get("floors")
+            .get("repeated_shape_points_per_s")
+            .as_f64()
+            .expect("baseline floor");
+        if warm_pts < floor / 2.0 {
+            gate_failures.push(format!(
+                "timeline regression: warm repeated-shape pricing {warm_pts:.0} points/s \
+                 fell below half the committed floor ({floor:.0})"
+            ));
+        }
+        b.metric("floor_points_per_s", floor);
+    }
+
     // ---- engine latency on the heaviest planner shapes (large
     // accumulation counts = the most events)
     b.iter("simulate_step(mt5-xl, pp=8, cap=1, 768 micro-batches)", || {
@@ -107,5 +255,11 @@ fn main() {
         std::hint::black_box(simulate_step(&s));
     });
 
+    // the artifact is written FIRST, then the deferred perf gates fire
     b.finish();
+    assert!(
+        gate_failures.is_empty(),
+        "timeline perf gates tripped:\n{}",
+        gate_failures.join("\n")
+    );
 }

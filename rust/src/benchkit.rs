@@ -9,6 +9,15 @@
 //! * [`Bench::table`] — "model benches": rows of precomputed values (e.g.
 //!   simulated seconds/step) printed as the paper's tables; these have no
 //!   timing loop but land in the same report format.
+//!
+//! Besides the verbose per-bench report, [`Bench::finish`] emits a
+//! compact **perf-trajectory artifact** — `target/bench-artifacts/
+//! BENCH_<name>.json` with the loop config, median seconds and
+//! throughput per measurement, and any named [`Bench::metric`] values
+//! (cache hit rates, speedups, regression floors).  CI's fast-mode bench
+//! smoke uploads these, so the repository's performance history is
+//! machine-readable across PRs; `rust/benches/baselines/` holds the
+//! committed floors the regression smoke checks against.
 
 use crate::json::Json;
 use crate::util::stats::{outlier_mask, Summary};
@@ -38,6 +47,9 @@ pub struct Measurement {
     pub summary: Summary,
     pub outliers: usize,
     pub samples: Vec<f64>,
+    /// Items processed per call, when registered through
+    /// [`Bench::throughput`] — the artifact derives items/s from it.
+    pub items: Option<f64>,
 }
 
 /// The harness: collects measurements and table rows, then reports.
@@ -46,6 +58,7 @@ pub struct Bench {
     pub config: BenchConfig,
     measurements: Vec<Measurement>,
     tables: Vec<Table>,
+    metrics: Vec<(String, f64)>,
     t_start: Instant,
 }
 
@@ -127,6 +140,7 @@ impl Bench {
             config,
             measurements: Vec::new(),
             tables: Vec::new(),
+            metrics: Vec::new(),
             t_start: Instant::now(),
         }
     }
@@ -157,18 +171,33 @@ impl Bench {
             summary.n,
             outliers
         );
-        self.measurements.push(Measurement { name: name.to_string(), summary, outliers, samples });
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            summary,
+            outliers,
+            samples,
+            items: None,
+        });
     }
 
     /// Time `f` which processes `items` items per call; also reports
-    /// throughput (items/s).
+    /// throughput (items/s) and records it in the perf artifact.
     pub fn throughput<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) {
         self.iter(name, &mut f);
-        let m = self.measurements.last().unwrap();
+        let m = self.measurements.last_mut().unwrap();
+        m.items = Some(items);
         println!(
             "  {name:<40} throughput {:.1} items/s",
             items / m.summary.mean
         );
+    }
+
+    /// Record a named scalar (a cache hit rate, a speedup factor, a
+    /// points/s throughput measured outside the timing loop) into the
+    /// perf-trajectory artifact.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("  metric {name:<33} {value:.4}");
+        self.metrics.push((name.to_string(), value));
     }
 
     /// Register a finished table.
@@ -239,6 +268,64 @@ impl Bench {
         } else {
             println!("report: {}", path.display());
         }
+
+        // ---- the compact perf-trajectory artifact (BENCH_<name>.json)
+        let artifact = self.artifact_json();
+        let art_path =
+            std::path::Path::new("target/bench-artifacts").join(format!("BENCH_{}.json", self.name));
+        if let Err(e) = artifact.write_file(&art_path) {
+            eprintln!("warning: could not write {}: {e:#}", art_path.display());
+        } else {
+            println!("artifact: {}", art_path.display());
+        }
+    }
+
+    /// The machine-readable perf artifact: bench name, loop config,
+    /// per-measurement median seconds (+ items/s where registered), and
+    /// every [`Bench::metric`].
+    fn artifact_json(&self) -> Json {
+        let meas: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                let mut fields = vec![
+                    ("name", Json::Str(m.name.clone())),
+                    ("median_s", Json::Num(m.summary.p50)),
+                    ("mean_s", Json::Num(m.summary.mean)),
+                    ("n", Json::Num(m.summary.n as f64)),
+                ];
+                if let Some(items) = m.items {
+                    fields.push(("items_per_s", Json::Num(items / m.summary.mean)));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| {
+                Json::obj(vec![("name", Json::Str(k.clone())), ("value", Json::Num(*v))])
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.to_string())),
+            (
+                "config",
+                Json::obj(vec![
+                    ("warmup_iters", Json::Num(self.config.warmup_iters as f64)),
+                    ("min_iters", Json::Num(self.config.min_iters as f64)),
+                    ("max_iters", Json::Num(self.config.max_iters as f64)),
+                    ("target_seconds", Json::Num(self.config.target_seconds)),
+                    (
+                        "fast_mode",
+                        Json::Bool(std::env::var("SCALESTUDY_BENCH_FAST").is_ok()),
+                    ),
+                ]),
+            ),
+            ("wall_seconds", Json::Num(self.t_start.elapsed().as_secs_f64())),
+            ("measurements", Json::Arr(meas)),
+            ("metrics", Json::Arr(metrics)),
+        ])
     }
 }
 
@@ -273,5 +360,31 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row("r", vec![1.0]);
+    }
+
+    /// Satellite: the perf-trajectory artifact carries the loop config,
+    /// per-measurement medians + throughput, and named metrics.  (The
+    /// loop config is pinned directly — mutating the fast-mode env var
+    /// from a multi-threaded test binary races other tests' reads.)
+    #[test]
+    fn artifact_json_records_measurements_and_metrics() {
+        let mut b = Bench::new("artifact-selftest");
+        b.config =
+            BenchConfig { warmup_iters: 1, min_iters: 3, max_iters: 5, target_seconds: 0.05 };
+        let mut c = 0u64;
+        b.throughput("tick", 10.0, || c += 1);
+        b.metric("hit_rate", 0.75);
+        let j = b.artifact_json();
+        assert_eq!(j.get("bench").as_str(), Some("artifact-selftest"));
+        assert_eq!(j.get("config").get("max_iters").as_usize(), Some(5));
+        let meas = j.get("measurements").as_arr().unwrap();
+        assert_eq!(meas.len(), 1);
+        assert_eq!(meas[0].get("name").as_str(), Some("tick"));
+        assert!(meas[0].get("median_s").as_f64().unwrap() >= 0.0);
+        assert!(meas[0].get("items_per_s").as_f64().unwrap() > 0.0);
+        let metrics = j.get("metrics").as_arr().unwrap();
+        assert_eq!(metrics.len(), 1);
+        assert_eq!(metrics[0].get("name").as_str(), Some("hit_rate"));
+        assert_eq!(metrics[0].get("value").as_f64(), Some(0.75));
     }
 }

@@ -620,19 +620,24 @@ pub fn run_funnel_cached(cfg: &FunnelCfg, cache: &SimCache) -> FunnelResult {
         .take(cfg.num_finalists)
         .collect();
 
-    // finalist × node grid: independent cells, fanned out in parallel.
-    // The grid is ragged (8-node cells cost more than 4-node cells), so
-    // the fan-out schedules longest-expected-first via the analytical
-    // step lower bound — results stay bit-identical to input order.
+    // finalist × node grid: independent cells, fanned out in parallel
+    // through the batch pricing API — each cell's TrainSetup is built
+    // once, the grid's distinct pipeline-skeleton shapes are warmed once,
+    // and the ragged cells (8-node cells cost more than 4-node cells)
+    // schedule longest-expected-first via the analytical step lower
+    // bound.  Results stay bit-identical to input order.
     let pairs: Vec<(Template, usize)> = finalists_t
         .iter()
         .flat_map(|t| cfg.finalist_nodes.iter().map(move |&n| (t.clone(), n)))
         .collect();
-    let finalist_scores = sweep.map_chunked(
-        &pairs,
-        |(t, n)| crate::sim::step_lower_bound(&template_setup(&dims, t, &model, *n)),
-        |_, (t, n)| evaluate_cached(&dims, t, &model, *n, cache),
-    );
+    let grid_setups: Vec<TrainSetup> =
+        pairs.iter().map(|(t, n)| template_setup(&dims, t, &model, *n)).collect();
+    let grid_steps = crate::sim::simulate_batch(&sweep, cache, &grid_setups);
+    let finalist_scores: Vec<Score> = pairs
+        .iter()
+        .zip(&grid_steps)
+        .map(|((t, _), step)| score_template(&dims, t, &model, step))
+        .collect();
     let mut finalists = Vec::new();
     for (fi, t) in finalists_t.iter().enumerate() {
         let mut rows = Vec::new();

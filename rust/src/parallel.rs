@@ -110,7 +110,7 @@ fn divisors(n: usize) -> Vec<usize> {
 }
 
 /// Pipeline schedule kind.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PipeSchedule {
     GPipe,
     OneFOneB,

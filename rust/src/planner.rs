@@ -46,8 +46,9 @@
 use crate::hardware::ClusterSpec;
 use crate::model::ModelCfg;
 use crate::parallel::{ParallelCfg, PipeSchedule};
-use crate::sim::{lower_bounds, StepTime, TrainSetup, Workload};
+use crate::sim::{bounds_and_shape, StepTime, TrainSetup, Workload};
 use crate::sweep::{SimCache, Sweep};
+use crate::timeline::SkeletonKey;
 use crate::util::{human_bytes, human_time};
 use crate::zero::{OptimizerKind, ZeroStage};
 use std::cmp::Ordering;
@@ -219,6 +220,11 @@ struct Branch {
     setups: Vec<TrainSetup>,
     time_lbs: Vec<f64>,
     mem_lbs: Vec<f64>,
+    /// Per-child pipeline-skeleton shape (from the same fit search as
+    /// the bounds): the wave loop warms each distinct shape once before
+    /// fanning the wave out, so a whole group prices against one shared
+    /// [`crate::timeline::PipeSkeleton`].
+    shapes: Vec<Option<SkeletonKey>>,
     time_lb: f64,
     mem_lb: f64,
     hbm: f64,
@@ -279,9 +285,17 @@ fn enumerate_branches(
                                     zero3_prefetch: false,
                                 })
                                 .collect();
-                            // one fit search yields both bounds per child
-                            let (time_lbs, mem_lbs): (Vec<f64>, Vec<f64>) =
-                                setups.iter().map(lower_bounds).unzip();
+                            // one fit search yields both bounds AND the
+                            // skeleton shape per child
+                            let mut time_lbs = Vec::with_capacity(setups.len());
+                            let mut mem_lbs = Vec::with_capacity(setups.len());
+                            let mut shapes = Vec::with_capacity(setups.len());
+                            for s in &setups {
+                                let (t, m2, shape) = bounds_and_shape(s);
+                                time_lbs.push(t);
+                                mem_lbs.push(m2);
+                                shapes.push(shape);
+                            }
                             let time_lb =
                                 time_lbs.iter().copied().fold(f64::INFINITY, f64::min);
                             let mem_lb =
@@ -293,6 +307,7 @@ fn enumerate_branches(
                                 setups,
                                 time_lbs,
                                 mem_lbs,
+                                shapes,
                                 time_lb,
                                 mem_lb,
                                 hbm,
@@ -357,10 +372,21 @@ impl FrontierProbe {
     }
 }
 
-/// Branches pruned/priced per wave.  Fixed (never derived from the worker
-/// count) so the set of priced points — and hence `evaluated`/`feasible`
-/// — is deterministic for any [`Sweep`] size.
-const WAVE_BRANCHES: usize = 32;
+/// Minimum branches pruned/priced per wave.  The effective width is
+/// [`wave_branches`]: `max(32, 4 · workers)`, so wide machines keep every
+/// core fed between waves instead of starving on 32-branch slices.  The
+/// priced-point *results* (best plan, frontier) are bit-identical for
+/// any width — only `evaluated`/`feasible` can vary, and those stay
+/// deterministic across worker counts up to 8 (where `4 · workers` is
+/// still below the floor, covering the equivalence tests and typical CI).
+const WAVE_BRANCHES_MIN: usize = 32;
+
+/// Branches expanded per wave for this executor: scale with the worker
+/// count so wide machines don't drain a wave early and idle until the
+/// next prune step.
+fn wave_branches(sweep: &Sweep) -> usize {
+    (4 * sweep.workers()).max(WAVE_BRANCHES_MIN)
+}
 
 /// Run a planning query with branch-and-bound pruning.  Best plan and
 /// Pareto frontier are bit-identical to [`plan_exhaustive`] (see module
@@ -387,12 +413,12 @@ pub fn plan(
     let mut probe = FrontierProbe::new();
     let mut priced: Vec<(usize, PlanPoint)> = Vec::new();
     let mut evaluated = 0usize;
-    for wave in order.chunks(WAVE_BRANCHES) {
+    for wave in order.chunks(wave_branches(sweep)) {
         // two prune levels, both exact: the whole branch via the
         // member-wise minimum bounds, then each surviving child via its
         // own cap-aware pair (a child skipped here is provably OOM or
         // frontier-dominated, so best and frontier cannot change)
-        let mut wave_items: Vec<(usize, &TrainSetup, f64)> = Vec::new();
+        let mut wave_items: Vec<(usize, &TrainSetup, f64, Option<SkeletonKey>)> = Vec::new();
         for &bi in wave {
             let b = &branches[bi];
             if b.mem_lb > b.hbm || probe.dominates(b.mem_lb, b.time_lb) {
@@ -402,19 +428,22 @@ pub fn plan(
                 if b.mem_lbs[ci] > b.hbm || probe.dominates(b.mem_lbs[ci], b.time_lbs[ci]) {
                     continue;
                 }
-                wave_items.push((b.base_index + ci, setup, b.time_lbs[ci]));
+                wave_items.push((b.base_index + ci, setup, b.time_lbs[ci], b.shapes[ci]));
             }
         }
         if wave_items.is_empty() {
             continue;
         }
-        let steps = sweep.map_chunked(
-            &wave_items,
-            |&(_, _, cost)| cost,
-            |_, &(_, setup, _)| cache.simulate(setup),
-        );
+        // batched pricing: warm each distinct surviving skeleton shape
+        // once so the wave's group prices against one shared skeleton
+        crate::sim::warm_shapes(wave_items.iter().map(|&(_, _, _, shape)| shape));
+        let costs: Vec<f64> = wave_items.iter().map(|&(_, _, cost, _)| cost).collect();
+        let steps =
+            sweep.map_chunked_keyed(&wave_items, &costs, |_, &(_, setup, _, _)| {
+                cache.simulate(setup)
+            });
         evaluated += wave_items.len();
-        for (&(index, setup, _), step) in wave_items.iter().zip(steps) {
+        for (&(index, setup, _, _), step) in wave_items.iter().zip(steps) {
             if step.fits {
                 probe.insert(step.mem_per_gpu, step.seconds_per_step());
             }
@@ -441,8 +470,22 @@ pub fn plan_exhaustive(
     sweep: &Sweep,
     cache: &SimCache,
 ) -> PlanResult {
-    let setups = enumerate_setups(model, cluster, workload, space);
-    let steps = sweep.simulate_setups(cache, &setups);
+    // reuse the enumeration-time bounds as the scheduling cost keys
+    // (computed once) and warm each distinct skeleton shape once — same
+    // batched pricing as the pruned search, every point priced
+    let branches = enumerate_branches(model, cluster, workload, space);
+    let mut setups: Vec<TrainSetup> = Vec::new();
+    let mut costs: Vec<f64> = Vec::new();
+    let mut shapes: Vec<Option<SkeletonKey>> = Vec::new();
+    for b in branches {
+        for (ci, setup) in b.setups.into_iter().enumerate() {
+            setups.push(setup);
+            costs.push(b.time_lbs[ci]);
+            shapes.push(b.shapes[ci]);
+        }
+    }
+    crate::sim::warm_shapes(shapes);
+    let steps = sweep.map_chunked_keyed(&setups, &costs, |_, s| cache.simulate(s));
     let points: Vec<PlanPoint> = setups
         .iter()
         .zip(&steps)
@@ -575,12 +618,51 @@ mod tests {
         assert_eq!(fastest.to_bits(), r.best.unwrap().seconds_per_step().to_bits());
     }
 
+    /// Satellite: the wave width scales with the executor ( ≥ the 32
+    /// floor, 4 per worker above 8 workers) so wide machines don't
+    /// starve between waves.
+    #[test]
+    fn wave_width_scales_with_workers() {
+        assert_eq!(wave_branches(&Sweep::new(1)), 32);
+        assert_eq!(wave_branches(&Sweep::new(8)), 32);
+        assert_eq!(wave_branches(&Sweep::new(16)), 64);
+        assert_eq!(wave_branches(&Sweep::new(100)), 400);
+    }
+
+    /// Wider waves only change *which* points get priced before the
+    /// prune bites — best plan and frontier stay bit-identical (the
+    /// existing bnb-vs-exhaustive property holds per wave width; this
+    /// pins the widened-wave path directly).
+    #[test]
+    fn wider_waves_keep_best_and_frontier_bit_identical() {
+        let model = by_name("mt5-xl").unwrap();
+        let cluster = ClusterSpec::lps_pod(2);
+        let w = Workload::table1();
+        let space = PlanSpace::default();
+        let narrow = plan(&model, &cluster, &w, &space, &Sweep::serial(), &SimCache::new());
+        // 40 workers -> 160-branch waves, far past the 32 floor
+        let wide = plan(&model, &cluster, &w, &space, &Sweep::new(40), &SimCache::new());
+        let (a, b) = (narrow.best.unwrap(), wide.best.unwrap());
+        assert_eq!(a.setup.par, b.setup.par);
+        assert_eq!(a.setup.micro_batch_cap, b.setup.micro_batch_cap);
+        assert_eq!(a.seconds_per_step().to_bits(), b.seconds_per_step().to_bits());
+        assert_eq!(narrow.frontier.len(), wide.frontier.len());
+        for (x, y) in narrow.frontier.iter().zip(&wide.frontier) {
+            assert_eq!(x.setup.par, y.setup.par);
+            assert_eq!(x.seconds_per_step().to_bits(), y.seconds_per_step().to_bits());
+            assert_eq!(x.step.mem_per_gpu.to_bits(), y.step.mem_per_gpu.to_bits());
+        }
+        assert_eq!(narrow.space_size, wide.space_size);
+    }
+
     #[test]
     fn planner_deterministic_across_worker_counts() {
         let model = by_name("mt5-xl").unwrap();
         let cluster = ClusterSpec::lps_pod(4);
         let w = Workload::table1();
         let space = PlanSpace::default();
+        // 1 and 8 workers share the 32-branch wave floor, so even the
+        // evaluated/feasible counts must agree exactly
         let serial = plan(&model, &cluster, &w, &space, &Sweep::serial(), &SimCache::new());
         let par = plan(&model, &cluster, &w, &space, &Sweep::new(8), &SimCache::new());
         let a = serial.best.unwrap();

@@ -268,6 +268,119 @@ impl StepTime {
 const CKPT_COMPUTE_FACTOR: f64 = 1.10;
 const CKPT_MEMORY_FACTOR: f64 = 0.25;
 
+/// The simulator's whole memory-fit preamble for one setup — sharded
+/// parameter count, state bytes, per-sample activations, samples/rank
+/// and the fit-search result — factored out so [`simulate_step`], both
+/// planner bounds ([`lower_bounds`], [`memory_lower_bound`]) and the
+/// batch pricing's skeleton grouping ([`pipeline_shape`]) evaluate the
+/// **identical** float expressions from one place.
+pub(crate) struct SetupFit {
+    pub psi: f64,
+    pub state_bytes: f64,
+    pub act_per_sample: f64,
+    pub samples_per_rank: usize,
+    /// `(micro_batch, num_microbatches, mem_per_gpu)`; `None` when no
+    /// micro-batch fits HBM (or there are no samples for this rank).
+    pub fit: Option<(usize, usize, f64)>,
+}
+
+pub(crate) fn setup_fit(setup: &TrainSetup) -> SetupFit {
+    let m = &setup.model;
+    let w = &setup.workload;
+    let (tp, pp, sp, ep, dp) =
+        (setup.par.tp, setup.par.pp, setup.par.sp, setup.par.ep, setup.par.dp);
+    // tp/pp shard every weight; ep additionally shards the expert FFNs;
+    // sp replicates weights but splits the token dimension of activations
+    let psi = m.dense_params() as f64 / (tp * pp) as f64
+        + m.expert_params() as f64 / (tp * pp * ep) as f64;
+    let state_bytes =
+        zero::state_bytes_with_offload(psi, dp, setup.stage, setup.opt, setup.offload);
+    let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
+    let act_per_sample =
+        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp * sp) as f64 * act_factor;
+    let hbm = setup.cluster.limiting_hbm_bytes() * zero::HBM_SAFETY_MARGIN;
+    let samples_per_rank = (w.global_batch + dp - 1) / dp.max(1);
+    let fit = if samples_per_rank == 0 {
+        None
+    } else {
+        let fit_cap = if setup.micro_batch_cap > 0 {
+            samples_per_rank.min(setup.micro_batch_cap)
+        } else {
+            samples_per_rank
+        };
+        fit_micro_batch(setup.sched, pp, samples_per_rank, fit_cap, state_bytes, act_per_sample, hbm)
+    };
+    SetupFit { psi, state_bytes, act_per_sample, samples_per_rank, fit }
+}
+
+fn shape_of(setup: &TrainSetup, fit: &SetupFit) -> Option<crate::timeline::SkeletonKey> {
+    match fit.fit {
+        Some((_, nm, _)) if setup.par.pp > 1 => Some(crate::timeline::SkeletonKey {
+            sched: setup.sched,
+            pp: setup.par.pp,
+            num_micro: nm,
+        }),
+        _ => None,
+    }
+}
+
+/// The `(schedule, pp, num_micro)` timeline-skeleton shape this setup
+/// will simulate — the batch API's grouping key.  `None` for
+/// single-stage setups (priced by the closed form) and provable OOMs.
+/// Derived through the same fit search the simulator runs, so the shape
+/// is exactly the one [`simulate_step`] prices.
+pub fn pipeline_shape(setup: &TrainSetup) -> Option<crate::timeline::SkeletonKey> {
+    shape_of(setup, &setup_fit(setup))
+}
+
+/// Warm each distinct skeleton shape of an iterator of
+/// [`pipeline_shape`]-style keys exactly once — the shared pre-pass of
+/// every batch pricing path ([`simulate_batch`], the planner's waves and
+/// exhaustive reference).  Builds are microseconds-scale, so warming on
+/// the coordinator before the fan-out is cheap; its value is making the
+/// group-prices-against-one-skeleton contract explicit (the cache would
+/// dedup racing builds anyway).
+pub(crate) fn warm_shapes(shapes: impl IntoIterator<Item = Option<crate::timeline::SkeletonKey>>) {
+    let mut seen = std::collections::HashSet::new();
+    for shape in shapes {
+        if let Some(key) = shape {
+            if seen.insert(key) {
+                crate::timeline::warm_skeleton(key);
+            }
+        }
+    }
+}
+
+/// Batch pricing entry point: price many setups through `cache`,
+/// scheduled longest-expected-first across `sweep`'s workers.  The batch
+/// is grouped by pipeline-skeleton shape first and each distinct shape's
+/// [`crate::timeline::PipeSkeleton`] is warmed exactly once, so every
+/// member of a group prices against the one shared skeleton; the
+/// analytical cost key ([`step_lower_bound`]) is computed once per setup
+/// and never re-derived during scheduling.  Results come back in input
+/// order, bit-identical to a serial `simulate_step` loop.
+pub fn simulate_batch(
+    sweep: &crate::sweep::Sweep,
+    cache: &crate::sweep::SimCache,
+    setups: &[TrainSetup],
+) -> Vec<StepTime> {
+    // a serial sweep prices in input order anyway: skip the cost keys
+    // and pre-warming entirely (the first pricing of each shape builds
+    // its skeleton through the global cache), exactly the pre-batch cost
+    if sweep.workers() <= 1 || setups.len() <= 1 {
+        return setups.iter().map(|s| cache.simulate(s)).collect();
+    }
+    let mut costs = Vec::with_capacity(setups.len());
+    let mut shapes = Vec::with_capacity(setups.len());
+    for s in setups {
+        let (tlb, _, shape) = bounds_and_shape(s);
+        costs.push(tlb);
+        shapes.push(shape);
+    }
+    warm_shapes(shapes);
+    sweep.map_chunked_keyed(setups, &costs, |_, s| cache.simulate(s))
+}
+
 /// The per-step communication volumes split into the timeline engine's
 /// classes — ONE function shared by [`simulate_step`], the closed-form
 /// test reference, and [`lower_bounds`], so the three can never disagree
@@ -456,41 +569,21 @@ fn simulate_with(setup: &TrainSetup, use_engine: bool) -> StepTime {
     let tp = par.tp;
     let pp = par.pp;
     let sp = par.sp;
-    let ep = par.ep;
     let dp = par.dp;
 
-    // ---------------- memory fit: choose the largest micro-batch.
-    // tp/pp shard every weight; ep additionally shards the expert FFNs;
-    // sp replicates weights but splits the token dimension of activations.
-    let psi = m.dense_params() as f64 / (tp * pp) as f64
-        + m.expert_params() as f64 / (tp * pp * ep) as f64;
-    let state_bytes =
-        zero::state_bytes_with_offload(psi, dp, setup.stage, setup.opt, setup.offload);
-    let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
-    let act_per_sample =
-        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp * sp) as f64 * act_factor;
-    let hbm = cluster.node.gpu.hbm_bytes * zero::HBM_SAFETY_MARGIN;
-
-    let samples_per_rank = (w.global_batch + dp - 1) / dp;
+    // ---------------- memory fit: choose the largest micro-batch
+    // through the shared [`setup_fit`] preamble (identical expressions
+    // with the planner bounds and the batch skeleton grouping; the HBM
+    // ceiling is the limiting view's, the identity for homogeneous pods).
+    let fit = setup_fit(setup);
+    let psi = fit.psi;
+    let samples_per_rank = fit.samples_per_rank;
     if samples_per_rank == 0 {
-        return StepTime::oom(state_bytes);
+        return StepTime::oom(fit.state_bytes);
     }
-    let fit_cap = if setup.micro_batch_cap > 0 {
-        samples_per_rank.min(setup.micro_batch_cap)
-    } else {
-        samples_per_rank
-    };
-    let (micro_batch, num_micro, mem_per_gpu) = match fit_micro_batch(
-        setup.sched,
-        pp,
-        samples_per_rank,
-        fit_cap,
-        state_bytes,
-        act_per_sample,
-        hbm,
-    ) {
-        Some(fit) => fit,
-        None => return StepTime::oom(state_bytes + act_per_sample),
+    let (micro_batch, num_micro, mem_per_gpu) = match fit.fit {
+        Some(found) => found,
+        None => return StepTime::oom(fit.state_bytes + fit.act_per_sample),
     };
 
     // ---------------- compute
@@ -631,40 +724,40 @@ pub fn step_lower_bound(setup: &TrainSetup) -> f64 {
 /// sharing the fit (the dominant cost) halves enumeration time; the two
 /// values are identical to the standalone functions.
 pub fn lower_bounds(setup: &TrainSetup) -> (f64, f64) {
+    let (time_lb, mem_lb, _) = bounds_and_shape(setup);
+    (time_lb, mem_lb)
+}
+
+/// [`lower_bounds`] plus the setup's pipeline-skeleton shape, all from
+/// the **same** fit search — the planner's branch enumeration and the
+/// batch pricing API read the shape for skeleton warming without a
+/// second fit.
+pub(crate) fn bounds_and_shape(
+    setup: &TrainSetup,
+) -> (f64, f64, Option<crate::timeline::SkeletonKey>) {
     let m = &setup.model;
     let w = &setup.workload;
-    let (tp, pp, sp, ep, dp) =
-        (setup.par.tp, setup.par.pp, setup.par.sp, setup.par.ep, setup.par.dp);
+    let (tp, pp, sp, dp) = (setup.par.tp, setup.par.pp, setup.par.sp, setup.par.dp);
 
-    // ---- the exact memory fit (same expressions as the simulator): a
-    // failed fit is a provable OOM, priced at +∞ seconds there too
-    let psi = m.dense_params() as f64 / (tp * pp) as f64
-        + m.expert_params() as f64 / (tp * pp * ep) as f64;
-    let state = zero::state_bytes_with_offload(psi, dp, setup.stage, setup.opt, setup.offload);
-    let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
-    let act =
-        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp * sp) as f64 * act_factor;
-    let hbm = setup.cluster.limiting_hbm_bytes() * zero::HBM_SAFETY_MARGIN;
-    let samples_per_rank = (w.global_batch + dp - 1) / dp.max(1);
+    // ---- the exact memory fit (the shared [`setup_fit`] expressions):
+    // a failed fit is a provable OOM, priced at +∞ seconds there too
+    let f = setup_fit(setup);
+    let psi = f.psi;
+    let samples_per_rank = f.samples_per_rank;
     if samples_per_rank == 0 {
-        return (f64::INFINITY, state);
+        return (f64::INFINITY, f.state_bytes, None);
     }
-    let fit_cap = if setup.micro_batch_cap > 0 {
-        samples_per_rank.min(setup.micro_batch_cap)
-    } else {
-        samples_per_rank
+    let (mb, nm, mem) = match f.fit {
+        Some(found) => found,
+        None => {
+            // the smallest footprint the fit rejected: mb = 1 attains
+            // the minimal live-microbatch product for every schedule,
+            // so this provably exceeds the HBM margin
+            let min_mult = parallel::min_live_multiplier(setup.sched, pp, samples_per_rank);
+            return (f64::INFINITY, f.state_bytes + f.act_per_sample * min_mult as f64, None);
+        }
     };
-    let (mb, nm, mem) =
-        match fit_micro_batch(setup.sched, pp, samples_per_rank, fit_cap, state, act, hbm) {
-            Some(fit) => fit,
-            None => {
-                // the smallest footprint the fit rejected: mb = 1 attains
-                // the minimal live-microbatch product for every schedule,
-                // so this provably exceeds the HBM margin
-                let min_mult = parallel::min_live_multiplier(setup.sched, pp, samples_per_rank);
-                return (f64::INFINITY, state + act * min_mult as f64);
-            }
-        };
+    let shape = shape_of(setup, &f);
 
     let cluster = setup.cluster.limiting_view();
     let flops_per_sample = m.train_flops_per_sample(w.enc_len, w.dec_len);
@@ -707,7 +800,7 @@ pub fn lower_bounds(setup: &TrainSetup) -> (f64, f64) {
     let load_time = w.global_batch as f64 / (node_rate * cluster.nodes as f64);
 
     let busy_bound = compute + floor * BOUND_FLOOR_SLACK + exposed_overlap + optimizer;
-    (busy_bound.max(load_time * BOUND_FLOOR_SLACK), mem)
+    (busy_bound.max(load_time * BOUND_FLOOR_SLACK), mem, shape)
 }
 
 /// Matching per-GPU memory bound: runs the simulator's own memory-fit
@@ -721,32 +814,16 @@ pub fn lower_bounds(setup: &TrainSetup) -> (f64, f64) {
 /// conservatism (also for pipelined configurations, where the live
 /// multiplier, not one sample, is what overflows).
 pub fn memory_lower_bound(setup: &TrainSetup) -> f64 {
-    let m = &setup.model;
-    let w = &setup.workload;
-    let (tp, pp, sp, ep, dp) =
-        (setup.par.tp, setup.par.pp, setup.par.sp, setup.par.ep, setup.par.dp);
-    let psi = m.dense_params() as f64 / (tp * pp) as f64
-        + m.expert_params() as f64 / (tp * pp * ep) as f64;
-    let state = zero::state_bytes_with_offload(psi, dp, setup.stage, setup.opt, setup.offload);
-    let act_factor = if w.ckpt { CKPT_MEMORY_FACTOR } else { 1.0 };
-    let act_per_sample =
-        m.activation_bytes_per_sample(w.enc_len, w.dec_len) / (tp * pp * sp) as f64 * act_factor;
-    let samples_per_rank = (w.global_batch + dp - 1) / dp.max(1);
-    if samples_per_rank == 0 {
-        return state;
+    let f = setup_fit(setup);
+    if f.samples_per_rank == 0 {
+        return f.state_bytes;
     }
-    let hbm = setup.cluster.limiting_hbm_bytes() * zero::HBM_SAFETY_MARGIN;
-    let fit_cap = if setup.micro_batch_cap > 0 {
-        samples_per_rank.min(setup.micro_batch_cap)
-    } else {
-        samples_per_rank
-    };
-    match fit_micro_batch(setup.sched, pp, samples_per_rank, fit_cap, state, act_per_sample, hbm)
-    {
+    match f.fit {
         Some((_, _, mem)) => mem,
         None => {
-            let min_mult = parallel::min_live_multiplier(setup.sched, pp, samples_per_rank);
-            state + act_per_sample * min_mult as f64
+            let min_mult =
+                parallel::min_live_multiplier(setup.sched, setup.par.pp, f.samples_per_rank);
+            f.state_bytes + f.act_per_sample * min_mult as f64
         }
     }
 }
@@ -1391,6 +1468,123 @@ mod tests {
         assert!(capped.num_microbatches >= auto.num_microbatches);
         // capping never changes feasibility of an already-fitting config
         assert_eq!(capped.fits, auto.fits);
+    }
+
+    /// The batch entry point is bit-identical to a serial
+    /// `simulate_step` loop on a ragged set mixing dp-only, pipelined,
+    /// interleaved and OOM setups, at several worker counts.
+    #[test]
+    fn simulate_batch_bit_identical_to_serial() {
+        let mut setups = Vec::new();
+        for name in ["mt5-base", "mt5-xl", "mt5-xxl"] {
+            for nodes in [1usize, 2, 4] {
+                setups.push(TrainSetup::dp_pod(by_name(name).unwrap(), nodes, ZeroStage::Stage2));
+                let gpus = nodes * 8;
+                for pp in [2usize, 4] {
+                    for sched in [PipeSchedule::OneFOneB, PipeSchedule::Interleaved1F1B] {
+                        let mut s = pp_setup(
+                            name,
+                            nodes,
+                            ParallelCfg::dtp(gpus / pp, 1, pp),
+                            ZeroStage::Stage1,
+                        );
+                        s.sched = sched;
+                        setups.push(s);
+                    }
+                }
+            }
+        }
+        // an OOM marker in the batch too
+        setups.push(xxl_setup(1, ZeroStage::Stage0));
+        let serial: Vec<StepTime> = setups.iter().map(simulate_step).collect();
+        assert!(serial.iter().any(|st| !st.fits), "want an OOM entry in the batch");
+        for workers in [1usize, 4, 8] {
+            let cache = crate::sweep::SimCache::new();
+            let batch = simulate_batch(&crate::sweep::Sweep::new(workers), &cache, &setups);
+            assert_eq!(batch.len(), serial.len());
+            for (i, (a, b)) in serial.iter().zip(&batch).enumerate() {
+                assert_eq!(a.fits, b.fits, "setup {i} fits diverged");
+                assert_eq!(
+                    a.seconds_per_step().to_bits(),
+                    b.seconds_per_step().to_bits(),
+                    "setup {i} diverged at {workers} workers"
+                );
+                assert_eq!(a.mem_per_gpu.to_bits(), b.mem_per_gpu.to_bits());
+                assert_eq!(a.micro_batch, b.micro_batch);
+            }
+        }
+    }
+
+    /// The skeleton shape the batch API groups on is exactly the shape
+    /// the simulator prices: same accumulation count, `None` for pp = 1
+    /// and for provable OOMs.
+    #[test]
+    fn pipeline_shape_matches_simulator() {
+        let dp_only = xxl_setup(4, ZeroStage::Stage2);
+        assert!(pipeline_shape(&dp_only).is_none(), "pp=1 prices on the closed form");
+        let mut piped = pp_setup("mt5-xl", 2, ParallelCfg::dtp(4, 1, 4), ZeroStage::Stage1);
+        piped.sched = PipeSchedule::Interleaved1F1B;
+        let st = simulate_step(&piped);
+        assert!(st.fits);
+        let key = pipeline_shape(&piped).expect("pipelined shape");
+        assert_eq!(key.sched, piped.sched);
+        assert_eq!(key.pp, 4);
+        assert_eq!(key.num_micro, st.num_microbatches);
+        let oom = xxl_setup(1, ZeroStage::Stage0);
+        assert!(pipeline_shape(&oom).is_none(), "OOM setups have no shape");
+    }
+
+    /// The optimized engine matches the retained reference **through the
+    /// simulator's own comm classes** with `zero3_prefetch` both off
+    /// (paper-era blocking re-gather) and on (the re-gather rides the
+    /// comm stream) — the two splits the tentpole must keep bit-exact.
+    #[test]
+    fn engine_bit_identical_to_reference_across_prefetch_splits() {
+        for prefetch in [false, true] {
+            for sched in [
+                PipeSchedule::OneFOneB,
+                PipeSchedule::GPipe,
+                PipeSchedule::Interleaved1F1B,
+            ] {
+                for overlap in [true, false] {
+                    let mut s =
+                        pp_setup("mt5-xl", 2, ParallelCfg::dtp(4, 1, 4), ZeroStage::Stage3);
+                    s.sched = sched;
+                    s.zero3_prefetch = prefetch;
+                    s.overlap_comm = overlap;
+                    let st = simulate_step(&s);
+                    assert!(st.fits);
+                    let comm = CommModel::from_view(s.cluster.limiting_view());
+                    let psi = s.model.params() as f64 / 4.0;
+                    let cc =
+                        comm_classes(&s, &comm, psi, st.micro_batch, st.num_microbatches);
+                    let inp = crate::timeline::PipeInputs {
+                        sched,
+                        pp: 4,
+                        num_micro: st.num_microbatches,
+                        fwd_total: st.compute / 3.0,
+                        bwd_total: st.compute * 2.0 / 3.0,
+                        blocking_fwd_micro: cc.blocking_fwd_micro,
+                        blocking_bwd_micro: cc.blocking_bwd_micro,
+                        ovl_micro: cc.ovl_micro,
+                        ovl_step: cc.ovl_step,
+                        hop: cc.hop,
+                        overlap,
+                    };
+                    let opt = crate::timeline::simulate_pipeline(&inp);
+                    let reference = crate::timeline::simulate_pipeline_reference(&inp);
+                    let tag = format!("{sched:?} prefetch={prefetch} overlap={overlap}");
+                    assert_eq!(opt.makespan.to_bits(), reference.makespan.to_bits(), "{tag}");
+                    assert_eq!(
+                        opt.exposed_grad.to_bits(),
+                        reference.exposed_grad.to_bits(),
+                        "{tag}"
+                    );
+                    assert_eq!(opt.bubble.to_bits(), reference.bubble.to_bits(), "{tag}");
+                    assert_eq!(opt.critical_stage, reference.critical_stage, "{tag}");
+                }
+            }
+        }
     }
 }
 

@@ -131,7 +131,28 @@ impl Sweep {
         if self.workers <= 1 || n <= 1 {
             return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
         }
+        // each key is computed exactly once, here; the sort below reads
+        // the cached values
         let costs: Vec<f64> = items.iter().map(&cost).collect();
+        self.map_chunked_keyed(items, &costs, f)
+    }
+
+    /// [`Sweep::map_chunked`] with the cost keys **precomputed by the
+    /// caller** — callers that already hold analytical bounds (the
+    /// planner's branch enumeration, [`crate::sim::simulate_batch`]) pass
+    /// them through instead of re-deriving each key at scheduling time.
+    /// Output is bit-identical to [`Sweep::map`] for any key vector.
+    pub fn map_chunked_keyed<T, R, F>(&self, items: &[T], costs: &[f64], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        assert_eq!(n, costs.len(), "one cost key per item");
+        if self.workers <= 1 || n <= 1 {
+            return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        }
         let mut order: Vec<usize> = (0..n).collect();
         // descending cost, ties by input index: deterministic schedule
         order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]).then(a.cmp(&b)));
@@ -183,11 +204,12 @@ impl Sweep {
 
     /// Price many [`TrainSetup`]s through the memo cache in parallel,
     /// longest-expected-first (keyed by the analytical
-    /// [`crate::sim::step_lower_bound`]) so ragged setup lists keep every
-    /// core busy.  Output order and values are bit-identical to a serial
-    /// in-order run.
+    /// [`crate::sim::step_lower_bound`], computed once per setup) with
+    /// each distinct pipeline-skeleton shape warmed once for the whole
+    /// batch (see [`crate::sim::simulate_batch`]).  Output order and
+    /// values are bit-identical to a serial in-order run.
     pub fn simulate_setups(&self, cache: &SimCache, setups: &[TrainSetup]) -> Vec<StepTime> {
-        self.map_chunked(setups, crate::sim::step_lower_bound, |_, s| cache.simulate(s))
+        crate::sim::simulate_batch(self, cache, setups)
     }
 }
 
@@ -802,6 +824,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Satellite: precomputed cost keys schedule identically — the
+    /// chunked output is unchanged (bit-identical to `map` and to the
+    /// closure-keyed `map_chunked`) when the caller passes each key once
+    /// instead of a cost function.
+    #[test]
+    fn map_chunked_keyed_output_unchanged() {
+        let items: Vec<u64> = (0..157).collect();
+        let f = |i: usize, &x: &u64| ((x as f64 + 0.25).sqrt() * (i as f64 + 2.0)).ln();
+        let cost = |&x: &u64| ((x % 13) as f64) - (x as f64) / 31.0;
+        let plain = Sweep::serial().map(&items, f);
+        let keys: Vec<f64> = items.iter().map(cost).collect();
+        for workers in [1usize, 3, 8] {
+            let sweep = Sweep::new(workers);
+            let via_closure = sweep.map_chunked(&items, cost, f);
+            let via_keys = sweep.map_chunked_keyed(&items, &keys, f);
+            assert_eq!(via_keys.len(), plain.len());
+            for ((a, b), c) in plain.iter().zip(&via_closure).zip(&via_keys) {
+                assert_eq!(a.to_bits(), b.to_bits());
+                assert_eq!(a.to_bits(), c.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one cost key per item")]
+    fn map_chunked_keyed_requires_matching_lengths() {
+        let items = [1u64, 2, 3];
+        let keys = [0.0f64; 2];
+        let _ = Sweep::new(2).map_chunked_keyed(&items, &keys, |_, &x| x);
     }
 
     fn tmp_path(tag: &str) -> std::path::PathBuf {

@@ -43,6 +43,38 @@
 //! **serializes the streams**: every comm-stream second is inlined into
 //! the issuing backward task and nothing hides.
 //!
+//! ## Performance: skeletons and scratch arenas
+//!
+//! `simulate_pipeline` is the hot inner loop of every planner wave, HPO
+//! funnel phase and sweep bench, so the engine is split into an immutable
+//! **schedule skeleton** and a reusable **scratch arena**:
+//!
+//! * Everything *structural* — the per-rank static sequences, the dense
+//!   task-id layout, the dependency graph (initial dependency counts plus
+//!   a CSR waiter list with per-edge no-delay flags), ghost padding and
+//!   the per-task decode tables — depends only on
+//!   `(schedule, pp, num_micro)` and lives in a [`PipeSkeleton`], cached
+//!   in a bounded, lock-striped global ([`skeletons`], the
+//!   [`crate::sweep::SimCache`] striping pattern) with exact hit/miss
+//!   counters.  Repeat shapes skip graph construction entirely.
+//! * Every *per-simulation* mutable array (`ready_time`, stage cursors,
+//!   busy/free state, interval logs, in-flight tracking and the event
+//!   heap's backing vector) lives in a [`TimelineScratch`] that is
+//!   **cleared, not freed**, between calls and threaded through
+//!   [`simulate_pipeline`] via a thread-local — the steady-state engine
+//!   is allocation-free ([`scratch_stats`] counts clears vs buffer
+//!   growths, including mid-run heap/interval reallocation, so tests can
+//!   assert it portably).  The arena lives as long as its thread: the
+//!   calling thread keeps one for the process, a `Sweep` worker keeps
+//!   one for the whole fan-out it serves.
+//!
+//! The event heap keeps the exact `(time, seq)` min-ordering of the
+//! original engine — `(time, seq)` pairs are unique, so pop order (and
+//! therefore every output float) is fully determined by the key set and
+//! **bit-identical** to the pre-skeleton engine, whose verbatim body is
+//! retained as a `#[cfg(test)]` reference and property-tested equal
+//! across every `(schedule, pp ≤ 8, micro-batch count)` shape.
+//!
 //! ## Degeneracy guarantees
 //!
 //! For `pp == 1` the task graph is a serial chain with no idle gaps, so
@@ -54,8 +86,13 @@
 //! engine stays within a property-tested band of the reference.
 
 use crate::parallel::{PipeSchedule, INTERLEAVE_DEGREE};
+use std::cell::RefCell;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrd};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Fraction of a backward-compute window the comm stream can use
 /// (DeepSpeed bucketing leaves some SM/copy-engine contention).
@@ -217,10 +254,731 @@ impl Ord for Event {
     }
 }
 
-/// Simulate one step's pipeline.  Panics on an internal scheduling
+// ---------------------------------------------------------------------
+// Schedule skeletons
+// ---------------------------------------------------------------------
+
+/// Structural identity of a pipeline problem — everything the engine
+/// does that is independent of task durations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SkeletonKey {
+    pub sched: PipeSchedule,
+    pub pp: usize,
+    pub num_micro: usize,
+}
+
+impl SkeletonKey {
+    pub fn of(inp: &PipeInputs) -> SkeletonKey {
+        SkeletonKey { sched: inp.sched, pp: inp.pp.max(1), num_micro: inp.num_micro.max(1) }
+    }
+}
+
+/// The immutable, memoizable half of [`simulate_pipeline`]: static
+/// per-rank sequences (as dense task ids), the dependency graph in CSR
+/// form with per-edge no-delay flags, and per-task decode tables.  Built
+/// once per [`SkeletonKey`] and shared via [`skeletons`].
+pub struct PipeSkeleton {
+    key: SkeletonKey,
+    p: usize,
+    nm: usize,
+    v: usize,
+    n_ids: usize,
+    n_tasks: usize,
+    /// Per-stage static op order, as dense task ids.
+    seq_tasks: Vec<Vec<u32>>,
+    /// Initial dependency count per task (≤ 2).
+    ndeps0: Vec<u8>,
+    /// CSR waiter lists: tasks unblocked when task `t` completes are
+    /// `waiter_tgt[waiter_off[t]..waiter_off[t + 1]]`, in the exact
+    /// insertion order of the original adjacency build.
+    waiter_off: Vec<u32>,
+    waiter_tgt: Vec<u32>,
+    /// Per-edge: the same-stage same-micro (forward→backward) edges that
+    /// carry no transfer delay.
+    waiter_free: Vec<bool>,
+    /// Per-task decode tables (replace the modulo/divide decode chains in
+    /// the hot loop with straight lookups).
+    task_bwd: Vec<bool>,
+    task_ghost: Vec<bool>,
+    task_stage: Vec<u32>,
+    task_micro: Vec<u32>,
+}
+
+impl PipeSkeleton {
+    /// Build the skeleton for one `(schedule, pp, num_micro)` shape —
+    /// the structural work the pre-skeleton engine redid on every call.
+    pub fn build(key: SkeletonKey) -> PipeSkeleton {
+        let p = key.pp.max(1);
+        let nm = key.num_micro.max(1);
+        let v = if key.sched == PipeSchedule::Interleaved1F1B { INTERLEAVE_DEGREE } else { 1 };
+        let nm_pad = if key.sched == PipeSchedule::Interleaved1F1B {
+            ((nm + p - 1) / p) * p
+        } else {
+            nm
+        };
+        let seqs: Vec<Vec<(bool, usize, usize)>> =
+            (0..p).map(|s| stage_sequence(key.sched, p, s, nm, v)).collect();
+
+        // dense task ids: ((bwd·p + stage)·nm_pad + micro)·v + chunk
+        let idx = |bwd: bool, st: usize, m: usize, c: usize| -> usize {
+            (((bwd as usize) * p + st) * nm_pad + m) * v + c
+        };
+        let n_ids = 2 * p * nm_pad * v;
+        let n_tasks: usize = seqs.iter().map(|s| s.len()).sum();
+
+        // the dependency edges, in the exact order the original adjacency
+        // build pushed them (source, target, same-stage-same-micro)
+        let mut ndeps0 = vec![0u8; n_ids];
+        let mut edges: Vec<(u32, u32, bool)> = Vec::with_capacity(2 * n_tasks);
+        for (st, seq) in seqs.iter().enumerate() {
+            for &(bwd, m, c) in seq {
+                let t = idx(bwd, st, m, c);
+                let mut add = |db: bool, dst: usize, dm: usize, dc: usize| {
+                    let d = idx(db, dst, dm, dc);
+                    ndeps0[t] += 1;
+                    edges.push((d as u32, t as u32, dst == st && dm == m));
+                };
+                if !bwd {
+                    if st > 0 {
+                        add(false, st - 1, m, c);
+                    } else if c > 0 {
+                        add(false, p - 1, m, c - 1);
+                    }
+                } else {
+                    add(false, st, m, c);
+                    if st < p - 1 {
+                        add(true, st + 1, m, c);
+                    } else if c < v - 1 {
+                        add(true, 0, m, c + 1);
+                    }
+                }
+            }
+        }
+        // CSR over the sources; stable fill preserves per-source order
+        let mut counts = vec![0u32; n_ids];
+        for &(d, _, _) in &edges {
+            counts[d as usize] += 1;
+        }
+        let mut waiter_off = vec![0u32; n_ids + 1];
+        for i in 0..n_ids {
+            waiter_off[i + 1] = waiter_off[i] + counts[i];
+        }
+        let mut cursor: Vec<u32> = waiter_off[..n_ids].to_vec();
+        let mut waiter_tgt = vec![0u32; edges.len()];
+        let mut waiter_free = vec![false; edges.len()];
+        for &(d, t, free) in &edges {
+            let slot = cursor[d as usize] as usize;
+            waiter_tgt[slot] = t;
+            waiter_free[slot] = free;
+            cursor[d as usize] += 1;
+        }
+
+        let seq_tasks: Vec<Vec<u32>> = seqs
+            .iter()
+            .enumerate()
+            .map(|(st, seq)| seq.iter().map(|&(bwd, m, c)| idx(bwd, st, m, c) as u32).collect())
+            .collect();
+
+        // per-task decode tables (the original engine's `decode` closure,
+        // evaluated once at build time instead of per event per waiter)
+        let mut task_bwd = vec![false; n_ids];
+        let mut task_ghost = vec![false; n_ids];
+        let mut task_stage = vec![0u32; n_ids];
+        let mut task_micro = vec![0u32; n_ids];
+        for t in 0..n_ids {
+            let m = (t / v) % nm_pad;
+            task_bwd[t] = t / v / nm_pad / p == 1;
+            task_ghost[t] = m >= nm;
+            task_stage[t] = ((t / v / nm_pad) % p) as u32;
+            task_micro[t] = m as u32;
+        }
+
+        PipeSkeleton {
+            key,
+            p,
+            nm,
+            v,
+            n_ids,
+            n_tasks,
+            seq_tasks,
+            ndeps0,
+            waiter_off,
+            waiter_tgt,
+            waiter_free,
+            task_bwd,
+            task_ghost,
+            task_stage,
+            task_micro,
+        }
+    }
+
+    pub fn key(&self) -> SkeletonKey {
+        self.key
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    /// Approximate resident weight in dense task ids — every table in
+    /// the skeleton is O(`n_ids`) (~30 bytes per id across them), so the
+    /// cache budgets by this rather than by entry count alone.
+    pub fn weight(&self) -> usize {
+        self.n_ids
+    }
+}
+
+/// Default bound on resident skeleton *entries*; override with
+/// `SCALESTUDY_SKELCACHE_MAX` (0 = unbounded).
+pub const SKELETON_CACHE_DEFAULT_MAX: usize = 1024;
+
+/// Default bound on total resident skeleton *weight* (task ids summed
+/// across entries).  Shapes vary 1000× in size — a pp=8, 768-micro-batch
+/// interleaved skeleton is ~25k ids (~700 KB) while typical planner
+/// shapes are a few hundred — so a count bound alone could pin hundreds
+/// of MB.  1M ids ≈ ~30 MB worst case.  Override with
+/// `SCALESTUDY_SKELCACHE_MAX_TASKS` (0 = unbounded).
+pub const SKELETON_CACHE_DEFAULT_MAX_TASKS: usize = 1 << 20;
+
+const SKELETON_STRIPES: usize = 16;
+
+fn skeleton_default_max() -> usize {
+    std::env::var("SCALESTUDY_SKELCACHE_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(SKELETON_CACHE_DEFAULT_MAX)
+}
+
+fn skeleton_default_max_tasks() -> usize {
+    std::env::var("SCALESTUDY_SKELCACHE_MAX_TASKS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(SKELETON_CACHE_DEFAULT_MAX_TASKS)
+}
+
+/// Bounded, lock-striped memo cache over [`PipeSkeleton::build`] — the
+/// [`crate::sweep::SimCache`] pattern: one stripe-lock acquisition per
+/// [`SkeletonCache::get`] (a miss builds under its stripe, so same-key
+/// racers wait for the built skeleton instead of duplicating the work),
+/// exact hit/miss counters under any interleaving, and oldest-insertion
+/// eviction past **either** budget — entry count, or total task-id
+/// weight (shapes vary ~1000× in size, so the weight budget is what
+/// actually bounds memory).  Eviction only drops the cache's `Arc` —
+/// in-flight simulations keep their skeleton alive, so results can
+/// never change under memory pressure (property-tested).
+///
+/// The striping/eviction mechanism deliberately mirrors `SimCache`
+/// rather than sharing a generic with it: `SimCache` interleaves
+/// persistence with the same state, and unifying the two is a refactor
+/// best done with a compiler in the loop.  Fixes to either cache's
+/// locking or eviction should be ported to the other.
+pub struct SkeletonCache {
+    stripes: Vec<Mutex<HashMap<SkeletonKey, (Arc<PipeSkeleton>, u64)>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    entries: AtomicUsize,
+    /// Total resident weight (sum of [`PipeSkeleton::weight`]).
+    weight: AtomicUsize,
+    seq: AtomicU64,
+    ages: Mutex<VecDeque<(SkeletonKey, u64)>>,
+    max_entries: usize,
+    max_weight: usize,
+}
+
+impl Default for SkeletonCache {
+    fn default() -> SkeletonCache {
+        SkeletonCache::new()
+    }
+}
+
+impl SkeletonCache {
+    pub fn new() -> SkeletonCache {
+        SkeletonCache::with_budget(skeleton_default_max(), skeleton_default_max_tasks())
+    }
+
+    /// A cache bounded to `max_entries` resident skeletons (0 =
+    /// unbounded), with the default weight budget.
+    pub fn with_capacity(max_entries: usize) -> SkeletonCache {
+        SkeletonCache::with_budget(max_entries, skeleton_default_max_tasks())
+    }
+
+    /// Bound both the entry count and the total task-id weight (either
+    /// 0 = unbounded on that axis).
+    pub fn with_budget(max_entries: usize, max_weight: usize) -> SkeletonCache {
+        SkeletonCache {
+            stripes: (0..SKELETON_STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            entries: AtomicUsize::new(0),
+            weight: AtomicUsize::new(0),
+            seq: AtomicU64::new(0),
+            ages: Mutex::new(VecDeque::new()),
+            max_entries,
+            max_weight,
+        }
+    }
+
+    fn over_budget(&self) -> bool {
+        (self.max_entries > 0 && self.entries.load(AtomicOrd::Relaxed) > self.max_entries)
+            || (self.max_weight > 0 && self.weight.load(AtomicOrd::Relaxed) > self.max_weight)
+    }
+
+    fn stripe_of(&self, key: &SkeletonKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    fn next_seq_and_track(&self, key: SkeletonKey) -> u64 {
+        let mut ages = self.ages.lock().unwrap();
+        let seq = self.seq.fetch_add(1, AtomicOrd::Relaxed);
+        ages.push_back((key, seq));
+        seq
+    }
+
+    /// Evict the globally oldest-inserted entry; `false` when the age
+    /// queue is exhausted (nothing evictable), which bounds the caller's
+    /// eviction loop even if a concurrent [`SkeletonCache::clear`]
+    /// orphaned entries from their age records.
+    fn evict_oldest(&self) -> bool {
+        loop {
+            let front = { self.ages.lock().unwrap().pop_front() };
+            let (k, s) = match front {
+                Some(f) => f,
+                None => return false,
+            };
+            let mut map = self.stripes[self.stripe_of(&k)].lock().unwrap();
+            if map.get(&k).map_or(false, |&(_, cs)| cs == s) {
+                if let Some((gone, _)) = map.remove(&k) {
+                    self.entries.fetch_sub(1, AtomicOrd::Relaxed);
+                    self.weight.fetch_sub(gone.weight(), AtomicOrd::Relaxed);
+                }
+                return true;
+            }
+        }
+    }
+
+    /// The cached skeleton for `key`, building it on a miss (under the
+    /// stripe lock, so concurrent same-key callers wait instead of
+    /// duplicating the build).  Past either budget, oldest-inserted
+    /// entries are evicted (never down to empty — the newest skeleton
+    /// stays resident even if it alone exceeds the weight budget).
+    pub fn get(&self, key: SkeletonKey) -> Arc<PipeSkeleton> {
+        let skel = {
+            let mut map = self.stripes[self.stripe_of(&key)].lock().unwrap();
+            if let Some((hit, _)) = map.get(&key) {
+                self.hits.fetch_add(1, AtomicOrd::Relaxed);
+                return hit.clone();
+            }
+            let built = Arc::new(PipeSkeleton::build(key));
+            self.misses.fetch_add(1, AtomicOrd::Relaxed);
+            let seq = self.next_seq_and_track(key);
+            self.weight.fetch_add(built.weight(), AtomicOrd::Relaxed);
+            map.insert(key, (built.clone(), seq));
+            self.entries.fetch_add(1, AtomicOrd::Relaxed);
+            built
+        };
+        while self.over_budget() && self.entries.load(AtomicOrd::Relaxed) > 1 {
+            if !self.evict_oldest() {
+                break;
+            }
+        }
+        skel
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(AtomicOrd::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(AtomicOrd::Relaxed)
+    }
+
+    /// Hit fraction of all `get` calls so far (0.0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits(), self.misses());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total resident weight in task ids (the budgeted quantity).
+    pub fn resident_weight(&self) -> usize {
+        self.weight.load(AtomicOrd::Relaxed)
+    }
+
+    /// Drop every resident skeleton (counters keep accumulating) — a
+    /// test/tooling hook for exercising cold starts on a long-lived
+    /// cache.  Not safe to rely on for *exact* accounting while
+    /// concurrent `get`s run (an interleaved insert can survive with its
+    /// age record wiped; such orphans are still evicted-by-count and
+    /// never hang the eviction loop, which stops when the age queue is
+    /// exhausted).
+    pub fn clear(&self) {
+        for stripe in &self.stripes {
+            let mut map = stripe.lock().unwrap();
+            for (_, (skel, _)) in map.iter() {
+                self.weight.fetch_sub(skel.weight(), AtomicOrd::Relaxed);
+            }
+            let n = map.len();
+            map.clear();
+            self.entries.fetch_sub(n, AtomicOrd::Relaxed);
+        }
+        self.ages.lock().unwrap().clear();
+    }
+}
+
+static SKELETONS: OnceLock<SkeletonCache> = OnceLock::new();
+
+/// The process-wide skeleton cache [`simulate_pipeline`] prices through.
+pub fn skeletons() -> &'static SkeletonCache {
+    SKELETONS.get_or_init(SkeletonCache::new)
+}
+
+/// Ensure `key`'s skeleton is resident — the batch-pricing entry points
+/// ([`crate::sim::simulate_batch`], the planner's waves) warm each
+/// distinct shape once before fanning a group out across workers.
+pub fn warm_skeleton(key: SkeletonKey) {
+    let _ = skeletons().get(key);
+}
+
+// ---------------------------------------------------------------------
+// Scratch arenas
+// ---------------------------------------------------------------------
+
+/// The mutable half of a simulation: every per-run array, cleared-not-
+/// freed between calls so the steady-state engine allocates nothing.
+/// One lives per thread (see [`simulate_pipeline`]); tests and benches
+/// can also hold their own.
+pub struct TimelineScratch {
+    ndeps: Vec<u8>,
+    ready_time: Vec<f64>,
+    ptr: Vec<usize>,
+    busy: Vec<bool>,
+    free_at: Vec<f64>,
+    stage_last_end: Vec<f64>,
+    // (span, is_bwd, is_idle, bwd_compute_span) intervals per stage
+    intervals: Vec<Vec<(f64, bool, bool, f64)>>,
+    inflight: Vec<usize>,
+    fwd_started: Vec<bool>,
+    bwd_done: Vec<u32>,
+    heap: Vec<Event>,
+    clears: u64,
+    grows: u64,
+}
+
+impl Default for TimelineScratch {
+    fn default() -> TimelineScratch {
+        TimelineScratch::new()
+    }
+}
+
+impl TimelineScratch {
+    pub fn new() -> TimelineScratch {
+        TimelineScratch {
+            ndeps: Vec::new(),
+            ready_time: Vec::new(),
+            ptr: Vec::new(),
+            busy: Vec::new(),
+            free_at: Vec::new(),
+            stage_last_end: Vec::new(),
+            intervals: Vec::new(),
+            inflight: Vec::new(),
+            fwd_started: Vec::new(),
+            bwd_done: Vec::new(),
+            heap: Vec::new(),
+            clears: 0,
+            grows: 0,
+        }
+    }
+
+    /// Clear (never free) every array and size it for `skel`.  Counts a
+    /// clear always and a grow only when some backing buffer had to
+    /// reallocate — the no-allocation smoke test's portable signal.
+    fn reset(&mut self, skel: &PipeSkeleton) {
+        self.clears += 1;
+        let (p, n_ids, slots) = (skel.p, skel.n_ids, skel.p * skel.nm);
+        let mut grew = false;
+        grew |= self.ndeps.capacity() < n_ids;
+        self.ndeps.clear();
+        self.ndeps.extend_from_slice(&skel.ndeps0);
+        grew |= self.ready_time.capacity() < n_ids;
+        self.ready_time.clear();
+        self.ready_time.resize(n_ids, 0.0);
+        grew |= self.ptr.capacity() < p;
+        self.ptr.clear();
+        self.ptr.resize(p, 0);
+        grew |= self.busy.capacity() < p;
+        self.busy.clear();
+        self.busy.resize(p, false);
+        grew |= self.free_at.capacity() < p;
+        self.free_at.clear();
+        self.free_at.resize(p, 0.0);
+        grew |= self.stage_last_end.capacity() < p;
+        self.stage_last_end.clear();
+        self.stage_last_end.resize(p, 0.0);
+        grew |= self.inflight.capacity() < p;
+        self.inflight.clear();
+        self.inflight.resize(p, 0);
+        grew |= self.fwd_started.capacity() < slots;
+        self.fwd_started.clear();
+        self.fwd_started.resize(slots, false);
+        grew |= self.bwd_done.capacity() < slots;
+        self.bwd_done.clear();
+        self.bwd_done.resize(slots, 0);
+        // the interval logs keep their inner capacity across runs
+        grew |= self.intervals.capacity() < p;
+        while self.intervals.len() < p {
+            self.intervals.push(Vec::new());
+        }
+        for iv in self.intervals.iter_mut().take(p) {
+            iv.clear();
+        }
+        self.heap.clear();
+        if grew {
+            self.grows += 1;
+        }
+    }
+
+    /// `(clears, grows)` so far: a warm arena keeps clearing without
+    /// growing.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.clears, self.grows)
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<TimelineScratch> = RefCell::new(TimelineScratch::new());
+}
+
+/// This thread's arena counters — `(clears, grows)` — for the
+/// no-allocation smoke assertions (count clears, not allocations, to
+/// stay portable across allocators).
+pub fn scratch_stats() -> (u64, u64) {
+    SCRATCH.with(|s| s.borrow().stats())
+}
+
+// ---------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------
+
+/// Simulate one step's pipeline through the process-wide skeleton cache
+/// and this thread's scratch arena.  Panics on an internal scheduling
 /// inconsistency (a structural deadlock), which the static sequences are
 /// property-tested never to produce for any `(schedule, pp, num_micro)`.
 pub fn simulate_pipeline(inp: &PipeInputs) -> PipeOutcome {
+    let skel = skeletons().get(SkeletonKey::of(inp));
+    SCRATCH.with(|s| simulate_pipeline_with(&skel, &mut s.borrow_mut(), inp))
+}
+
+/// The cold path — build a fresh skeleton and a fresh arena for this one
+/// call (exactly the pre-memoization cost).  The benches use it as the
+/// honest baseline; results are bit-identical to [`simulate_pipeline`].
+pub fn simulate_pipeline_uncached(inp: &PipeInputs) -> PipeOutcome {
+    let skel = PipeSkeleton::build(SkeletonKey::of(inp));
+    let mut scratch = TimelineScratch::new();
+    simulate_pipeline_with(&skel, &mut scratch, inp)
+}
+
+/// The optimized engine over an explicit skeleton + arena.  `skel` must
+/// match `inp`'s `(schedule, pp, num_micro)` shape.
+pub fn simulate_pipeline_with(
+    skel: &PipeSkeleton,
+    scratch: &mut TimelineScratch,
+    inp: &PipeInputs,
+) -> PipeOutcome {
+    debug_assert_eq!(skel.key, SkeletonKey::of(inp), "skeleton/inputs shape mismatch");
+    let p = skel.p;
+    let nm = skel.nm;
+    let v = skel.v;
+    let vf = v as f64;
+    let nmf = nm as f64;
+    let fwd_chunk = inp.fwd_total / nmf / vf;
+    let bwd_chunk = inp.bwd_total / nmf / vf;
+    let per_bwd_work = inp.ovl_micro / vf + inp.ovl_step / (nmf * vf);
+    let fwd_dur = fwd_chunk + inp.blocking_fwd_micro / vf;
+    let mut bwd_dur = bwd_chunk + inp.blocking_bwd_micro / vf;
+    if !inp.overlap {
+        bwd_dur += per_bwd_work; // serialize the streams
+    }
+
+    scratch.reset(skel);
+    let mut heap: BinaryHeap<Event> = BinaryHeap::from(std::mem::take(&mut scratch.heap));
+    // capacity snapshots so mid-run reallocation of the push-grown
+    // buffers (heap, interval logs) is counted as a grow too — reset()
+    // can only check the arrays it sizes up-front
+    let heap_cap0 = heap.capacity();
+    let ivals_cap0: usize = scratch.intervals.iter().take(p).map(|iv| iv.capacity()).sum();
+    let mut evseq = 0u64;
+    let mut n_done = 0usize;
+    let mut peak_inflight = 0usize;
+
+    macro_rules! dispatch {
+        ($st:expr, $now:expr) => {{
+            let st = $st;
+            let now: f64 = $now;
+            if !scratch.busy[st] && scratch.ptr[st] < skel.seq_tasks[st].len() {
+                let t = skel.seq_tasks[st][scratch.ptr[st]] as usize;
+                if scratch.ndeps[t] == 0 {
+                    let rt = scratch.ready_time[t];
+                    if rt > now {
+                        heap.push(Event { time: rt, seq: evseq, task: usize::MAX, stage: st });
+                        evseq += 1;
+                    } else {
+                        let ghost = skel.task_ghost[t];
+                        let bwd = skel.task_bwd[t];
+                        let start =
+                            if scratch.free_at[st] > now { scratch.free_at[st] } else { now };
+                        if !bwd && !ghost {
+                            let slot = st * nm + skel.task_micro[t] as usize;
+                            if !scratch.fwd_started[slot] {
+                                scratch.fwd_started[slot] = true;
+                                scratch.inflight[st] += 1;
+                                peak_inflight = peak_inflight.max(scratch.inflight[st]);
+                            }
+                        }
+                        scratch.busy[st] = true;
+                        scratch.ptr[st] += 1;
+                        let dur = if ghost {
+                            0.0
+                        } else if bwd {
+                            bwd_dur
+                        } else {
+                            fwd_dur
+                        };
+                        let end = start + dur;
+                        if !ghost {
+                            if start > scratch.stage_last_end[st] {
+                                scratch.intervals[st].push((
+                                    start - scratch.stage_last_end[st],
+                                    false,
+                                    true,
+                                    0.0,
+                                ));
+                            }
+                            scratch.intervals[st].push((
+                                dur,
+                                bwd,
+                                false,
+                                if bwd { bwd_chunk } else { 0.0 },
+                            ));
+                            scratch.stage_last_end[st] = end;
+                        }
+                        scratch.free_at[st] = end;
+                        heap.push(Event { time: end, seq: evseq, task: t, stage: st });
+                        evseq += 1;
+                    }
+                }
+            }
+        }};
+    }
+
+    for st in 0..p {
+        dispatch!(st, 0.0);
+    }
+    while let Some(ev) = heap.pop() {
+        if ev.task == usize::MAX {
+            dispatch!(ev.stage, ev.time);
+            continue;
+        }
+        let t = ev.task;
+        let st = skel.task_stage[t] as usize;
+        n_done += 1;
+        scratch.busy[st] = false;
+        let ghost = skel.task_ghost[t];
+        if skel.task_bwd[t] && !ghost {
+            let slot = st * nm + skel.task_micro[t] as usize;
+            scratch.bwd_done[slot] += 1;
+            if scratch.bwd_done[slot] as usize == v {
+                scratch.inflight[st] -= 1;
+            }
+        }
+        let hop = if ghost { 0.0 } else { inp.hop };
+        let (w0, w1) = (skel.waiter_off[t] as usize, skel.waiter_off[t + 1] as usize);
+        for wi in w0..w1 {
+            let w = skel.waiter_tgt[wi] as usize;
+            scratch.ndeps[w] -= 1;
+            // same-stage forward→backward edges carry no transfer
+            let delay = if skel.waiter_free[wi] { 0.0 } else { hop };
+            let rt = ev.time + delay;
+            if rt > scratch.ready_time[w] {
+                scratch.ready_time[w] = rt;
+            }
+        }
+        for st2 in 0..p {
+            dispatch!(st2, ev.time);
+        }
+    }
+    // hand the (drained) heap's buffer back to the arena
+    let heap_grew = heap.capacity() > heap_cap0;
+    scratch.heap = heap.into_vec();
+    scratch.heap.clear();
+    let ivals_cap1: usize = scratch.intervals.iter().take(p).map(|iv| iv.capacity()).sum();
+    if heap_grew || ivals_cap1 > ivals_cap0 {
+        scratch.grows += 1;
+    }
+    assert_eq!(
+        n_done, skel.n_tasks,
+        "pipeline deadlock: {n_done}/{} ({:?}, p={p}, m={nm})",
+        skel.n_tasks, inp.sched
+    );
+
+    // ---- fluid comm-stream drain per stage
+    let mut makespan = f64::NEG_INFINITY;
+    let mut crit = 0usize;
+    let mut crit_backlog = 0.0f64;
+    for st in 0..p {
+        let mut backlog = 0.0f64;
+        if inp.overlap {
+            for &(span, is_bwd, is_idle, bspan) in &scratch.intervals[st] {
+                if is_bwd {
+                    let avail = backlog + per_bwd_work;
+                    let drained = avail.min(OVERLAP_EFFICIENCY * bspan);
+                    backlog = avail - drained;
+                } else if is_idle {
+                    backlog -= backlog.min(span);
+                }
+            }
+        }
+        let finish = scratch.stage_last_end[st] + backlog;
+        if finish > makespan {
+            makespan = finish;
+            crit = st;
+            crit_backlog = backlog;
+        }
+    }
+    let compute_st = inp.fwd_total + inp.bwd_total;
+    let blocking = (inp.blocking_fwd_micro + inp.blocking_bwd_micro) * nmf;
+    let ovl_total = inp.ovl_micro * nmf + inp.ovl_step;
+    let exposed_grad = if inp.overlap { crit_backlog } else { ovl_total };
+    let idle = makespan - compute_st - blocking - exposed_grad;
+    PipeOutcome {
+        makespan,
+        exposed_grad,
+        exposed_blocking: blocking,
+        bubble: idle.max(0.0),
+        critical_stage: crit,
+        peak_inflight,
+    }
+}
+
+/// The pre-skeleton engine body, kept verbatim as the bit-identity
+/// reference: rebuilds the per-rank sequences, the adjacency lists and
+/// every scratch vector on each call.  [`simulate_pipeline`] is
+/// property-tested bit-equal to this across every
+/// `(schedule, pp ≤ 8, micro-batch count)` shape.
+#[cfg(test)]
+pub(crate) fn simulate_pipeline_reference(inp: &PipeInputs) -> PipeOutcome {
     let p = inp.pp.max(1);
     let nm = inp.num_micro.max(1);
     let v = if inp.sched == PipeSchedule::Interleaved1F1B { INTERLEAVE_DEGREE } else { 1 };
@@ -453,6 +1211,71 @@ mod tests {
         })
     }
 
+    fn assert_outcomes_bit_identical(a: &PipeOutcome, b: &PipeOutcome, tag: &str) {
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}: makespan");
+        assert_eq!(a.exposed_grad.to_bits(), b.exposed_grad.to_bits(), "{tag}: exposed_grad");
+        assert_eq!(
+            a.exposed_blocking.to_bits(),
+            b.exposed_blocking.to_bits(),
+            "{tag}: exposed_blocking"
+        );
+        assert_eq!(a.bubble.to_bits(), b.bubble.to_bits(), "{tag}: bubble");
+        assert_eq!(a.critical_stage, b.critical_stage, "{tag}: critical_stage");
+        assert_eq!(a.peak_inflight, b.peak_inflight, "{tag}: peak_inflight");
+    }
+
+    /// THE tentpole acceptance property: the skeleton/arena engine is
+    /// **bit-identical** to the retained pre-memoization reference body
+    /// for every (schedule, pp ≤ 8, micro-batch count) shape, with
+    /// overlap on/off, asymmetric durations, hop delays, and both
+    /// comm-class splits (the zero3_prefetch knob moves seconds between
+    /// `blocking_bwd_micro` and `ovl_micro` — both splits are swept).
+    #[test]
+    fn optimized_engine_bit_identical_to_reference() {
+        for sched in [
+            PipeSchedule::OneFOneB,
+            PipeSchedule::GPipe,
+            PipeSchedule::Interleaved1F1B,
+        ] {
+            for p in 1..=8usize {
+                for m in [1usize, 2, 3, 5, 7, 8, 12, 13, 16, 33, 96] {
+                    for overlap in [true, false] {
+                        // (blocking_bwd, ovl_micro) pairs: the paper-era
+                        // synchronous re-gather vs the prefetch split
+                        for (bb, om) in [(0.2, 0.3), (0.0, 0.5), (0.5, 0.0)] {
+                            let inp = PipeInputs {
+                                sched,
+                                pp: p,
+                                num_micro: m,
+                                fwd_total: m as f64 * 0.9,
+                                bwd_total: 2.0 * m as f64,
+                                blocking_fwd_micro: 0.1,
+                                blocking_bwd_micro: bb,
+                                ovl_micro: om,
+                                ovl_step: 0.4,
+                                hop: 0.05,
+                                overlap,
+                            };
+                            let tag = format!(
+                                "{sched:?} p={p} m={m} overlap={overlap} bb={bb} om={om}"
+                            );
+                            let reference = simulate_pipeline_reference(&inp);
+                            // cold (fresh skeleton + arena) and warm
+                            // (global cache + thread-local arena) paths
+                            let cold = simulate_pipeline_uncached(&inp);
+                            assert_outcomes_bit_identical(&cold, &reference, &tag);
+                            let warm = simulate_pipeline(&inp);
+                            assert_outcomes_bit_identical(&warm, &reference, &tag);
+                            // and a guaranteed cache hit re-run
+                            let hit = simulate_pipeline(&inp);
+                            assert_outcomes_bit_identical(&hit, &reference, &tag);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// The engine reproduces the textbook bubbles exactly on uniform
     /// tasks: GPipe/1F1B idle (p−1)(f+b), interleaved 1/v of that.
     #[test]
@@ -575,5 +1398,210 @@ mod tests {
         // 32s of traffic vs 0.85·8s of backward windows (+ idle gaps)
         assert!(heavy.exposed_grad > 20.0);
         assert!(heavy.makespan > small.makespan);
+    }
+
+    /// Satellite: a skeleton-cache hit returns a bit-identical outcome to
+    /// a cold miss, and the counters are exact.
+    #[test]
+    fn skeleton_cache_hit_bit_identical_to_miss() {
+        let cache = SkeletonCache::with_capacity(8);
+        let inp = PipeInputs {
+            sched: PipeSchedule::Interleaved1F1B,
+            pp: 4,
+            num_micro: 13,
+            fwd_total: 11.0,
+            bwd_total: 23.0,
+            blocking_fwd_micro: 0.07,
+            blocking_bwd_micro: 0.11,
+            ovl_micro: 0.13,
+            ovl_step: 0.17,
+            hop: 0.02,
+            overlap: true,
+        };
+        let key = SkeletonKey::of(&inp);
+        let mut scratch = TimelineScratch::new();
+        let miss = simulate_pipeline_with(&cache.get(key), &mut scratch, &inp);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let hit = simulate_pipeline_with(&cache.get(key), &mut scratch, &inp);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_outcomes_bit_identical(&hit, &miss, "hit vs miss");
+        assert_outcomes_bit_identical(&miss, &simulate_pipeline_uncached(&inp), "miss vs cold");
+    }
+
+    /// Satellite: eviction under a tiny capacity never changes results —
+    /// alternating shapes through a 1-entry cache thrashes every lookup
+    /// and still prices bit-identically to the uncached path.
+    #[test]
+    fn skeleton_eviction_never_changes_results() {
+        let tiny = SkeletonCache::with_capacity(1);
+        let mut scratch = TimelineScratch::new();
+        let mk = |sched: PipeSchedule, p: usize, m: usize| PipeInputs {
+            sched,
+            pp: p,
+            num_micro: m,
+            fwd_total: m as f64,
+            bwd_total: 1.7 * m as f64,
+            blocking_fwd_micro: 0.03,
+            blocking_bwd_micro: 0.05,
+            ovl_micro: 0.08,
+            ovl_step: 0.2,
+            hop: 0.01,
+            overlap: true,
+        };
+        let shapes = [
+            mk(PipeSchedule::OneFOneB, 4, 9),
+            mk(PipeSchedule::GPipe, 3, 7),
+            mk(PipeSchedule::Interleaved1F1B, 2, 5),
+        ];
+        for round in 0..3 {
+            for inp in &shapes {
+                let skel = tiny.get(SkeletonKey::of(inp));
+                let got = simulate_pipeline_with(&skel, &mut scratch, inp);
+                let want = simulate_pipeline_uncached(inp);
+                assert_outcomes_bit_identical(&got, &want, &format!("round {round}"));
+                assert!(tiny.len() <= 1, "capacity bound violated: {}", tiny.len());
+            }
+        }
+        // every distinct-shape lookup after the first round thrashed: the
+        // 1-entry cache can never hold the next shape
+        assert_eq!(tiny.hits(), 0);
+        assert_eq!(tiny.misses(), 9);
+    }
+
+    /// The weight budget evicts heavy shapes even when the entry count
+    /// is far from its bound, the accounting stays exact through evict
+    /// and clear, and the newest skeleton always survives its own insert.
+    #[test]
+    fn skeleton_weight_budget_bounds_residency() {
+        // every (1F1B, 2, 64) skeleton weighs 2*2*64 = 256 ids; budget 600
+        // holds at most two of them
+        let cache = SkeletonCache::with_budget(1024, 600);
+        let key = |m: usize| SkeletonKey { sched: PipeSchedule::OneFOneB, pp: 2, num_micro: m };
+        let w = cache.get(key(64)).weight();
+        assert_eq!(w, 256);
+        assert_eq!(cache.resident_weight(), 256);
+        cache.get(key(65));
+        cache.get(key(66));
+        assert!(cache.len() <= 2, "weight budget must evict: {} resident", cache.len());
+        assert!(cache.resident_weight() <= 600);
+        // the newest shape is resident (its re-get is a hit)...
+        let h = cache.hits();
+        cache.get(key(66));
+        assert_eq!(cache.hits(), h + 1);
+        // ...and a single over-budget skeleton still caches (never evicts
+        // down to empty)
+        let big = SkeletonCache::with_budget(1024, 100);
+        big.get(key(64));
+        assert_eq!(big.len(), 1);
+        let h = big.hits();
+        big.get(key(64));
+        assert_eq!(big.hits(), h + 1);
+        big.clear();
+        assert_eq!(big.resident_weight(), 0);
+        assert_eq!(big.len(), 0);
+    }
+
+    /// Satellite: concurrent hits from 8 threads keep the counters exact
+    /// (misses == distinct keys; every other lookup is a hit), and all
+    /// threads read the same shared skeleton.
+    #[test]
+    fn skeleton_cache_counters_exact_under_contention() {
+        let cache = SkeletonCache::with_capacity(64);
+        let keys: Vec<SkeletonKey> = (1..=4usize)
+            .flat_map(|p| {
+                [PipeSchedule::OneFOneB, PipeSchedule::GPipe].into_iter().map(move |sched| {
+                    SkeletonKey { sched, pp: p, num_micro: 6 }
+                })
+            })
+            .collect();
+        let per_thread = 100usize;
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let keys = &keys;
+                let cache = &cache;
+                scope.spawn(move || {
+                    for i in 0..per_thread {
+                        let skel = cache.get(keys[i % keys.len()]);
+                        assert_eq!(skel.key(), keys[i % keys.len()]);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.misses(), keys.len());
+        assert_eq!(cache.hits(), 8 * per_thread - keys.len());
+        assert_eq!(cache.len(), keys.len());
+        assert!(cache.hit_rate() > 0.9);
+    }
+
+    /// Satellite: the no-allocation smoke — once an arena has seen a
+    /// shape, re-simulating it clears the arena without growing any
+    /// backing buffer (counting clears, not allocations, stays portable
+    /// across allocators).
+    #[test]
+    fn steady_state_scratch_never_grows() {
+        let mut scratch = TimelineScratch::new();
+        let skel = PipeSkeleton::build(SkeletonKey {
+            sched: PipeSchedule::Interleaved1F1B,
+            pp: 4,
+            num_micro: 11,
+        });
+        let inp = PipeInputs {
+            sched: PipeSchedule::Interleaved1F1B,
+            pp: 4,
+            num_micro: 11,
+            fwd_total: 11.0,
+            bwd_total: 22.0,
+            blocking_fwd_micro: 0.1,
+            blocking_bwd_micro: 0.2,
+            ovl_micro: 0.3,
+            ovl_step: 0.4,
+            hop: 0.05,
+            overlap: true,
+        };
+        let _ = simulate_pipeline_with(&skel, &mut scratch, &inp);
+        let _ = simulate_pipeline_with(&skel, &mut scratch, &inp);
+        let (clears, grows) = scratch.stats();
+        assert_eq!(clears, 2);
+        for i in 0..100u64 {
+            let _ = simulate_pipeline_with(&skel, &mut scratch, &inp);
+            let (c, g) = scratch.stats();
+            assert_eq!(c, clears + 1 + i, "every call clears the arena");
+            assert_eq!(g, grows, "steady state must not grow any buffer");
+        }
+        // a *smaller* shape reuses the buffers without growth either
+        let small_key =
+            SkeletonKey { sched: PipeSchedule::OneFOneB, pp: 2, num_micro: 3 };
+        let small = PipeSkeleton::build(small_key);
+        let small_inp = PipeInputs { sched: PipeSchedule::OneFOneB, pp: 2, num_micro: 3, ..inp };
+        let (_, g_before) = scratch.stats();
+        let _ = simulate_pipeline_with(&small, &mut scratch, &small_inp);
+        assert_eq!(scratch.stats().1, g_before, "shrinking shapes must not allocate");
+    }
+
+    /// The thread-local arena behind [`simulate_pipeline`] reaches the
+    /// same steady state: warm calls advance clears, not grows.
+    #[test]
+    fn thread_local_arena_steady_state() {
+        let inp = PipeInputs {
+            sched: PipeSchedule::GPipe,
+            pp: 3,
+            num_micro: 10,
+            fwd_total: 10.0,
+            bwd_total: 20.0,
+            blocking_fwd_micro: 0.1,
+            blocking_bwd_micro: 0.2,
+            ovl_micro: 0.3,
+            ovl_step: 0.4,
+            hop: 0.05,
+            overlap: true,
+        };
+        let _ = simulate_pipeline(&inp);
+        let (c0, g0) = scratch_stats();
+        for _ in 0..20 {
+            let _ = simulate_pipeline(&inp);
+        }
+        let (c1, g1) = scratch_stats();
+        assert_eq!(c1, c0 + 20);
+        assert_eq!(g1, g0, "warm thread-local arena must not grow");
     }
 }

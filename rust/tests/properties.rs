@@ -645,6 +645,156 @@ fn prop_lower_bounds_sound_on_enumerated_space() {
     });
 }
 
+// ----------------------------------------------------------------- timeline
+
+/// The zero-allocation engine through the public API: the memoized
+/// skeleton + thread-local arena path (`simulate_pipeline`) is
+/// bit-identical to the cold rebuild-everything path
+/// (`simulate_pipeline_uncached`) for every (schedule, pp ≤ 8, m) shape,
+/// overlap on/off — including re-runs that are guaranteed skeleton-cache
+/// hits.
+#[test]
+fn prop_timeline_warm_path_bit_identical_to_cold() {
+    use scalestudy::parallel::PipeSchedule;
+    use scalestudy::timeline::{simulate_pipeline, simulate_pipeline_uncached, PipeInputs};
+    for sched in [
+        PipeSchedule::OneFOneB,
+        PipeSchedule::GPipe,
+        PipeSchedule::Interleaved1F1B,
+    ] {
+        for p in 1..=8usize {
+            for m in [1usize, 3, 7, 8, 13, 24] {
+                for overlap in [true, false] {
+                    let inp = PipeInputs {
+                        sched,
+                        pp: p,
+                        num_micro: m,
+                        fwd_total: m as f64 * 1.1,
+                        bwd_total: m as f64 * 2.3,
+                        blocking_fwd_micro: 0.09,
+                        blocking_bwd_micro: 0.04,
+                        ovl_micro: 0.21,
+                        ovl_step: 0.35,
+                        hop: 0.03,
+                        overlap,
+                    };
+                    let cold = simulate_pipeline_uncached(&inp);
+                    for round in 0..2 {
+                        let warm = simulate_pipeline(&inp);
+                        let tag = format!("{sched:?} p={p} m={m} overlap={overlap} r{round}");
+                        assert_eq!(
+                            warm.makespan.to_bits(),
+                            cold.makespan.to_bits(),
+                            "{tag}: makespan"
+                        );
+                        assert_eq!(
+                            warm.exposed_grad.to_bits(),
+                            cold.exposed_grad.to_bits(),
+                            "{tag}: exposed_grad"
+                        );
+                        assert_eq!(
+                            warm.bubble.to_bits(),
+                            cold.bubble.to_bits(),
+                            "{tag}: bubble"
+                        );
+                        assert_eq!(warm.critical_stage, cold.critical_stage, "{tag}");
+                        assert_eq!(warm.peak_inflight, cold.peak_inflight, "{tag}");
+                    }
+                }
+            }
+        }
+    }
+    // the global cache saw real traffic and its counters are consistent
+    let skel = scalestudy::timeline::skeletons();
+    assert!(skel.hits() + skel.misses() > 0);
+}
+
+/// Skeleton eviction under a tiny capacity never changes results: a
+/// 1-entry cache thrashing across shapes still prices bit-identically.
+#[test]
+fn prop_skeleton_eviction_invariant_under_tiny_capacity() {
+    use scalestudy::parallel::PipeSchedule;
+    use scalestudy::timeline::{
+        simulate_pipeline_uncached, simulate_pipeline_with, PipeInputs, SkeletonCache,
+        SkeletonKey, TimelineScratch,
+    };
+    let tiny = SkeletonCache::with_capacity(1);
+    let mut scratch = TimelineScratch::new();
+    for round in 0..2 {
+        for (sched, p, m) in [
+            (PipeSchedule::OneFOneB, 4usize, 10usize),
+            (PipeSchedule::GPipe, 2, 6),
+            (PipeSchedule::Interleaved1F1B, 3, 8),
+        ] {
+            let inp = PipeInputs {
+                sched,
+                pp: p,
+                num_micro: m,
+                fwd_total: m as f64,
+                bwd_total: 2.0 * m as f64,
+                blocking_fwd_micro: 0.05,
+                blocking_bwd_micro: 0.02,
+                ovl_micro: 0.11,
+                ovl_step: 0.4,
+                hop: 0.01,
+                overlap: true,
+            };
+            let skel = tiny.get(SkeletonKey::of(&inp));
+            let got = simulate_pipeline_with(&skel, &mut scratch, &inp);
+            let want = simulate_pipeline_uncached(&inp);
+            assert_eq!(
+                got.makespan.to_bits(),
+                want.makespan.to_bits(),
+                "{sched:?} p={p} m={m} round {round}"
+            );
+            assert!(tiny.len() <= 1, "capacity bound violated");
+        }
+    }
+}
+
+/// The batch pricing API (`sim::simulate_batch`) — skeleton-grouped,
+/// cost-keyed, chunk-scheduled — returns exactly what a serial
+/// `simulate_step` loop returns, in input order, on a ragged pipelined
+/// trial set at several worker counts.
+#[test]
+fn prop_simulate_batch_bit_identical_on_ragged_pipelined_trials() {
+    use scalestudy::parallel::ParallelCfg;
+    let mut setups = Vec::new();
+    for name in ["mt5-large", "mt5-xl"] {
+        for nodes in [1usize, 2, 4] {
+            let gpus = nodes * 8;
+            setups.push(TrainSetup::dp_pod(by_name(name).unwrap(), nodes, ZeroStage::Stage2));
+            for pp in [2usize, 4, 8] {
+                for sched in [
+                    scalestudy::parallel::PipeSchedule::OneFOneB,
+                    scalestudy::parallel::PipeSchedule::Interleaved1F1B,
+                ] {
+                    let mut s =
+                        TrainSetup::dp_pod(by_name(name).unwrap(), nodes, ZeroStage::Stage1);
+                    s.par = ParallelCfg::dtp(gpus / pp, 1, pp);
+                    s.sched = sched;
+                    setups.push(s);
+                }
+            }
+        }
+    }
+    let serial: Vec<f64> =
+        setups.iter().map(|s| simulate_step(s).seconds_per_step()).collect();
+    for workers in [1usize, 4, 8] {
+        let cache = SimCache::new();
+        let batch =
+            scalestudy::sim::simulate_batch(&Sweep::new(workers), &cache, &setups);
+        assert_eq!(batch.len(), serial.len());
+        for (i, (a, b)) in serial.iter().zip(&batch).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.seconds_per_step().to_bits(),
+                "trial {i} diverged at {workers} workers"
+            );
+        }
+    }
+}
+
 /// The ragged-trial acceptance property: `map_chunked` with the
 /// analytical cost key stays bit-identical to serial execution at
 /// 1/4/8 workers on mixed-node-count (ragged) trial sets.
