@@ -1,0 +1,100 @@
+//! Bench E10 — planner-as-a-service: warm query throughput over a real
+//! TCP socket against an in-process [`Server`].  The headline metric is
+//! queries/s once the pool arenas, SimCache, and skeleton cache are at
+//! steady state — the serving regime the ISSUE's acceptance criteria
+//! describe (hit rate >= 90%, zero arena growth per response).
+
+use scalestudy::benchkit::Bench;
+use scalestudy::json::Json;
+use scalestudy::server::{step_payload, ServeCfg, Server, SimQuery};
+use scalestudy::sim::simulate_step;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn main() {
+    let mut b = Bench::new("serve");
+
+    let cfg = ServeCfg { addr: "127.0.0.1:0".to_string(), workers: 0, persist_cache: false };
+    let server = Server::bind(&cfg).expect("bind ephemeral port").spawn();
+    let stream = TcpStream::connect(server.addr).expect("connect");
+    let writer = stream.try_clone().expect("clone stream");
+    let mut writer = std::io::BufWriter::new(writer);
+    let mut reader = BufReader::new(stream);
+    let mut recv = move || -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("recv");
+        Json::parse(&line).expect("response parses")
+    };
+
+    // a small rotation of distinct queries, as a capacity dashboard
+    // issuing repeated what-ifs would
+    let queries: Vec<String> = [
+        r#"{"query": "simulate", "model": "mt5-xxl", "nodes": 4, "stage": 2}"#,
+        r#"{"query": "simulate", "model": "mt5-xxl", "nodes": 4, "stage": 2, "pp": 2}"#,
+        r#"{"query": "simulate", "model": "mt5-xl", "nodes": 2, "stage": 2}"#,
+        r#"{"query": "simulate", "model": "mt5-large", "nodes": 1, "stage": 2}"#,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+
+    // sanity: the socket answer is bit-identical to the one-shot path
+    let q = SimQuery { model: "mt5-xxl".to_string(), nodes: 4, ..SimQuery::default() };
+    let setup = q.setup().unwrap();
+    let one_shot = step_payload(&setup, &simulate_step(&setup)).dumps();
+    writeln!(writer, "{}", queries[0]).unwrap();
+    writer.flush().unwrap();
+    let first = recv();
+    assert_eq!(
+        first.get("result").dumps(),
+        one_shot,
+        "serve answer diverged from the one-shot path"
+    );
+
+    // warm everything to steady state before measuring
+    for _ in 0..3 {
+        for q in &queries {
+            writeln!(writer, "{q}").unwrap();
+        }
+        writer.flush().unwrap();
+        for _ in &queries {
+            let _ = recv();
+        }
+    }
+
+    // headline: pipelined warm queries/s (client batches a burst of
+    // lines; the engine coalesces whatever is queued into waves)
+    const BURST: usize = 64;
+    let mut last_meta = Json::Null;
+    b.throughput("warm_pipelined_queries", BURST as f64, || {
+        for i in 0..BURST {
+            writeln!(writer, "{}", queries[i % queries.len()]).unwrap();
+        }
+        writer.flush().unwrap();
+        for _ in 0..BURST {
+            last_meta = recv().get("meta").clone();
+        }
+    });
+
+    // the acceptance numbers, straight from the last warm response
+    let hit_rate = last_meta.path(&["simcache", "hit_rate"]).as_f64().unwrap_or(f64::NAN);
+    let grows = last_meta.path(&["scratch", "grows"]).as_f64().unwrap_or(f64::NAN);
+    assert!(hit_rate >= 0.9, "warm hit rate {hit_rate} below 0.9");
+    assert_eq!(grows, 0.0, "warm queries grew an arena");
+    b.metric("warm_simcache_hit_rate", hit_rate);
+    b.metric("warm_scratch_grows", grows);
+
+    // one serial (send, wait, receive) lap for the per-query latency view
+    b.iter("warm_serial_round_trip", || {
+        writeln!(writer, "{}", queries[0]).unwrap();
+        writer.flush().unwrap();
+        let _ = recv();
+    });
+
+    writeln!(writer, r#"{{"query": "shutdown"}}"#).unwrap();
+    writer.flush().unwrap();
+    let _ = recv();
+    server.join();
+
+    b.finish();
+}

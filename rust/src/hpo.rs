@@ -220,7 +220,9 @@ pub struct FunnelCfg {
     pub seed: u64,
     /// Worker threads for the independent phases (phase 1's one-at-a-time
     /// sweep and phase 3's finalist grid run through
-    /// [`crate::sweep::Sweep`]); 0 = all cores.  Results are bit-identical
+    /// [`crate::sweep::Sweep`]); 0 = the shared process-wide persistent
+    /// pool (all cores, arenas warm across funnel phases and — under the
+    /// `serve` front-end — across queries).  Results are bit-identical
     /// for every worker count.
     pub workers: usize,
     /// Seed the parallelism dimensions (tp/pp/ZeRO stage/offload/

@@ -16,7 +16,7 @@
 //!    [`sim`] (step-time simulator), [`convergence`] (loss scaling laws),
 //!    [`hpo`] (funneled prune-and-combine search), [`sweep`] (parallel
 //!    trial executor + memo cache), [`planner`] (auto-parallelism search),
-//!    [`metrics`].
+//!    [`server`] (planner-as-a-service query front-end), [`metrics`].
 //! 3. **Real runtime** — the three-layer execution path: [`runtime`]
 //!    (PJRT artifact loading/execution), [`data`] (synthetic corpus +
 //!    parallel dataloader), [`train`] (multi-worker data-parallel trainer
@@ -38,6 +38,7 @@ pub mod parallel;
 pub mod planner;
 pub mod runconfig;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod sweep;
 pub mod testkit;

@@ -71,6 +71,13 @@ fn app() -> App {
                 .opt("max-ep", "8", "max expert-parallel degree (MoE models only)")
                 .opt("workers", "0", "sweep worker threads (0 = all cores)")
                 .flag("exact-nodes", "only plan for the full pod (skip the sub-pod ladder)")
+                .flag("no-cache", "skip the persistent SimCache under target/")
+                .flag("json", "print the machine-readable payload (same as the serve front-end)"),
+        )
+        .command(
+            Command::new("serve", "planner-as-a-service: line-delimited JSON queries over TCP")
+                .opt("addr", "127.0.0.1:7077", "listen address (host:port; port 0 = ephemeral)")
+                .opt("workers", "0", "sweep worker threads (0 = all cores)")
                 .flag("no-cache", "skip the persistent SimCache under target/"),
         )
         .command(
@@ -90,7 +97,8 @@ fn app() -> App {
                 .opt("batch", "768", "effective batch size")
                 .opt("sched", "1f1b", "pipeline schedule: 1f1b, gpipe, or interleaved")
                 .flag("no-overlap", "disable comm/compute overlap (serializes the streams)")
-                .flag("z3-prefetch", "overlap the ZeRO-3 bwd re-gather with backward compute"),
+                .flag("z3-prefetch", "overlap the ZeRO-3 bwd re-gather with backward compute")
+                .flag("json", "print the machine-readable payload (same as the serve front-end)"),
         )
         .command(Command::new("zoo", "list the model zoo with parameter accounting"))
         .command(
@@ -111,6 +119,7 @@ fn main() {
                 "sweep" => cmd_sweep(&m),
                 "hpo" => cmd_hpo(&m),
                 "plan" => cmd_plan(&m),
+                "serve" => cmd_serve(&m),
                 "cache" => cmd_cache(&m),
                 "collectives" => cmd_collectives(&m),
                 "train" => cmd_train(&m),
@@ -337,28 +346,24 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
 }
 
 fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
-    use scalestudy::planner::{plan, PlanSpace};
+    use scalestudy::planner::plan;
+    use scalestudy::server::{plan_payload, PlanQuery};
     use scalestudy::sweep::{SimCache, Sweep};
-    let model = by_name(m.get("model")).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
-    let nodes = m.get_usize("nodes")?;
-    let v100_nodes = m.get_usize("v100-nodes")?;
-    let cluster = if v100_nodes > 0 {
-        ClusterSpec::mixed_pod(nodes.max(1), v100_nodes)
-    } else {
-        ClusterSpec::lps_pod(nodes.max(1))
-    };
-    let mut workload = scalestudy::sim::Workload::table1();
-    workload.global_batch = m.get_usize("batch")?;
-    let mut space = PlanSpace {
+    // the serve front-end builds the identical problem through the same
+    // query struct, so socket answers match this subcommand bit-for-bit
+    let q = PlanQuery {
+        model: m.get("model").to_string(),
+        nodes: m.get_usize("nodes")?,
+        v100_nodes: m.get_usize("v100-nodes")?,
+        batch: m.get_usize("batch")?,
         max_tp: m.get_usize("max-tp")?,
         max_pp: m.get_usize("max-pp")?,
         max_sp: m.get_usize("max-sp")?,
         max_ep: m.get_usize("max-ep")?,
-        ..PlanSpace::default()
+        exact_nodes: m.flag("exact-nodes"),
     };
-    if m.flag("exact-nodes") {
-        space.nodes = vec![cluster.total_nodes()];
-    }
+    let (model, cluster, workload, space) = q.problem()?;
+    let v100_nodes = q.v100_nodes;
     let sweep = Sweep::new(m.get_usize("workers")?);
     let persist = !m.flag("no-cache");
     let cache = if persist { SimCache::load_default() } else { SimCache::new() };
@@ -366,6 +371,15 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let result = plan(&model, &cluster, &workload, &space, &sweep, &cache);
     let wall = t0.elapsed().as_secs_f64();
+    if m.flag("json") {
+        if persist {
+            if let Err(e) = cache.save_default() {
+                eprintln!("warning: could not persist SimCache: {e:#}");
+            }
+        }
+        println!("{}", plan_payload(&result).dumps());
+        return Ok(());
+    }
     println!(
         "auto-parallelism plan: {} ({:.1}B params), {} nodes ({} GPUs{}), effective batch {}",
         model.name,
@@ -423,6 +437,23 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(m: &Matches) -> anyhow::Result<()> {
+    use scalestudy::server::{ServeCfg, Server};
+    let cfg = ServeCfg {
+        addr: m.get("addr").to_string(),
+        workers: m.get_usize("workers")?,
+        persist_cache: !m.flag("no-cache"),
+    };
+    let server = Server::bind(&cfg)?;
+    println!(
+        "serving on {} ({} sweep workers); one JSON query per line; \
+         send {{\"query\": \"shutdown\"}} to stop",
+        server.local_addr(),
+        server.workers()
+    );
+    server.run()
+}
+
 fn cmd_cache(m: &Matches) -> anyhow::Result<()> {
     use scalestudy::sweep::SimCache;
     let path = SimCache::default_path();
@@ -438,6 +469,19 @@ fn cmd_cache(m: &Matches) -> anyhow::Result<()> {
     }
     let cache = SimCache::load_default();
     println!("{} entries at {}", cache.len(), path.display());
+    // skeleton-cache counters ride along so warm-pool claims are
+    // inspectable (always zero in a fresh one-shot process; the serve
+    // front-end's `stats` query reports the long-lived numbers)
+    let sk = scalestudy::timeline::skeletons();
+    println!(
+        "skeleton cache (this process): {} hits / {} misses / {} evictions; \
+         {} entries, resident weight {}",
+        sk.hits(),
+        sk.misses(),
+        sk.evictions(),
+        sk.len(),
+        sk.resident_weight()
+    );
     let other_path = m.get("merge");
     if !other_path.is_empty() {
         let other = SimCache::load(std::path::Path::new(other_path));
@@ -460,34 +504,42 @@ fn cmd_cache(m: &Matches) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(m: &Matches) -> anyhow::Result<()> {
-    let model = by_name(m.get("model")).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
-    let nodes = m.get_usize("nodes")?;
-    let stage = ZeroStage::from_index(m.get_usize("stage")?)
-        .ok_or_else(|| anyhow::anyhow!("stage must be 0-3"))?;
-    let mut setup = TrainSetup::dp_pod(model, nodes, stage);
-    let tp = m.get_usize("tp")?;
-    let pp = m.get_usize("pp")?;
-    let sp = m.get_usize("sp")?;
-    let ep = m.get_usize("ep")?;
-    let gpus = setup.cluster.total_gpus();
-    let inner = (tp * pp * sp * ep).max(1);
-    setup.par = scalestudy::parallel::ParallelCfg { dp: (gpus / inner).max(1), tp, pp, sp, ep };
-    setup.workload.global_batch = m.get_usize("batch")?;
-    setup.overlap_comm = !m.flag("no-overlap");
-    setup.zero3_prefetch = m.flag("z3-prefetch");
-    setup.sched = scalestudy::parallel::PipeSchedule::parse(m.get("sched"))
-        .ok_or_else(|| anyhow::anyhow!("sched must be 1f1b, gpipe, or interleaved"))?;
+    use scalestudy::server::{step_payload, SimQuery};
+    // the serve front-end builds the identical setup through the same
+    // query struct, so socket answers match this subcommand bit-for-bit
+    let q = SimQuery {
+        model: m.get("model").to_string(),
+        nodes: m.get_usize("nodes")?,
+        stage: m.get_usize("stage")?,
+        tp: m.get_usize("tp")?,
+        pp: m.get_usize("pp")?,
+        sp: m.get_usize("sp")?,
+        ep: m.get_usize("ep")?,
+        batch: m.get_usize("batch")?,
+        sched: m.get("sched").to_string(),
+        overlap: !m.flag("no-overlap"),
+        z3_prefetch: m.flag("z3-prefetch"),
+    };
+    let setup = q.setup()?;
     let st = simulate_step(&setup);
+    if m.flag("json") {
+        println!("{}", step_payload(&setup, &st).dumps());
+        return Ok(());
+    }
     if !st.fits {
         println!("configuration does NOT fit: needs {} per GPU", human_bytes(st.mem_per_gpu));
         return Ok(());
     }
     println!(
-        "model {}, {} nodes, stage {}, dp={} tp={tp} pp={pp} sp={sp} ep={ep}",
+        "model {}, {} nodes, stage {}, dp={} tp={} pp={} sp={} ep={}",
         setup.model.name,
-        nodes,
-        stage.index(),
-        setup.par.dp
+        q.nodes,
+        setup.stage.index(),
+        setup.par.dp,
+        q.tp,
+        q.pp,
+        q.sp,
+        q.ep
     );
     println!("  micro-batch/GPU     {}", st.micro_batch);
     println!("  grad-accum steps    {}", st.num_microbatches);

@@ -1,0 +1,966 @@
+//! Planner-as-a-service: a line-delimited JSON query server over TCP.
+//!
+//! The `serve` subcommand turns the one-shot CLI into a **long-lived
+//! capacity-planning oracle**: one process-wide [`Sweep`] worker pool
+//! (warm `TimelineScratch` arenas), one warm [`SimCache`] and the global
+//! skeleton cache serve every query, so repeat queries answer from warm
+//! state instead of paying cold caches per invocation.
+//!
+//! ## Protocol
+//!
+//! One JSON object per line in, one JSON object per line out (no new
+//! deps — [`crate::json`] both ways).  Requests carry a `query` kind and
+//! an optional `id` that is echoed verbatim in the response (responses
+//! may be reordered across a pipelined batch; match by `id`):
+//!
+//! ```text
+//! {"id": 1, "query": "simulate", "model": "mt5-xxl", "nodes": 4, "stage": 2, "pp": 2}
+//! {"id": 2, "query": "plan", "model": "mt5-xl", "nodes": 8, "max_tp": 4}
+//! {"id": 3, "query": "hpo", "model": "mt5-base", "trials": 205, "seed": 2023}
+//! {"id": 4, "query": "stats"}
+//! {"query": "shutdown"}
+//! ```
+//!
+//! Responses are `{"id": ..., "ok": true, "result": ..., "meta": ...}`
+//! (or `"ok": false` with an `"error"` string).  Every computed response
+//! carries a `meta` object with per-query wall time and the SimCache /
+//! skeleton-cache hit rates plus pool arena counters **for that wave**
+//! (deltas, so a warm repeat query reports hit_rate 1.0 and zero arena
+//! grows).  A rate over zero lookups reports 1.0 — nothing needed
+//! pricing, which is as warm as it gets.
+//!
+//! ## Batching and dedup
+//!
+//! The engine thread drains every request queued at the moment it wakes
+//! into one wave: concurrent `simulate` queries are coalesced into a
+//! single [`sim::simulate_batch`] call (one skeleton warm-up, one
+//! longest-first schedule across the pool), and identical in-flight
+//! queries — same request object modulo `id` — are deduped to **one**
+//! computation whose result answers every copy.  `plan`/`hpo` queries
+//! run one at a time on the same pool and dedupe the same way.
+//!
+//! Bit-identity with the one-shot CLI is by construction: both front
+//! ends build setups through the same [`SimQuery`]/[`PlanQuery`] and
+//! serialize through the same payload builders, with every float also
+//! carried as its exact bit pattern.
+
+use crate::hardware::ClusterSpec;
+use crate::hpo;
+use crate::json::Json;
+use crate::model::{by_name, ModelCfg};
+use crate::parallel::{ParallelCfg, PipeSchedule};
+use crate::planner::{self, PlanSpace};
+use crate::sim::{self, StepTime, TrainSetup, Workload};
+use crate::sweep::{hex_f64, step_to_json, SimCache, Sweep};
+use crate::timeline;
+use crate::zero::ZeroStage;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+// ------------------------------------------------------------------
+// queries: ONE builder per query kind, shared by the CLI and the server
+// so the two front-ends cannot drift apart
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> anyhow::Result<usize> {
+    match j.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn opt_u64(j: &Json, key: &str, default: u64) -> anyhow::Result<u64> {
+    Ok(opt_usize(j, key, default as usize)? as u64)
+}
+
+fn opt_bool(j: &Json, key: &str, default: bool) -> anyhow::Result<bool> {
+    match j.get(key) {
+        Json::Null => Ok(default),
+        v => v.as_bool().ok_or_else(|| anyhow::anyhow!("'{key}' must be a boolean")),
+    }
+}
+
+fn opt_str(j: &Json, key: &str, default: &str) -> anyhow::Result<String> {
+    match j.get(key) {
+        Json::Null => Ok(default.to_string()),
+        v => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be a string")),
+    }
+}
+
+/// A `simulate` query: every knob the CLI `simulate` subcommand exposes.
+/// Both front-ends construct this struct and call [`SimQuery::setup`],
+/// so a socket answer is bit-identical to the one-shot CLI by
+/// construction.
+#[derive(Clone, Debug)]
+pub struct SimQuery {
+    pub model: String,
+    pub nodes: usize,
+    pub stage: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub sp: usize,
+    pub ep: usize,
+    pub batch: usize,
+    pub sched: String,
+    pub overlap: bool,
+    pub z3_prefetch: bool,
+}
+
+impl Default for SimQuery {
+    fn default() -> SimQuery {
+        SimQuery {
+            model: "mt5-xxl".to_string(),
+            nodes: 4,
+            stage: 2,
+            tp: 1,
+            pp: 1,
+            sp: 1,
+            ep: 1,
+            batch: 768,
+            sched: "1f1b".to_string(),
+            overlap: true,
+            z3_prefetch: false,
+        }
+    }
+}
+
+impl SimQuery {
+    pub fn from_json(j: &Json) -> anyhow::Result<SimQuery> {
+        let d = SimQuery::default();
+        Ok(SimQuery {
+            model: opt_str(j, "model", &d.model)?,
+            nodes: opt_usize(j, "nodes", d.nodes)?,
+            stage: opt_usize(j, "stage", d.stage)?,
+            tp: opt_usize(j, "tp", d.tp)?,
+            pp: opt_usize(j, "pp", d.pp)?,
+            sp: opt_usize(j, "sp", d.sp)?,
+            ep: opt_usize(j, "ep", d.ep)?,
+            batch: opt_usize(j, "batch", d.batch)?,
+            sched: opt_str(j, "sched", &d.sched)?,
+            overlap: opt_bool(j, "overlap", d.overlap)?,
+            z3_prefetch: opt_bool(j, "z3_prefetch", d.z3_prefetch)?,
+        })
+    }
+
+    /// Build the priced [`TrainSetup`] — the one shared code path.
+    pub fn setup(&self) -> anyhow::Result<TrainSetup> {
+        let model =
+            by_name(&self.model).ok_or_else(|| anyhow::anyhow!("unknown model '{}'", self.model))?;
+        let stage = ZeroStage::from_index(self.stage)
+            .ok_or_else(|| anyhow::anyhow!("stage must be 0-3"))?;
+        let mut setup = TrainSetup::dp_pod(model, self.nodes, stage);
+        let gpus = setup.cluster.total_gpus();
+        let inner = (self.tp * self.pp * self.sp * self.ep).max(1);
+        setup.par = ParallelCfg {
+            dp: (gpus / inner).max(1),
+            tp: self.tp,
+            pp: self.pp,
+            sp: self.sp,
+            ep: self.ep,
+        };
+        setup.workload.global_batch = self.batch;
+        setup.overlap_comm = self.overlap;
+        setup.zero3_prefetch = self.z3_prefetch;
+        setup.sched = PipeSchedule::parse(&self.sched)
+            .ok_or_else(|| anyhow::anyhow!("sched must be 1f1b, gpipe, or interleaved"))?;
+        Ok(setup)
+    }
+}
+
+/// A `plan` query mirroring the CLI `plan` subcommand.
+#[derive(Clone, Debug)]
+pub struct PlanQuery {
+    pub model: String,
+    pub nodes: usize,
+    pub v100_nodes: usize,
+    pub batch: usize,
+    pub max_tp: usize,
+    pub max_pp: usize,
+    pub max_sp: usize,
+    pub max_ep: usize,
+    pub exact_nodes: bool,
+}
+
+impl Default for PlanQuery {
+    fn default() -> PlanQuery {
+        PlanQuery {
+            model: "mt5-xxl".to_string(),
+            nodes: 8,
+            v100_nodes: 0,
+            batch: 768,
+            max_tp: 8,
+            max_pp: 8,
+            max_sp: 4,
+            max_ep: 8,
+            exact_nodes: false,
+        }
+    }
+}
+
+impl PlanQuery {
+    pub fn from_json(j: &Json) -> anyhow::Result<PlanQuery> {
+        let d = PlanQuery::default();
+        Ok(PlanQuery {
+            model: opt_str(j, "model", &d.model)?,
+            nodes: opt_usize(j, "nodes", d.nodes)?,
+            v100_nodes: opt_usize(j, "v100_nodes", d.v100_nodes)?,
+            batch: opt_usize(j, "batch", d.batch)?,
+            max_tp: opt_usize(j, "max_tp", d.max_tp)?,
+            max_pp: opt_usize(j, "max_pp", d.max_pp)?,
+            max_sp: opt_usize(j, "max_sp", d.max_sp)?,
+            max_ep: opt_usize(j, "max_ep", d.max_ep)?,
+            exact_nodes: opt_bool(j, "exact_nodes", d.exact_nodes)?,
+        })
+    }
+
+    /// The planner problem instance — the one shared code path.
+    pub fn problem(&self) -> anyhow::Result<(ModelCfg, ClusterSpec, Workload, PlanSpace)> {
+        let model =
+            by_name(&self.model).ok_or_else(|| anyhow::anyhow!("unknown model '{}'", self.model))?;
+        let cluster = if self.v100_nodes > 0 {
+            ClusterSpec::mixed_pod(self.nodes.max(1), self.v100_nodes)
+        } else {
+            ClusterSpec::lps_pod(self.nodes.max(1))
+        };
+        let mut workload = Workload::table1();
+        workload.global_batch = self.batch;
+        let mut space = PlanSpace {
+            max_tp: self.max_tp,
+            max_pp: self.max_pp,
+            max_sp: self.max_sp,
+            max_ep: self.max_ep,
+            ..PlanSpace::default()
+        };
+        if self.exact_nodes {
+            space.nodes = vec![cluster.total_nodes()];
+        }
+        Ok((model, cluster, workload, space))
+    }
+}
+
+/// An `hpo` query mirroring the CLI `hpo` subcommand.
+#[derive(Clone, Debug)]
+pub struct HpoQuery {
+    pub model: String,
+    pub trials: usize,
+    pub seed: u64,
+    pub blind: bool,
+}
+
+impl HpoQuery {
+    pub fn from_json(j: &Json) -> anyhow::Result<HpoQuery> {
+        let q = HpoQuery {
+            model: opt_str(j, "model", "mt5-base")?,
+            trials: opt_usize(j, "trials", 205)?,
+            seed: opt_u64(j, "seed", 2023)?,
+            blind: opt_bool(j, "blind", false)?,
+        };
+        if by_name(&q.model).is_none() {
+            anyhow::bail!("unknown model '{}'", q.model);
+        }
+        Ok(q)
+    }
+
+    pub fn cfg(&self, workers: usize) -> hpo::FunnelCfg {
+        hpo::FunnelCfg {
+            model: self.model.clone(),
+            total_trials: self.trials,
+            seed: self.seed,
+            planner_seeded: !self.blind,
+            workers,
+            ..hpo::FunnelCfg::default()
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// payload builders, shared with the CLI's --json flags
+
+/// Machine-readable pricing payload: human-scale numbers plus the exact
+/// bit pattern of every float (under `"step"`, in the SimCache's
+/// persistence encoding), so two front-ends compare bit-for-bit.
+pub fn step_payload(setup: &TrainSetup, st: &StepTime) -> Json {
+    Json::obj(vec![
+        ("model", Json::Str(setup.model.name.clone())),
+        ("nodes", Json::Num(setup.cluster.total_nodes() as f64)),
+        ("stage", Json::Num(setup.stage.index() as f64)),
+        ("dp", Json::Num(setup.par.dp as f64)),
+        ("tp", Json::Num(setup.par.tp as f64)),
+        ("pp", Json::Num(setup.par.pp as f64)),
+        ("sp", Json::Num(setup.par.sp as f64)),
+        ("ep", Json::Num(setup.par.ep as f64)),
+        ("fits", Json::Bool(st.fits)),
+        ("seconds_per_step", Json::Num(st.seconds_per_step())),
+        ("seconds_per_step_bits", hex_f64(st.seconds_per_step())),
+        ("samples_per_s", Json::Num(st.throughput(setup.workload.global_batch))),
+        ("step", step_to_json(st)),
+    ])
+}
+
+/// Machine-readable planner payload (best + frontier with exact bits).
+pub fn plan_payload(result: &planner::PlanResult) -> Json {
+    let point = |p: &planner::PlanPoint, full: bool| {
+        let mut fields = vec![
+            ("label", Json::Str(p.label())),
+            ("seconds_per_step", Json::Num(p.seconds_per_step())),
+            ("seconds_per_step_bits", hex_f64(p.seconds_per_step())),
+            ("mem_per_gpu_bits", hex_f64(p.step.mem_per_gpu)),
+        ];
+        if full {
+            fields.push(("describe", Json::Str(p.describe())));
+            fields.push(("step", step_to_json(&p.step)));
+        }
+        Json::obj(fields)
+    };
+    Json::obj(vec![
+        (
+            "best",
+            match &result.best {
+                Some(p) => point(p, true),
+                None => Json::Null,
+            },
+        ),
+        ("frontier", Json::Arr(result.frontier.iter().map(|p| point(p, false)).collect())),
+        ("evaluated", Json::Num(result.evaluated as f64)),
+        ("feasible", Json::Num(result.feasible as f64)),
+        ("space_size", Json::Num(result.space_size as f64)),
+    ])
+}
+
+/// Machine-readable HPO funnel payload.
+pub fn hpo_payload(result: &hpo::FunnelResult) -> Json {
+    let dims = hpo::space();
+    let finalists: Vec<Json> = result
+        .finalists
+        .iter()
+        .map(|(t, rows)| {
+            Json::obj(vec![
+                ("template", Json::Str(t.describe(&dims))),
+                (
+                    "time_to_train",
+                    Json::Arr(
+                        rows.iter()
+                            .map(|(n, s)| {
+                                Json::obj(vec![
+                                    ("nodes", Json::Num(*n as f64)),
+                                    ("seconds", Json::Num(s.time_to_train())),
+                                    ("seconds_bits", hex_f64(s.time_to_train())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("best", Json::Str(result.best.describe(&dims))),
+        ("trials", Json::Num(result.trials.len() as f64)),
+        (
+            "pruned_dims",
+            Json::Arr(result.pruned_dims.iter().map(|d| Json::Str(d.to_string())).collect()),
+        ),
+        ("finalists", Json::Arr(finalists)),
+    ])
+}
+
+// ------------------------------------------------------------------
+// the engine: one thread owning the warm pool + caches
+
+/// One queued request: the parsed line plus the connection's reply lane.
+struct RequestJob {
+    request: Json,
+    reply: mpsc::Sender<String>,
+}
+
+/// Canonical identity of a query for in-flight dedup: the request object
+/// with its `id` stripped, re-serialized ([`Json::Obj`] keys are sorted,
+/// so two textually different but semantically identical lines match).
+fn canonical_key(request: &Json) -> String {
+    match request {
+        Json::Obj(map) => {
+            let mut m = map.clone();
+            m.remove("id");
+            Json::Obj(m).dumps()
+        }
+        other => other.dumps(),
+    }
+}
+
+fn rate_obj(hits: u64, misses: u64) -> Json {
+    // zero lookups = nothing needed pricing = perfectly warm
+    let rate = if hits + misses == 0 { 1.0 } else { hits as f64 / (hits + misses) as f64 };
+    Json::obj(vec![
+        ("hits", Json::Num(hits as f64)),
+        ("misses", Json::Num(misses as f64)),
+        ("hit_rate", Json::Num(rate)),
+    ])
+}
+
+/// Counter snapshot taken around one computation wave; `meta` reports
+/// the deltas.
+struct WaveMark {
+    t0: Instant,
+    sim_hits: u64,
+    sim_misses: u64,
+    skel_hits: u64,
+    skel_misses: u64,
+    scratch_clears: u64,
+    scratch_grows: u64,
+}
+
+struct Engine {
+    sweep: Sweep,
+    cache: SimCache,
+    persist: bool,
+    workers_requested: usize,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    started: Instant,
+    served: u64,
+    deduped: u64,
+    waves: u64,
+}
+
+impl Engine {
+    fn mark(&self) -> WaveMark {
+        let sk = timeline::skeletons();
+        let (clears, grows) = self.sweep.scratch_stats();
+        WaveMark {
+            t0: Instant::now(),
+            sim_hits: self.cache.hits() as u64,
+            sim_misses: self.cache.misses() as u64,
+            skel_hits: sk.hits() as u64,
+            skel_misses: sk.misses() as u64,
+            scratch_clears: clears,
+            scratch_grows: grows,
+        }
+    }
+
+    /// Per-response meta: wall time plus cache/arena **deltas** for the
+    /// wave that computed this response.
+    fn meta(&self, mark: &WaveMark, wave_size: usize, deduped: usize) -> Json {
+        let sk = timeline::skeletons();
+        let (clears, grows) = self.sweep.scratch_stats();
+        Json::obj(vec![
+            ("wall_ms", Json::Num(mark.t0.elapsed().as_secs_f64() * 1e3)),
+            ("wave_size", Json::Num(wave_size as f64)),
+            ("deduped", Json::Num(deduped as f64)),
+            (
+                "simcache",
+                rate_obj(
+                    self.cache.hits() as u64 - mark.sim_hits,
+                    self.cache.misses() as u64 - mark.sim_misses,
+                ),
+            ),
+            (
+                "skeletons",
+                rate_obj(sk.hits() as u64 - mark.skel_hits, sk.misses() as u64 - mark.skel_misses),
+            ),
+            (
+                "scratch",
+                Json::obj(vec![
+                    ("clears", Json::Num((clears - mark.scratch_clears) as f64)),
+                    ("grows", Json::Num((grows - mark.scratch_grows) as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    fn respond(&mut self, job: &RequestJob, fields: Vec<(&str, Json)>) {
+        let mut all = vec![("id", job.request.get("id").clone())];
+        all.extend(fields);
+        let _ = job.reply.send(Json::obj(all).dumps());
+        self.served += 1;
+    }
+
+    fn respond_ok(&mut self, job: &RequestJob, result: Json, meta: Option<Json>) {
+        let mut fields = vec![("ok", Json::Bool(true)), ("result", result)];
+        if let Some(m) = meta {
+            fields.push(("meta", m));
+        }
+        self.respond(job, fields);
+    }
+
+    fn respond_err(&mut self, job: &RequestJob, err: &anyhow::Error) {
+        self.respond(
+            job,
+            vec![("ok", Json::Bool(false)), ("error", Json::Str(format!("{err:#}")))],
+        );
+    }
+
+    fn respond_stats(&mut self, job: &RequestJob) {
+        let sk = timeline::skeletons();
+        let (clears, grows) = self.sweep.scratch_stats();
+        let result = Json::obj(vec![
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("served", Json::Num(self.served as f64)),
+            ("deduped", Json::Num(self.deduped as f64)),
+            ("waves", Json::Num(self.waves as f64)),
+            ("workers", Json::Num(self.sweep.workers() as f64)),
+            ("pool_batches", Json::Num(self.sweep.pool_batches() as f64)),
+            (
+                "simcache",
+                Json::obj(vec![
+                    ("hits", Json::Num(self.cache.hits() as f64)),
+                    ("misses", Json::Num(self.cache.misses() as f64)),
+                    ("hit_rate", Json::Num(self.cache.hit_rate())),
+                    ("entries", Json::Num(self.cache.len() as f64)),
+                ]),
+            ),
+            (
+                "skeletons",
+                Json::obj(vec![
+                    ("hits", Json::Num(sk.hits() as f64)),
+                    ("misses", Json::Num(sk.misses() as f64)),
+                    ("evictions", Json::Num(sk.evictions() as f64)),
+                    ("hit_rate", Json::Num(sk.hit_rate())),
+                    ("entries", Json::Num(sk.len() as f64)),
+                    ("resident_weight", Json::Num(sk.resident_weight() as f64)),
+                ]),
+            ),
+            (
+                "scratch",
+                Json::obj(vec![
+                    ("clears", Json::Num(clears as f64)),
+                    ("grows", Json::Num(grows as f64)),
+                ]),
+            ),
+        ]);
+        self.respond_ok(job, result, None);
+    }
+
+    /// Process one coalesced batch of requests.  Returns `true` when a
+    /// `shutdown` query was answered (the engine then exits; any batch
+    /// mates are answered first).
+    fn process(&mut self, jobs: Vec<RequestJob>) -> bool {
+        let mut sims: Vec<(RequestJob, TrainSetup, String)> = Vec::new();
+        let mut plans: Vec<(RequestJob, PlanQuery, String)> = Vec::new();
+        let mut hpos: Vec<(RequestJob, HpoQuery, String)> = Vec::new();
+        let mut shutdown: Option<RequestJob> = None;
+        for job in jobs {
+            let kind = job.request.get("query").as_str().unwrap_or("").to_string();
+            match kind.as_str() {
+                "simulate" => match SimQuery::from_json(&job.request).and_then(|q| q.setup()) {
+                    Ok(setup) => {
+                        let key = canonical_key(&job.request);
+                        sims.push((job, setup, key));
+                    }
+                    Err(e) => self.respond_err(&job, &e),
+                },
+                "plan" => match PlanQuery::from_json(&job.request) {
+                    Ok(q) => {
+                        let key = canonical_key(&job.request);
+                        plans.push((job, q, key));
+                    }
+                    Err(e) => self.respond_err(&job, &e),
+                },
+                "hpo" => match HpoQuery::from_json(&job.request) {
+                    Ok(q) => {
+                        let key = canonical_key(&job.request);
+                        hpos.push((job, q, key));
+                    }
+                    Err(e) => self.respond_err(&job, &e),
+                },
+                "stats" => self.respond_stats(&job),
+                "ping" => self.respond_ok(&job, Json::Str("pong".to_string()), None),
+                "shutdown" => shutdown = Some(job),
+                other => self.respond_err(
+                    &job,
+                    &anyhow::anyhow!(
+                        "unknown query '{other}' (expected simulate/plan/hpo/stats/ping/shutdown)"
+                    ),
+                ),
+            }
+        }
+
+        self.run_simulate_wave(sims);
+        self.run_keyed::<PlanQuery, _>(plans, |eng, q, mark| {
+            let (model, cluster, workload, space) = q.problem()?;
+            let result = planner::plan(&model, &cluster, &workload, &space, &eng.sweep, &eng.cache);
+            let _ = mark; // timing handled by caller
+            Ok(plan_payload(&result))
+        });
+        let workers = self.workers_requested;
+        self.run_keyed::<HpoQuery, _>(hpos, |eng, q, _mark| {
+            let result = hpo::run_funnel_cached(&q.cfg(workers), &eng.cache);
+            Ok(hpo_payload(&result))
+        });
+
+        if let Some(job) = shutdown {
+            self.respond_ok(&job, Json::Str("shutting down".to_string()), None);
+            self.stop.store(true, Ordering::SeqCst);
+            // wake the accept loop so it observes the stop flag
+            let _ = TcpStream::connect(self.addr);
+            return true;
+        }
+        false
+    }
+
+    /// Coalesce every queued `simulate` into one `simulate_batch` wave,
+    /// deduping identical in-flight queries to one computation.
+    fn run_simulate_wave(&mut self, sims: Vec<(RequestJob, TrainSetup, String)>) {
+        if sims.is_empty() {
+            return;
+        }
+        let mark = self.mark();
+        let mut unique: Vec<TrainSetup> = Vec::new();
+        let mut index_of: HashMap<&str, usize> = HashMap::new();
+        let mut slot: Vec<usize> = Vec::with_capacity(sims.len());
+        for (_, setup, key) in &sims {
+            let idx = match index_of.get(key.as_str()) {
+                Some(&i) => i,
+                None => {
+                    unique.push(setup.clone());
+                    index_of.insert(key.as_str(), unique.len() - 1);
+                    unique.len() - 1
+                }
+            };
+            slot.push(idx);
+        }
+        let deduped = sims.len() - unique.len();
+        self.deduped += deduped as u64;
+        let steps = sim::simulate_batch(&self.sweep, &self.cache, &unique);
+        self.waves += 1;
+        let meta = self.meta(&mark, unique.len(), deduped);
+        for ((job, setup, _), idx) in sims.iter().zip(&slot) {
+            let payload = step_payload(setup, &steps[*idx]);
+            self.respond_ok(job, payload, Some(meta.clone()));
+        }
+    }
+
+    /// Run heavyweight keyed queries (`plan`, `hpo`) one at a time on the
+    /// shared pool, deduping identical in-flight requests.
+    fn run_keyed<Q, F>(&mut self, jobs: Vec<(RequestJob, Q, String)>, run: F)
+    where
+        F: Fn(&Engine, &Q, &WaveMark) -> anyhow::Result<Json>,
+    {
+        let mut done: HashMap<String, (Json, Json)> = HashMap::new();
+        let mut dup = 0usize;
+        for (job, q, key) in &jobs {
+            if let Some((payload, meta)) = done.get(key) {
+                dup += 1;
+                let (payload, meta) = (payload.clone(), meta.clone());
+                self.respond_ok(job, payload, Some(meta));
+                continue;
+            }
+            let mark = self.mark();
+            match run(self, q, &mark) {
+                Err(e) => self.respond_err(job, &e),
+                Ok(payload) => {
+                    self.waves += 1;
+                    let meta = self.meta(&mark, 1, 0);
+                    self.respond_ok(job, payload.clone(), Some(meta.clone()));
+                    done.insert(key.clone(), (payload, meta));
+                }
+            }
+        }
+        self.deduped += dup as u64;
+    }
+}
+
+fn engine_loop(mut eng: Engine, rx: mpsc::Receiver<RequestJob>) {
+    loop {
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => break, // every connection + the server handle gone
+        };
+        let mut jobs = vec![first];
+        // coalesce whatever else is already queued into the same wave
+        while let Ok(j) = rx.try_recv() {
+            jobs.push(j);
+        }
+        if eng.process(jobs) {
+            break;
+        }
+    }
+    if eng.persist {
+        if let Err(e) = eng.cache.save_default() {
+            eprintln!("warning: could not persist SimCache: {e:#}");
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// the front-end: accept loop + per-connection reader/writer
+
+/// Server configuration (mirrors the `serve` subcommand flags).
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// Listen address, `host:port`; port 0 binds an ephemeral port
+    /// (readable via [`Server::local_addr`]).
+    pub addr: String,
+    /// Sweep workers (0 = all cores on the shared process pool).
+    pub workers: usize,
+    /// Load/save the persistent SimCache under `target/`.
+    pub persist_cache: bool,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg { addr: "127.0.0.1:7077".to_string(), workers: 0, persist_cache: true }
+    }
+}
+
+/// A bound (not yet serving) query server.  [`Server::run`] blocks on
+/// the accept loop; [`Server::spawn`] runs it on a background thread.
+pub struct Server {
+    addr: SocketAddr,
+    listener: TcpListener,
+    engine_tx: mpsc::Sender<RequestJob>,
+    engine: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    workers: usize,
+}
+
+/// Handle for a [`Server::spawn`]ed server.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    thread: JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// Wait for the server to exit (after a `shutdown` query).
+    pub fn join(self) {
+        let _ = self.thread.join();
+    }
+}
+
+impl Server {
+    pub fn bind(cfg: &ServeCfg) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let sweep = Sweep::new(cfg.workers);
+        let cache = if cfg.persist_cache { SimCache::load_default() } else { SimCache::new() };
+        let workers = sweep.workers();
+        let (tx, rx) = mpsc::channel::<RequestJob>();
+        let eng = Engine {
+            sweep,
+            cache,
+            persist: cfg.persist_cache,
+            workers_requested: cfg.workers,
+            addr,
+            stop: stop.clone(),
+            started: Instant::now(),
+            served: 0,
+            deduped: 0,
+            waves: 0,
+        };
+        let engine = std::thread::Builder::new()
+            .name("serve-engine".to_string())
+            .spawn(move || engine_loop(eng, rx))?;
+        Ok(Server { addr, listener, engine_tx: tx, engine: Some(engine), stop, workers })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Accept connections until a `shutdown` query arrives; blocks.
+    /// Connection reader threads exit when their client disconnects (or
+    /// with the process) — `run` does not wait on idle clients.
+    pub fn run(mut self) -> anyhow::Result<()> {
+        loop {
+            let stream = match self.listener.accept() {
+                Ok((s, _)) => s,
+                Err(_) => continue,
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                break; // the engine's wake-up connection lands here
+            }
+            let tx = self.engine_tx.clone();
+            std::thread::spawn(move || handle_conn(stream, tx));
+        }
+        drop(self.engine_tx);
+        if let Some(engine) = self.engine.take() {
+            let _ = engine.join();
+        }
+        Ok(())
+    }
+
+    /// Run the accept loop on a background thread (tests, benches).
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.addr;
+        let thread = std::thread::Builder::new()
+            .name("serve-accept".to_string())
+            .spawn(move || {
+                let _ = self.run();
+            })
+            .expect("spawn accept loop");
+        ServerHandle { addr, thread }
+    }
+}
+
+/// Per-connection protocol: read one JSON object per line, queue it for
+/// the engine; a companion writer thread streams response lines back.
+/// Responses may interleave across a pipelined batch — clients match by
+/// `id`.
+fn handle_conn(stream: TcpStream, engine_tx: mpsc::Sender<RequestJob>) {
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || {
+        let mut w = BufWriter::new(write_half);
+        while let Ok(line) = reply_rx.recv() {
+            if w.write_all(line.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
+                break;
+            }
+            let _ = w.flush();
+        }
+    });
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let request = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                let err = Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(format!("{e}"))),
+                ]);
+                let _ = reply_tx.send(err.dumps());
+                continue;
+            }
+        };
+        if engine_tx.send(RequestJob { request, reply: reply_tx.clone() }).is_err() {
+            break; // engine gone (shutdown)
+        }
+    }
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(line: &str) -> (RequestJob, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        (RequestJob { request: Json::parse(line).unwrap(), reply: tx }, rx)
+    }
+
+    fn test_engine(workers: usize) -> Engine {
+        let sweep = Sweep::new(workers);
+        Engine {
+            sweep,
+            cache: SimCache::new(),
+            persist: false,
+            workers_requested: workers,
+            addr: "127.0.0.1:0".parse().unwrap(),
+            stop: Arc::new(AtomicBool::new(false)),
+            started: Instant::now(),
+            served: 0,
+            deduped: 0,
+            waves: 0,
+        }
+    }
+
+    /// Identical in-flight simulate queries dedupe to ONE computation:
+    /// three copies plus one distinct query price exactly two setups,
+    /// and every copy receives a bit-identical response.
+    #[test]
+    fn identical_inflight_queries_dedupe_to_one_computation() {
+        let mut eng = test_engine(2);
+        let q = r#"{"id": 1, "query": "simulate", "model": "mt5-base", "nodes": 2}"#;
+        let q_same = r#"{"id": 2, "nodes": 2, "model": "mt5-base", "query": "simulate"}"#;
+        let q_other = r#"{"id": 3, "query": "simulate", "model": "mt5-base", "nodes": 4}"#;
+        let (j1, r1) = job(q);
+        let (j2, r2) = job(q_same);
+        let (j3, r3) = job(q);
+        let (j4, r4) = job(q_other);
+        assert!(!eng.process(vec![j1, j2, j3, j4]));
+        assert_eq!(eng.cache.misses(), 2, "4 queries over 2 distinct setups price twice");
+        assert_eq!(eng.deduped, 2);
+        let a = Json::parse(&r1.recv().unwrap()).unwrap();
+        let b = Json::parse(&r2.recv().unwrap()).unwrap();
+        let c = Json::parse(&r3.recv().unwrap()).unwrap();
+        let d = Json::parse(&r4.recv().unwrap()).unwrap();
+        assert_eq!(a.get("ok").as_bool(), Some(true));
+        // key order in the request line must not defeat the dedup
+        assert_eq!(a.get("result").dumps(), b.get("result").dumps());
+        assert_eq!(a.get("result").dumps(), c.get("result").dumps());
+        assert_ne!(a.get("result").dumps(), d.get("result").dumps());
+        // meta reports the wave: 2 unique computations, 2 deduped copies
+        assert_eq!(a.get("meta").get("wave_size").as_usize(), Some(2));
+        assert_eq!(a.get("meta").get("deduped").as_usize(), Some(2));
+    }
+
+    /// A warm repeat wave reports SimCache hit rate 1.0 and zero arena
+    /// growth in its per-response meta — the serving acceptance numbers.
+    #[test]
+    fn warm_repeat_query_reports_full_hit_rate_and_zero_growth() {
+        let mut eng = test_engine(2);
+        let q = r#"{"id": 1, "query": "simulate", "model": "mt5-large", "nodes": 2, "pp": 2}"#;
+        let (j1, r1) = job(q);
+        eng.process(vec![j1]);
+        let cold = Json::parse(&r1.recv().unwrap()).unwrap();
+        assert_eq!(cold.get("ok").as_bool(), Some(true));
+        // warm the arenas to steady state before the asserted repeat
+        for _ in 0..4 {
+            let (j, r) = job(q);
+            eng.process(vec![j]);
+            let _ = r.recv().unwrap();
+        }
+        let (j2, r2) = job(q);
+        eng.process(vec![j2]);
+        let warm = Json::parse(&r2.recv().unwrap()).unwrap();
+        let meta = warm.get("meta");
+        assert!(
+            meta.path(&["simcache", "hit_rate"]).as_f64().unwrap() >= 0.9,
+            "warm repeat must answer from the SimCache"
+        );
+        assert_eq!(
+            meta.path(&["scratch", "grows"]).as_f64(),
+            Some(0.0),
+            "warm repeat must not grow any arena"
+        );
+        assert_eq!(warm.get("result").dumps(), cold.get("result").dumps());
+    }
+
+    /// Malformed queries answer with ok=false and never take the engine
+    /// down; stats/ping answer inline.
+    #[test]
+    fn errors_and_inline_queries() {
+        let mut eng = test_engine(1);
+        let (j1, r1) = job(r#"{"id": 1, "query": "simulate", "model": "no-such-model"}"#);
+        let (j2, r2) = job(r#"{"id": 2, "query": "frobnicate"}"#);
+        let (j3, r3) = job(r#"{"id": 3, "query": "ping"}"#);
+        let (j4, r4) = job(r#"{"id": 4, "query": "stats"}"#);
+        assert!(!eng.process(vec![j1, j2, j3, j4]));
+        let e1 = Json::parse(&r1.recv().unwrap()).unwrap();
+        assert_eq!(e1.get("ok").as_bool(), Some(false));
+        assert!(e1.get("error").as_str().unwrap().contains("unknown model"));
+        let e2 = Json::parse(&r2.recv().unwrap()).unwrap();
+        assert_eq!(e2.get("ok").as_bool(), Some(false));
+        let p = Json::parse(&r3.recv().unwrap()).unwrap();
+        assert_eq!(p.get("result").as_str(), Some("pong"));
+        let s = Json::parse(&r4.recv().unwrap()).unwrap();
+        assert_eq!(s.get("ok").as_bool(), Some(true));
+        assert!(s.path(&["result", "workers"]).as_usize().unwrap() >= 1);
+        // skeleton-cache counters ride along for warm-pool inspection
+        assert!(s.path(&["result", "skeletons", "evictions"]).as_f64().is_some());
+    }
+}

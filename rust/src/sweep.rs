@@ -1,4 +1,4 @@
-//! Parallel sweep executor: a std-thread worker pool that fans trial
+//! Parallel sweep executor: a **persistent worker pool** that fans trial
 //! evaluations out across cores while keeping results **bit-identical to a
 //! serial run**.
 //!
@@ -6,13 +6,23 @@
 //! evaluations (`sim::simulate_step`, `hpo::evaluate`); until this module
 //! they all ran one at a time.  The executor supplies:
 //!
-//! * **Worker pool over a bounded queue** — the work queue is the input
-//!   slice itself, drained through an atomic cursor, so there is no
-//!   unbounded buffering and no work stealing to reason about.
-//! * **Deterministic result ordering** — each result is tagged with its
-//!   input index and reassembled in input order, so a run with N workers is
-//!   bit-identical to a run with 1 worker (pure evaluation functions
-//!   compute each trial independently; no cross-trial float accumulation).
+//! * **Long-lived workers over a bounded channel queue** — a [`Sweep`]
+//!   submits each batch as one message per worker on an mpsc channel
+//!   (submission is serialized, so at most `workers` messages are ever
+//!   queued) and the workers drain the input slice through an atomic
+//!   cursor.  Workers live for the pool's lifetime, so their thread-local
+//!   [`crate::timeline::TimelineScratch`] arenas and every warm cache
+//!   survive from one query to the next — warm repeat queries show zero
+//!   arena growth ([`Sweep::scratch_stats`]).  `Sweep::new(0)`/
+//!   [`Sweep::auto`] share one process-wide pool; an explicit worker
+//!   count gets a dedicated pool (dropped with the last `Sweep` clone).
+//! * **Deterministic result ordering** — each result is written into its
+//!   input-index slot, so a run with N workers is bit-identical to a run
+//!   with 1 worker (pure evaluation functions compute each trial
+//!   independently; no cross-trial float accumulation).
+//! * **Panic isolation** — a panicking task poisons only its own slot:
+//!   the pool drains the whole batch, stays usable, and the submitting
+//!   call re-raises one report listing every poisoned index.
 //! * **Per-trial seed splitting** — stochastic trials draw from
 //!   [`Rng::split`](crate::util::Rng::split) streams derived from the
 //!   *trial index*, never from worker identity, so randomness is stable
@@ -24,37 +34,278 @@
 //!
 //! Wired into [`sim::table1_grid`](crate::sim::table1_grid), HPO phases 1
 //! and 3 ([`crate::hpo::run_funnel`]), the `model_size_sweep`/`hpo_funnel`
-//! benches and the auto-parallelism planner ([`crate::planner`]).
+//! benches, the auto-parallelism planner ([`crate::planner`]) and the
+//! query server ([`crate::server`]).
 
 use crate::json::Json;
 use crate::sim::{simulate_step, StepTime, TrainSetup};
 use crate::util::Rng;
+use std::cell::{Cell, UnsafeCell};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-/// The worker-pool executor. Cheap to construct; hold one per study.
-#[derive(Clone, Debug)]
+// ------------------------------------------------------------------
+// the persistent worker pool
+
+/// One submitted batch, type-erased so the pool's workers (spawned long
+/// before the batch's closure type exists) can run it.  `ctx` points at a
+/// concrete `Fn(usize, usize) + Sync` on the submitting call's stack and
+/// `run` is the matching monomorphized trampoline; the submitter blocks
+/// until every worker has acknowledged the batch, so the erased borrow
+/// outlives every access (same discipline `std::thread::scope` enforces
+/// with lifetimes).
+struct Batch {
+    cursor: AtomicUsize,
+    chunk: usize,
+    n: usize,
+    run: unsafe fn(*const (), usize, usize),
+    ctx: *const (),
+}
+
+// Safety: `ctx` is only dereferenced through `run`, which is instantiated
+// in `WorkerPool::run` for a closure type bounded `Sync`, and the
+// submitting thread keeps that closure alive (blocking on the done
+// channel) until every worker has finished with the batch.
+unsafe impl Send for Batch {}
+unsafe impl Sync for Batch {}
+
+/// One queue message: a batch plus the ack channel the worker signals
+/// after draining it.
+struct Job {
+    batch: Arc<Batch>,
+    done: mpsc::Sender<()>,
+}
+
+/// Per-worker published copy of its thread-local
+/// [`crate::timeline::scratch_stats`] counters, refreshed after every
+/// batch so coordinators (the server's per-response meta, the warm-pool
+/// acceptance tests) can observe arena growth across the whole pool.
+struct WorkerSlot {
+    scratch_clears: AtomicU64,
+    scratch_grows: AtomicU64,
+}
+
+/// The long-lived worker pool behind [`Sweep`].  Workers are spawned once
+/// and block on the channel between batches; dropping the pool closes the
+/// channel, which drains and joins every worker (graceful shutdown).
+pub(crate) struct WorkerPool {
+    id: u64,
+    workers: usize,
+    /// The submission side of the queue.  Holding this lock for the whole
+    /// submit-and-wait keeps at most one batch in flight (the queue is
+    /// bounded at `workers` messages by construction) and serializes
+    /// concurrent `Sweep` users onto the same warm workers.
+    sender: Mutex<Option<mpsc::Sender<Job>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    batches: AtomicU64,
+    slots: Arc<Vec<WorkerSlot>>,
+}
+
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// The pool id a worker thread belongs to (0 = not a pool worker).
+    /// A worker that re-enters `map` on its *own* pool must run inline —
+    /// it cannot both wait for a nested batch and help drain it.
+    static WORKER_OF_POOL: Cell<u64> = const { Cell::new(0) };
+}
+
+fn worker_loop(
+    pool_id: u64,
+    w: usize,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    slots: Arc<Vec<WorkerSlot>>,
+) {
+    WORKER_OF_POOL.with(|c| c.set(pool_id));
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        let job = match job {
+            Ok(j) => j,
+            Err(_) => break, // channel closed: pool shut down
+        };
+        let b = &*job.batch;
+        loop {
+            let start = b.cursor.fetch_add(b.chunk, Ordering::Relaxed);
+            if start >= b.n {
+                break;
+            }
+            let end = (start + b.chunk).min(b.n);
+            // the trampoline catches per-task panics itself, so a worker
+            // never dies here and the pool survives poisoned tasks
+            unsafe { (b.run)(b.ctx, start, end) };
+        }
+        let (clears, grows) = crate::timeline::scratch_stats();
+        slots[w].scratch_clears.store(clears, Ordering::Relaxed);
+        slots[w].scratch_grows.store(grows, Ordering::Relaxed);
+        let _ = job.done.send(());
+    }
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> Arc<WorkerPool> {
+        let workers = workers.max(1);
+        let id = NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let slots: Arc<Vec<WorkerSlot>> = Arc::new(
+            (0..workers)
+                .map(|_| WorkerSlot {
+                    scratch_clears: AtomicU64::new(0),
+                    scratch_grows: AtomicU64::new(0),
+                })
+                .collect(),
+        );
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = rx.clone();
+            let slots = slots.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sweep-{id}-{w}"))
+                    .spawn(move || worker_loop(id, w, rx, slots))
+                    .expect("spawn sweep worker"),
+            );
+        }
+        Arc::new(WorkerPool {
+            id,
+            workers,
+            sender: Mutex::new(Some(tx)),
+            handles: Mutex::new(handles),
+            batches: AtomicU64::new(0),
+            slots,
+        })
+    }
+
+    /// Run `body(start, end)` over the schedule positions `0..n` in
+    /// `chunk`-sized cursor grabs across all workers; blocks until every
+    /// worker has drained and acknowledged the batch (the blocking is
+    /// what makes the lifetime erasure in [`Batch`] sound).
+    fn run<B: Fn(usize, usize) + Sync>(&self, n: usize, chunk: usize, body: &B) {
+        unsafe fn trampoline<B: Fn(usize, usize)>(ctx: *const (), start: usize, end: usize) {
+            (&*(ctx as *const B))(start, end)
+        }
+        let batch = Arc::new(Batch {
+            cursor: AtomicUsize::new(0),
+            chunk: chunk.max(1),
+            n,
+            run: trampoline::<B>,
+            ctx: body as *const B as *const (),
+        });
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let guard = self.sender.lock().unwrap_or_else(|p| p.into_inner());
+        let sender = guard.as_ref().expect("worker pool already shut down");
+        for _ in 0..self.workers {
+            sender
+                .send(Job { batch: batch.clone(), done: done_tx.clone() })
+                .expect("sweep workers alive");
+        }
+        drop(done_tx);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        for _ in 0..self.workers {
+            done_rx.recv().expect("sweep worker exited mid-batch");
+        }
+        // `guard` drops here: the next batch may submit
+    }
+
+    fn scratch_totals(&self) -> (u64, u64) {
+        let mut clears = 0u64;
+        let mut grows = 0u64;
+        for s in self.slots.iter() {
+            clears += s.scratch_clears.load(Ordering::Relaxed);
+            grows += s.scratch_grows.load(Ordering::Relaxed);
+        }
+        (clears, grows)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // close the queue: workers drain whatever is in flight, then exit
+        self.sender.lock().unwrap_or_else(|p| p.into_inner()).take();
+        let handles =
+            std::mem::take(&mut *self.handles.lock().unwrap_or_else(|p| p.into_inner()));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide shared pool behind [`Sweep::auto`] — one set of warm
+/// workers (arenas, caches) serving every auto-sized sweep in the
+/// process.  Never dropped: it lives as long as the process, which is the
+/// point.
+static SHARED_POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+
+fn shared_pool() -> Arc<WorkerPool> {
+    SHARED_POOL
+        .get_or_init(|| {
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            WorkerPool::new(cores)
+        })
+        .clone()
+}
+
+/// Per-index result slots, written from worker threads.  Safety: the
+/// schedule is a permutation of `0..n` partitioned into disjoint cursor
+/// ranges, so every slot is written by exactly one task exactly once.
+struct Slots<R>(Vec<UnsafeCell<Option<R>>>);
+
+unsafe impl<R: Send> Sync for Slots<R> {}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The worker-pool executor handle. Cheap to clone; clones share the same
+/// pool.  `new(0)`/`auto()` attach to the process-wide shared pool,
+/// `new(1)`/`serial()` run inline with no pool, and `new(n > 1)` spawns a
+/// dedicated n-worker pool that is joined when the last clone drops.
+#[derive(Clone)]
 pub struct Sweep {
     workers: usize,
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl std::fmt::Debug for Sweep {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Sweep")
+            .field("workers", &self.workers)
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
 }
 
 impl Sweep {
-    /// `workers = 0` means auto (all available cores).
+    /// `workers = 0` means auto: all available cores, on the shared
+    /// process-wide pool.
     pub fn new(workers: usize) -> Sweep {
-        let workers = if workers == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            workers
-        };
-        Sweep { workers }
+        match workers {
+            0 => {
+                let pool = shared_pool();
+                Sweep { workers: pool.workers, pool: Some(pool) }
+            }
+            1 => Sweep { workers: 1, pool: None },
+            n => Sweep { workers: n, pool: Some(WorkerPool::new(n)) },
+        }
     }
 
-    /// All available cores.
+    /// All available cores (the shared process-wide pool).
     pub fn auto() -> Sweep {
         Sweep::new(0)
     }
@@ -68,6 +319,29 @@ impl Sweep {
         self.workers
     }
 
+    /// Batches ever submitted to this sweep's pool (0 for serial sweeps;
+    /// shared across every `auto()` handle, since they share the pool).
+    /// The empty/serial fast paths never submit a batch — regression
+    /// hooks assert on this counter.
+    pub fn pool_batches(&self) -> u64 {
+        self.pool.as_ref().map_or(0, |p| p.batches.load(Ordering::Relaxed))
+    }
+
+    /// Aggregate `TimelineScratch` counters `(clears, grows)` across this
+    /// sweep's pool workers plus the calling thread (serial and 1-item
+    /// fast paths price on the caller).  On a warm pool, repeat queries
+    /// must not move `grows` — the acceptance criterion for persistent
+    /// arenas.
+    pub fn scratch_stats(&self) -> (u64, u64) {
+        let (mut clears, mut grows) = crate::timeline::scratch_stats();
+        if let Some(pool) = &self.pool {
+            let (c, g) = pool.scratch_totals();
+            clears += c;
+            grows += g;
+        }
+        (clears, grows)
+    }
+
     /// Evaluate `f(index, &item)` for every item, in parallel, returning
     /// results in input order. `f` must be pure for the determinism
     /// guarantee to hold (all users here are analytical models).
@@ -78,32 +352,13 @@ impl Sweep {
         F: Fn(usize, &T) -> R + Sync,
     {
         let n = items.len();
+        if n == 0 {
+            return Vec::new(); // never touches the pool
+        }
         if self.workers <= 1 || n <= 1 {
             return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
         }
-        let cursor = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, R)>();
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(n) {
-                let tx = tx.clone();
-                let cursor = &cursor;
-                let f = &f;
-                scope.spawn(move || loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let r = f(i, &items[i]);
-                    if tx.send((i, r)).is_err() {
-                        break;
-                    }
-                });
-            }
-        });
-        drop(tx);
-        let mut tagged: Vec<(usize, R)> = rx.into_iter().collect();
-        tagged.sort_by_key(|&(i, _)| i);
-        tagged.into_iter().map(|(_, r)| r).collect()
+        self.run_on_pool(items, None, 1, &f)
     }
 
     /// Like [`Sweep::map`], but schedules trials in **descending order of
@@ -117,9 +372,9 @@ impl Sweep {
     /// trial last idles every other core behind it.  Scheduling by
     /// predicted cost (the planner's [`crate::sim::step_lower_bound`] is
     /// the natural key) puts the long poles first.  Results are still
-    /// tagged with their *input* index and reassembled in input order, so
-    /// the output is bit-identical to [`Sweep::map`] and to a serial run
-    /// for any worker count (property-tested on mixed-node-count setups).
+    /// written into their *input* index slots, so the output is
+    /// bit-identical to [`Sweep::map`] and to a serial run for any worker
+    /// count (property-tested on mixed-node-count setups).
     pub fn map_chunked<T, R, C, F>(&self, items: &[T], cost: C, f: F) -> Vec<R>
     where
         T: Sync,
@@ -129,6 +384,7 @@ impl Sweep {
     {
         let n = items.len();
         if self.workers <= 1 || n <= 1 {
+            // covers n == 0: returns empty without touching the pool
             return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
         }
         // each key is computed exactly once, here; the sort below reads
@@ -150,6 +406,9 @@ impl Sweep {
     {
         let n = items.len();
         assert_eq!(n, costs.len(), "one cost key per item");
+        if n == 0 {
+            return Vec::new(); // never touches the pool
+        }
         if self.workers <= 1 || n <= 1 {
             return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
         }
@@ -157,33 +416,69 @@ impl Sweep {
         // descending cost, ties by input index: deterministic schedule
         order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]).then(a.cmp(&b)));
         let chunk = (n / (self.workers * 8)).max(1);
-        let cursor = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, R)>();
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(n) {
-                let tx = tx.clone();
-                let cursor = &cursor;
-                let f = &f;
-                let order = &order;
-                scope.spawn(move || loop {
-                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + chunk).min(n);
-                    for &i in &order[start..end] {
-                        let r = f(i, &items[i]);
-                        if tx.send((i, r)).is_err() {
-                            return;
-                        }
-                    }
-                });
+        self.run_on_pool(items, Some(&order), chunk, &f)
+    }
+
+    /// The shared parallel path: submit one batch to the pool and
+    /// reassemble per-index slots.  `order` is the schedule permutation
+    /// (input order when `None`); results always land in input order.
+    fn run_on_pool<T, R, F>(
+        &self,
+        items: &[T],
+        order: Option<&[usize]>,
+        chunk: usize,
+        f: &F,
+    ) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let pool = self.pool.as_ref().expect("parallel path requires a pool");
+        let n = items.len();
+        // A worker re-entering its own pool runs inline: it cannot both
+        // wait for the nested batch and help drain it.  Input-order
+        // serial evaluation is bit-identical by the ordering contract.
+        if WORKER_OF_POOL.with(|c| c.get()) == pool.id {
+            return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        }
+        let slots = Slots((0..n).map(|_| UnsafeCell::new(None)).collect::<Vec<_>>());
+        let poisoned: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+        let body = |start: usize, end: usize| {
+            for k in start..end {
+                let i = match order {
+                    Some(o) => o[k],
+                    None => k,
+                };
+                match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                    // Safety: `i` comes from a disjoint slice of the
+                    // schedule permutation — this slot has exactly one
+                    // writer (see `Slots`)
+                    Ok(r) => unsafe { *slots.0[i].get() = Some(r) },
+                    Err(p) => poisoned
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push((i, panic_message(p))),
+                }
             }
-        });
-        drop(tx);
-        let mut tagged: Vec<(usize, R)> = rx.into_iter().collect();
-        tagged.sort_by_key(|&(i, _)| i);
-        tagged.into_iter().map(|(_, r)| r).collect()
+        };
+        pool.run(n, chunk, &body);
+        let mut poisoned = poisoned.into_inner().unwrap_or_else(|e| e.into_inner());
+        if !poisoned.is_empty() {
+            poisoned.sort_by_key(|&(i, _)| i);
+            let report: Vec<String> =
+                poisoned.iter().map(|(i, m)| format!("#{i}: {m}")).collect();
+            panic!(
+                "sweep batch: {} of {n} tasks panicked (pool drained and stays usable) — {}",
+                poisoned.len(),
+                report.join("; ")
+            );
+        }
+        slots
+            .0
+            .into_iter()
+            .map(|c| c.into_inner().expect("schedule visits every index exactly once"))
+            .collect()
     }
 
     /// Like [`Sweep::map`] but hands each trial its own deterministic RNG
@@ -653,7 +948,7 @@ impl SimCache {
 /// (53-bit mantissa) and would silently corrupt bit patterns above 2^53,
 /// so every u64 — including f64 bit patterns, which also keeps non-finite
 /// OOM markers representable — rides as a string.
-fn hex_u64(x: u64) -> Json {
+pub(crate) fn hex_u64(x: u64) -> Json {
     Json::Str(format!("{x:016x}"))
 }
 
@@ -665,7 +960,7 @@ fn parse_hex_u64(j: &Json) -> Option<u64> {
     u64::from_str_radix(s, 16).ok()
 }
 
-fn hex_f64(x: f64) -> Json {
+pub(crate) fn hex_f64(x: f64) -> Json {
     hex_u64(x.to_bits())
 }
 
@@ -673,7 +968,7 @@ fn parse_hex_f64(j: &Json) -> Option<f64> {
     parse_hex_u64(j).map(f64::from_bits)
 }
 
-fn step_to_json(st: &StepTime) -> Json {
+pub(crate) fn step_to_json(st: &StepTime) -> Json {
     Json::obj(vec![
         ("micro_batch", Json::Num(st.micro_batch as f64)),
         ("num_microbatches", Json::Num(st.num_microbatches as f64)),
@@ -1105,5 +1400,143 @@ mod tests {
         assert_eq!(cache.misses(), distinct.len());
         assert_eq!(cache.hits(), lookups.len() - distinct.len());
         assert_eq!(cache.len(), distinct.len());
+    }
+
+    // -------------------------------------------- persistent-pool tests
+
+    /// Satellite regression: empty inputs must return immediately without
+    /// touching the pool, and 1-item inputs take the inline fast path.
+    #[test]
+    fn empty_input_never_touches_the_pool() {
+        let sweep = Sweep::new(4);
+        let before = sweep.pool_batches();
+        let empty: Vec<u32> = Vec::new();
+        assert!(sweep.map(&empty, |_, &x| x).is_empty());
+        assert!(sweep.map_chunked(&empty, |_| 1.0, |_, &x| x).is_empty());
+        assert!(sweep.map_chunked_keyed(&empty, &[], |_, &x| x).is_empty());
+        assert_eq!(sweep.map(&[7u32], |_, &x| x + 1), vec![8]);
+        assert_eq!(sweep.pool_batches(), before, "fast paths must not submit batches");
+        // a real batch does submit exactly once
+        let items: Vec<u32> = (0..16).collect();
+        let _ = sweep.map(&items, |_, &x| x);
+        assert_eq!(sweep.pool_batches(), before + 1);
+    }
+
+    /// Tentpole acceptance: the same query batch is bit-identical on a
+    /// cold pool, a warm pool (same pool reused), and across 1/4/8-worker
+    /// pools — on real simulator pricing.
+    #[test]
+    fn pool_reuse_bit_identical_cold_warm_and_across_worker_counts() {
+        let mut setups = Vec::new();
+        for model in ["mt5-base", "mt5-xl"] {
+            let m = by_name(model).unwrap();
+            for nodes in [1usize, 2, 4] {
+                for stage in [ZeroStage::Stage2, ZeroStage::Stage3] {
+                    setups.push(TrainSetup::dp_pod(m.clone(), nodes, stage));
+                }
+            }
+        }
+        let price = |_: usize, s: &TrainSetup| simulate_step(s).seconds_per_step().to_bits();
+        let reference = Sweep::serial().map(&setups, price);
+        for workers in [1usize, 4, 8] {
+            let sweep = Sweep::new(workers);
+            let cold = sweep.map(&setups, price);
+            let warm = sweep.map(&setups, price); // same pool, warm arenas
+            assert_eq!(cold, reference, "cold {workers}-worker pool diverged");
+            assert_eq!(warm, reference, "warm {workers}-worker pool diverged");
+        }
+    }
+
+    /// Tentpole: a panicking task poisons only its own slot — the batch
+    /// drains, the submitting call reports every poisoned index, and the
+    /// pool stays usable for the next batch.
+    #[test]
+    fn panicking_task_poisons_only_its_slot_and_pool_stays_usable() {
+        let sweep = Sweep::new(4);
+        let items: Vec<usize> = (0..64).collect();
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            sweep.map(&items, |_, &x| {
+                if x == 13 || x == 40 {
+                    panic!("boom {x}");
+                }
+                x * 2
+            })
+        }))
+        .expect_err("a batch with panicking tasks must report");
+        let msg = panic_message(err);
+        assert!(msg.contains("2 of 64 tasks panicked"), "got: {msg}");
+        assert!(msg.contains("#13: boom 13"), "got: {msg}");
+        assert!(msg.contains("#40: boom 40"), "got: {msg}");
+        // the pool drained and is still fully usable afterwards
+        let ok = sweep.map(&items, |_, &x| x + 1);
+        assert_eq!(ok, (1..65).collect::<Vec<_>>());
+    }
+
+    /// A nested map on the same pool runs inline instead of deadlocking
+    /// (a worker cannot both wait for a nested batch and help drain it);
+    /// results are bit-identical by the ordering contract.
+    #[test]
+    fn nested_map_on_the_same_pool_runs_inline() {
+        let sweep = Sweep::new(4);
+        let inner_sweep = sweep.clone(); // shares the same pool
+        let outer: Vec<usize> = (0..8).collect();
+        let out = sweep.map(&outer, |_, &x| {
+            let inner: Vec<usize> = (0..4).collect();
+            inner_sweep.map(&inner, |_, &y| y + x).iter().sum::<usize>()
+        });
+        let expected: Vec<usize> = (0..8).map(|x| 6 + 4 * x).collect();
+        assert_eq!(out, expected);
+    }
+
+    /// Tentpole acceptance: on a warm pool, repeat pipelined queries show
+    /// **zero arena growth** — workers own their `TimelineScratch` for
+    /// the process lifetime, so steady state re-uses the buffers.
+    #[test]
+    fn warm_pool_repeat_queries_show_zero_arena_growth() {
+        let sweep = Sweep::new(4);
+        let m = by_name("mt5-xxl").unwrap();
+        // a pipelined setup so pricing actually exercises the arenas
+        let setups: Vec<TrainSetup> = (0..32)
+            .map(|_| {
+                let mut s = TrainSetup::dp_pod(m.clone(), 2, ZeroStage::Stage2);
+                let gpus = s.cluster.total_gpus();
+                s.par = crate::parallel::ParallelCfg { dp: gpus / 2, tp: 1, pp: 2, sp: 1, ep: 1 };
+                s
+            })
+            .collect();
+        let price = |_: usize, s: &TrainSetup| simulate_step(s).seconds_per_step();
+        // warm until every worker's arena reaches its high-water mark
+        let mut prev = {
+            sweep.map(&setups, price);
+            sweep.scratch_stats().1
+        };
+        let mut steady = false;
+        for _ in 0..10 {
+            sweep.map(&setups, price);
+            let grows = sweep.scratch_stats().1;
+            if grows == prev {
+                steady = true;
+                break;
+            }
+            prev = grows;
+        }
+        assert!(steady, "arena growth never reached steady state");
+        // the acceptance criterion: a warm repeat query grows nothing
+        sweep.map(&setups, price);
+        assert_eq!(sweep.scratch_stats().1, prev, "warm repeat query grew an arena");
+    }
+
+    /// Dropping the last handle of a dedicated pool joins its workers
+    /// without hanging; clones share (and keep alive) the same pool.
+    #[test]
+    fn dropping_a_dedicated_pool_joins_workers() {
+        let sweep = Sweep::new(3);
+        let clone = sweep.clone();
+        let items: Vec<usize> = (0..10).collect();
+        assert_eq!(sweep.map(&items, |_, &x| x), items);
+        drop(sweep);
+        // the clone still works: the pool lives until the last handle
+        assert_eq!(clone.map(&items, |_, &x| x), items);
+        drop(clone); // joins the workers; must not hang
     }
 }

@@ -476,6 +476,7 @@ pub struct SkeletonCache {
     stripes: Vec<Mutex<HashMap<SkeletonKey, (Arc<PipeSkeleton>, u64)>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    evictions: AtomicUsize,
     entries: AtomicUsize,
     /// Total resident weight (sum of [`PipeSkeleton::weight`]).
     weight: AtomicUsize,
@@ -509,6 +510,7 @@ impl SkeletonCache {
             stripes: (0..SKELETON_STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
             entries: AtomicUsize::new(0),
             weight: AtomicUsize::new(0),
             seq: AtomicU64::new(0),
@@ -552,6 +554,7 @@ impl SkeletonCache {
                 if let Some((gone, _)) = map.remove(&k) {
                     self.entries.fetch_sub(1, AtomicOrd::Relaxed);
                     self.weight.fetch_sub(gone.weight(), AtomicOrd::Relaxed);
+                    self.evictions.fetch_add(1, AtomicOrd::Relaxed);
                 }
                 return true;
             }
@@ -592,6 +595,13 @@ impl SkeletonCache {
 
     pub fn misses(&self) -> usize {
         self.misses.load(AtomicOrd::Relaxed)
+    }
+
+    /// Entries evicted past either budget since construction — surfaced
+    /// by the `cache` CLI subcommand and the server's `stats` query so
+    /// warm-pool claims are inspectable.
+    pub fn evictions(&self) -> usize {
+        self.evictions.load(AtomicOrd::Relaxed)
     }
 
     /// Hit fraction of all `get` calls so far (0.0 when none).

@@ -1,0 +1,194 @@
+//! End-to-end tests for the `serve` front-end: real TCP sockets against
+//! a spawned [`Server`], asserting the ISSUE's acceptance criteria —
+//! socket answers bit-identical to the one-shot path, warm repeats
+//! served from cache with zero arena growth, and clean shutdown.
+
+use scalestudy::json::Json;
+use scalestudy::planner;
+use scalestudy::server::{plan_payload, step_payload, PlanQuery, ServeCfg, Server, ServerHandle, SimQuery};
+use scalestudy::sim::simulate_step;
+use scalestudy::sweep::{SimCache, Sweep};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// Spawn a server on an ephemeral port with a dedicated pool and no
+/// cache persistence (tests must not touch `target/`'s warm cache).
+fn spawn_server(workers: usize) -> ServerHandle {
+    let cfg = ServeCfg { addr: "127.0.0.1:0".to_string(), workers, persist_cache: false };
+    Server::bind(&cfg).expect("bind ephemeral port").spawn()
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let writer = stream.try_clone().expect("clone stream");
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").expect("send");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("recv");
+        Json::parse(&line).expect("response parses")
+    }
+
+    /// One request, one response (its own engine wave).
+    fn ask(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+}
+
+#[test]
+fn simulate_round_trip_is_bit_identical_to_one_shot() {
+    let server = spawn_server(2);
+    let mut c = Client::connect(server.addr);
+
+    // the exact query the one-shot CLI would run as
+    //   scalestudy simulate --model mt5-xl --nodes 2 --pp 2 --json
+    let q = SimQuery {
+        model: "mt5-xl".to_string(),
+        nodes: 2,
+        pp: 2,
+        ..SimQuery::default()
+    };
+    let setup = q.setup().unwrap();
+    let one_shot = step_payload(&setup, &simulate_step(&setup)).dumps();
+
+    let resp = c.ask(r#"{"id": 7, "query": "simulate", "model": "mt5-xl", "nodes": 2, "pp": 2}"#);
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "resp: {}", resp.dumps());
+    assert_eq!(resp.get("id").as_usize(), Some(7));
+    assert_eq!(
+        resp.get("result").dumps(),
+        one_shot,
+        "socket answer must be bit-identical to the one-shot path \
+         (payloads carry every float's exact bit pattern)"
+    );
+    // per-response meta is always present on computed queries
+    assert!(resp.path(&["meta", "wall_ms"]).as_f64().is_some());
+    assert!(resp.path(&["meta", "simcache", "hit_rate"]).as_f64().is_some());
+    assert!(resp.path(&["meta", "skeletons", "hit_rate"]).as_f64().is_some());
+
+    c.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+#[test]
+fn plan_round_trip_is_bit_identical_to_one_shot() {
+    let server = spawn_server(2);
+    let mut c = Client::connect(server.addr);
+
+    let pq = PlanQuery {
+        model: "mt5-base".to_string(),
+        nodes: 1,
+        exact_nodes: true,
+        ..PlanQuery::default()
+    };
+    let (model, cluster, workload, space) = pq.problem().unwrap();
+    let sweep = Sweep::new(2);
+    let cache = SimCache::new();
+    let result = planner::plan(&model, &cluster, &workload, &space, &sweep, &cache);
+    let one_shot = plan_payload(&result).dumps();
+
+    let resp = c.ask(
+        r#"{"id": 1, "query": "plan", "model": "mt5-base", "nodes": 1, "exact_nodes": true}"#,
+    );
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "resp: {}", resp.dumps());
+    assert_eq!(resp.get("result").dumps(), one_shot);
+
+    c.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+#[test]
+fn warm_repeat_queries_hit_cache_and_grow_nothing() {
+    let server = spawn_server(2);
+    let mut c = Client::connect(server.addr);
+
+    let q = r#"{"id": 1, "query": "simulate", "model": "mt5-xxl", "nodes": 2, "pp": 2}"#;
+    let cold = c.ask(q);
+    assert_eq!(cold.get("ok").as_bool(), Some(true), "resp: {}", cold.dumps());
+    // reach arena steady state before asserting the warm numbers
+    for _ in 0..4 {
+        c.ask(q);
+    }
+    let warm = c.ask(q);
+    assert_eq!(warm.get("result").dumps(), cold.get("result").dumps());
+    assert!(
+        warm.path(&["meta", "simcache", "hit_rate"]).as_f64().unwrap() >= 0.9,
+        "warm repeat must report >= 90% SimCache hit rate, got {}",
+        warm.get("meta").dumps()
+    );
+    assert_eq!(
+        warm.path(&["meta", "scratch", "grows"]).as_f64(),
+        Some(0.0),
+        "warm repeat must not grow any worker arena, got {}",
+        warm.get("meta").dumps()
+    );
+
+    c.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+#[test]
+fn malformed_lines_answer_with_errors_and_leave_the_server_usable() {
+    let server = spawn_server(1);
+    let mut c = Client::connect(server.addr);
+
+    let bad = c.ask("this is not json");
+    assert_eq!(bad.get("ok").as_bool(), Some(false));
+    assert!(bad.get("error").as_str().is_some());
+
+    let unknown = c.ask(r#"{"id": 2, "query": "frobnicate"}"#);
+    assert_eq!(unknown.get("ok").as_bool(), Some(false));
+    assert!(unknown.get("error").as_str().unwrap().contains("unknown query"));
+
+    // the connection and the engine both survived
+    let pong = c.ask(r#"{"id": 3, "query": "ping"}"#);
+    assert_eq!(pong.get("result").as_str(), Some("pong"));
+
+    // a second connection works too, and stats reflect the served queries
+    let mut c2 = Client::connect(server.addr);
+    let stats = c2.ask(r#"{"query": "stats"}"#);
+    assert_eq!(stats.get("ok").as_bool(), Some(true));
+    assert!(stats.path(&["result", "served"]).as_usize().unwrap() >= 2);
+
+    c2.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+#[test]
+fn pipelined_queries_coalesce_and_answer_by_id() {
+    let server = spawn_server(2);
+    let mut c = Client::connect(server.addr);
+
+    // fire a batch without waiting: the engine may coalesce any subset
+    // into one wave; responses match requests by id, not arrival order
+    c.send(r#"{"id": 10, "query": "simulate", "model": "mt5-base", "nodes": 1}"#);
+    c.send(r#"{"id": 11, "query": "simulate", "model": "mt5-base", "nodes": 2}"#);
+    c.send(r#"{"id": 12, "query": "simulate", "model": "mt5-base", "nodes": 1}"#);
+    let mut by_id = std::collections::HashMap::new();
+    for _ in 0..3 {
+        let r = c.recv();
+        by_id.insert(r.get("id").as_usize().unwrap(), r);
+    }
+    assert_eq!(by_id.len(), 3);
+    for (_, r) in &by_id {
+        assert_eq!(r.get("ok").as_bool(), Some(true), "resp: {}", r.dumps());
+    }
+    // ids 10 and 12 are the same query — identical answers regardless of
+    // whether they landed in the same wave (dedup) or a later one (cache)
+    assert_eq!(by_id[&10].get("result").dumps(), by_id[&12].get("result").dumps());
+    assert_ne!(by_id[&10].get("result").dumps(), by_id[&11].get("result").dumps());
+
+    c.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
