@@ -1,0 +1,91 @@
+//! Bench — the failure-aware goodput layer: per-model goodput ladders
+//! across MTBF, resilient-planning wall time vs the plain planner (the
+//! re-ranking must stay cheap: it prices goodput on already-simulated
+//! candidates, never re-simulates), and what-if sweep latency.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::hardware::ClusterSpec;
+use scalestudy::model::{by_name, mt5_zoo};
+use scalestudy::planner::{plan, PlanSpace};
+use scalestudy::resilience::{plan_resilient, whatif_sweep, FailureModel, WhatIfAxis};
+use scalestudy::sim::Workload;
+use scalestudy::sweep::{SimCache, Sweep};
+
+fn main() {
+    let mut b = Bench::new("resilience");
+    let cluster = ClusterSpec::lps_pod(8);
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+
+    // ---- goodput ladder: every zoo model across a per-node MTBF sweep
+    let mut t = Table::new(
+        "failure-aware planning, 8-node query (goodput % of failure-free)",
+        &["mtbf 512h", "mtbf 64h", "mtbf 8h", "mtbf 1h", "flips"],
+    );
+    for model in mt5_zoo() {
+        let cache = SimCache::new();
+        let mut row = Vec::new();
+        let mut flips = 0usize;
+        for mtbf in [512.0, 64.0, 8.0, 1.0] {
+            let fm = FailureModel::with_mtbf(mtbf);
+            let r = plan_resilient(&model, &cluster, &workload, &space, &fm, &sweep, &cache);
+            row.push(100.0 * r.best.as_ref().map_or(0.0, |p| p.goodput.goodput_fraction));
+            flips += r.flipped as usize;
+        }
+        row.push(flips as f64);
+        t.row(&model.name, row);
+    }
+    t.note(
+        "goodput amortizes Young/Daly-optimal checkpointing + expected rework; \
+         a flip = the failure model dethroning the failure-free winner",
+    );
+    b.table(t);
+
+    // ---- the re-ranking overhead on a warm cache: plan vs plan_resilient
+    let model = by_name("mt5-xl").unwrap();
+    let cache = SimCache::new();
+    let fm = FailureModel::with_mtbf(8.0);
+    // warm the cache once so both paths price from memoized steps
+    let _ = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+    let t0 = std::time::Instant::now();
+    let base = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+    let plain_wall = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let res = plan_resilient(&model, &cluster, &workload, &space, &fm, &sweep, &cache);
+    let res_wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        "warm-cache planning wall time (ms)",
+        &["plain", "resilient", "overhead x"],
+    );
+    t.row(
+        "mt5-xl 8-node",
+        vec![plain_wall * 1e3, res_wall * 1e3, res_wall / plain_wall.max(1e-9)],
+    );
+    b.table(t);
+    b.metric("plain_plan_warm_ms", plain_wall * 1e3);
+    b.metric("resilient_plan_warm_ms", res_wall * 1e3);
+    b.metric(
+        "resilient_goodput_fraction",
+        res.best.as_ref().map_or(0.0, |p| p.goodput.goodput_fraction),
+    );
+    assert!(base.best.is_some() && res.best.is_some(), "8-node mt5-xl must be feasible");
+
+    // ---- what-if sweep latency across the NIC-derate ladder
+    b.iter("whatif(mt5-xl, nic ladder, warm cache)", || {
+        let points = whatif_sweep(
+            &model,
+            &cluster,
+            &workload,
+            &space,
+            WhatIfAxis::Nic,
+            &WhatIfAxis::Nic.default_factors(),
+            &fm,
+            &sweep,
+            &cache,
+        );
+        std::hint::black_box(points);
+    });
+
+    b.finish();
+}

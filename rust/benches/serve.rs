@@ -14,7 +14,12 @@ use std::net::TcpStream;
 fn main() {
     let mut b = Bench::new("serve");
 
-    let cfg = ServeCfg { addr: "127.0.0.1:0".to_string(), workers: 0, persist_cache: false };
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 0,
+        persist_cache: false,
+        ..ServeCfg::default()
+    };
     let server = Server::bind(&cfg).expect("bind ephemeral port").spawn();
     let stream = TcpStream::connect(server.addr).expect("connect");
     let writer = stream.try_clone().expect("clone stream");

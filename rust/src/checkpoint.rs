@@ -110,9 +110,32 @@ pub struct TrainState {
 }
 
 impl TrainState {
+    /// Staging directory used to make [`TrainState::save`] atomic:
+    /// `<dir>.saving` next to the target, renamed into place once every
+    /// file has been written.  A crash mid-save leaves either the previous
+    /// complete checkpoint at `<dir>` or no checkpoint — never a torn one.
+    fn staging_dir(dir: &Path) -> std::path::PathBuf {
+        let name = dir
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "ckpt".to_string());
+        dir.with_file_name(format!("{name}.saving"))
+    }
+
     /// Save to a directory (created if needed).
+    ///
+    /// The write is atomic at the directory level: all files land in a
+    /// `<dir>.saving` staging directory first, which then replaces `<dir>`
+    /// via rename.  Readers never observe a partially written checkpoint,
+    /// and a stale staging dir from an earlier crash is discarded.
     pub fn save(&self, dir: &Path) -> Result<()> {
-        std::fs::create_dir_all(dir)?;
+        let staging = Self::staging_dir(dir);
+        // Discard leftovers from an interrupted earlier save.
+        if staging.exists() {
+            std::fs::remove_dir_all(&staging)
+                .with_context(|| format!("clearing stale staging dir {}", staging.display()))?;
+        }
+        std::fs::create_dir_all(&staging)?;
         let meta = Json::obj(vec![
             ("step", Json::Num(self.step as f64)),
             ("seed", Json::Num(self.seed as f64)),
@@ -121,14 +144,23 @@ impl TrainState {
             ("preset", Json::Str(self.preset.clone())),
             ("flat_len", Json::Num(self.params.len() as f64)),
         ]);
-        std::fs::write(dir.join("meta.json"), meta.pretty())?;
-        write_npy_f32(&dir.join("params.npy"), &self.params)?;
+        std::fs::write(staging.join("meta.json"), meta.pretty())?;
+        write_npy_f32(&staging.join("params.npy"), &self.params)?;
         for (k, (m, v)) in self.opt_shards.iter().enumerate() {
-            write_npy_f32(&dir.join(format!("rank{k}_m.npy")), m)?;
+            write_npy_f32(&staging.join(format!("rank{k}_m.npy")), m)?;
             if !v.is_empty() {
-                write_npy_f32(&dir.join(format!("rank{k}_v.npy")), v)?;
+                write_npy_f32(&staging.join(format!("rank{k}_v.npy")), v)?;
             }
         }
+        // Swap into place: drop the old checkpoint (complete by induction),
+        // then rename the fully written staging dir onto the target path.
+        if dir.exists() {
+            std::fs::remove_dir_all(dir)
+                .with_context(|| format!("removing old checkpoint {}", dir.display()))?;
+        }
+        std::fs::rename(&staging, dir).with_context(|| {
+            format!("renaming {} -> {}", staging.display(), dir.display())
+        })?;
         Ok(())
     }
 
@@ -258,5 +290,88 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("meta.json"), "{broken").unwrap();
         assert!(TrainState::load(&dir).is_err());
+    }
+
+    fn small_state(step: u64) -> TrainState {
+        TrainState {
+            step,
+            seed: 7,
+            ranks: 2,
+            zero_stage: 1,
+            preset: "micro".into(),
+            params: (0..64).map(|i| i as f32 + step as f32).collect(),
+            opt_shards: vec![
+                (vec![0.5; 32], vec![1.5; 32]),
+                (vec![0.25; 32], vec![2.5; 32]),
+            ],
+        }
+    }
+
+    #[test]
+    fn save_is_atomic_no_staging_left_behind() {
+        let dir = tmp("state_atomic");
+        let state = small_state(10);
+        state.save(&dir).unwrap();
+        // The staging dir must be gone and the final dir complete.
+        let staging = dir.with_file_name(format!(
+            "{}.saving",
+            dir.file_name().unwrap().to_string_lossy()
+        ));
+        assert!(!staging.exists(), "staging dir left behind");
+        assert_eq!(TrainState::load(&dir).unwrap(), state);
+    }
+
+    #[test]
+    fn save_replaces_previous_checkpoint() {
+        let dir = tmp("state_replace");
+        small_state(1).save(&dir).unwrap();
+        let newer = small_state(2);
+        newer.save(&dir).unwrap();
+        let back = TrainState::load(&dir).unwrap();
+        assert_eq!(back.step, 2);
+        assert_eq!(back, newer);
+    }
+
+    #[test]
+    fn save_recovers_from_stale_staging_dir() {
+        let dir = tmp("state_stale");
+        // Simulate a crash mid-save: a staging dir with garbage inside.
+        let staging = dir.with_file_name(format!(
+            "{}.saving",
+            dir.file_name().unwrap().to_string_lossy()
+        ));
+        std::fs::create_dir_all(&staging).unwrap();
+        std::fs::write(staging.join("meta.json"), "torn write ???").unwrap();
+        std::fs::write(staging.join("params.npy"), b"\x93NUMPY garbage").unwrap();
+
+        let state = small_state(3);
+        state.save(&dir).unwrap();
+        assert!(!staging.exists(), "stale staging dir not cleaned up");
+        assert_eq!(TrainState::load(&dir).unwrap(), state);
+    }
+
+    #[test]
+    fn torn_params_write_is_detected_on_load() {
+        let dir = tmp("state_torn");
+        let state = small_state(4);
+        state.save(&dir).unwrap();
+        // Truncate params.npy mid-data, as a torn write would.
+        let p = dir.join("params.npy");
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 17]).unwrap();
+        let err = TrainState::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("expected"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn short_params_array_fails_flat_len_check() {
+        let dir = tmp("state_shortlen");
+        let state = small_state(5);
+        state.save(&dir).unwrap();
+        // Replace params.npy with a valid but shorter array: the meta
+        // flat_len cross-check must reject it.
+        write_npy_f32(&dir.join("params.npy"), &[1.0, 2.0, 3.0]).unwrap();
+        let err = TrainState::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("flat_len"), "unexpected error: {err}");
     }
 }

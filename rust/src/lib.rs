@@ -16,6 +16,7 @@
 //!    [`sim`] (step-time simulator), [`convergence`] (loss scaling laws),
 //!    [`hpo`] (funneled prune-and-combine search), [`sweep`] (parallel
 //!    trial executor + memo cache), [`planner`] (auto-parallelism search),
+//!    [`resilience`] (failure-aware goodput + what-if sweeps),
 //!    [`server`] (planner-as-a-service query front-end), [`metrics`].
 //! 3. **Real runtime** — the three-layer execution path: [`runtime`]
 //!    (PJRT artifact loading/execution), [`data`] (synthetic corpus +
@@ -36,6 +37,7 @@ pub mod metrics;
 pub mod model;
 pub mod parallel;
 pub mod planner;
+pub mod resilience;
 pub mod runconfig;
 pub mod runtime;
 pub mod server;

@@ -70,7 +70,29 @@ fn app() -> App {
                 .opt("max-sp", "4", "max sequence-parallel degree (tp*sp <= GPUs/node)")
                 .opt("max-ep", "8", "max expert-parallel degree (MoE models only)")
                 .opt("workers", "0", "sweep worker threads (0 = all cores)")
+                .opt(
+                    "mtbf-hours",
+                    "0",
+                    "per-node MTBF in hours; > 0 ranks plans by expected goodput under failures",
+                )
                 .flag("exact-nodes", "only plan for the full pod (skip the sub-pod ladder)")
+                .flag("no-cache", "skip the persistent SimCache under target/")
+                .flag("json", "print the machine-readable payload (same as the serve front-end)"),
+        )
+        .command(
+            Command::new(
+                "whatif",
+                "resilience what-if: replan under derated fabrics, stragglers, or failure rates",
+            )
+                .opt("model", "mt5-xxl", "zoo model")
+                .opt("nodes", "8", "pod size")
+                .opt("v100-nodes", "0", "extra previous-generation DGX-1V nodes (mixed pod)")
+                .opt("batch", "768", "effective (global) batch size")
+                .opt("axis", "nic", "derate axis: nic, nvlink, jitter, or mtbf")
+                .opt("factors", "", "comma-separated derate factors (empty = axis default ladder)")
+                .opt("mtbf-hours", "0", "per-node MTBF in hours (prices failures on every point)")
+                .opt("drop-nodes", "0", "also price an elastic replan after losing this many nodes")
+                .opt("workers", "0", "sweep worker threads (0 = all cores)")
                 .flag("no-cache", "skip the persistent SimCache under target/")
                 .flag("json", "print the machine-readable payload (same as the serve front-end)"),
         )
@@ -78,6 +100,9 @@ fn app() -> App {
             Command::new("serve", "planner-as-a-service: line-delimited JSON queries over TCP")
                 .opt("addr", "127.0.0.1:7077", "listen address (host:port; port 0 = ephemeral)")
                 .opt("workers", "0", "sweep worker threads (0 = all cores)")
+                .opt("deadline-ms", "0", "per-query deadline in ms (0 = none); overrun = structured timeout")
+                .opt("max-queue", "1024", "shed requests past this queue depth (0 = unbounded)")
+                .flag("faults", "enable the fault-injection queries (also SCALESTUDY_FAULTS=1)")
                 .flag("no-cache", "skip the persistent SimCache under target/"),
         )
         .command(
@@ -119,6 +144,7 @@ fn main() {
                 "sweep" => cmd_sweep(&m),
                 "hpo" => cmd_hpo(&m),
                 "plan" => cmd_plan(&m),
+                "whatif" => cmd_whatif(&m),
                 "serve" => cmd_serve(&m),
                 "cache" => cmd_cache(&m),
                 "collectives" => cmd_collectives(&m),
@@ -347,7 +373,8 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
 
 fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     use scalestudy::planner::plan;
-    use scalestudy::server::{plan_payload, PlanQuery};
+    use scalestudy::resilience::{plan_resilient, FailureModel};
+    use scalestudy::server::{plan_payload, resilient_plan_payload, PlanQuery};
     use scalestudy::sweep::{SimCache, Sweep};
     // the serve front-end builds the identical problem through the same
     // query struct, so socket answers match this subcommand bit-for-bit
@@ -361,8 +388,72 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
         max_sp: m.get_usize("max-sp")?,
         max_ep: m.get_usize("max-ep")?,
         exact_nodes: m.flag("exact-nodes"),
+        mtbf_hours: m.get_f64("mtbf-hours")?,
     };
     let (model, cluster, workload, space) = q.problem()?;
+    if q.mtbf_hours > 0.0 {
+        // failure-aware path: rank by expected goodput under failures
+        let fm = FailureModel::with_mtbf(q.mtbf_hours);
+        let sweep = Sweep::new(m.get_usize("workers")?);
+        let persist = !m.flag("no-cache");
+        let cache = if persist { SimCache::load_default() } else { SimCache::new() };
+        let result = plan_resilient(&model, &cluster, &workload, &space, &fm, &sweep, &cache);
+        if persist {
+            if let Err(e) = cache.save_default() {
+                eprintln!("warning: could not persist SimCache: {e:#}");
+            }
+        }
+        if m.flag("json") {
+            println!("{}", resilient_plan_payload(&result).dumps());
+            return Ok(());
+        }
+        println!(
+            "failure-aware plan: {} on {} nodes at per-node MTBF {} h",
+            model.name,
+            cluster.total_nodes(),
+            q.mtbf_hours
+        );
+        let best = match &result.best {
+            Some(b) => b,
+            None => {
+                println!("no feasible plan — every configuration overflows HBM at this scale");
+                return Ok(());
+            }
+        };
+        let g = &best.goodput;
+        println!("best by expected goodput:\n  {}", best.point.describe());
+        println!(
+            "  goodput {:.1}% — effective {:.2} s/useful step; checkpoint every {} steps \
+             (write {:.1} s, restore {:.1} s)",
+            100.0 * g.goodput_fraction,
+            g.effective_seconds_per_step,
+            g.interval_steps,
+            g.checkpoint_write_s,
+            g.restore_s,
+        );
+        let base_label = result
+            .base
+            .best
+            .as_ref()
+            .map(|b| b.label())
+            .unwrap_or_else(|| "none".to_string());
+        println!(
+            "  failure-free winner: {base_label}{}",
+            if result.flipped { "  [FLIPPED by the failure model]" } else { "  [unchanged]" }
+        );
+        println!("\ncandidates (per node-count x optimizer slice):");
+        println!("  {:<52} {:>10} {:>12} {:>9}", "plan", "s/step", "eff s/step", "goodput");
+        for c in &result.candidates {
+            println!(
+                "  {:<52} {:>10.2} {:>12.2} {:>8.1}%",
+                c.point.label(),
+                c.point.seconds_per_step(),
+                c.goodput.effective_seconds_per_step,
+                100.0 * c.goodput.goodput_fraction,
+            );
+        }
+        return Ok(());
+    }
     let v100_nodes = q.v100_nodes;
     let sweep = Sweep::new(m.get_usize("workers")?);
     let persist = !m.flag("no-cache");
@@ -437,19 +528,141 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_whatif(m: &Matches) -> anyhow::Result<()> {
+    use scalestudy::resilience::{
+        phase_boundaries, replan_after_failure, whatif_sweep, FailureModel, WhatIfAxis,
+    };
+    use scalestudy::server::{PlanQuery, WhatIfQuery};
+    use scalestudy::sweep::{SimCache, Sweep};
+    let plan_q = PlanQuery {
+        model: m.get("model").to_string(),
+        nodes: m.get_usize("nodes")?,
+        v100_nodes: m.get_usize("v100-nodes")?,
+        batch: m.get_usize("batch")?,
+        mtbf_hours: m.get_f64("mtbf-hours")?,
+        ..PlanQuery::default()
+    };
+    let factors: Vec<f64> = match m.get("factors") {
+        "" => Vec::new(),
+        s => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad factor '{}'", x.trim()))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?,
+    };
+    let q = WhatIfQuery { plan: plan_q, axis: m.get("axis").to_string(), factors };
+    let axis = WhatIfAxis::parse(&q.axis)
+        .ok_or_else(|| anyhow::anyhow!("axis must be nic, nvlink, jitter, or mtbf"))?;
+    let sweep = Sweep::new(m.get_usize("workers")?);
+    let persist = !m.flag("no-cache");
+    let cache = if persist { SimCache::load_default() } else { SimCache::new() };
+    if m.flag("json") {
+        // the serve front-end answers `whatif` through the same
+        // WhatIfQuery::run, so socket answers match this bit-for-bit
+        let payload = q.run(&sweep, &cache)?;
+        if persist {
+            if let Err(e) = cache.save_default() {
+                eprintln!("warning: could not persist SimCache: {e:#}");
+            }
+        }
+        println!("{}", payload.dumps());
+        return Ok(());
+    }
+    let (model, cluster, workload, space) = q.plan.problem()?;
+    let ladder = if q.factors.is_empty() { axis.default_factors() } else { q.factors.clone() };
+    let fm = if q.plan.mtbf_hours > 0.0 {
+        FailureModel::with_mtbf(q.plan.mtbf_hours)
+    } else {
+        FailureModel::disabled()
+    };
+    let points =
+        whatif_sweep(&model, &cluster, &workload, &space, axis, &ladder, &fm, &sweep, &cache);
+    let bounds = phase_boundaries(&points);
+    println!(
+        "what-if sweep: {} on {} nodes, axis {} ({} points){}",
+        model.name,
+        cluster.total_nodes(),
+        axis.name(),
+        points.len(),
+        if fm.enabled() {
+            format!(", failures priced at MTBF {} h/node", fm.mtbf_hours)
+        } else {
+            String::new()
+        },
+    );
+    println!("  {:>10}  {:<52} {:>10} {:>12}", "factor", "winning plan", "s/step", "eff s/step");
+    for p in &points {
+        if p.label.is_empty() {
+            println!("  {:>10.4}  {:<52} {:>10} {:>12}", p.factor, "(nothing fits)", "-", "-");
+        } else {
+            println!(
+                "  {:>10.4}  {:<52} {:>10.2} {:>12.2}",
+                p.factor, p.label, p.seconds_per_step, p.effective_seconds_per_step
+            );
+        }
+    }
+    if bounds.is_empty() {
+        println!("\nno plan flips across this ladder");
+    } else {
+        println!("\nphase boundaries (the winning plan flips):");
+        for b in &bounds {
+            println!("  between {} and {}: {} -> {}", b.lo, b.hi, b.from, b.to);
+        }
+    }
+    let drop = m.get_usize("drop-nodes")?;
+    if drop > 0 {
+        let r = replan_after_failure(&model, &cluster, &workload, &space, &fm, drop, &sweep, &cache)?;
+        println!("\nelastic replan after losing {drop} node(s): {} survivors", r.survivors);
+        match &r.result.best {
+            Some(b) => {
+                println!("  new plan: {}", b.point.describe());
+                println!(
+                    "  restart cost ~{:.0} s (checkpoint restore + restart overhead + expected rework)",
+                    r.restart_cost_s
+                );
+            }
+            None => println!("  nothing fits on the survivor cluster"),
+        }
+    }
+    if persist {
+        if let Err(e) = cache.save_default() {
+            eprintln!("warning: could not persist SimCache: {e:#}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_serve(m: &Matches) -> anyhow::Result<()> {
     use scalestudy::server::{ServeCfg, Server};
     let cfg = ServeCfg {
         addr: m.get("addr").to_string(),
         workers: m.get_usize("workers")?,
         persist_cache: !m.flag("no-cache"),
+        deadline_ms: m.get_u64("deadline-ms")?,
+        max_queue: m.get_usize("max-queue")?,
+        fault_injection: m.flag("faults")
+            || std::env::var("SCALESTUDY_FAULTS").map(|v| v == "1").unwrap_or(false),
     };
     let server = Server::bind(&cfg)?;
     println!(
-        "serving on {} ({} sweep workers); one JSON query per line; \
+        "serving on {} ({} sweep workers{}{}{}); one JSON query per line; \
          send {{\"query\": \"shutdown\"}} to stop",
         server.local_addr(),
-        server.workers()
+        server.workers(),
+        if cfg.deadline_ms > 0 {
+            format!(", {} ms deadline", cfg.deadline_ms)
+        } else {
+            String::new()
+        },
+        if cfg.max_queue > 0 {
+            format!(", shed past {} queued", cfg.max_queue)
+        } else {
+            String::new()
+        },
+        if cfg.fault_injection { ", FAULT INJECTION ON" } else { "" },
     );
     server.run()
 }

@@ -114,7 +114,7 @@ impl Default for PlanSpace {
 impl PlanSpace {
     /// The candidate node counts for a query against `cluster` (clamped
     /// to the total across every node group of a mixed-generation pod).
-    fn node_counts(&self, cluster: &ClusterSpec) -> Vec<usize> {
+    pub(crate) fn node_counts(&self, cluster: &ClusterSpec) -> Vec<usize> {
         if self.nodes.is_empty() {
             return vec![cluster.total_nodes().max(1)];
         }
@@ -126,6 +126,15 @@ impl PlanSpace {
             }
         }
         out
+    }
+
+    /// A restriction of this space to one node count and one optimizer —
+    /// the slices failure-aware planning re-ranks, since checkpoint cost
+    /// (per-optimizer state bytes) and failure rate (node count) are the
+    /// only goodput inputs that vary across the space while step time is
+    /// monotone within a slice ([`crate::resilience::plan_resilient`]).
+    pub fn slice(&self, nodes: usize, opt: OptimizerKind) -> PlanSpace {
+        PlanSpace { nodes: vec![nodes], optimizers: vec![opt], ..self.clone() }
     }
 }
 

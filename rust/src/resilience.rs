@@ -1,0 +1,896 @@
+//! Failure-aware goodput planning and the resilience what-if engine.
+//!
+//! Everything the planner prices elsewhere assumes a perfect, failure-free
+//! cluster.  This module turns per-step time into **expected goodput under
+//! failures** — the regime the paper actually ran in (205 queued trials on
+//! a shared 8-node pod, where preemptions and degraded interconnects
+//! decide real throughput; fault tolerance and elasticity are first-class
+//! chapters of Duan et al. 2024, arXiv 2407.20018).
+//!
+//! ## The failure model
+//!
+//! Per-node failures are Poisson with mean time between failures
+//! [`FailureModel::mtbf_hours`]; a plan running on `n` nodes fails at the
+//! cluster rate λ = n / MTBF — the *blast radius* term that lets a slower
+//! 4-node plan beat a faster 8-node plan once failures are priced.
+//! Checkpoint write/restore cost derives from the **same ZeRO state-bytes
+//! expression the memory model prices** ([`crate::zero::checkpoint_bytes`]
+//! via [`crate::sim::checkpoint_state_bytes`]): fp16 parameters + the fp32
+//! optimizer master state, (2 + K)·Ψ bytes, streamed at
+//! `min(shared_bw, nodes · per_node_bw)` (ZeRO-sharded writers scale with
+//! the pod until the shared storage front-end binds).
+//!
+//! The checkpoint interval is chosen Young/Daly-style: the period
+//! minimizing expected wall time per useful step has the closed form
+//! `W* = δ + √(δ² + 2δ(1 + λR)/λ)` — Young's τ* = √(2δ/λ) in the
+//! rare-failure limit — and an exact integer scan around it settles
+//! integrality ([`optimal_interval_steps`], property-tested against
+//! brute force).
+//! With interval `m` steps of `s` seconds and checkpoint write cost δ,
+//! one period is `W = m·s + δ` wall seconds; first-order in λ the
+//! expected wall time per period is `W · (1 + λ·(W/2 + R))` — λW failures
+//! each losing W/2 of rework plus a restore+restart cost R — so
+//!
+//! ```text
+//! effective seconds/useful step = W · (1 + λ·(W/2 + R)) / m
+//! goodput fraction              = s / effective
+//! ```
+//!
+//! monotone in λ, never zero, and exactly `s` at λ = 0.
+//!
+//! ## Failure-aware planning ([`plan_resilient`])
+//!
+//! Goodput is NOT a monotone transform of step time across the whole
+//! space: δ depends on the optimizer (K bytes/param) and λ on the node
+//! count.  Within a fixed (node count, optimizer) slice both are constant
+//! and `effective(s)` is strictly increasing in `s`, so the failure-aware
+//! optimum is found exactly by taking the planner's best per slice
+//! ([`crate::planner::PlanSpace::slice`]) and goodput-ranking those — a
+//! handful of sub-queries that share the [`crate::sweep::SimCache`], so
+//! repricing is nearly free.  With the failure model disabled the result
+//! embeds a plain [`crate::planner::plan`] run, bit-identical to the
+//! failure-free path by construction.
+//!
+//! ## What-if sweeps
+//!
+//! [`whatif_sweep`] replans under derated NIC/NVLink rates or per-node
+//! straggler jitter (one slow node priced through PR 3's heterogeneous
+//! slowest-participant machinery) or a ladder of MTBFs, and
+//! [`phase_boundaries`] reports where the winning plan *flips* — the
+//! phase structure of plan space that LLMSFTComBenchmarking measures
+//! empirically.  [`replan_after_failure`] prices elastic recovery: drop
+//! `k` nodes, replan on the survivor cluster, and price the restart from
+//! the last checkpoint.
+
+use crate::hardware::{ClusterSpec, NodeGroup};
+use crate::model::ModelCfg;
+use crate::planner::{self, PlanPoint, PlanResult, PlanSpace};
+use crate::sim::{self, TrainSetup, Workload};
+use crate::sweep::{SimCache, Sweep};
+
+/// Seconds per hour (the MTBF knob is in hours; the model runs in seconds).
+const HOUR_S: f64 = 3600.0;
+
+/// Per-node failure statistics plus the checkpoint I/O path.
+#[derive(Clone, Debug)]
+pub struct FailureModel {
+    /// Mean time between failures of ONE node, in hours.  `0` (or any
+    /// non-finite / non-positive value) disables the failure model: every
+    /// consumer degrades to the exact failure-free path.
+    pub mtbf_hours: f64,
+    /// Per-node checkpoint write bandwidth (bytes/s) — ZeRO-sharded
+    /// writers, one per node, until the shared front-end binds.
+    pub write_bw: f64,
+    /// Per-node restore read bandwidth (bytes/s).
+    pub read_bw: f64,
+    /// Shared storage front-end ceiling (bytes/s) across all writers.
+    pub shared_bw: f64,
+    /// Fixed restart cost per failure (seconds): requeue, scheduler,
+    /// process launch, NCCL re-init — everything that is not restore I/O.
+    pub restart_overhead_s: f64,
+}
+
+impl Default for FailureModel {
+    fn default() -> FailureModel {
+        FailureModel {
+            mtbf_hours: 0.0, // disabled
+            // a DGX node writes a sharded checkpoint at roughly NVMe/NFS
+            // client speed; the shared front-end saturates around 10
+            // concurrent writers (same shape as the storage model in
+            // `ClusterSpec::lps_pod`)
+            write_bw: 2e9,
+            read_bw: 2e9,
+            shared_bw: 20e9,
+            restart_overhead_s: 180.0,
+        }
+    }
+}
+
+impl FailureModel {
+    /// An enabled model at `mtbf_hours` per node, default I/O path.
+    pub fn with_mtbf(mtbf_hours: f64) -> FailureModel {
+        FailureModel { mtbf_hours, ..FailureModel::default() }
+    }
+
+    /// A disabled model: every consumer takes the failure-free path.
+    pub fn disabled() -> FailureModel {
+        FailureModel::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.mtbf_hours.is_finite() && self.mtbf_hours > 0.0
+    }
+
+    /// Cluster failure rate (failures/second) for a plan on `nodes`
+    /// nodes: independent per-node Poisson processes superpose.
+    pub fn lambda_per_s(&self, nodes: usize) -> f64 {
+        if !self.enabled() {
+            return 0.0;
+        }
+        nodes.max(1) as f64 / (self.mtbf_hours * HOUR_S)
+    }
+
+    /// Checkpoint write/restore cost for one setup.  Bytes come from the
+    /// same ZeRO expression the memory model prices
+    /// ([`sim::checkpoint_state_bytes`]); bandwidth is `nodes` sharded
+    /// writers against the shared front-end ceiling.
+    pub fn checkpoint_cost(&self, setup: &TrainSetup) -> CheckpointCost {
+        let bytes = sim::checkpoint_state_bytes(setup);
+        let nodes = setup.cluster.total_nodes().max(1) as f64;
+        let write = (nodes * self.write_bw).min(self.shared_bw);
+        let read = (nodes * self.read_bw).min(self.shared_bw);
+        let per = |bw: f64| if bw > 0.0 { bytes / bw } else { f64::INFINITY };
+        CheckpointCost { bytes, write_s: per(write), restore_s: per(read) }
+    }
+
+    /// Expected goodput of a plan priced at `step_s` seconds/step.
+    pub fn goodput(&self, setup: &TrainSetup, step_s: f64) -> Goodput {
+        let ckpt = self.checkpoint_cost(setup);
+        let lambda = self.lambda_per_s(setup.cluster.total_nodes());
+        if !self.enabled() || !(step_s.is_finite() && step_s > 0.0) {
+            // exact failure-free degeneration: no checkpoints, no rework
+            return Goodput {
+                interval_steps: 0,
+                checkpoint_write_s: ckpt.write_s,
+                restore_s: ckpt.restore_s,
+                lambda_per_s: lambda,
+                effective_seconds_per_step: step_s,
+                goodput_fraction: 1.0,
+            };
+        }
+        let recovery = ckpt.restore_s + self.restart_overhead_s;
+        let m = optimal_interval_steps(step_s, ckpt.write_s, lambda, recovery);
+        let eff = effective_seconds_per_step(m, step_s, ckpt.write_s, lambda, recovery);
+        Goodput {
+            interval_steps: m,
+            checkpoint_write_s: ckpt.write_s,
+            restore_s: ckpt.restore_s,
+            lambda_per_s: lambda,
+            effective_seconds_per_step: eff,
+            goodput_fraction: step_s / eff,
+        }
+    }
+}
+
+/// Checkpoint I/O cost for one setup.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointCost {
+    /// Unique persisted bytes: (2 + K)·Ψ, fp16 params + fp32 opt state.
+    pub bytes: f64,
+    /// Seconds to write one checkpoint (δ in the interval model).
+    pub write_s: f64,
+    /// Seconds to read it back on restart.
+    pub restore_s: f64,
+}
+
+/// Expected-goodput breakdown for one plan under a [`FailureModel`].
+#[derive(Clone, Copy, Debug)]
+pub struct Goodput {
+    /// Optimal checkpoint interval in steps (0 = failures disabled:
+    /// never checkpoint).
+    pub interval_steps: usize,
+    pub checkpoint_write_s: f64,
+    pub restore_s: f64,
+    pub lambda_per_s: f64,
+    /// Wall seconds per *useful* step once checkpoint overhead and
+    /// expected rework are amortized in.
+    pub effective_seconds_per_step: f64,
+    /// `step_s / effective` — 1.0 when failures are disabled, strictly
+    /// below 1.0 otherwise.
+    pub goodput_fraction: f64,
+}
+
+/// Expected wall seconds per useful step at checkpoint interval `m`:
+/// `W·(1 + λ·(W/2 + R)) / m` with `W = m·s + δ` (module docs derive it).
+fn effective_seconds_per_step(m: usize, step_s: f64, delta: f64, lambda: f64, recovery: f64) -> f64 {
+    let m = m.max(1);
+    let w = m as f64 * step_s + delta;
+    w * (1.0 + lambda * (w / 2.0 + recovery)) / m as f64
+}
+
+/// Optimal integer checkpoint interval (steps between checkpoints) for
+/// step time `step_s`, checkpoint write cost `delta`, failure rate
+/// `lambda` and per-failure recovery cost `recovery`.  The continuous
+/// relaxation of [`effective_seconds_per_step`] in the period
+/// `W = m·s + δ` is `s·W·(1 + λ(W/2 + R))/(W − δ)`, whose derivative
+/// vanishes at the closed form `W* = δ + √(δ² + 2δ(1 + λR)/λ)` — in
+/// the rare-failure limit this degenerates to Young's τ* = √(2δ/λ),
+/// but unlike Young's seed it stays exact when λδ is large (frequent
+/// failures against an expensive checkpoint).  The objective is
+/// strictly unimodal in `m`, so the integer optimum sits adjacent to
+/// the continuous one; a short scan around it (plus the boundary
+/// `m = 1`) settles integrality — property-tested optimal against a
+/// full brute-force sweep.
+pub fn optimal_interval_steps(step_s: f64, delta: f64, lambda: f64, recovery: f64) -> usize {
+    if !(lambda > 0.0) || !(step_s > 0.0) {
+        return 1; // degenerate inputs: any interval is equivalent
+    }
+    if delta <= 0.0 {
+        return 1; // free checkpoints: checkpoint every step
+    }
+    // m* = (W* − δ)/s; clamp before the cast (λ → 0⁺ sends it huge)
+    let span = (delta * delta + 2.0 * delta * (1.0 + lambda * recovery) / lambda).sqrt();
+    let seed = (span / step_s).round().clamp(1.0, 1e15) as usize;
+    let lo = seed.saturating_sub(4).max(1);
+    let hi = seed.saturating_add(4);
+    let mut best = 1usize;
+    let mut best_eff = effective_seconds_per_step(1, step_s, delta, lambda, recovery);
+    for m in lo..=hi {
+        let eff = effective_seconds_per_step(m, step_s, delta, lambda, recovery);
+        if eff < best_eff {
+            best_eff = eff;
+            best = m;
+        }
+    }
+    best
+}
+
+/// One failure-aware candidate: a planner point plus its goodput.
+#[derive(Clone, Debug)]
+pub struct ResilientPoint {
+    pub point: PlanPoint,
+    pub goodput: Goodput,
+}
+
+/// Result of a failure-aware planning query.
+#[derive(Debug)]
+pub struct ResilientPlanResult {
+    /// The failure-free planning run — **bit-identical** to
+    /// [`planner::plan`] on the same query (it IS that call; the failure
+    /// model only re-ranks candidates, it never re-prices a step).
+    pub base: PlanResult,
+    /// The failure-aware winner (None when nothing fits).
+    pub best: Option<ResilientPoint>,
+    /// Did pricing failures change the winning plan?
+    pub flipped: bool,
+    /// Every (node count, optimizer) slice best, goodput-priced, in
+    /// enumeration order — the candidates the winner was chosen from.
+    pub candidates: Vec<ResilientPoint>,
+}
+
+/// Two plan points describe the same plan (same swept knobs and
+/// bit-identical pricing) — the flip test.
+fn same_plan(a: &PlanPoint, b: &PlanPoint) -> bool {
+    a.label() == b.label()
+        && a.seconds_per_step().to_bits() == b.seconds_per_step().to_bits()
+}
+
+/// Failure-aware planning: fastest plan by **expected goodput** under
+/// `fm`.  Disabled model → the embedded `base` result is the answer and
+/// `best` mirrors `base.best` with a unit goodput.  See module docs for
+/// why the search decomposes into per-(node count, optimizer) slices.
+pub fn plan_resilient(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    fm: &FailureModel,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> ResilientPlanResult {
+    let base = planner::plan(model, cluster, workload, space, sweep, cache);
+    if !fm.enabled() {
+        let best = base.best.clone().map(|point| {
+            let goodput = fm.goodput(&point.setup, point.seconds_per_step());
+            ResilientPoint { point, goodput }
+        });
+        return ResilientPlanResult { base, best, flipped: false, candidates: Vec::new() };
+    }
+    let mut candidates: Vec<ResilientPoint> = Vec::new();
+    for n in space.node_counts(cluster) {
+        for &opt in &space.optimizers {
+            let slice = space.slice(n, opt);
+            let sub = planner::plan(model, cluster, workload, &slice, sweep, cache);
+            if let Some(point) = sub.best {
+                let goodput = fm.goodput(&point.setup, point.seconds_per_step());
+                candidates.push(ResilientPoint { point, goodput });
+            }
+        }
+    }
+    // first-seen strict improvement in enumeration order, same tie rule
+    // as the planner's own selection
+    let mut best: Option<ResilientPoint> = None;
+    for c in &candidates {
+        let better = match &best {
+            Some(b) => {
+                c.goodput.effective_seconds_per_step < b.goodput.effective_seconds_per_step
+            }
+            None => true,
+        };
+        if better {
+            best = Some(c.clone());
+        }
+    }
+    let flipped = match (&best, &base.best) {
+        (Some(b), Some(f)) => !same_plan(&b.point, f),
+        _ => false,
+    };
+    ResilientPlanResult { base, best, flipped, candidates }
+}
+
+// ------------------------------------------------------------------
+// what-if sweeps: derated fabrics, straggler jitter, MTBF ladders
+
+/// The axis a what-if sweep derates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WhatIfAxis {
+    /// Scale every node group's NIC injection bandwidth by the factor
+    /// (1.0 = healthy fabric).
+    Nic,
+    /// Scale every node's NVLink bandwidth by the factor.
+    Nvlink,
+    /// Slow ONE node's sustained compute by the factor amount: factor
+    /// `j` multiplies its achievable FLOPs by `(1 - j)` (0 = healthy).
+    /// Priced through the heterogeneous slowest-participant machinery —
+    /// sub-pod plans that avoid the straggler keep full speed.
+    Jitter,
+    /// The factor IS the per-node MTBF in hours (goodput ladder).
+    Mtbf,
+}
+
+impl WhatIfAxis {
+    pub fn parse(s: &str) -> Option<WhatIfAxis> {
+        match s {
+            "nic" => Some(WhatIfAxis::Nic),
+            "nvlink" => Some(WhatIfAxis::Nvlink),
+            "jitter" => Some(WhatIfAxis::Jitter),
+            "mtbf" => Some(WhatIfAxis::Mtbf),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WhatIfAxis::Nic => "nic",
+            WhatIfAxis::Nvlink => "nvlink",
+            WhatIfAxis::Jitter => "jitter",
+            WhatIfAxis::Mtbf => "mtbf",
+        }
+    }
+
+    /// A sensible default ladder per axis (healthy end first, so the
+    /// first sweep point is the baseline the boundaries compare against).
+    pub fn default_factors(self) -> Vec<f64> {
+        match self {
+            WhatIfAxis::Nic | WhatIfAxis::Nvlink => vec![1.0, 0.5, 0.25, 0.125, 0.0625],
+            WhatIfAxis::Jitter => vec![0.0, 0.2, 0.4, 0.6, 0.8],
+            WhatIfAxis::Mtbf => vec![1024.0, 256.0, 64.0, 16.0, 4.0, 1.0, 0.25],
+        }
+    }
+}
+
+/// `cluster` with every node group's NIC and/or NVLink rate scaled —
+/// degraded-fabric what-ifs answered analytically instead of by
+/// re-benchmarking (Kundu et al. 2024).
+pub fn derate_cluster(cluster: &ClusterSpec, nic_factor: f64, nvlink_factor: f64) -> ClusterSpec {
+    let mut c = cluster.clone();
+    c.ib_bw *= nic_factor;
+    c.node.nvlink_bw *= nvlink_factor;
+    for g in &mut c.extra_groups {
+        g.ib_bw *= nic_factor;
+        g.node.nvlink_bw *= nvlink_factor;
+    }
+    c
+}
+
+/// `cluster` with ONE node turned into a straggler: its sustained
+/// compute scaled by `(1 - jitter)`.  The slow node becomes its own
+/// heterogeneous group at the END of placement order, so sub-pod plans
+/// avoid it and only full-pod plans pay the slowest-participant price.
+pub fn jitter_cluster(cluster: &ClusterSpec, jitter: f64) -> ClusterSpec {
+    let mut c = cluster.clone();
+    let mut slow = c.node.clone();
+    slow.gpu.achievable_frac *= (1.0 - jitter).clamp(0.0, 1.0);
+    if c.nodes > 1 {
+        c.nodes -= 1;
+        let ib_bw = c.ib_bw;
+        c.extra_groups.push(NodeGroup { nodes: 1, node: slow, ib_bw });
+    } else {
+        c.node = slow;
+    }
+    c
+}
+
+/// One point of a what-if sweep: the winning plan at one derate factor.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub factor: f64,
+    /// Winning plan's label (empty when nothing fits).
+    pub label: String,
+    /// Failure-free seconds/step of the winner.
+    pub seconds_per_step: f64,
+    /// Expected seconds per useful step (equals `seconds_per_step` when
+    /// the failure model is disabled).
+    pub effective_seconds_per_step: f64,
+}
+
+/// A factor interval where the winning plan flips: the winner at `lo`
+/// differs from the winner at `hi` (consecutive ladder points).
+#[derive(Clone, Debug)]
+pub struct PhaseBoundary {
+    pub lo: f64,
+    pub hi: f64,
+    pub from: String,
+    pub to: String,
+}
+
+/// Replan at every factor of `axis` and report the winner per point.
+/// With `fm` enabled the winner is the failure-aware one (and for the
+/// [`WhatIfAxis::Mtbf`] axis each factor *is* the MTBF in hours).
+pub fn whatif_sweep(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    axis: WhatIfAxis,
+    factors: &[f64],
+    fm: &FailureModel,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::with_capacity(factors.len());
+    for &factor in factors {
+        let (derated, point_fm) = match axis {
+            WhatIfAxis::Nic => (derate_cluster(cluster, factor, 1.0), fm.clone()),
+            WhatIfAxis::Nvlink => (derate_cluster(cluster, 1.0, factor), fm.clone()),
+            WhatIfAxis::Jitter => (jitter_cluster(cluster, factor), fm.clone()),
+            WhatIfAxis::Mtbf => {
+                (cluster.clone(), FailureModel { mtbf_hours: factor, ..fm.clone() })
+            }
+        };
+        let point = if point_fm.enabled() {
+            let r = plan_resilient(model, &derated, workload, space, &point_fm, sweep, cache);
+            match r.best {
+                Some(b) => SweepPoint {
+                    factor,
+                    label: b.point.label(),
+                    seconds_per_step: b.point.seconds_per_step(),
+                    effective_seconds_per_step: b.goodput.effective_seconds_per_step,
+                },
+                None => SweepPoint {
+                    factor,
+                    label: String::new(),
+                    seconds_per_step: f64::INFINITY,
+                    effective_seconds_per_step: f64::INFINITY,
+                },
+            }
+        } else {
+            let r = planner::plan(model, &derated, workload, space, sweep, cache);
+            match r.best {
+                Some(b) => SweepPoint {
+                    factor,
+                    label: b.label(),
+                    seconds_per_step: b.seconds_per_step(),
+                    effective_seconds_per_step: b.seconds_per_step(),
+                },
+                None => SweepPoint {
+                    factor,
+                    label: String::new(),
+                    seconds_per_step: f64::INFINITY,
+                    effective_seconds_per_step: f64::INFINITY,
+                },
+            }
+        };
+        out.push(point);
+    }
+    out
+}
+
+/// The intervals of a sweep where the winning plan flips.
+pub fn phase_boundaries(points: &[SweepPoint]) -> Vec<PhaseBoundary> {
+    let mut out = Vec::new();
+    for w in points.windows(2) {
+        if w[0].label != w[1].label {
+            out.push(PhaseBoundary {
+                lo: w[0].factor,
+                hi: w[1].factor,
+                from: w[0].label.clone(),
+                to: w[1].label.clone(),
+            });
+        }
+    }
+    out
+}
+
+/// Scan a descending MTBF ladder and return the first MTBF (hours) where
+/// the failure-aware winner differs from the failure-free winner, with
+/// the full result at that point.  `None` when even the harshest rung
+/// never flips (e.g. the failure-free winner already runs on 1 node).
+pub fn find_flip(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    fm: &FailureModel,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> Option<(f64, ResilientPlanResult)> {
+    // log-spaced, from "monthly" failures down to pathological churn —
+    // the flip point only has to exist somewhere on the ladder
+    const LADDER: [f64; 9] = [512.0, 128.0, 32.0, 8.0, 2.0, 0.5, 0.125, 0.03125, 0.0078125];
+    for &mtbf in &LADDER {
+        let probe = FailureModel { mtbf_hours: mtbf, ..fm.clone() };
+        let r = plan_resilient(model, cluster, workload, space, &probe, sweep, cache);
+        if r.flipped {
+            return Some((mtbf, r));
+        }
+    }
+    None
+}
+
+// ------------------------------------------------------------------
+// elastic re-planning: drop k nodes, replan on the survivors
+
+/// An elastic recovery plan after `dropped` nodes fail at once.
+#[derive(Debug)]
+pub struct ElasticReplan {
+    /// Nodes left after the failure.
+    pub survivors: usize,
+    /// Failure-aware plan on the survivor cluster.
+    pub result: ResilientPlanResult,
+    /// One-time cost of getting back to useful work on the new plan:
+    /// checkpoint restore + restart overhead + expected rework (half the
+    /// new plan's checkpoint interval — the steady-state expected loss
+    /// since the last checkpoint).
+    pub restart_cost_s: f64,
+}
+
+/// Drop `dropped` nodes from `cluster` (placement order: weakest extra
+/// groups go first — [`ClusterSpec::take_nodes`] keeps the primary
+/// group), replan on the survivors, and price the restart from the last
+/// checkpoint.  Errors when no node would survive.
+pub fn replan_after_failure(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    fm: &FailureModel,
+    dropped: usize,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> anyhow::Result<ElasticReplan> {
+    let total = cluster.total_nodes();
+    if dropped >= total {
+        anyhow::bail!("cannot drop {dropped} of {total} nodes: no survivors");
+    }
+    let survivors = total - dropped;
+    let surviving = cluster.take_nodes(survivors);
+    let result = plan_resilient(model, &surviving, workload, space, fm, sweep, cache);
+    let restart_cost_s = match &result.best {
+        Some(b) => {
+            let ckpt = fm.checkpoint_cost(&b.point.setup);
+            let rework = if fm.enabled() && b.goodput.interval_steps > 0 {
+                let w = b.goodput.interval_steps as f64 * b.point.seconds_per_step()
+                    + ckpt.write_s;
+                w / 2.0
+            } else {
+                0.0
+            };
+            ckpt.restore_s + fm.restart_overhead_s + rework
+        }
+        None => f64::INFINITY,
+    };
+    Ok(ElasticReplan { survivors, result, restart_cost_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+    use crate::zero::OptimizerKind;
+
+    fn small_space() -> PlanSpace {
+        // a thin but multi-node slice of the default space: enough to
+        // exercise the (n, opt) decomposition without long pricing
+        PlanSpace {
+            optimizers: vec![OptimizerKind::AdamW, OptimizerKind::Adafactor],
+            micro_batch_caps: vec![0, 8],
+            schedules: vec![crate::parallel::PipeSchedule::OneFOneB],
+            nodes: vec![1, 2, 4],
+            max_tp: 4,
+            max_pp: 2,
+            max_sp: 1,
+            max_ep: 1,
+            ..PlanSpace::default()
+        }
+    }
+
+    #[test]
+    fn interval_optimal_vs_brute_force() {
+        // a grid over the interesting regimes: cheap/expensive
+        // checkpoints, rare/frequent failures, fast/slow steps
+        for &step_s in &[0.5, 2.0, 30.0] {
+            for &delta in &[1.0, 30.0, 600.0] {
+                for &mtbf_s in &[900.0, 3600.0 * 24.0, 3600.0 * 24.0 * 30.0] {
+                    for &recovery in &[30.0, 600.0] {
+                        let lambda = 8.0 / mtbf_s;
+                        let m = optimal_interval_steps(step_s, delta, lambda, recovery);
+                        let eff = effective_seconds_per_step(m, step_s, delta, lambda, recovery);
+                        for cand in 1..=20_000usize {
+                            let e = effective_seconds_per_step(
+                                cand, step_s, delta, lambda, recovery,
+                            );
+                            assert!(
+                                eff <= e * (1.0 + 1e-12),
+                                "s={step_s} δ={delta} λ={lambda:.2e} R={recovery}: \
+                                 m={m} ({eff}) beaten by m={cand} ({e})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interval_follows_young_scaling() {
+        // τ* = sqrt(2δ/λ): quadrupling δ or quartering λ doubles the
+        // optimal interval, roughly (integer effects aside)
+        let s = 1.0;
+        let base = optimal_interval_steps(s, 10.0, 1e-4, 100.0);
+        let big_delta = optimal_interval_steps(s, 40.0, 1e-4, 100.0);
+        let rare = optimal_interval_steps(s, 10.0, 2.5e-5, 100.0);
+        assert!(base >= 2, "base interval too small to test scaling: {base}");
+        for (name, v) in [("4x delta", big_delta), ("lambda/4", rare)] {
+            let ratio = v as f64 / base as f64;
+            assert!(
+                (1.6..=2.6).contains(&ratio),
+                "{name}: interval {v} vs base {base} (ratio {ratio})"
+            );
+        }
+    }
+
+    #[test]
+    fn goodput_monotone_in_mtbf() {
+        let model = by_name("mt5-large").unwrap();
+        let setup = TrainSetup::dp_pod(model, 4, crate::zero::ZeroStage::Stage2);
+        let step_s = crate::sim::simulate_step(&setup).seconds_per_step();
+        let mut prev = 0.0;
+        for mtbf in [0.25, 1.0, 4.0, 16.0, 64.0, 256.0, 1024.0] {
+            let g = FailureModel::with_mtbf(mtbf).goodput(&setup, step_s);
+            assert!(
+                g.goodput_fraction > prev,
+                "goodput not monotone in MTBF: {} at {mtbf}h after {prev}",
+                g.goodput_fraction
+            );
+            assert!(g.goodput_fraction < 1.0);
+            assert!(g.effective_seconds_per_step > step_s);
+            prev = g.goodput_fraction;
+        }
+        // disabled model: exactly 1.0, effective == step time bit-for-bit
+        let off = FailureModel::disabled().goodput(&setup, step_s);
+        assert_eq!(off.goodput_fraction, 1.0);
+        assert_eq!(off.effective_seconds_per_step.to_bits(), step_s.to_bits());
+        assert_eq!(off.interval_steps, 0);
+    }
+
+    #[test]
+    fn checkpoint_bytes_follow_optimizer_state() {
+        let model = by_name("mt5-xl").unwrap();
+        let fm = FailureModel::with_mtbf(24.0);
+        let mut adamw = TrainSetup::dp_pod(model.clone(), 4, crate::zero::ZeroStage::Stage2);
+        adamw.opt = OptimizerKind::AdamW;
+        let mut ada = adamw.clone();
+        ada.opt = OptimizerKind::Adafactor;
+        let ca = fm.checkpoint_cost(&adamw);
+        let cf = fm.checkpoint_cost(&ada);
+        let psi = model.params() as f64;
+        assert!((ca.bytes - 14.0 * psi).abs() < 1.0, "adamw: {}", ca.bytes);
+        assert!((cf.bytes - 6.5 * psi).abs() < 1.0, "adafactor: {}", cf.bytes);
+        assert!(ca.write_s > cf.write_s);
+        // more writers against the shared ceiling: 8 nodes no slower
+        let wide = TrainSetup::dp_pod(model, 8, crate::zero::ZeroStage::Stage2);
+        assert!(fm.checkpoint_cost(&wide).write_s <= ca.write_s);
+    }
+
+    #[test]
+    fn disabled_model_embeds_plain_plan_bit_identically() {
+        let model = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(4);
+        let w = Workload::table1();
+        let space = small_space();
+        let cache = SimCache::new();
+        let sweep = Sweep::serial();
+        let plain = planner::plan(&model, &cluster, &w, &space, &sweep, &cache);
+        let r = plan_resilient(
+            &model,
+            &cluster,
+            &w,
+            &space,
+            &FailureModel::disabled(),
+            &sweep,
+            &cache,
+        );
+        assert!(!r.flipped);
+        assert!(r.candidates.is_empty(), "disabled model must not replan slices");
+        let (a, b) = (plain.best.as_ref().unwrap(), r.base.best.as_ref().unwrap());
+        assert_eq!(a.label(), b.label());
+        assert_eq!(a.seconds_per_step().to_bits(), b.seconds_per_step().to_bits());
+        assert_eq!(plain.frontier.len(), r.base.frontier.len());
+        let best = r.best.as_ref().unwrap();
+        assert_eq!(best.point.label(), b.label());
+        assert_eq!(best.goodput.goodput_fraction, 1.0);
+    }
+
+    #[test]
+    fn slice_decomposition_covers_the_failure_free_winner() {
+        // at an effectively-infinite MTBF the failure-aware winner must
+        // coincide with the failure-free best (goodput ≈ monotone in s)
+        let model = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(4);
+        let w = Workload::table1();
+        let space = small_space();
+        let cache = SimCache::new();
+        let fm = FailureModel::with_mtbf(1.0e9);
+        let r = plan_resilient(&model, &cluster, &w, &space, &fm, &Sweep::serial(), &cache);
+        assert!(!r.flipped, "a ~infinite MTBF must not flip the plan");
+        assert!(!r.candidates.is_empty());
+        let best = r.best.as_ref().unwrap();
+        let base = r.base.best.as_ref().unwrap();
+        assert!(same_plan(&best.point, base));
+        assert!(best.goodput.goodput_fraction > 0.999);
+    }
+
+    #[test]
+    fn blast_radius_flips_the_plan_under_harsh_mtbf() {
+        let model = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(4);
+        let w = Workload::table1();
+        let space = small_space();
+        let cache = SimCache::new();
+        let sweep = Sweep::serial();
+        let base = planner::plan(&model, &cluster, &w, &space, &sweep, &cache);
+        let base_nodes = base.best.as_ref().unwrap().setup.cluster.total_nodes();
+        assert!(
+            base_nodes > 1,
+            "flip premise: the failure-free winner must be a multi-node plan"
+        );
+        // a crawling shared store: δ = C/B is constant in the node count
+        // and dwarfs the step time, so at harsh MTBFs the cluster failure
+        // rate (∝ nodes) dominates and a narrower plan must win
+        let fm = FailureModel {
+            mtbf_hours: 0.0, // ladder probes set it
+            write_bw: 2e9,
+            read_bw: 2e9,
+            shared_bw: 1e8,
+            restart_overhead_s: 120.0,
+        };
+        let (mtbf, flip) = find_flip(&model, &cluster, &w, &space, &fm, &sweep, &cache)
+            .expect("some MTBF on the ladder must flip a multi-node winner");
+        assert!(flip.flipped);
+        let winner = flip.best.as_ref().unwrap();
+        let flip_nodes = winner.point.setup.cluster.total_nodes();
+        assert!(
+            flip_nodes < base_nodes,
+            "at MTBF {mtbf}h the winner should shrink its blast radius \
+             ({flip_nodes} vs {base_nodes} nodes)"
+        );
+        // and the winner's expected goodput beats the failure-free best's
+        let base_gp = fm_at(mtbf, &fm)
+            .goodput(&base.best.as_ref().unwrap().setup, base.best.as_ref().unwrap().seconds_per_step());
+        assert!(
+            winner.goodput.effective_seconds_per_step
+                < base_gp.effective_seconds_per_step,
+            "winner must beat the failure-free best under the same failure model"
+        );
+    }
+
+    fn fm_at(mtbf: f64, fm: &FailureModel) -> FailureModel {
+        FailureModel { mtbf_hours: mtbf, ..fm.clone() }
+    }
+
+    #[test]
+    fn derate_and_jitter_reshape_the_cluster() {
+        let cluster = ClusterSpec::lps_pod(4);
+        let d = derate_cluster(&cluster, 0.5, 0.25);
+        assert_eq!(d.ib_bw, cluster.ib_bw * 0.5);
+        assert_eq!(d.node.nvlink_bw, cluster.node.nvlink_bw * 0.25);
+        assert_eq!(d.total_nodes(), 4);
+        let j = jitter_cluster(&cluster, 0.5);
+        assert_eq!(j.total_nodes(), 4, "jitter must not change the node count");
+        assert_eq!(j.nodes, 3);
+        assert_eq!(j.extra_groups.len(), 1);
+        let frac = j.extra_groups[0].node.gpu.achievable_frac;
+        assert!((frac - cluster.node.gpu.achievable_frac * 0.5).abs() < 1e-12);
+        // take_nodes(3) avoids the straggler entirely
+        let sub = j.take_nodes(3);
+        assert!(sub.extra_groups.is_empty());
+        // single-node cluster: the one node itself slows down
+        let j1 = jitter_cluster(&ClusterSpec::lps_pod(1), 0.3);
+        assert_eq!(j1.total_nodes(), 1);
+        assert!(j1.node.gpu.achievable_frac < ClusterSpec::lps_pod(1).node.gpu.achievable_frac);
+    }
+
+    #[test]
+    fn whatif_nic_sweep_slows_plans_and_reports_boundaries() {
+        let model = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(2);
+        let w = Workload::table1();
+        let space = PlanSpace { nodes: vec![1, 2], ..small_space() };
+        let cache = SimCache::new();
+        let pts = whatif_sweep(
+            &model,
+            &cluster,
+            &w,
+            &space,
+            WhatIfAxis::Nic,
+            &[1.0, 0.25, 0.01],
+            &FailureModel::disabled(),
+            &Sweep::serial(),
+            &cache,
+        );
+        assert_eq!(pts.len(), 3);
+        assert!(!pts[0].label.is_empty());
+        // a derated fabric can never speed the winner up
+        assert!(pts[1].seconds_per_step >= pts[0].seconds_per_step - 1e-12);
+        assert!(pts[2].seconds_per_step >= pts[1].seconds_per_step - 1e-12);
+        // boundaries are exactly the label changes, whatever they are
+        let bounds = phase_boundaries(&pts);
+        let changes = pts.windows(2).filter(|w| w[0].label != w[1].label).count();
+        assert_eq!(bounds.len(), changes);
+        for b in &bounds {
+            assert_ne!(b.from, b.to);
+        }
+    }
+
+    #[test]
+    fn elastic_replan_prices_survivors_and_restart() {
+        let model = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(4);
+        let w = Workload::table1();
+        let space = small_space();
+        let cache = SimCache::new();
+        let fm = FailureModel::with_mtbf(64.0);
+        let r = replan_after_failure(
+            &model,
+            &cluster,
+            &w,
+            &space,
+            &fm,
+            1,
+            &Sweep::serial(),
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(r.survivors, 3);
+        let best = r.result.best.as_ref().expect("survivors still fit the model");
+        assert!(best.point.setup.cluster.total_nodes() <= 3);
+        // restart = restore + overhead + expected rework: strictly more
+        // than the bare restore time
+        let restore = fm.checkpoint_cost(&best.point.setup).restore_s;
+        assert!(r.restart_cost_s > restore + fm.restart_overhead_s - 1e-9);
+        assert!(r.restart_cost_s.is_finite());
+        // dropping everything is an error
+        assert!(replan_after_failure(
+            &model,
+            &cluster,
+            &w,
+            &space,
+            &fm,
+            4,
+            &Sweep::serial(),
+            &cache,
+        )
+        .is_err());
+    }
+}

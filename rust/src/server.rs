@@ -40,9 +40,27 @@
 //! run one at a time on the same pool and dedupe the same way.
 //!
 //! Bit-identity with the one-shot CLI is by construction: both front
-//! ends build setups through the same [`SimQuery`]/[`PlanQuery`] and
-//! serialize through the same payload builders, with every float also
-//! carried as its exact bit pattern.
+//! ends build setups through the same [`SimQuery`]/[`PlanQuery`]/
+//! [`WhatIfQuery`] and serialize through the same payload builders, with
+//! every float also carried as its exact bit pattern.
+//!
+//! ## Hardening
+//!
+//! - **Deadlines**: with `--deadline-ms` (or a per-request
+//!   `deadline_ms` field), a request still queued past its budget
+//!   answers `{"ok": false, "error_kind": "timeout", "waited_ms": ...}`
+//!   instead of being priced — structured, never a hang.
+//! - **Overload shedding**: past `--max-queue` in-flight requests, new
+//!   lines answer `{"ok": false, "error_kind": "overloaded",
+//!   "retry_after_ms": ...}` at the accept side without touching the
+//!   engine queue.
+//! - **Fault injection** (gated behind `--faults` /
+//!   `SCALESTUDY_FAULTS=1`): `{"query": "fault", "fault":
+//!   "worker_panic" | "delay_wave" | "drop_conn"}` injects a pool-worker
+//!   panic (the pool drains and keeps serving), stalls the next wave
+//!   (deterministic deadline overruns), or cuts a connection
+//!   mid-response — proving engine, pool, and caches survive while
+//!   `stats` reports `faults`/`timeouts`/`shed` counters.
 
 use crate::hardware::ClusterSpec;
 use crate::hpo;
@@ -50,17 +68,19 @@ use crate::json::Json;
 use crate::model::{by_name, ModelCfg};
 use crate::parallel::{ParallelCfg, PipeSchedule};
 use crate::planner::{self, PlanSpace};
+use crate::resilience::{self, FailureModel, WhatIfAxis};
 use crate::sim::{self, StepTime, TrainSetup, Workload};
 use crate::sweep::{hex_f64, step_to_json, SimCache, Sweep};
 use crate::timeline;
 use crate::zero::ZeroStage;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 // ------------------------------------------------------------------
 // queries: ONE builder per query kind, shared by the CLI and the server
@@ -83,6 +103,13 @@ fn opt_bool(j: &Json, key: &str, default: bool) -> anyhow::Result<bool> {
     match j.get(key) {
         Json::Null => Ok(default),
         v => v.as_bool().ok_or_else(|| anyhow::anyhow!("'{key}' must be a boolean")),
+    }
+}
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> anyhow::Result<f64> {
+    match j.get(key) {
+        Json::Null => Ok(default),
+        v => v.as_f64().ok_or_else(|| anyhow::anyhow!("'{key}' must be a number")),
     }
 }
 
@@ -188,6 +215,11 @@ pub struct PlanQuery {
     pub max_sp: usize,
     pub max_ep: usize,
     pub exact_nodes: bool,
+    /// Per-node MTBF in hours; > 0 switches the plan to failure-aware
+    /// goodput ranking ([`resilience::plan_resilient`]) and the response
+    /// to [`resilient_plan_payload`].  0 (the default) is the exact
+    /// failure-free path with the PR 6 payload, byte-for-byte.
+    pub mtbf_hours: f64,
 }
 
 impl Default for PlanQuery {
@@ -202,6 +234,7 @@ impl Default for PlanQuery {
             max_sp: 4,
             max_ep: 8,
             exact_nodes: false,
+            mtbf_hours: 0.0,
         }
     }
 }
@@ -219,6 +252,7 @@ impl PlanQuery {
             max_sp: opt_usize(j, "max_sp", d.max_sp)?,
             max_ep: opt_usize(j, "max_ep", d.max_ep)?,
             exact_nodes: opt_bool(j, "exact_nodes", d.exact_nodes)?,
+            mtbf_hours: opt_f64(j, "mtbf_hours", d.mtbf_hours)?,
         })
     }
 
@@ -244,6 +278,57 @@ impl PlanQuery {
             space.nodes = vec![cluster.total_nodes()];
         }
         Ok((model, cluster, workload, space))
+    }
+}
+
+/// A `whatif` query mirroring the CLI `whatif` subcommand: the plan
+/// problem plus a derate axis and a factor ladder.
+#[derive(Clone, Debug)]
+pub struct WhatIfQuery {
+    pub plan: PlanQuery,
+    pub axis: String,
+    /// Derate factors (empty = the axis's default ladder).
+    pub factors: Vec<f64>,
+}
+
+impl WhatIfQuery {
+    pub fn from_json(j: &Json) -> anyhow::Result<WhatIfQuery> {
+        let plan = PlanQuery::from_json(j)?;
+        let axis = opt_str(j, "axis", "nic")?;
+        if WhatIfAxis::parse(&axis).is_none() {
+            anyhow::bail!("axis must be nic, nvlink, jitter, or mtbf");
+        }
+        let factors = match j.get("factors") {
+            Json::Null => Vec::new(),
+            v => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'factors' must be an array of numbers"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("'factors' must be an array of numbers"))
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?,
+        };
+        Ok(WhatIfQuery { plan, axis, factors })
+    }
+
+    /// Run the sweep — the one code path shared by CLI and server.
+    pub fn run(&self, sweep: &Sweep, cache: &SimCache) -> anyhow::Result<Json> {
+        let (model, cluster, workload, space) = self.plan.problem()?;
+        let axis = WhatIfAxis::parse(&self.axis).expect("validated in from_json");
+        let factors =
+            if self.factors.is_empty() { axis.default_factors() } else { self.factors.clone() };
+        let fm = if self.plan.mtbf_hours > 0.0 {
+            FailureModel::with_mtbf(self.plan.mtbf_hours)
+        } else {
+            FailureModel::disabled()
+        };
+        let points = resilience::whatif_sweep(
+            &model, &cluster, &workload, &space, axis, &factors, &fm, sweep, cache,
+        );
+        let bounds = resilience::phase_boundaries(&points);
+        Ok(whatif_payload(axis, &points, &bounds))
     }
 }
 
@@ -336,6 +421,95 @@ pub fn plan_payload(result: &planner::PlanResult) -> Json {
     ])
 }
 
+/// Machine-readable goodput breakdown (exact bits on the ranking float).
+pub fn goodput_payload(g: &resilience::Goodput) -> Json {
+    Json::obj(vec![
+        ("interval_steps", Json::Num(g.interval_steps as f64)),
+        ("checkpoint_write_s", Json::Num(g.checkpoint_write_s)),
+        ("restore_s", Json::Num(g.restore_s)),
+        ("lambda_per_s", Json::Num(g.lambda_per_s)),
+        ("effective_seconds_per_step", Json::Num(g.effective_seconds_per_step)),
+        ("effective_seconds_per_step_bits", hex_f64(g.effective_seconds_per_step)),
+        ("goodput_fraction", Json::Num(g.goodput_fraction)),
+    ])
+}
+
+/// Machine-readable failure-aware planner payload.  Embeds the exact
+/// failure-free [`plan_payload`] under `"failure_free"`, so the PR 6
+/// contract (best + frontier bit-identical to the plain planner) stays
+/// checkable from the response itself.
+pub fn resilient_plan_payload(r: &resilience::ResilientPlanResult) -> Json {
+    let rp = |p: &resilience::ResilientPoint| {
+        Json::obj(vec![
+            ("label", Json::Str(p.point.label())),
+            ("describe", Json::Str(p.point.describe())),
+            ("seconds_per_step", Json::Num(p.point.seconds_per_step())),
+            ("seconds_per_step_bits", hex_f64(p.point.seconds_per_step())),
+            ("goodput", goodput_payload(&p.goodput)),
+        ])
+    };
+    Json::obj(vec![
+        ("failure_free", plan_payload(&r.base)),
+        (
+            "best",
+            match &r.best {
+                Some(p) => rp(p),
+                None => Json::Null,
+            },
+        ),
+        ("flipped", Json::Bool(r.flipped)),
+        ("candidates", Json::Arr(r.candidates.iter().map(rp).collect())),
+    ])
+}
+
+/// Machine-readable what-if sweep payload: the winner per derate factor
+/// plus the phase boundaries where the winning plan flips.
+pub fn whatif_payload(
+    axis: WhatIfAxis,
+    points: &[resilience::SweepPoint],
+    bounds: &[resilience::PhaseBoundary],
+) -> Json {
+    Json::obj(vec![
+        ("axis", Json::Str(axis.name().to_string())),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("factor", Json::Num(p.factor)),
+                            ("label", Json::Str(p.label.clone())),
+                            ("seconds_per_step", Json::Num(p.seconds_per_step)),
+                            ("seconds_per_step_bits", hex_f64(p.seconds_per_step)),
+                            (
+                                "effective_seconds_per_step",
+                                Json::Num(p.effective_seconds_per_step),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "boundaries",
+            Json::Arr(
+                bounds
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("lo", Json::Num(b.lo)),
+                            ("hi", Json::Num(b.hi)),
+                            ("from", Json::Str(b.from.clone())),
+                            ("to", Json::Str(b.to.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// Machine-readable HPO funnel payload.
 pub fn hpo_payload(result: &hpo::FunnelResult) -> Json {
     let dims = hpo::space();
@@ -376,10 +550,21 @@ pub fn hpo_payload(result: &hpo::FunnelResult) -> Json {
 // ------------------------------------------------------------------
 // the engine: one thread owning the warm pool + caches
 
-/// One queued request: the parsed line plus the connection's reply lane.
+/// What the engine hands a connection's writer thread.
+enum Reply {
+    /// One response line (newline appended by the writer).
+    Line(String),
+    /// Fault injection: cut the connection mid-response — a few bytes of
+    /// a truncated object, no newline, then a hard socket shutdown.
+    Drop,
+}
+
+/// One queued request: the parsed line plus the connection's reply lane
+/// and the enqueue instant the deadline clock measures from.
 struct RequestJob {
     request: Json,
-    reply: mpsc::Sender<String>,
+    reply: mpsc::Sender<Reply>,
+    enqueued: Instant,
 }
 
 /// Canonical identity of a query for in-flight dedup: the request object
@@ -429,6 +614,24 @@ struct Engine {
     served: u64,
     deduped: u64,
     waves: u64,
+    /// Default per-query deadline (ms); 0 = no deadline.  A request may
+    /// carry its own `deadline_ms` field, which takes precedence.
+    deadline_ms: u64,
+    /// Queue bound the accept side sheds against (reported in `stats`).
+    max_queue: usize,
+    /// Env/flag-gated fault-injection hook (`fault` queries).
+    fault_injection: bool,
+    /// Armed by a `delay_wave` fault: the NEXT wave stalls this long
+    /// before dispatch, so queued queries can overrun their deadlines
+    /// deterministically in tests.
+    pending_delay_ms: u64,
+    faults: u64,
+    timeouts: u64,
+    /// Requests shed at the accept side (incremented by connection
+    /// threads, read by `stats`).
+    shed: Arc<AtomicU64>,
+    /// Requests accepted but not yet drained into a wave.
+    queue_depth: Arc<AtomicUsize>,
 }
 
 impl Engine {
@@ -479,7 +682,7 @@ impl Engine {
     fn respond(&mut self, job: &RequestJob, fields: Vec<(&str, Json)>) {
         let mut all = vec![("id", job.request.get("id").clone())];
         all.extend(fields);
-        let _ = job.reply.send(Json::obj(all).dumps());
+        let _ = job.reply.send(Reply::Line(Json::obj(all).dumps()));
         self.served += 1;
     }
 
@@ -498,6 +701,24 @@ impl Engine {
         );
     }
 
+    /// Structured failure: `ok=false` plus a machine-matchable
+    /// `error_kind` ("timeout", "overloaded", ...) and extra fields.
+    fn respond_fail(
+        &mut self,
+        job: &RequestJob,
+        kind: &str,
+        msg: String,
+        extra: Vec<(&str, Json)>,
+    ) {
+        let mut fields = vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(msg)),
+            ("error_kind", Json::Str(kind.to_string())),
+        ];
+        fields.extend(extra);
+        self.respond(job, fields);
+    }
+
     fn respond_stats(&mut self, job: &RequestJob) {
         let sk = timeline::skeletons();
         let (clears, grows) = self.sweep.scratch_stats();
@@ -508,6 +729,12 @@ impl Engine {
             ("waves", Json::Num(self.waves as f64)),
             ("workers", Json::Num(self.sweep.workers() as f64)),
             ("pool_batches", Json::Num(self.sweep.pool_batches() as f64)),
+            ("faults", Json::Num(self.faults as f64)),
+            ("timeouts", Json::Num(self.timeouts as f64)),
+            ("shed", Json::Num(self.shed.load(Ordering::SeqCst) as f64)),
+            ("queue_depth", Json::Num(self.queue_depth.load(Ordering::SeqCst) as f64)),
+            ("max_queue", Json::Num(self.max_queue as f64)),
+            ("deadline_ms", Json::Num(self.deadline_ms as f64)),
             (
                 "simcache",
                 Json::obj(vec![
@@ -539,16 +766,131 @@ impl Engine {
         self.respond_ok(job, result, None);
     }
 
+    /// Per-query deadline check: a request overrunning its deadline while
+    /// queued answers with a structured timeout instead of being priced.
+    /// Returns `true` when the job was consumed (timed out).  `shutdown`
+    /// is exempt — it must always get through.
+    fn check_deadline(&mut self, job: &RequestJob) -> bool {
+        let deadline =
+            opt_u64(&job.request, "deadline_ms", self.deadline_ms).unwrap_or(self.deadline_ms);
+        if deadline == 0 {
+            return false;
+        }
+        let waited_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+        if waited_ms <= deadline as f64 {
+            return false;
+        }
+        self.timeouts += 1;
+        self.respond_fail(
+            job,
+            "timeout",
+            format!("deadline exceeded: waited {waited_ms:.0} ms of a {deadline} ms budget"),
+            vec![
+                ("waited_ms", Json::Num(waited_ms)),
+                ("deadline_ms", Json::Num(deadline as f64)),
+            ],
+        );
+        true
+    }
+
+    /// Env/flag-gated fault injection: prove the engine, pool, and caches
+    /// survive a worker panic, a stalled wave, or a cut connection, and
+    /// keep serving bit-identical answers.
+    fn run_fault(&mut self, job: &RequestJob) {
+        if !self.fault_injection {
+            self.respond_err(
+                job,
+                &anyhow::anyhow!(
+                    "fault injection disabled (start serve with --faults or SCALESTUDY_FAULTS=1)"
+                ),
+            );
+            return;
+        }
+        let kind = opt_str(&job.request, "fault", "").unwrap_or_default();
+        match kind.as_str() {
+            // a task panics mid-batch on the shared pool: the pool drains,
+            // re-raises to the submitter (us), and must stay usable
+            "worker_panic" => {
+                self.faults += 1;
+                let items = [0usize, 1, 2, 3];
+                let panicked = catch_unwind(AssertUnwindSafe(|| {
+                    self.sweep.map(&items, |i, &x| {
+                        if i == 2 {
+                            panic!("injected worker panic");
+                        }
+                        x * 2
+                    })
+                }))
+                .is_err();
+                let verify = self.sweep.map(&[1usize, 2, 3], |_, &x| x * 2);
+                let survived = verify == vec![2, 4, 6];
+                self.respond_ok(
+                    job,
+                    Json::obj(vec![
+                        ("injected", Json::Str("worker_panic".to_string())),
+                        ("panicked", Json::Bool(panicked)),
+                        ("pool_survived", Json::Bool(survived)),
+                    ]),
+                    None,
+                );
+            }
+            // stall the NEXT wave: queued queries overrun their deadlines
+            "delay_wave" => {
+                self.faults += 1;
+                let ms = opt_u64(&job.request, "ms", 1000).unwrap_or(1000).min(5000);
+                self.pending_delay_ms = ms;
+                self.respond_ok(
+                    job,
+                    Json::obj(vec![
+                        ("injected", Json::Str("delay_wave".to_string())),
+                        ("delay_ms", Json::Num(ms as f64)),
+                        ("armed", Json::Bool(true)),
+                    ]),
+                    None,
+                );
+            }
+            // cut this connection mid-response: truncated bytes, no
+            // newline, hard shutdown — the client must see a torn read
+            "drop_conn" => {
+                self.faults += 1;
+                self.served += 1;
+                let _ = job.reply.send(Reply::Drop);
+            }
+            other => self.respond_err(
+                job,
+                &anyhow::anyhow!(
+                    "unknown fault '{other}' (expected worker_panic/delay_wave/drop_conn)"
+                ),
+            ),
+        }
+    }
+
     /// Process one coalesced batch of requests.  Returns `true` when a
     /// `shutdown` query was answered (the engine then exits; any batch
     /// mates are answered first).
     fn process(&mut self, jobs: Vec<RequestJob>) -> bool {
+        // these jobs left the queue: drop them from the shed-side depth
+        // (saturating — unit tests feed jobs that were never enqueued)
+        let n = jobs.len();
+        let _ = self
+            .queue_depth
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| Some(d.saturating_sub(n)));
+        // a previously armed delay_wave fault stalls this wave BEFORE the
+        // deadline checks, so queued queries age past their budgets
+        if self.pending_delay_ms > 0 {
+            let ms = std::mem::take(&mut self.pending_delay_ms);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
         let mut sims: Vec<(RequestJob, TrainSetup, String)> = Vec::new();
         let mut plans: Vec<(RequestJob, PlanQuery, String)> = Vec::new();
+        let mut whatifs: Vec<(RequestJob, WhatIfQuery, String)> = Vec::new();
         let mut hpos: Vec<(RequestJob, HpoQuery, String)> = Vec::new();
         let mut shutdown: Option<RequestJob> = None;
         for job in jobs {
             let kind = job.request.get("query").as_str().unwrap_or("").to_string();
+            if kind != "shutdown" && self.check_deadline(&job) {
+                continue;
+            }
             match kind.as_str() {
                 "simulate" => match SimQuery::from_json(&job.request).and_then(|q| q.setup()) {
                     Ok(setup) => {
@@ -564,6 +906,13 @@ impl Engine {
                     }
                     Err(e) => self.respond_err(&job, &e),
                 },
+                "whatif" => match WhatIfQuery::from_json(&job.request) {
+                    Ok(q) => {
+                        let key = canonical_key(&job.request);
+                        whatifs.push((job, q, key));
+                    }
+                    Err(e) => self.respond_err(&job, &e),
+                },
                 "hpo" => match HpoQuery::from_json(&job.request) {
                     Ok(q) => {
                         let key = canonical_key(&job.request);
@@ -573,11 +922,13 @@ impl Engine {
                 },
                 "stats" => self.respond_stats(&job),
                 "ping" => self.respond_ok(&job, Json::Str("pong".to_string()), None),
+                "fault" => self.run_fault(&job),
                 "shutdown" => shutdown = Some(job),
                 other => self.respond_err(
                     &job,
                     &anyhow::anyhow!(
-                        "unknown query '{other}' (expected simulate/plan/hpo/stats/ping/shutdown)"
+                        "unknown query '{other}' (expected \
+                         simulate/plan/whatif/hpo/stats/ping/fault/shutdown)"
                     ),
                 ),
             }
@@ -586,10 +937,20 @@ impl Engine {
         self.run_simulate_wave(sims);
         self.run_keyed::<PlanQuery, _>(plans, |eng, q, mark| {
             let (model, cluster, workload, space) = q.problem()?;
-            let result = planner::plan(&model, &cluster, &workload, &space, &eng.sweep, &eng.cache);
             let _ = mark; // timing handled by caller
-            Ok(plan_payload(&result))
+            if q.mtbf_hours > 0.0 {
+                let fm = FailureModel::with_mtbf(q.mtbf_hours);
+                let result = resilience::plan_resilient(
+                    &model, &cluster, &workload, &space, &fm, &eng.sweep, &eng.cache,
+                );
+                Ok(resilient_plan_payload(&result))
+            } else {
+                let result =
+                    planner::plan(&model, &cluster, &workload, &space, &eng.sweep, &eng.cache);
+                Ok(plan_payload(&result))
+            }
         });
+        self.run_keyed::<WhatIfQuery, _>(whatifs, |eng, q, _mark| q.run(&eng.sweep, &eng.cache));
         let workers = self.workers_requested;
         self.run_keyed::<HpoQuery, _>(hpos, |eng, q, _mark| {
             let result = hpo::run_funnel_cached(&q.cfg(workers), &eng.cache);
@@ -703,11 +1064,30 @@ pub struct ServeCfg {
     pub workers: usize,
     /// Load/save the persistent SimCache under `target/`.
     pub persist_cache: bool,
+    /// Default per-query deadline in ms (0 = none): a request still
+    /// queued past its budget answers `{ok:false, error_kind:"timeout"}`
+    /// instead of being priced.  Per-request `deadline_ms` overrides.
+    pub deadline_ms: u64,
+    /// Queue bound for overload shedding (0 = unbounded): past it, new
+    /// requests answer `{ok:false, error_kind:"overloaded"}` with a
+    /// `retry_after_ms` hint instead of enqueueing.
+    pub max_queue: usize,
+    /// Enable the `fault` query kinds (worker_panic / delay_wave /
+    /// drop_conn).  Off by default; the CLI also gates it behind
+    /// `SCALESTUDY_FAULTS=1`.
+    pub fault_injection: bool,
 }
 
 impl Default for ServeCfg {
     fn default() -> ServeCfg {
-        ServeCfg { addr: "127.0.0.1:7077".to_string(), workers: 0, persist_cache: true }
+        ServeCfg {
+            addr: "127.0.0.1:7077".to_string(),
+            workers: 0,
+            persist_cache: true,
+            deadline_ms: 0,
+            max_queue: 1024,
+            fault_injection: false,
+        }
     }
 }
 
@@ -720,6 +1100,9 @@ pub struct Server {
     engine: Option<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     workers: usize,
+    max_queue: usize,
+    shed: Arc<AtomicU64>,
+    queue_depth: Arc<AtomicUsize>,
 }
 
 /// Handle for a [`Server::spawn`]ed server.
@@ -744,6 +1127,8 @@ impl Server {
         let sweep = Sweep::new(cfg.workers);
         let cache = if cfg.persist_cache { SimCache::load_default() } else { SimCache::new() };
         let workers = sweep.workers();
+        let shed = Arc::new(AtomicU64::new(0));
+        let queue_depth = Arc::new(AtomicUsize::new(0));
         let (tx, rx) = mpsc::channel::<RequestJob>();
         let eng = Engine {
             sweep,
@@ -756,11 +1141,29 @@ impl Server {
             served: 0,
             deduped: 0,
             waves: 0,
+            deadline_ms: cfg.deadline_ms,
+            max_queue: cfg.max_queue,
+            fault_injection: cfg.fault_injection,
+            pending_delay_ms: 0,
+            faults: 0,
+            timeouts: 0,
+            shed: shed.clone(),
+            queue_depth: queue_depth.clone(),
         };
         let engine = std::thread::Builder::new()
             .name("serve-engine".to_string())
             .spawn(move || engine_loop(eng, rx))?;
-        Ok(Server { addr, listener, engine_tx: tx, engine: Some(engine), stop, workers })
+        Ok(Server {
+            addr,
+            listener,
+            engine_tx: tx,
+            engine: Some(engine),
+            stop,
+            workers,
+            max_queue: cfg.max_queue,
+            shed,
+            queue_depth,
+        })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -773,18 +1176,32 @@ impl Server {
 
     /// Accept connections until a `shutdown` query arrives; blocks.
     /// Connection reader threads exit when their client disconnects (or
-    /// with the process) — `run` does not wait on idle clients.
+    /// with the process) — `run` does not wait on idle clients, and the
+    /// engine's self-connect wake ensures the listener closes promptly
+    /// even while idle keep-alive connections stay open.
     pub fn run(mut self) -> anyhow::Result<()> {
         loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
             let stream = match self.listener.accept() {
                 Ok((s, _)) => s,
-                Err(_) => continue,
+                Err(_) => {
+                    // a transient accept error must not spin past stop
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    continue;
+                }
             };
             if self.stop.load(Ordering::SeqCst) {
                 break; // the engine's wake-up connection lands here
             }
             let tx = self.engine_tx.clone();
-            std::thread::spawn(move || handle_conn(stream, tx));
+            let shed = self.shed.clone();
+            let depth = self.queue_depth.clone();
+            let max_queue = self.max_queue;
+            std::thread::spawn(move || handle_conn(stream, tx, depth, max_queue, shed));
         }
         drop(self.engine_tx);
         if let Some(engine) = self.engine.take() {
@@ -809,20 +1226,41 @@ impl Server {
 /// Per-connection protocol: read one JSON object per line, queue it for
 /// the engine; a companion writer thread streams response lines back.
 /// Responses may interleave across a pipelined batch — clients match by
-/// `id`.
-fn handle_conn(stream: TcpStream, engine_tx: mpsc::Sender<RequestJob>) {
+/// `id`.  Overload shedding happens HERE, before the queue: past
+/// `max_queue` in-flight requests, a structured `overloaded` error with
+/// a retry hint answers immediately and nothing is enqueued.
+fn handle_conn(
+    stream: TcpStream,
+    engine_tx: mpsc::Sender<RequestJob>,
+    queue_depth: Arc<AtomicUsize>,
+    max_queue: usize,
+    shed: Arc<AtomicU64>,
+) {
     let write_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
-    let (reply_tx, reply_rx) = mpsc::channel::<String>();
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
     let writer = std::thread::spawn(move || {
         let mut w = BufWriter::new(write_half);
-        while let Ok(line) = reply_rx.recv() {
-            if w.write_all(line.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
-                break;
+        while let Ok(reply) = reply_rx.recv() {
+            match reply {
+                Reply::Line(line) => {
+                    if w.write_all(line.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
+                        break;
+                    }
+                    let _ = w.flush();
+                }
+                Reply::Drop => {
+                    // injected fault: a torn response — partial bytes of
+                    // an object, no closing brace, no newline — then a
+                    // hard cut, so the client sees a mid-response drop
+                    let _ = w.write_all(b"{\"ok\":true,\"result\":");
+                    let _ = w.flush();
+                    let _ = w.get_ref().shutdown(Shutdown::Both);
+                    break;
+                }
             }
-            let _ = w.flush();
         }
     });
     let reader = BufReader::new(stream);
@@ -841,11 +1279,30 @@ fn handle_conn(stream: TcpStream, engine_tx: mpsc::Sender<RequestJob>) {
                     ("ok", Json::Bool(false)),
                     ("error", Json::Str(format!("{e}"))),
                 ]);
-                let _ = reply_tx.send(err.dumps());
+                let _ = reply_tx.send(Reply::Line(err.dumps()));
                 continue;
             }
         };
-        if engine_tx.send(RequestJob { request, reply: reply_tx.clone() }).is_err() {
+        if max_queue > 0 && queue_depth.load(Ordering::SeqCst) >= max_queue {
+            shed.fetch_add(1, Ordering::SeqCst);
+            let err = Json::obj(vec![
+                ("id", request.get("id").clone()),
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::Str(format!(
+                        "server overloaded: {max_queue} requests already queued"
+                    )),
+                ),
+                ("error_kind", Json::Str("overloaded".to_string())),
+                ("retry_after_ms", Json::Num(100.0)),
+            ]);
+            let _ = reply_tx.send(Reply::Line(err.dumps()));
+            continue;
+        }
+        queue_depth.fetch_add(1, Ordering::SeqCst);
+        let job = RequestJob { request, reply: reply_tx.clone(), enqueued: Instant::now() };
+        if engine_tx.send(job).is_err() {
             break; // engine gone (shutdown)
         }
     }
@@ -857,9 +1314,22 @@ fn handle_conn(stream: TcpStream, engine_tx: mpsc::Sender<RequestJob>) {
 mod tests {
     use super::*;
 
-    fn job(line: &str) -> (RequestJob, mpsc::Receiver<String>) {
+    fn job(line: &str) -> (RequestJob, mpsc::Receiver<Reply>) {
         let (tx, rx) = mpsc::channel();
-        (RequestJob { request: Json::parse(line).unwrap(), reply: tx }, rx)
+        let j = RequestJob {
+            request: Json::parse(line).unwrap(),
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        (j, rx)
+    }
+
+    /// Next reply as a line (panics on an injected Drop).
+    fn line(rx: &mpsc::Receiver<Reply>) -> String {
+        match rx.recv().unwrap() {
+            Reply::Line(l) => l,
+            Reply::Drop => panic!("unexpected Reply::Drop"),
+        }
     }
 
     fn test_engine(workers: usize) -> Engine {
@@ -875,6 +1345,14 @@ mod tests {
             served: 0,
             deduped: 0,
             waves: 0,
+            deadline_ms: 0,
+            max_queue: 1024,
+            fault_injection: false,
+            pending_delay_ms: 0,
+            faults: 0,
+            timeouts: 0,
+            shed: Arc::new(AtomicU64::new(0)),
+            queue_depth: Arc::new(AtomicUsize::new(0)),
         }
     }
 
@@ -894,10 +1372,10 @@ mod tests {
         assert!(!eng.process(vec![j1, j2, j3, j4]));
         assert_eq!(eng.cache.misses(), 2, "4 queries over 2 distinct setups price twice");
         assert_eq!(eng.deduped, 2);
-        let a = Json::parse(&r1.recv().unwrap()).unwrap();
-        let b = Json::parse(&r2.recv().unwrap()).unwrap();
-        let c = Json::parse(&r3.recv().unwrap()).unwrap();
-        let d = Json::parse(&r4.recv().unwrap()).unwrap();
+        let a = Json::parse(&line(&r1)).unwrap();
+        let b = Json::parse(&line(&r2)).unwrap();
+        let c = Json::parse(&line(&r3)).unwrap();
+        let d = Json::parse(&line(&r4)).unwrap();
         assert_eq!(a.get("ok").as_bool(), Some(true));
         // key order in the request line must not defeat the dedup
         assert_eq!(a.get("result").dumps(), b.get("result").dumps());
@@ -916,17 +1394,17 @@ mod tests {
         let q = r#"{"id": 1, "query": "simulate", "model": "mt5-large", "nodes": 2, "pp": 2}"#;
         let (j1, r1) = job(q);
         eng.process(vec![j1]);
-        let cold = Json::parse(&r1.recv().unwrap()).unwrap();
+        let cold = Json::parse(&line(&r1)).unwrap();
         assert_eq!(cold.get("ok").as_bool(), Some(true));
         // warm the arenas to steady state before the asserted repeat
         for _ in 0..4 {
             let (j, r) = job(q);
             eng.process(vec![j]);
-            let _ = r.recv().unwrap();
+            let _ = line(&r);
         }
         let (j2, r2) = job(q);
         eng.process(vec![j2]);
-        let warm = Json::parse(&r2.recv().unwrap()).unwrap();
+        let warm = Json::parse(&line(&r2)).unwrap();
         let meta = warm.get("meta");
         assert!(
             meta.path(&["simcache", "hit_rate"]).as_f64().unwrap() >= 0.9,
@@ -950,17 +1428,155 @@ mod tests {
         let (j3, r3) = job(r#"{"id": 3, "query": "ping"}"#);
         let (j4, r4) = job(r#"{"id": 4, "query": "stats"}"#);
         assert!(!eng.process(vec![j1, j2, j3, j4]));
-        let e1 = Json::parse(&r1.recv().unwrap()).unwrap();
+        let e1 = Json::parse(&line(&r1)).unwrap();
         assert_eq!(e1.get("ok").as_bool(), Some(false));
         assert!(e1.get("error").as_str().unwrap().contains("unknown model"));
-        let e2 = Json::parse(&r2.recv().unwrap()).unwrap();
+        let e2 = Json::parse(&line(&r2)).unwrap();
         assert_eq!(e2.get("ok").as_bool(), Some(false));
-        let p = Json::parse(&r3.recv().unwrap()).unwrap();
+        let p = Json::parse(&line(&r3)).unwrap();
         assert_eq!(p.get("result").as_str(), Some("pong"));
-        let s = Json::parse(&r4.recv().unwrap()).unwrap();
+        let s = Json::parse(&line(&r4)).unwrap();
         assert_eq!(s.get("ok").as_bool(), Some(true));
         assert!(s.path(&["result", "workers"]).as_usize().unwrap() >= 1);
         // skeleton-cache counters ride along for warm-pool inspection
         assert!(s.path(&["result", "skeletons", "evictions"]).as_f64().is_some());
+    }
+
+    /// A request aged past its deadline answers a structured timeout
+    /// (never a hang, never a priced result) and the engine keeps
+    /// serving; a generous per-request deadline overrides the default.
+    #[test]
+    fn deadline_overrun_answers_structured_timeout() {
+        let mut eng = test_engine(1);
+        eng.deadline_ms = 5;
+        let (mut j, r) =
+            job(r#"{"id": 1, "query": "simulate", "model": "mt5-base", "nodes": 2}"#);
+        j.enqueued = Instant::now() - Duration::from_millis(50);
+        assert!(!eng.process(vec![j]));
+        let t = Json::parse(&line(&r)).unwrap();
+        assert_eq!(t.get("ok").as_bool(), Some(false));
+        assert_eq!(t.get("error_kind").as_str(), Some("timeout"));
+        assert!(t.get("waited_ms").as_f64().unwrap() >= 5.0);
+        assert_eq!(eng.timeouts, 1);
+        let (j2, r2) = job(r#"{"id": 2, "query": "ping", "deadline_ms": 60000}"#);
+        assert!(!eng.process(vec![j2]));
+        let p = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(p.get("result").as_str(), Some("pong"));
+    }
+
+    /// Fault injection is gated off by default; enabled, an injected
+    /// worker panic poisons one pool slot, the pool drains, and the
+    /// engine keeps answering bit-identically to before the fault.
+    #[test]
+    fn injected_worker_panic_leaves_the_pool_serving() {
+        let mut eng = test_engine(2);
+        let (j0, r0) = job(r#"{"id": 0, "query": "fault", "fault": "worker_panic"}"#);
+        eng.process(vec![j0]);
+        let gated = Json::parse(&line(&r0)).unwrap();
+        assert_eq!(gated.get("ok").as_bool(), Some(false));
+        assert!(gated.get("error").as_str().unwrap().contains("SCALESTUDY_FAULTS"));
+        assert_eq!(eng.faults, 0);
+        eng.fault_injection = true;
+        let q = r#"{"id": 1, "query": "simulate", "model": "mt5-base", "nodes": 2}"#;
+        let (j1, r1) = job(q);
+        eng.process(vec![j1]);
+        let before = Json::parse(&line(&r1)).unwrap();
+        let (j2, r2) = job(r#"{"id": 2, "query": "fault", "fault": "worker_panic"}"#);
+        eng.process(vec![j2]);
+        let f = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(f.get("ok").as_bool(), Some(true), "{f:?}");
+        assert_eq!(f.path(&["result", "panicked"]).as_bool(), Some(true));
+        assert_eq!(f.path(&["result", "pool_survived"]).as_bool(), Some(true));
+        assert_eq!(eng.faults, 1);
+        let (j3, r3) = job(q);
+        eng.process(vec![j3]);
+        let after = Json::parse(&line(&r3)).unwrap();
+        assert_eq!(before.get("result").dumps(), after.get("result").dumps());
+    }
+
+    /// `delay_wave` arms a one-shot stall for the NEXT wave: queued
+    /// queries age past tight deadlines deterministically, and the
+    /// delay is consumed (not repeated).
+    #[test]
+    fn delay_wave_stalls_exactly_one_wave() {
+        let mut eng = test_engine(1);
+        eng.fault_injection = true;
+        let (j, r) = job(r#"{"id": 1, "query": "fault", "fault": "delay_wave", "ms": 50}"#);
+        eng.process(vec![j]);
+        let a = Json::parse(&line(&r)).unwrap();
+        assert_eq!(a.path(&["result", "armed"]).as_bool(), Some(true));
+        assert_eq!(eng.pending_delay_ms, 50);
+        let (j2, r2) = job(r#"{"id": 2, "query": "ping", "deadline_ms": 10}"#);
+        let t0 = Instant::now();
+        eng.process(vec![j2]);
+        assert!(t0.elapsed() >= Duration::from_millis(50), "wave must stall");
+        let t = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(t.get("error_kind").as_str(), Some("timeout"));
+        assert_eq!(eng.pending_delay_ms, 0, "the stall is one-shot");
+        let (j3, r3) = job(r#"{"id": 3, "query": "ping", "deadline_ms": 10}"#);
+        eng.process(vec![j3]);
+        let p = Json::parse(&line(&r3)).unwrap();
+        assert_eq!(p.get("result").as_str(), Some("pong"));
+    }
+
+    /// `drop_conn` hands the writer a Drop marker (torn bytes + hard
+    /// cut) and counts the fault.
+    #[test]
+    fn drop_conn_fault_sends_drop_reply() {
+        let mut eng = test_engine(1);
+        eng.fault_injection = true;
+        let (j, r) = job(r#"{"id": 1, "query": "fault", "fault": "drop_conn"}"#);
+        eng.process(vec![j]);
+        assert!(matches!(r.recv().unwrap(), Reply::Drop));
+        assert_eq!(eng.faults, 1);
+    }
+
+    /// `stats` carries the resilience counters: faults, timeouts, shed,
+    /// queue depth and the configured bounds.
+    #[test]
+    fn stats_reports_fault_timeout_shed_counters() {
+        let mut eng = test_engine(1);
+        eng.fault_injection = true;
+        eng.deadline_ms = 1;
+        eng.shed.fetch_add(3, Ordering::SeqCst);
+        let (mut j1, r1) = job(r#"{"id": 1, "query": "ping"}"#);
+        j1.enqueued = Instant::now() - Duration::from_millis(30);
+        let (j2, r2) = job(r#"{"id": 2, "query": "fault", "fault": "delay_wave", "ms": 1}"#);
+        let (j3, r3) = job(r#"{"id": 3, "query": "stats"}"#);
+        eng.process(vec![j1, j2, j3]);
+        assert_eq!(
+            Json::parse(&line(&r1)).unwrap().get("error_kind").as_str(),
+            Some("timeout")
+        );
+        assert_eq!(Json::parse(&line(&r2)).unwrap().get("ok").as_bool(), Some(true));
+        let s = Json::parse(&line(&r3)).unwrap();
+        assert_eq!(s.path(&["result", "timeouts"]).as_f64(), Some(1.0));
+        assert_eq!(s.path(&["result", "faults"]).as_f64(), Some(1.0));
+        assert_eq!(s.path(&["result", "shed"]).as_f64(), Some(3.0));
+        assert_eq!(s.path(&["result", "max_queue"]).as_f64(), Some(1024.0));
+        assert_eq!(s.path(&["result", "deadline_ms"]).as_f64(), Some(1.0));
+    }
+
+    /// A failure-aware plan query embeds the failure-free payload
+    /// byte-identically to a plain plan query on the same problem.
+    #[test]
+    fn resilient_plan_embeds_plain_plan_payload() {
+        let mut eng = test_engine(2);
+        let plain = r#"{"id": 1, "query": "plan", "model": "mt5-base", "nodes": 2, "exact_nodes": true}"#;
+        let resilient = r#"{"id": 2, "query": "plan", "model": "mt5-base", "nodes": 2, "exact_nodes": true, "mtbf_hours": 24}"#;
+        let (j1, r1) = job(plain);
+        eng.process(vec![j1]);
+        let a = Json::parse(&line(&r1)).unwrap();
+        assert_eq!(a.get("ok").as_bool(), Some(true));
+        let (j2, r2) = job(resilient);
+        eng.process(vec![j2]);
+        let b = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(b.get("ok").as_bool(), Some(true), "{b:?}");
+        assert_eq!(
+            b.path(&["result", "failure_free"]).dumps(),
+            a.get("result").dumps(),
+            "the embedded failure-free plan must be byte-identical"
+        );
+        assert!(b.path(&["result", "best", "goodput", "goodput_fraction"]).as_f64().unwrap() < 1.0);
     }
 }

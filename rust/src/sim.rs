@@ -539,6 +539,15 @@ pub fn simulate_step(setup: &TrainSetup) -> StepTime {
     simulate_with(setup, true)
 }
 
+/// Unique bytes a checkpoint of this setup must persist — the model's
+/// full parameter count through [`crate::zero::checkpoint_bytes`], so
+/// the resilience layer's I/O cost shares the exact ZeRO state-bytes
+/// expressions the memory model prices.  Parallelism degrees shard the
+/// writers, not the total.
+pub fn checkpoint_state_bytes(setup: &TrainSetup) -> f64 {
+    crate::zero::checkpoint_bytes(setup.model.params() as f64, setup.opt)
+}
+
 /// The kept closed-form path: scalar overlap heuristic + schedule-aware
 /// bubble fraction.  Bit-identical to [`simulate_step`] for pp = 1 (both
 /// evaluate [`scalar_exposure`] on the same [`comm_classes`]); the

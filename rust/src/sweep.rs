@@ -616,11 +616,26 @@ pub const SIMCACHE_SCHEMA_VERSION: u64 = 3;
 /// monotonically while the hottest recent plans stay resident.
 pub const SIMCACHE_DEFAULT_MAX_ENTRIES: usize = 200_000;
 
+/// Read a `usize` knob from the environment, falling back to `default`.
+/// A *set but unparsable* value warns on stderr (one line, with the
+/// variable name and the offending text) instead of being silently
+/// swallowed — a typo'd `SCALESTUDY_SIMCACHE_MAX=2OOOOO` should not
+/// quietly run with the default bound.
+pub(crate) fn env_usize_or(name: &str, default: usize) -> usize {
+    match std::env::var(name) {
+        Ok(v) => match v.parse() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("warning: {name}={v:?} is not a valid integer; using default {default}");
+                default
+            }
+        },
+        Err(_) => default,
+    }
+}
+
 fn default_max_entries() -> usize {
-    std::env::var("SCALESTUDY_SIMCACHE_MAX")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(SIMCACHE_DEFAULT_MAX_ENTRIES)
+    env_usize_or("SCALESTUDY_SIMCACHE_MAX", SIMCACHE_DEFAULT_MAX_ENTRIES)
 }
 
 /// Lock stripes for the memo map.  High-worker sweeps used to serialize
@@ -841,17 +856,57 @@ impl SimCache {
     /// Load a cache from `path`.  Any failure — missing file, truncated
     /// or corrupt JSON, wrong schema version, malformed entry — degrades
     /// to an empty cache (a stale pricing must never survive a schema
-    /// change; a cold start merely re-simulates).
+    /// change; a cold start merely re-simulates).  A *present but
+    /// unusable* file additionally emits a one-line stderr warning via
+    /// [`SimCache::load_verbose`], so silent cache resets (corruption, a
+    /// schema bump, a torn write) are visible in logs instead of just
+    /// manifesting as a mysteriously slow run.
     pub fn load(path: &Path) -> SimCache {
+        let (cache, warning) = SimCache::load_verbose(path);
+        if let Some(w) = warning {
+            eprintln!("warning: {w}");
+        }
+        cache
+    }
+
+    /// [`SimCache::load`] with the degradation reason surfaced: returns
+    /// the (possibly empty) cache plus `Some(reason)` when an *existing*
+    /// file could not be used.  A missing file is a normal cold start and
+    /// produces no warning.
+    pub fn load_verbose(path: &Path) -> (SimCache, Option<String>) {
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
-            Err(_) => return SimCache::new(),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return (SimCache::new(), None);
+            }
+            Err(e) => {
+                let why = format!(
+                    "sim cache {}: unreadable ({e}); starting empty",
+                    path.display()
+                );
+                return (SimCache::new(), Some(why));
+            }
         };
         let json = match Json::parse(&text) {
             Ok(j) => j,
-            Err(_) => return SimCache::new(),
+            Err(e) => {
+                let why = format!(
+                    "sim cache {}: corrupt JSON ({e}); starting empty",
+                    path.display()
+                );
+                return (SimCache::new(), Some(why));
+            }
         };
-        SimCache::from_json(&json).unwrap_or_default()
+        match SimCache::from_json(&json) {
+            Some(cache) => (cache, None),
+            None => {
+                let why = format!(
+                    "sim cache {}: schema/entry mismatch (want schema {SIMCACHE_SCHEMA_VERSION}); starting empty",
+                    path.display()
+                );
+                (SimCache::new(), Some(why))
+            }
+        }
     }
 
     /// Serialize and write atomically (temp file + rename), so a crashed
@@ -1257,6 +1312,75 @@ mod tests {
         crate::json::Json::Obj(obj).write_file(&path).unwrap();
         assert!(SimCache::load(&path).is_empty(), "future schema must be discarded");
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// A present-but-unusable cache file must surface a one-line reason
+    /// with the path in it; a healthy or missing file must not warn.
+    #[test]
+    fn load_verbose_reports_degradation_reason() {
+        let path = tmp_path("verbose");
+
+        // missing file: cold start, no warning
+        let _ = std::fs::remove_file(&path);
+        let (c, warn) = SimCache::load_verbose(&path);
+        assert!(c.is_empty());
+        assert!(warn.is_none(), "missing file must not warn, got {warn:?}");
+
+        // corrupt JSON: warns, names the file, says why
+        std::fs::write(&path, "{not json").unwrap();
+        let (c, warn) = SimCache::load_verbose(&path);
+        assert!(c.is_empty());
+        let w = warn.expect("corrupt file must warn");
+        assert!(w.contains(&path.display().to_string()), "warning must name the path: {w}");
+        assert!(w.contains("corrupt JSON"), "warning must say why: {w}");
+
+        // schema mismatch: warns with the wanted schema version
+        std::fs::write(&path, r#"{"schema": 1, "entries": []}"#).unwrap();
+        let (c, warn) = SimCache::load_verbose(&path);
+        assert!(c.is_empty());
+        let w = warn.expect("schema mismatch must warn");
+        assert!(w.contains("schema"), "warning must mention the schema: {w}");
+        assert!(
+            w.contains(&SIMCACHE_SCHEMA_VERSION.to_string()),
+            "warning must state the wanted version: {w}"
+        );
+
+        // malformed entry under the right schema: also a schema/entry warn
+        std::fs::write(
+            &path,
+            r#"{"schema": 3, "entries": [{"model": "x", "fields": ["zz"], "step": {}}]}"#,
+        )
+        .unwrap();
+        let (c, warn) = SimCache::load_verbose(&path);
+        assert!(c.is_empty());
+        assert!(warn.is_some(), "malformed entry must warn");
+
+        // healthy file: loads clean, no warning
+        let cache = SimCache::new();
+        cache.simulate(&TrainSetup::dp_pod(by_name("mt5-base").unwrap(), 1, ZeroStage::Stage2));
+        cache.save(&path).unwrap();
+        let (c, warn) = SimCache::load_verbose(&path);
+        assert_eq!(c.len(), cache.len());
+        assert!(warn.is_none(), "healthy file must not warn, got {warn:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Unparsable env knobs fall back to the default (with a stderr
+    /// warning) instead of being silently swallowed; parsable ones win.
+    #[test]
+    fn env_knob_parse_failure_uses_default() {
+        // Use a dedicated variable name so no other test (or the cache
+        // constructors above) can race with this one.
+        let name = "SCALESTUDY_TEST_KNOB_SWEEP";
+        std::env::remove_var(name);
+        assert_eq!(env_usize_or(name, 77), 77);
+        std::env::set_var(name, "123");
+        assert_eq!(env_usize_or(name, 77), 123);
+        std::env::set_var(name, "2OOOOO"); // letter-O typo
+        assert_eq!(env_usize_or(name, 77), 77);
+        std::env::set_var(name, "-5");
+        assert_eq!(env_usize_or(name, 77), 77);
+        std::env::remove_var(name);
     }
 
     fn distinct_setups(n: usize) -> Vec<TrainSetup> {

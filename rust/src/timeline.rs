@@ -443,17 +443,14 @@ pub const SKELETON_CACHE_DEFAULT_MAX_TASKS: usize = 1 << 20;
 const SKELETON_STRIPES: usize = 16;
 
 fn skeleton_default_max() -> usize {
-    std::env::var("SCALESTUDY_SKELCACHE_MAX")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(SKELETON_CACHE_DEFAULT_MAX)
+    crate::sweep::env_usize_or("SCALESTUDY_SKELCACHE_MAX", SKELETON_CACHE_DEFAULT_MAX)
 }
 
 fn skeleton_default_max_tasks() -> usize {
-    std::env::var("SCALESTUDY_SKELCACHE_MAX_TASKS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(SKELETON_CACHE_DEFAULT_MAX_TASKS)
+    crate::sweep::env_usize_or(
+        "SCALESTUDY_SKELCACHE_MAX_TASKS",
+        SKELETON_CACHE_DEFAULT_MAX_TASKS,
+    )
 }
 
 /// Bounded, lock-striped memo cache over [`PipeSkeleton::build`] — the

@@ -139,6 +139,18 @@ pub fn state_bytes_with_offload(
     }
 }
 
+/// Unique bytes a checkpoint must persist for `psi_total` parameters:
+/// the fp16 parameters plus the fp32 optimizer master state, (2 + K)·Ψ.
+/// Derived from the SAME stage expression the memory model prices —
+/// stage-3 at N_d = 1 holds exactly one copy of every state, minus the
+/// 2Ψ of fp16 gradients, which are transient and never persisted — so
+/// checkpoint cost in [`crate::resilience`] can never drift from the
+/// memory accounting.  Sharding (dp/tp/pp/ep) changes *who writes which
+/// shard*, never this total.
+pub fn checkpoint_bytes(psi_total: f64, opt: OptimizerKind) -> f64 {
+    state_bytes_with_offload(psi_total, 1, ZeroStage::Stage3, opt, false) - 2.0 * psi_total
+}
+
 /// Provably-optimistic per-GPU memory lower bound for a configuration:
 /// the ZeRO-partitioned states (with the same offload discount the step
 /// simulator applies — partitioned fp32 optimizer state moves to host

@@ -904,3 +904,66 @@ fn prop_loader_tokens_always_in_vocab() {
         Ok(())
     });
 }
+
+// ----------------------------------------------------------- resilience
+
+/// ISSUE acceptance: with the failure model disabled (rate 0 — a zero
+/// or non-finite MTBF), `plan_resilient` must be **bit-identical** to
+/// the plain planner on every zoo model: same winning label, same
+/// step-time bits, same frontier, and an embedded base result that *is*
+/// the plain result.
+#[test]
+fn prop_zero_failure_rate_bit_identical_to_plain_planner_on_every_zoo_model() {
+    use scalestudy::resilience::{plan_resilient, FailureModel};
+    let cluster = ClusterSpec::lps_pod(4);
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let cache = SimCache::new();
+    for model in mt5_zoo() {
+        let workload = Workload::table1();
+        let plain = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+        for fm in [FailureModel::disabled(), FailureModel::with_mtbf(0.0), {
+            let mut f = FailureModel::default();
+            f.mtbf_hours = f64::INFINITY;
+            f
+        }] {
+            let r = plan_resilient(&model, &cluster, &workload, &space, &fm, &sweep, &cache);
+            assert!(!r.flipped, "{}: rate-0 plan must not flip", model.name);
+            assert!(r.candidates.is_empty(), "{}: rate-0 plan must not rank candidates", model.name);
+            match (&plain.best, &r.base.best) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.label(), b.label(), "{}: label diverged", model.name);
+                    assert_eq!(
+                        a.seconds_per_step().to_bits(),
+                        b.seconds_per_step().to_bits(),
+                        "{}: step-time bits diverged",
+                        model.name
+                    );
+                }
+                (None, None) => {}
+                _ => panic!("{}: feasibility diverged under rate-0 failure model", model.name),
+            }
+            assert_eq!(plain.frontier.len(), r.base.frontier.len(), "{}: frontier diverged", model.name);
+            for (a, b) in plain.frontier.iter().zip(&r.base.frontier) {
+                assert_eq!(a.label(), b.label(), "{}: frontier label diverged", model.name);
+                assert_eq!(
+                    a.seconds_per_step().to_bits(),
+                    b.seconds_per_step().to_bits(),
+                    "{}: frontier bits diverged",
+                    model.name
+                );
+            }
+            // the resilient wrapper reports full goodput and no checkpoints
+            if let Some(best) = &r.best {
+                assert_eq!(best.goodput.goodput_fraction, 1.0, "{}", model.name);
+                assert_eq!(best.goodput.interval_steps, 0, "{}", model.name);
+                assert_eq!(
+                    best.goodput.effective_seconds_per_step.to_bits(),
+                    best.point.seconds_per_step().to_bits(),
+                    "{}: rate-0 effective step time must be the plain step time",
+                    model.name
+                );
+            }
+        }
+    }
+}

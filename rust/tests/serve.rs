@@ -14,8 +14,28 @@ use std::net::{SocketAddr, TcpStream};
 /// Spawn a server on an ephemeral port with a dedicated pool and no
 /// cache persistence (tests must not touch `target/`'s warm cache).
 fn spawn_server(workers: usize) -> ServerHandle {
-    let cfg = ServeCfg { addr: "127.0.0.1:0".to_string(), workers, persist_cache: false };
+    spawn_server_cfg(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        persist_cache: false,
+        ..ServeCfg::default()
+    })
+}
+
+fn spawn_server_cfg(cfg: ServeCfg) -> ServerHandle {
     Server::bind(&cfg).expect("bind ephemeral port").spawn()
+}
+
+/// An ephemeral-port config with fault injection armed (the hardening
+/// tests exercise worker panics, delayed waves and dropped connections).
+fn faulty_cfg(workers: usize) -> ServeCfg {
+    ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        persist_cache: false,
+        fault_injection: true,
+        ..ServeCfg::default()
+    }
 }
 
 struct Client {
@@ -188,6 +208,221 @@ fn pipelined_queries_coalesce_and_answer_by_id() {
     // whether they landed in the same wave (dedup) or a later one (cache)
     assert_eq!(by_id[&10].get("result").dumps(), by_id[&12].get("result").dumps());
     assert_ne!(by_id[&10].get("result").dumps(), by_id[&11].get("result").dumps());
+
+    c.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+/// One-shot payload for the reference sim query used by the fault tests
+/// (what `scalestudy simulate --model mt5-xl --nodes 2 --pp 2 --json`
+/// prints).
+fn one_shot_sim() -> String {
+    let q = SimQuery { model: "mt5-xl".to_string(), nodes: 2, pp: 2, ..SimQuery::default() };
+    let setup = q.setup().unwrap();
+    step_payload(&setup, &simulate_step(&setup)).dumps()
+}
+
+const SIM_LINE: &str = r#"{"id": 1, "query": "simulate", "model": "mt5-xl", "nodes": 2, "pp": 2}"#;
+
+/// ISSUE acceptance: an injected worker panic must leave the pool, the
+/// engine and the caches serving — and subsequent answers bit-identical
+/// to the one-shot CLI path.
+#[test]
+fn worker_panic_fault_leaves_answers_bit_identical() {
+    let server = spawn_server_cfg(faulty_cfg(2));
+    let mut c = Client::connect(server.addr);
+    let reference = one_shot_sim();
+
+    let before = c.ask(SIM_LINE);
+    assert_eq!(before.get("ok").as_bool(), Some(true), "resp: {}", before.dumps());
+    assert_eq!(before.get("result").dumps(), reference);
+
+    let fault = c.ask(r#"{"id": 2, "query": "fault", "fault": "worker_panic"}"#);
+    assert_eq!(fault.get("ok").as_bool(), Some(true), "resp: {}", fault.dumps());
+    assert_eq!(fault.path(&["result", "panicked"]).as_bool(), Some(true));
+    assert_eq!(fault.path(&["result", "pool_survived"]).as_bool(), Some(true));
+
+    // the engine, pool and caches all survived: same bits as the CLI
+    let after = c.ask(SIM_LINE);
+    assert_eq!(after.get("ok").as_bool(), Some(true), "resp: {}", after.dumps());
+    assert_eq!(
+        after.get("result").dumps(),
+        reference,
+        "post-panic answers must stay bit-identical to the one-shot path"
+    );
+
+    let stats = c.ask(r#"{"query": "stats"}"#);
+    assert!(stats.path(&["result", "faults"]).as_f64().unwrap() >= 1.0);
+
+    c.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+/// A request queued past its deadline answers a structured timeout (not
+/// a hang, not a crash), and the connection keeps serving afterwards.
+#[test]
+fn deadline_overrun_answers_structured_timeout_over_socket() {
+    let server = spawn_server_cfg(faulty_cfg(1));
+    let mut c = Client::connect(server.addr);
+
+    // arm a 300 ms stall for the next engine wave, then race a 10 ms
+    // deadline against it
+    let armed = c.ask(r#"{"query": "fault", "fault": "delay_wave", "ms": 300}"#);
+    assert_eq!(armed.path(&["result", "armed"]).as_bool(), Some(true));
+
+    let resp = c.ask(r#"{"id": 5, "query": "ping", "deadline_ms": 10}"#);
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "resp: {}", resp.dumps());
+    assert_eq!(resp.get("error_kind").as_str(), Some("timeout"));
+    assert!(resp.get("waited_ms").as_f64().unwrap() >= 10.0);
+    assert_eq!(resp.get("id").as_usize(), Some(5));
+
+    // the stall was one wave only; the engine keeps serving
+    let pong = c.ask(r#"{"id": 6, "query": "ping"}"#);
+    assert_eq!(pong.get("result").as_str(), Some("pong"));
+    let stats = c.ask(r#"{"query": "stats"}"#);
+    assert!(stats.path(&["result", "timeouts"]).as_f64().unwrap() >= 1.0);
+
+    c.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+/// Overload shedding: with a queue bound of 1 and the engine stalled,
+/// excess requests answer `overloaded` + `retry_after_ms` immediately
+/// instead of queueing without bound — and the server recovers.
+#[test]
+fn overloaded_server_sheds_with_retry_after() {
+    let server = spawn_server_cfg(ServeCfg { max_queue: 1, ..faulty_cfg(1) });
+    let mut c = Client::connect(server.addr);
+
+    let armed = c.ask(r#"{"query": "fault", "fault": "delay_wave", "ms": 500}"#);
+    assert_eq!(armed.path(&["result", "armed"]).as_bool(), Some(true));
+
+    // first request starts the stalled wave …
+    c.send(r#"{"id": 100, "query": "ping"}"#);
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    // … then a burst lands while the engine sleeps: at most one fits the
+    // queue, the rest must shed
+    let burst = 12usize;
+    for i in 0..burst {
+        c.send(&format!(r#"{{"id": {}, "query": "ping"}}"#, 200 + i));
+    }
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for _ in 0..burst + 1 {
+        let r = c.recv();
+        if r.get("ok").as_bool() == Some(true) {
+            ok += 1;
+        } else {
+            assert_eq!(r.get("error_kind").as_str(), Some("overloaded"), "resp: {}", r.dumps());
+            assert!(r.get("retry_after_ms").as_f64().unwrap() > 0.0);
+            shed += 1;
+        }
+    }
+    assert!(ok >= 1, "at least the wave-starting request must succeed");
+    assert!(shed >= 1, "the burst must shed at least one request");
+
+    // recovered: normal service resumes and the counter is visible
+    let pong = c.ask(r#"{"query": "ping"}"#);
+    assert_eq!(pong.get("result").as_str(), Some("pong"));
+    let stats = c.ask(r#"{"query": "stats"}"#);
+    assert!(stats.path(&["result", "shed"]).as_f64().unwrap() >= shed as f64);
+
+    c.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+/// A connection cut mid-response (torn bytes, no newline) must not take
+/// the server down: a fresh connection still gets bit-identical answers.
+#[test]
+fn dropped_connection_mid_response_leaves_server_serving() {
+    let server = spawn_server_cfg(faulty_cfg(2));
+    let reference = one_shot_sim();
+
+    {
+        let mut c = Client::connect(server.addr);
+        let before = c.ask(SIM_LINE);
+        assert_eq!(before.get("result").dumps(), reference);
+        // this connection gets torn bytes then a hard cut
+        c.send(r#"{"query": "fault", "fault": "drop_conn"}"#);
+        let mut torn = String::new();
+        match c.reader.read_line(&mut torn) {
+            Ok(_) => assert!(
+                Json::parse(&torn).is_err() || torn.trim().is_empty(),
+                "dropped connection must not deliver a complete response, got {torn:?}"
+            ),
+            Err(_) => {} // reset mid-read is an equally valid torn outcome
+        }
+    }
+
+    // the engine survived: a new connection sees the same bits
+    let mut c2 = Client::connect(server.addr);
+    let after = c2.ask(SIM_LINE);
+    assert_eq!(after.get("ok").as_bool(), Some(true), "resp: {}", after.dumps());
+    assert_eq!(after.get("result").dumps(), reference);
+    let stats = c2.ask(r#"{"query": "stats"}"#);
+    assert!(stats.path(&["result", "faults"]).as_f64().unwrap() >= 1.0);
+
+    c2.ask(r#"{"query": "shutdown"}"#);
+    server.join();
+}
+
+/// Shutdown must close the listener promptly even while idle keep-alive
+/// connections are still open (the accept loop must not block on them).
+#[test]
+fn shutdown_closes_listener_promptly_with_idle_connections_open() {
+    let server = spawn_server(1);
+    let addr = server.addr;
+
+    // two idle keep-alive clients that never send anything
+    let _idle1 = Client::connect(addr);
+    let _idle2 = Client::connect(addr);
+
+    let mut c = Client::connect(addr);
+    let resp = c.ask(r#"{"query": "shutdown"}"#);
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "resp: {}", resp.dumps());
+
+    // the accept loop must exit promptly despite the idle connections
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        server.join();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(std::time::Duration::from_secs(10))
+        .expect("server must shut down promptly with idle connections open");
+
+    // the listener is really gone
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "post-shutdown connections must be refused"
+    );
+}
+
+/// Resilient planning over the socket: `mtbf_hours` embeds the exact
+/// failure-free plan payload, so failures-off stays bit-identical.
+#[test]
+fn resilient_plan_over_socket_embeds_failure_free_payload() {
+    let server = spawn_server(2);
+    let mut c = Client::connect(server.addr);
+
+    let plain = c.ask(
+        r#"{"id": 1, "query": "plan", "model": "mt5-base", "nodes": 2, "exact_nodes": true}"#,
+    );
+    assert_eq!(plain.get("ok").as_bool(), Some(true), "resp: {}", plain.dumps());
+
+    let resilient = c.ask(
+        r#"{"id": 2, "query": "plan", "model": "mt5-base", "nodes": 2, "exact_nodes": true, "mtbf_hours": 24}"#,
+    );
+    assert_eq!(resilient.get("ok").as_bool(), Some(true), "resp: {}", resilient.dumps());
+    assert_eq!(
+        resilient.path(&["result", "failure_free"]).dumps(),
+        plain.get("result").dumps(),
+        "the embedded failure-free plan must be bit-identical to the plain plan"
+    );
+    assert!(
+        resilient.path(&["result", "best"]).get("goodput").get("goodput_fraction").as_f64().unwrap()
+            < 1.0,
+        "a finite MTBF must cost some goodput"
+    );
 
     c.ask(r#"{"query": "shutdown"}"#);
     server.join();
