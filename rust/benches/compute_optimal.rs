@@ -1,0 +1,159 @@
+//! Bench — compute-optimal planning (PR 8): cost-to-target ranking and
+//! the progressive scale-up `plan_to_target` query across the model zoo,
+//! with a regression floor checked against the committed
+//! `rust/benches/baselines/BENCH_compute_optimal.json`.
+//!
+//! Doubles as the acceptance demonstration for the objective tentpole:
+//! an easy target must NOT pick the largest model, and a deep target
+//! must hand off through a multi-phase schedule.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::hardware::ClusterSpec;
+use scalestudy::json::Json;
+use scalestudy::model::{by_name, mt5_zoo};
+use scalestudy::objective::{plan_to_target, CostToTarget, Objective};
+use scalestudy::planner::{plan_with, PlanSpace};
+use scalestudy::sim::Workload;
+use scalestudy::sweep::{SimCache, Sweep};
+use std::time::Instant;
+
+fn main() {
+    let mut b = Bench::new("compute_optimal");
+    // perf-gate failures are DEFERRED until after b.finish() so a tripped
+    // gate still writes the artifact whose numbers explain it
+    let mut gate_failures: Vec<String> = Vec::new();
+
+    let zoo = mt5_zoo();
+    let cluster = ClusterSpec::lps_pod(2);
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let cache = SimCache::new();
+
+    // ---- the zoo sweep: cost-to-target candidates at an easy target
+    // (rate 0: cost IS wall seconds), pricing the whole space cold
+    let t0 = Instant::now();
+    let easy = plan_to_target(&zoo, &cluster, &workload, &space, 2.8, 0.0, &sweep, &cache)
+        .expect("target 2.8 is reachable");
+    let cold_wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        "cost-to-target candidates (mt5 zoo, 2 nodes, target loss 2.8)",
+        &["floor", "steps", "s/step", "days to target"],
+    );
+    for c in &easy.candidates {
+        t.row(
+            &c.model,
+            vec![
+                c.floor,
+                c.steps.unwrap_or(f64::NAN),
+                c.point.as_ref().map_or(f64::NAN, |p| p.seconds_per_step()),
+                c.seconds.map_or(f64::NAN, |s| s / 86_400.0),
+            ],
+        );
+    }
+    t.note("rate 0: ranked by pure wall time to target; NaN = floor above target or no fit");
+    b.table(t);
+    b.metric("cold_zoo_plan_seconds", cold_wall);
+
+    // acceptance: the compute-optimal answer to an easy target is NOT the
+    // largest model
+    let best = easy.best_single.expect("some single-model plan");
+    if easy.candidates[best].model == "mt5-xxl" {
+        gate_failures.push("easy target 2.8 picked mt5-xxl — compute-optimal ranking broken".into());
+    }
+
+    // ---- deep target: the progressive scale-up schedule
+    let deep = plan_to_target(&zoo, &cluster, &workload, &space, 2.2, 25.0, &sweep, &cache)
+        .expect("target 2.2 is reachable by the larger zoo models");
+    let mut pt = Table::new(
+        "progressive scale-up (target loss 2.2, $25/node-hour)",
+        &["start loss", "end loss", "steps", "days", "k$"],
+    );
+    for p in &deep.phases {
+        pt.row(
+            &p.model,
+            vec![p.start_loss, p.end_loss, p.steps, p.seconds / 86_400.0, p.cost / 1_000.0],
+        );
+    }
+    pt.note("phases sequenced by predicted loss hand-off; model size never shrinks");
+    b.table(pt);
+    b.metric("deep_target_phases", deep.phases.len() as f64);
+    if !deep.is_multi_phase() {
+        gate_failures.push("deep target 2.2 produced a single-phase schedule".into());
+    }
+    if let Some(single) = deep.best_single.and_then(|i| deep.candidates[i].cost) {
+        b.metric("deep_multi_phase_savings_frac", 1.0 - deep.total_cost / single);
+        if deep.total_cost >= single {
+            gate_failures.push(format!(
+                "multi-phase schedule ({}) not cheaper than best single plan ({single})",
+                deep.total_cost
+            ));
+        }
+    }
+
+    // ---- THE throughput metric: warm plan-to-target queries (every
+    // layout already priced in the shared cache, so this measures the
+    // objective ranking + ladder construction, the new PR 8 code)
+    let warm_runs = 6usize;
+    let t0 = Instant::now();
+    for i in 0..warm_runs {
+        let target = 2.4 + 0.05 * (i % 4) as f64; // distinct targets, same pricings
+        let r = plan_to_target(&zoo, &cluster, &workload, &space, target, 25.0, &sweep, &cache)
+            .expect("targets 2.4..2.55 are reachable");
+        std::hint::black_box(r.total_cost);
+    }
+    let warm_per_call = t0.elapsed().as_secs_f64() / warm_runs as f64;
+    let warm_pps = 1.0 / warm_per_call;
+    b.metric("plans_to_target_per_s", warm_pps);
+
+    // ---- single-model cost objective latency over the warm cache
+    let base_model = by_name("mt5-base").unwrap();
+    b.iter("plan_with(cost-to-target, mt5-base, 2 nodes, warm cache)", || {
+        let ctt = CostToTarget::for_workload(2.6, 30.0, &workload);
+        let r = plan_with(
+            &base_model,
+            &cluster,
+            &workload,
+            &space,
+            &Objective::CostToTarget(ctt),
+            &sweep,
+            &cache,
+        );
+        std::hint::black_box(r.best.map(|p| p.seconds_per_step()));
+    });
+
+    // ---- regression smoke (CI satellite): warm plan-to-target
+    // throughput must not drop below the committed floor, with the
+    // standard 2x guard band.  In fast mode a missing baseline is a hard
+    // error — the gate must not silently self-disable.
+    let baseline = std::path::Path::new("rust/benches/baselines/BENCH_compute_optimal.json");
+    if !baseline.exists() && std::env::var("SCALESTUDY_BENCH_FAST").is_ok() {
+        gate_failures.push(format!(
+            "regression baseline {} not found — run the bench from the repo root",
+            baseline.display()
+        ));
+    }
+    if baseline.exists() {
+        let base = Json::parse_file(baseline).expect("committed baseline parses");
+        let floor = base
+            .get("floors")
+            .get("plans_to_target_per_s")
+            .as_f64()
+            .expect("baseline floor");
+        if warm_pps < floor / 2.0 {
+            gate_failures.push(format!(
+                "compute-optimal regression: warm plan-to-target {warm_pps:.2}/s \
+                 fell below half the committed floor ({floor:.2})"
+            ));
+        }
+        b.metric("floor_plans_to_target_per_s", floor);
+    }
+
+    // the artifact is written FIRST, then the deferred gates fire
+    b.finish();
+    assert!(
+        gate_failures.is_empty(),
+        "compute-optimal gates tripped:\n{}",
+        gate_failures.join("\n")
+    );
+}

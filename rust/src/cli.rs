@@ -94,6 +94,18 @@ impl Matches {
             .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{}'", self.get(name)))
     }
 
+    /// A number that must be finite and ≥ 0 — for knobs like MTBF hours,
+    /// target loss or a node price, where a NaN or a negative value is
+    /// always a typo.  Plain `get_f64` would let NaN flow into models
+    /// that silently disable on non-finite input, masking the mistake.
+    pub fn get_f64_nonneg(&self, name: &str) -> anyhow::Result<f64> {
+        let v = self.get_f64(name)?;
+        if !v.is_finite() || v < 0.0 {
+            anyhow::bail!("--{name}: expected a finite number >= 0, got '{}'", self.get(name));
+        }
+        Ok(v)
+    }
+
     pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
         self.get(name)
             .parse()
@@ -276,6 +288,25 @@ mod tests {
         assert_eq!(m.get_usize_list("nodes").unwrap(), vec![2, 4]);
         assert!(m.flag("quiet"));
         assert_eq!(m.get("out"), "/tmp/x");
+    }
+
+    #[test]
+    fn nonneg_rejects_nan_negative_and_infinite() {
+        let app = App::new("t", "t").command(
+            Command::new("c", "c").opt("mtbf-hours", "0", "per-node MTBF"),
+        );
+        let get = |v: &str| -> Matches {
+            match app.parse(&sv(&["c", "--mtbf-hours", v])).unwrap().1 {
+                Parsed::Run(m) => m,
+                _ => panic!("expected run"),
+            }
+        };
+        assert_eq!(get("6.5").get_f64_nonneg("mtbf-hours").unwrap(), 6.5);
+        assert_eq!(get("0").get_f64_nonneg("mtbf-hours").unwrap(), 0.0);
+        for bad in ["NaN", "-1", "-0.5", "inf", "abc"] {
+            let err = get(bad).get_f64_nonneg("mtbf-hours").unwrap_err().to_string();
+            assert!(err.contains("mtbf-hours"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -185,12 +185,27 @@ pub struct Score {
 }
 
 impl Score {
-    /// The objective: projected time-to-train (seconds); +inf if the
-    /// trial OOMed or diverged.
+    /// The base objective: projected time-to-train (seconds); +inf if
+    /// the trial OOMed or diverged.
     pub fn time_to_train(&self) -> f64 {
         match (self.feasible, self.steps_to_target) {
             (true, Some(steps)) => steps * self.seconds_per_step,
             _ => f64::INFINITY,
+        }
+    }
+
+    /// The funnel objective ([`FunnelCfg::node_cost_per_hour`]): cost to
+    /// target — dollars when a node rate is given (time × nodes × rate),
+    /// otherwise exactly [`Score::time_to_train`] bit-for-bit.  With a
+    /// rate, a slower trial on fewer nodes can out-rank a faster wide
+    /// one — the same trade [`crate::objective::Objective::CostToTarget`]
+    /// prices inside the planner.
+    pub fn cost_to_target(&self, nodes: usize, node_cost_per_hour: f64) -> f64 {
+        let t = self.time_to_train();
+        if node_cost_per_hour > 0.0 {
+            t * nodes.max(1) as f64 * node_cost_per_hour / 3600.0
+        } else {
+            t
         }
     }
 }
@@ -233,6 +248,12 @@ pub struct FunnelCfg {
     /// into phase 2's combination budget — spent on convergence-side
     /// dimensions only.
     pub planner_seeded: bool,
+    /// Per-node hourly price for the funnel objective
+    /// ([`Score::cost_to_target`]).  `0` (the default) scores trials by
+    /// pure time-to-train, bit-identical to the pre-cost funnel; `> 0`
+    /// scores them by dollars, so the finalist grid can prefer a
+    /// narrower node count over the fastest one.
+    pub node_cost_per_hour: f64,
 }
 
 impl Default for FunnelCfg {
@@ -247,6 +268,7 @@ impl Default for FunnelCfg {
             seed: 2023,
             workers: 0,
             planner_seeded: true,
+            node_cost_per_hour: 0.0,
         }
     }
 }
@@ -490,7 +512,7 @@ pub fn run_funnel_cached(cfg: &FunnelCfg, cache: &SimCache) -> FunnelResult {
                id: &mut usize|
      -> f64 {
         let score = evaluate_cached(&dims, t, &model, nodes, cache);
-        let obj = score.time_to_train();
+        let obj = score.cost_to_target(nodes, cfg.node_cost_per_hour);
         trials.push(Trial { id: *id, phase, template: t.clone(), nodes, score });
         *id += 1;
         obj
@@ -538,7 +560,7 @@ pub fn run_funnel_cached(cfg: &FunnelCfg, cache: &SimCache) -> FunnelResult {
         });
         id += 1;
     }
-    let base_obj = scores[0].time_to_train();
+    let base_obj = scores[0].cost_to_target(cfg.phase1_nodes, cfg.node_cost_per_hour);
 
     // best value index + gain per dimension (folded in enumeration order,
     // so ties resolve exactly as the serial loop did)
@@ -546,7 +568,8 @@ pub fn run_funnel_cached(cfg: &FunnelCfg, cache: &SimCache) -> FunnelResult {
         dims.iter().map(|d| (d.baseline, 0.0f64)).collect();
     for (dev, score) in deviation.iter().zip(&scores) {
         if let Some((di, vi)) = dev {
-            let gain = base_obj - score.time_to_train();
+            let gain =
+                base_obj - score.cost_to_target(cfg.phase1_nodes, cfg.node_cost_per_hour);
             if gain > best_per_dim[*di].1 {
                 best_per_dim[*di] = (*vi, gain);
             }
@@ -658,13 +681,16 @@ pub fn run_funnel_cached(cfg: &FunnelCfg, cache: &SimCache) -> FunnelResult {
         finalists.push((t.clone(), rows));
     }
 
-    // best overall = finalist with the lowest best-node time-to-train
+    // best overall = finalist with the lowest best-node objective
     let best = finalists
         .iter()
         .min_by(|a, b| {
-            let fa = a.1.iter().map(|(_, s)| s.time_to_train()).fold(f64::INFINITY, f64::min);
-            let fb = b.1.iter().map(|(_, s)| s.time_to_train()).fold(f64::INFINITY, f64::min);
-            fa.partial_cmp(&fb).unwrap()
+            let cost = |rows: &Vec<(usize, Score)>| {
+                rows.iter()
+                    .map(|(n, s)| s.cost_to_target(*n, cfg.node_cost_per_hour))
+                    .fold(f64::INFINITY, f64::min)
+            };
+            cost(&a.1).partial_cmp(&cost(&b.1)).unwrap()
         })
         .map(|(t, _)| t.clone())
         .unwrap_or(current);
@@ -923,6 +949,29 @@ mod tests {
         assert!(s.feasible);
         assert!(s.steps_to_target.is_some());
         assert!(s.time_to_train().is_finite());
+    }
+
+    /// The cost objective: at rate 0 it IS time-to-train bit-for-bit; at
+    /// a positive rate, a slower narrow trial out-ranks a faster wide
+    /// one once the node-hours are priced.
+    #[test]
+    fn cost_to_target_flips_wide_vs_narrow() {
+        let fast_wide =
+            Score { seconds_per_step: 1.0, steps_to_target: Some(100.0), feasible: true };
+        let slow_narrow =
+            Score { seconds_per_step: 1.0, steps_to_target: Some(300.0), feasible: true };
+        // rate 0: pure wall time, exactly time_to_train
+        assert_eq!(
+            fast_wide.cost_to_target(8, 0.0).to_bits(),
+            fast_wide.time_to_train().to_bits()
+        );
+        assert!(fast_wide.cost_to_target(8, 0.0) < slow_narrow.cost_to_target(2, 0.0));
+        // priced: 100s × 8 nodes > 300s × 2 nodes
+        let rate = 36.0;
+        assert!(fast_wide.cost_to_target(8, rate) > slow_narrow.cost_to_target(2, rate));
+        // infeasible stays infinite under any rate
+        let oom = Score { seconds_per_step: 1.0, steps_to_target: None, feasible: true };
+        assert!(oom.cost_to_target(4, rate).is_infinite());
     }
 
     #[test]

@@ -16,8 +16,10 @@
 //!    [`sim`] (step-time simulator), [`convergence`] (loss scaling laws),
 //!    [`hpo`] (funneled prune-and-combine search), [`sweep`] (parallel
 //!    trial executor + memo cache), [`planner`] (auto-parallelism search),
-//!    [`resilience`] (failure-aware goodput + what-if sweeps),
-//!    [`server`] (planner-as-a-service query front-end), [`metrics`].
+//!    [`objective`] (pluggable plan ranking + compute-optimal
+//!    plan-to-target), [`resilience`] (failure-aware goodput + what-if
+//!    sweeps), [`server`] (planner-as-a-service query front-end),
+//!    [`metrics`].
 //! 3. **Real runtime** — the three-layer execution path: [`runtime`]
 //!    (PJRT artifact loading/execution), [`data`] (synthetic corpus +
 //!    parallel dataloader), [`train`] (multi-worker data-parallel trainer
@@ -35,6 +37,7 @@ pub mod hpo;
 pub mod json;
 pub mod metrics;
 pub mod model;
+pub mod objective;
 pub mod parallel;
 pub mod planner;
 pub mod resilience;

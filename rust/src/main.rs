@@ -75,6 +75,37 @@ fn app() -> App {
                     "0",
                     "per-node MTBF in hours; > 0 ranks plans by expected goodput under failures",
                 )
+                .opt(
+                    "target-loss",
+                    "0",
+                    "target validation loss; > 0 ranks plans by predicted cost to reach it",
+                )
+                .opt(
+                    "node-cost-per-hour",
+                    "0",
+                    "node-hour price for --target-loss (0 = rank by wall time to target)",
+                )
+                .flag("exact-nodes", "only plan for the full pod (skip the sub-pod ladder)")
+                .flag("no-cache", "skip the persistent SimCache under target/")
+                .flag("json", "print the machine-readable payload (same as the serve front-end)"),
+        )
+        .command(
+            Command::new(
+                "plan-to-target",
+                "compute-optimal: cheapest way to a target loss across the model zoo, \
+                 incl. progressive scale-up schedules",
+            )
+                .req("target-loss", "target validation loss")
+                .opt("models", "", "comma-separated candidate models (empty = the dense mt5 zoo)")
+                .opt("node-cost-per-hour", "0", "node-hour price (0 = rank by wall time)")
+                .opt("nodes", "8", "pod size")
+                .opt("v100-nodes", "0", "extra previous-generation DGX-1V nodes (mixed pod)")
+                .opt("batch", "768", "effective (global) batch size")
+                .opt("max-tp", "8", "max tensor-parallel degree (clamped to GPUs/node)")
+                .opt("max-pp", "8", "max pipeline-parallel degree")
+                .opt("max-sp", "4", "max sequence-parallel degree (tp*sp <= GPUs/node)")
+                .opt("max-ep", "8", "max expert-parallel degree (MoE models only)")
+                .opt("workers", "0", "sweep worker threads (0 = all cores)")
                 .flag("exact-nodes", "only plan for the full pod (skip the sub-pod ladder)")
                 .flag("no-cache", "skip the persistent SimCache under target/")
                 .flag("json", "print the machine-readable payload (same as the serve front-end)"),
@@ -144,6 +175,7 @@ fn main() {
                 "sweep" => cmd_sweep(&m),
                 "hpo" => cmd_hpo(&m),
                 "plan" => cmd_plan(&m),
+                "plan-to-target" => cmd_plan_to_target(&m),
                 "whatif" => cmd_whatif(&m),
                 "serve" => cmd_serve(&m),
                 "cache" => cmd_cache(&m),
@@ -372,9 +404,10 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
 }
 
 fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
-    use scalestudy::planner::plan;
+    use scalestudy::objective::{price_run, CostToTarget, Objective};
+    use scalestudy::planner::{plan, plan_with};
     use scalestudy::resilience::{plan_resilient, FailureModel};
-    use scalestudy::server::{plan_payload, resilient_plan_payload, PlanQuery};
+    use scalestudy::server::{cost_plan_payload, plan_payload, resilient_plan_payload, PlanQuery};
     use scalestudy::sweep::{SimCache, Sweep};
     // the serve front-end builds the identical problem through the same
     // query struct, so socket answers match this subcommand bit-for-bit
@@ -388,9 +421,71 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
         max_sp: m.get_usize("max-sp")?,
         max_ep: m.get_usize("max-ep")?,
         exact_nodes: m.flag("exact-nodes"),
-        mtbf_hours: m.get_f64("mtbf-hours")?,
+        mtbf_hours: m.get_f64_nonneg("mtbf-hours")?,
+        target_loss: m.get_f64_nonneg("target-loss")?,
+        node_cost_per_hour: m.get_f64_nonneg("node-cost-per-hour")?,
     };
+    if q.target_loss > 0.0 && q.mtbf_hours > 0.0 {
+        anyhow::bail!(
+            "--target-loss and --mtbf-hours cannot be combined — \
+             a plan ranks by one objective; run the command twice"
+        );
+    }
     let (model, cluster, workload, space) = q.problem()?;
+    if q.target_loss > 0.0 {
+        // cost-to-target path: rank by predicted cost to reach the loss
+        let ctt = CostToTarget::for_workload(q.target_loss, q.node_cost_per_hour, &workload);
+        let steps = ctt.check(&model).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let sweep = Sweep::new(m.get_usize("workers")?);
+        let persist = !m.flag("no-cache");
+        let cache = if persist { SimCache::load_default() } else { SimCache::new() };
+        let objective = Objective::CostToTarget(ctt);
+        let result = plan_with(&model, &cluster, &workload, &space, &objective, &sweep, &cache);
+        if persist {
+            if let Err(e) = cache.save_default() {
+                eprintln!("warning: could not persist SimCache: {e:#}");
+            }
+        }
+        if m.flag("json") {
+            println!(
+                "{}",
+                cost_plan_payload(&result, q.target_loss, q.node_cost_per_hour, steps).dumps()
+            );
+            return Ok(());
+        }
+        println!(
+            "cost-to-target plan: {} to loss {} on {} nodes, effective batch {}",
+            model.name,
+            q.target_loss,
+            cluster.total_nodes(),
+            workload.global_batch
+        );
+        println!("predicted steps to target: {steps:.0} (scaling-law inversion)");
+        let best = match &result.best {
+            Some(b) => b,
+            None => {
+                println!("no feasible plan — every configuration overflows HBM at this scale");
+                return Ok(());
+            }
+        };
+        let (seconds, cost) = price_run(best, steps, q.node_cost_per_hour);
+        println!("best by cost:\n  {}", best.describe());
+        if q.node_cost_per_hour > 0.0 {
+            println!(
+                "  time to target {}; cost {cost:.2} at {}/node-hour",
+                human_time(seconds), q.node_cost_per_hour
+            );
+        } else {
+            println!("  time to target {} (no node rate: cost = wall seconds)", human_time(seconds));
+        }
+        println!("\nmemory-vs-cost frontier ({} points):", result.frontier.len());
+        println!("  {:<52} {:>10} {:>14}", "plan", "s/step", "cost");
+        for p in &result.frontier {
+            let (_, c) = price_run(p, steps, q.node_cost_per_hour);
+            println!("  {:<52} {:>10.2} {:>14.2}", p.label(), p.seconds_per_step(), c);
+        }
+        return Ok(());
+    }
     if q.mtbf_hours > 0.0 {
         // failure-aware path: rank by expected goodput under failures
         let fm = FailureModel::with_mtbf(q.mtbf_hours);
@@ -528,6 +623,107 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_plan_to_target(m: &Matches) -> anyhow::Result<()> {
+    use scalestudy::server::{target_plan_payload, PlanQuery, PlanToTargetQuery};
+    use scalestudy::sweep::{SimCache, Sweep};
+    let plan_q = PlanQuery {
+        nodes: m.get_usize("nodes")?,
+        v100_nodes: m.get_usize("v100-nodes")?,
+        batch: m.get_usize("batch")?,
+        max_tp: m.get_usize("max-tp")?,
+        max_pp: m.get_usize("max-pp")?,
+        max_sp: m.get_usize("max-sp")?,
+        max_ep: m.get_usize("max-ep")?,
+        exact_nodes: m.flag("exact-nodes"),
+        target_loss: m.get_f64_nonneg("target-loss")?,
+        node_cost_per_hour: m.get_f64_nonneg("node-cost-per-hour")?,
+        ..PlanQuery::default()
+    };
+    if !(plan_q.target_loss > 0.0) {
+        anyhow::bail!("--target-loss must be > 0");
+    }
+    let models: Vec<String> = match m.get("models") {
+        "" => Vec::new(),
+        s => s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect(),
+    };
+    // the serve front-end answers `plan_to_target` through the same
+    // query struct + payload builder, so socket answers match bit-for-bit
+    let q = PlanToTargetQuery { plan: plan_q, models };
+    let sweep = Sweep::new(m.get_usize("workers")?);
+    let persist = !m.flag("no-cache");
+    let cache = if persist { SimCache::load_default() } else { SimCache::new() };
+    let result = q.result(&sweep, &cache)?;
+    if persist {
+        if let Err(e) = cache.save_default() {
+            eprintln!("warning: could not persist SimCache: {e:#}");
+        }
+    }
+    if m.flag("json") {
+        println!("{}", target_plan_payload(&result).dumps());
+        return Ok(());
+    }
+    let (_, cluster, workload, _) = q.plan.problem()?;
+    println!(
+        "compute-optimal plan to loss {} on {} nodes, effective batch {}{}",
+        result.target_loss,
+        cluster.total_nodes(),
+        workload.global_batch,
+        if result.node_cost_per_hour > 0.0 {
+            format!(", {}/node-hour", result.node_cost_per_hour)
+        } else {
+            " (no node rate: cost = wall seconds)".to_string()
+        },
+    );
+    println!("\ncandidates (cost-ranked best layout each; * = cheapest single-model plan):");
+    println!(
+        "  {:<14} {:>8} {:>12} {:>10} {:>10} {:>14}",
+        "model", "floor", "steps", "s/step", "time", "cost"
+    );
+    for (i, c) in result.candidates.iter().enumerate() {
+        let star = if result.best_single == Some(i) { "*" } else { " " };
+        let steps = c.steps.map(|s| format!("{s:.0}")).unwrap_or_else(|| "floor>".into());
+        let sps = c
+            .point
+            .as_ref()
+            .map(|p| format!("{:.2}", p.seconds_per_step()))
+            .unwrap_or_else(|| "OOM".into());
+        let time = c.seconds.map(human_time).unwrap_or_else(|| "-".into());
+        let cost = c.cost.map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".into());
+        println!("  {star}{:<13} {:>8.3} {:>12} {:>10} {:>10} {:>14}", c.model, c.floor, steps, sps, time, cost);
+    }
+    if result.phases.is_empty() {
+        println!("\nno phase schedule (no candidate covers the loss range)");
+        return Ok(());
+    }
+    println!("\nprogressive scale-up schedule ({} phase(s)):", result.phases.len());
+    for (i, p) in result.phases.iter().enumerate() {
+        println!(
+            "  phase {}: {}  loss {:.4} -> {:.4}  {:.0} steps  {}  cost {:.2}",
+            i + 1,
+            p.model,
+            p.start_loss,
+            p.end_loss,
+            p.steps,
+            human_time(p.seconds),
+            p.cost
+        );
+        println!("           {}", p.point.label());
+    }
+    println!(
+        "  total: {} cost {:.2}{}",
+        human_time(result.total_seconds),
+        result.total_cost,
+        match result.best_single.and_then(|i| result.candidates[i].cost) {
+            Some(single) if single > 0.0 => format!(
+                "  ({:.1}% of the best single-model plan)",
+                100.0 * result.total_cost / single
+            ),
+            _ => String::new(),
+        },
+    );
+    Ok(())
+}
+
 fn cmd_whatif(m: &Matches) -> anyhow::Result<()> {
     use scalestudy::resilience::{
         phase_boundaries, replan_after_failure, whatif_sweep, FailureModel, WhatIfAxis,
@@ -539,17 +735,24 @@ fn cmd_whatif(m: &Matches) -> anyhow::Result<()> {
         nodes: m.get_usize("nodes")?,
         v100_nodes: m.get_usize("v100-nodes")?,
         batch: m.get_usize("batch")?,
-        mtbf_hours: m.get_f64("mtbf-hours")?,
+        mtbf_hours: m.get_f64_nonneg("mtbf-hours")?,
         ..PlanQuery::default()
     };
+    // a NaN or negative derate factor silently disables whatever it
+    // multiplies downstream — reject it here, like the serve front-end
     let factors: Vec<f64> = match m.get("factors") {
         "" => Vec::new(),
         s => s
             .split(',')
             .map(|x| {
-                x.trim()
+                let v = x
+                    .trim()
                     .parse::<f64>()
-                    .map_err(|_| anyhow::anyhow!("bad factor '{}'", x.trim()))
+                    .map_err(|_| anyhow::anyhow!("bad factor '{}'", x.trim()))?;
+                if !v.is_finite() || v < 0.0 {
+                    anyhow::bail!("--factors: expected finite numbers >= 0, got '{}'", x.trim());
+                }
+                Ok(v)
             })
             .collect::<anyhow::Result<Vec<f64>>>()?,
     };

@@ -42,9 +42,20 @@
 //! * a returned plan always fits HBM and is never slower than the dp-only
 //!   [`TrainSetup::dp_pod`] baselines, which are exact points of the
 //!   space.
+//!
+//! **Ranking is pluggable** ([`crate::objective`]): [`plan_with`] /
+//! [`plan_exhaustive_with`] take an [`Objective`] mapping each candidate's
+//! step time to a ranking *key* — step time itself (the default,
+//! bit-identical by construction since the map is the identity), expected
+//! seconds per useful step under a failure model, or predicted cost to a
+//! target loss.  Every objective key is strictly increasing in step time
+//! with branch-constant parameters, so `key(time_lb)` is a provably
+//! optimistic key bound and the whole prune argument above carries over
+//! unchanged — the frontier simply becomes memory-vs-key Pareto.
 
 use crate::hardware::ClusterSpec;
 use crate::model::ModelCfg;
+use crate::objective::{Objective, ObjectiveCtx};
 use crate::parallel::{ParallelCfg, PipeSchedule};
 use crate::sim::{bounds_and_shape, StepTime, TrainSetup, Workload};
 use crate::sweep::{SimCache, Sweep};
@@ -128,11 +139,13 @@ impl PlanSpace {
         out
     }
 
-    /// A restriction of this space to one node count and one optimizer —
-    /// the slices failure-aware planning re-ranks, since checkpoint cost
-    /// (per-optimizer state bytes) and failure rate (node count) are the
-    /// only goodput inputs that vary across the space while step time is
-    /// monotone within a slice ([`crate::resilience::plan_resilient`]).
+    /// A restriction of this space to one node count and one optimizer.
+    /// Failure-aware planning used to re-rank these slices by hand;
+    /// that loop is now a single [`plan_with`] pass under
+    /// [`Objective::Goodput`], and the slice decomposition survives as
+    /// the independent *reference* the goodput property suite checks the
+    /// single-pass search against (checkpoint cost and failure rate are
+    /// slice constants, so the two must agree exactly).
     pub fn slice(&self, nodes: usize, opt: OptimizerKind) -> PlanSpace {
         PlanSpace { nodes: vec![nodes], optimizers: vec![opt], ..self.clone() }
     }
@@ -194,10 +207,12 @@ impl PlanPoint {
 /// Result of a planning query.
 #[derive(Debug)]
 pub struct PlanResult {
-    /// Fastest feasible plan (None when nothing fits).
+    /// Best feasible plan under the query's objective — fastest step for
+    /// the default [`Objective::StepTime`] (None when nothing fits).
     pub best: Option<PlanPoint>,
-    /// Memory-vs-time Pareto frontier over the feasible points, sorted by
-    /// ascending per-GPU memory (and therefore descending seconds/step).
+    /// Memory-vs-objective-key Pareto frontier over the feasible points,
+    /// sorted by ascending per-GPU memory with strictly descending key —
+    /// for the default step-time objective, descending seconds/step.
     pub frontier: Vec<PlanPoint>,
     /// Points actually priced through the simulator.  The branch-and-bound
     /// prune skips provably-OOM and provably-dominated subtrees, so this
@@ -344,9 +359,10 @@ pub fn enumerate_setups(
         .collect()
 }
 
-/// Running Pareto probe over priced feasible points: `(mem, sec)` pairs
-/// kept sorted by ascending memory with strictly descending seconds, so
-/// "minimum seconds among points with memory ≤ X" is one binary search.
+/// Running Pareto probe over priced feasible points: `(mem, key)` pairs
+/// (key = objective key; seconds/step under the default objective) kept
+/// sorted by ascending memory with strictly descending key, so "minimum
+/// key among points with memory ≤ X" is one binary search.
 struct FrontierProbe {
     pts: Vec<(f64, f64)>,
 }
@@ -397,10 +413,10 @@ fn wave_branches(sweep: &Sweep) -> usize {
     (4 * sweep.workers()).max(WAVE_BRANCHES_MIN)
 }
 
-/// Run a planning query with branch-and-bound pruning.  Best plan and
-/// Pareto frontier are bit-identical to [`plan_exhaustive`] (see module
-/// docs for the argument); only `evaluated`/`feasible` reflect the
-/// pruning.
+/// Run a planning query with branch-and-bound pruning under the default
+/// step-time objective.  Best plan and Pareto frontier are bit-identical
+/// to [`plan_exhaustive`] (see module docs for the argument); only
+/// `evaluated`/`feasible` reflect the pruning.
 pub fn plan(
     model: &ModelCfg,
     cluster: &ClusterSpec,
@@ -409,15 +425,46 @@ pub fn plan(
     sweep: &Sweep,
     cache: &SimCache,
 ) -> PlanResult {
+    plan_with(model, cluster, workload, space, &Objective::StepTime, sweep, cache)
+}
+
+/// Branch-and-bound planning under an explicit [`Objective`].  Best plan
+/// and frontier are bit-identical to [`plan_exhaustive_with`] for every
+/// objective: the objective key is strictly increasing in step time with
+/// branch-constant parameters, so `key(time_lb)` is a provably optimistic
+/// key bound and the dominance prune (≤ memory, strictly < key) can never
+/// veto a frontier member or a best-plan tie.  Under
+/// [`Objective::StepTime`] the key map is the identity, making this
+/// bit-identical to the pre-objective planner by construction.
+pub fn plan_with(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    objective: &Objective,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> PlanResult {
+    let ctx = objective.context(model);
     let branches = enumerate_branches(model, cluster, workload, space);
     let space_size: usize = branches.iter().map(|b| b.setups.len()).sum();
 
-    // expand in ascending-optimistic-time order so strong incumbents are
+    // Per-branch optimistic key bound.  Within a branch only the
+    // micro-batch cap varies, and no objective parameter depends on the
+    // cap, so every child shares one key map and
+    // key(min child time bound) == min over children of their key bounds.
+    let key_lb: Vec<f64> = branches
+        .iter()
+        .map(|b| match b.setups.first() {
+            Some(s) => ctx.key(s, b.time_lb),
+            None => f64::INFINITY,
+        })
+        .collect();
+
+    // expand in ascending-optimistic-key order so strong incumbents are
     // priced early and the dominance prune bites as soon as possible
     let mut order: Vec<usize> = (0..branches.len()).collect();
-    order.sort_by(|&a, &b| {
-        branches[a].time_lb.total_cmp(&branches[b].time_lb).then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| key_lb[a].total_cmp(&key_lb[b]).then(a.cmp(&b)));
 
     let mut probe = FrontierProbe::new();
     let mut priced: Vec<(usize, PlanPoint)> = Vec::new();
@@ -430,11 +477,13 @@ pub fn plan(
         let mut wave_items: Vec<(usize, &TrainSetup, f64, Option<SkeletonKey>)> = Vec::new();
         for &bi in wave {
             let b = &branches[bi];
-            if b.mem_lb > b.hbm || probe.dominates(b.mem_lb, b.time_lb) {
+            if b.mem_lb > b.hbm || probe.dominates(b.mem_lb, key_lb[bi]) {
                 continue;
             }
             for (ci, setup) in b.setups.iter().enumerate() {
-                if b.mem_lbs[ci] > b.hbm || probe.dominates(b.mem_lbs[ci], b.time_lbs[ci]) {
+                if b.mem_lbs[ci] > b.hbm
+                    || probe.dominates(b.mem_lbs[ci], ctx.key(setup, b.time_lbs[ci]))
+                {
                     continue;
                 }
                 wave_items.push((b.base_index + ci, setup, b.time_lbs[ci], b.shapes[ci]));
@@ -445,6 +494,8 @@ pub fn plan(
         }
         // batched pricing: warm each distinct surviving skeleton shape
         // once so the wave's group prices against one shared skeleton
+        // (scheduling cost keys stay the raw time bounds — they only
+        // balance the executor, never the results)
         crate::sim::warm_shapes(wave_items.iter().map(|&(_, _, _, shape)| shape));
         let costs: Vec<f64> = wave_items.iter().map(|&(_, _, cost, _)| cost).collect();
         let steps =
@@ -454,7 +505,7 @@ pub fn plan(
         evaluated += wave_items.len();
         for (&(index, setup, _, _), step) in wave_items.iter().zip(steps) {
             if step.fits {
-                probe.insert(step.mem_per_gpu, step.seconds_per_step());
+                probe.insert(step.mem_per_gpu, ctx.key(setup, step.seconds_per_step()));
             }
             priced.push((index, PlanPoint { setup: setup.clone(), step }));
         }
@@ -464,7 +515,7 @@ pub fn plan(
     // the surviving points, in enumeration order
     priced.sort_by_key(|&(i, _)| i);
     let points: Vec<PlanPoint> = priced.into_iter().map(|(_, p)| p).collect();
-    let (best, frontier, feasible) = select(points);
+    let (best, frontier, feasible) = select(points, &ctx);
     PlanResult { best, frontier, evaluated, feasible, space_size }
 }
 
@@ -479,6 +530,22 @@ pub fn plan_exhaustive(
     sweep: &Sweep,
     cache: &SimCache,
 ) -> PlanResult {
+    plan_exhaustive_with(model, cluster, workload, space, &Objective::StepTime, sweep, cache)
+}
+
+/// Exhaustive reference under an explicit [`Objective`] — every point
+/// priced, best + frontier selected by objective key; the soundness
+/// oracle for [`plan_with`]'s objective-aware pruning.
+pub fn plan_exhaustive_with(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    objective: &Objective,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> PlanResult {
+    let ctx = objective.context(model);
     // reuse the enumeration-time bounds as the scheduling cost keys
     // (computed once) and warm each distinct skeleton shape once — same
     // batched pricing as the pruned search, every point priced
@@ -501,33 +568,37 @@ pub fn plan_exhaustive(
         .map(|(setup, step)| PlanPoint { setup: setup.clone(), step: step.clone() })
         .collect();
     let evaluated = setups.len();
-    let (best, frontier, feasible) = select(points);
+    let (best, frontier, feasible) = select(points, &ctx);
     PlanResult { best, frontier, evaluated, feasible, space_size: evaluated }
 }
 
 /// Shared best-plan + frontier selection over points in enumeration
-/// order: first-seen strict improvement wins ties, so results are
-/// deterministic for any worker count and identical between the pruned
-/// and exhaustive searches.
-fn select(points: Vec<PlanPoint>) -> (Option<PlanPoint>, Vec<PlanPoint>, usize) {
-    let mut best: Option<PlanPoint> = None;
+/// order: first-seen strict improvement on the objective key wins ties,
+/// so results are deterministic for any worker count and identical
+/// between the pruned and exhaustive searches.
+fn select(
+    points: Vec<PlanPoint>,
+    ctx: &ObjectiveCtx<'_>,
+) -> (Option<PlanPoint>, Vec<PlanPoint>, usize) {
+    let mut best: Option<(PlanPoint, f64)> = None;
     let mut feasible = 0usize;
-    let mut kept: Vec<PlanPoint> = Vec::new();
+    let mut kept: Vec<(PlanPoint, f64)> = Vec::new();
     for point in points {
         if !point.step.fits {
             continue;
         }
         feasible += 1;
+        let key = ctx.key(&point.setup, point.seconds_per_step());
         let better = match &best {
-            Some(b) => point.seconds_per_step() < b.seconds_per_step(),
+            Some((_, b)) => key < *b,
             None => true,
         };
         if better {
-            best = Some(point.clone());
+            best = Some((point.clone(), key));
         }
-        kept.push(point);
+        kept.push((point, key));
     }
-    (best, pareto_frontier(kept), feasible)
+    (best.map(|(p, _)| p), pareto_frontier(kept), feasible)
 }
 
 /// Convenience: plan for a zoo model on the paper's pod with the Table-1
@@ -543,24 +614,22 @@ pub fn plan_pod(model: &ModelCfg, nodes: usize) -> PlanResult {
     )
 }
 
-/// Memory-vs-time Pareto frontier: a point survives iff no other feasible
-/// point has both lower-or-equal memory and strictly lower seconds/step.
-/// Comparisons use `f64::total_cmp`, so non-finite step times (OOM
-/// markers, degenerate bounds) order deterministically instead of
+/// Memory-vs-key Pareto frontier over `(point, objective key)` pairs: a
+/// point survives iff no other feasible point has both lower-or-equal
+/// memory and a strictly lower key (seconds/step under the default
+/// objective).  Comparisons use `f64::total_cmp`, so non-finite keys
+/// (OOM markers, degenerate bounds) order deterministically instead of
 /// panicking: NaN sorts after +∞ and can never enter the frontier
 /// (`NaN < best` is false).
-fn pareto_frontier(mut points: Vec<PlanPoint>) -> Vec<PlanPoint> {
+fn pareto_frontier(mut points: Vec<(PlanPoint, f64)>) -> Vec<PlanPoint> {
     points.sort_by(|a, b| {
-        a.step
-            .mem_per_gpu
-            .total_cmp(&b.step.mem_per_gpu)
-            .then(a.seconds_per_step().total_cmp(&b.seconds_per_step()))
+        a.0.step.mem_per_gpu.total_cmp(&b.0.step.mem_per_gpu).then(a.1.total_cmp(&b.1))
     });
     let mut out: Vec<PlanPoint> = Vec::new();
-    let mut best_seconds = f64::INFINITY;
-    for p in points {
-        if p.seconds_per_step() < best_seconds {
-            best_seconds = p.seconds_per_step();
+    let mut best_key = f64::INFINITY;
+    for (p, key) in points {
+        if key < best_key {
+            best_key = key;
             out.push(p);
         }
     }
@@ -788,12 +857,18 @@ mod tests {
             setup: setup.clone(),
             step: StepTime { compute, mem_per_gpu: mem, ..finite.clone() },
         };
-        let pts = vec![
+        let pts: Vec<(PlanPoint, f64)> = vec![
             mk(f64::NAN, 1e9),
             mk(f64::INFINITY, 5e8),
             mk(finite.compute, finite.mem_per_gpu),
             mk(f64::NAN, f64::NAN),
-        ];
+        ]
+        .into_iter()
+        .map(|p| {
+            let key = p.seconds_per_step(); // the step-time objective key
+            (p, key)
+        })
+        .collect();
         let f = pareto_frontier(pts);
         assert!(!f.is_empty());
         for p in &f {

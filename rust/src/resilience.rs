@@ -42,14 +42,19 @@
 //!
 //! Goodput is NOT a monotone transform of step time across the whole
 //! space: δ depends on the optimizer (K bytes/param) and λ on the node
-//! count.  Within a fixed (node count, optimizer) slice both are constant
-//! and `effective(s)` is strictly increasing in `s`, so the failure-aware
-//! optimum is found exactly by taking the planner's best per slice
-//! ([`crate::planner::PlanSpace::slice`]) and goodput-ranking those — a
-//! handful of sub-queries that share the [`crate::sweep::SimCache`], so
-//! repricing is nearly free.  With the failure model disabled the result
-//! embeds a plain [`crate::planner::plan`] run, bit-identical to the
-//! failure-free path by construction.
+//! count.  But a planner *branch* fixes both, and within a branch
+//! `effective(s)` is strictly increasing in `s` — exactly the contract
+//! of a planner [`crate::objective::Objective`].  `plan_resilient` is
+//! therefore a thin wrapper over
+//! [`crate::planner::plan_with`]`(…, Objective::Goodput)`: one
+//! branch-and-bound pass whose pruning, selection and frontier all rank
+//! by expected seconds per useful step.  (An earlier version re-ranked
+//! per-(node count, optimizer) slice bests by hand — that decomposition
+//! survives as the reference oracle the property suite checks the
+//! single-pass search against, via [`crate::planner::PlanSpace::slice`].)
+//! With the failure model disabled the result embeds a plain
+//! [`crate::planner::plan`] run, bit-identical to the failure-free path
+//! by construction.
 //!
 //! ## What-if sweeps
 //!
@@ -64,6 +69,7 @@
 
 use crate::hardware::{ClusterSpec, NodeGroup};
 use crate::model::ModelCfg;
+use crate::objective::Objective;
 use crate::planner::{self, PlanPoint, PlanResult, PlanSpace};
 use crate::sim::{self, TrainSetup, Workload};
 use crate::sweep::{SimCache, Sweep};
@@ -263,8 +269,10 @@ pub struct ResilientPlanResult {
     pub best: Option<ResilientPoint>,
     /// Did pricing failures change the winning plan?
     pub flipped: bool,
-    /// Every (node count, optimizer) slice best, goodput-priced, in
-    /// enumeration order — the candidates the winner was chosen from.
+    /// The goodput search's memory-vs-effective-seconds Pareto frontier
+    /// (ascending per-GPU memory, strictly descending effective seconds
+    /// per useful step) — the candidates the winner was chosen from.
+    /// Empty when the failure model is disabled.
     pub candidates: Vec<ResilientPoint>,
 }
 
@@ -276,9 +284,10 @@ fn same_plan(a: &PlanPoint, b: &PlanPoint) -> bool {
 }
 
 /// Failure-aware planning: fastest plan by **expected goodput** under
-/// `fm`.  Disabled model → the embedded `base` result is the answer and
-/// `best` mirrors `base.best` with a unit goodput.  See module docs for
-/// why the search decomposes into per-(node count, optimizer) slices.
+/// `fm` — one [`planner::plan_with`] pass under [`Objective::Goodput`]
+/// (module docs explain why the goodput key satisfies the objective
+/// contract).  Disabled model → the embedded `base` result is the answer
+/// and `best` mirrors `base.best` with a unit goodput.
 pub fn plan_resilient(
     model: &ModelCfg,
     cluster: &ClusterSpec,
@@ -296,31 +305,24 @@ pub fn plan_resilient(
         });
         return ResilientPlanResult { base, best, flipped: false, candidates: Vec::new() };
     }
-    let mut candidates: Vec<ResilientPoint> = Vec::new();
-    for n in space.node_counts(cluster) {
-        for &opt in &space.optimizers {
-            let slice = space.slice(n, opt);
-            let sub = planner::plan(model, cluster, workload, &slice, sweep, cache);
-            if let Some(point) = sub.best {
-                let goodput = fm.goodput(&point.setup, point.seconds_per_step());
-                candidates.push(ResilientPoint { point, goodput });
-            }
-        }
-    }
-    // first-seen strict improvement in enumeration order, same tie rule
-    // as the planner's own selection
-    let mut best: Option<ResilientPoint> = None;
-    for c in &candidates {
-        let better = match &best {
-            Some(b) => {
-                c.goodput.effective_seconds_per_step < b.goodput.effective_seconds_per_step
-            }
-            None => true,
-        };
-        if better {
-            best = Some(c.clone());
-        }
-    }
+    // the SimCache is shared with the base query above, so the goodput
+    // pass re-ranks memoized prices instead of re-simulating
+    let good = planner::plan_with(
+        model,
+        cluster,
+        workload,
+        space,
+        &Objective::Goodput(fm.clone()),
+        sweep,
+        cache,
+    );
+    let with_goodput = |point: PlanPoint| {
+        let goodput = fm.goodput(&point.setup, point.seconds_per_step());
+        ResilientPoint { point, goodput }
+    };
+    let best = good.best.map(with_goodput);
+    let candidates: Vec<ResilientPoint> =
+        good.frontier.into_iter().map(with_goodput).collect();
     let flipped = match (&best, &base.best) {
         (Some(b), Some(f)) => !same_plan(&b.point, f),
         _ => false,

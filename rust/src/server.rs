@@ -17,7 +17,9 @@
 //! {"id": 1, "query": "simulate", "model": "mt5-xxl", "nodes": 4, "stage": 2, "pp": 2}
 //! {"id": 2, "query": "plan", "model": "mt5-xl", "nodes": 8, "max_tp": 4}
 //! {"id": 3, "query": "hpo", "model": "mt5-base", "trials": 205, "seed": 2023}
-//! {"id": 4, "query": "stats"}
+//! {"id": 4, "query": "plan", "model": "mt5-base", "target_loss": 2.6, "node_cost_per_hour": 32}
+//! {"id": 5, "query": "plan_to_target", "target_loss": 2.4, "node_cost_per_hour": 32, "nodes": 8}
+//! {"id": 6, "query": "stats"}
 //! {"query": "shutdown"}
 //! ```
 //!
@@ -54,6 +56,12 @@
 //!   lines answer `{"ok": false, "error_kind": "overloaded",
 //!   "retry_after_ms": ...}` at the accept side without touching the
 //!   engine queue.
+//! - **Unreachable targets**: a cost-objective `plan`/`plan_to_target`
+//!   whose `target_loss` sits at or below every candidate's irreducible
+//!   loss floor answers `{"ok": false, "error_kind":
+//!   "unreachable_target", "floor": ...}` *before* any layout is priced
+//!   — checked at the dispatch side, since the shared run path only
+//!   carries plain error strings.
 //! - **Fault injection** (gated behind `--faults` /
 //!   `SCALESTUDY_FAULTS=1`): `{"query": "fault", "fault":
 //!   "worker_panic" | "delay_wave" | "drop_conn"}` injects a pool-worker
@@ -65,7 +73,8 @@
 use crate::hardware::ClusterSpec;
 use crate::hpo;
 use crate::json::Json;
-use crate::model::{by_name, ModelCfg};
+use crate::model::{by_name, mt5_zoo, ModelCfg};
+use crate::objective::{self, CostToTarget, Objective};
 use crate::parallel::{ParallelCfg, PipeSchedule};
 use crate::planner::{self, PlanSpace};
 use crate::resilience::{self, FailureModel, WhatIfAxis};
@@ -111,6 +120,18 @@ fn opt_f64(j: &Json, key: &str, default: f64) -> anyhow::Result<f64> {
         Json::Null => Ok(default),
         v => v.as_f64().ok_or_else(|| anyhow::anyhow!("'{key}' must be a number")),
     }
+}
+
+/// A number that must be finite and ≥ 0 — MTBF hours, target loss, node
+/// prices.  A NaN or negative value would silently disable the models
+/// downstream (e.g. a non-finite MTBF reads as "failures off"), masking
+/// the client's typo; reject it at the protocol edge instead.
+fn opt_f64_nonneg(j: &Json, key: &str, default: f64) -> anyhow::Result<f64> {
+    let v = opt_f64(j, key, default)?;
+    if !v.is_finite() || v < 0.0 {
+        anyhow::bail!("'{key}' must be a finite number >= 0");
+    }
+    Ok(v)
 }
 
 fn opt_str(j: &Json, key: &str, default: &str) -> anyhow::Result<String> {
@@ -220,6 +241,14 @@ pub struct PlanQuery {
     /// to [`resilient_plan_payload`].  0 (the default) is the exact
     /// failure-free path with the PR 6 payload, byte-for-byte.
     pub mtbf_hours: f64,
+    /// Target validation loss; > 0 switches the plan to the
+    /// cost-to-target objective ([`Objective::CostToTarget`]) and the
+    /// response to [`cost_plan_payload`].  Mutually exclusive with
+    /// `mtbf_hours` — a plan ranks by exactly one objective.
+    pub target_loss: f64,
+    /// Price of one node-hour for the cost objective (0 = rank by wall
+    /// time to target).
+    pub node_cost_per_hour: f64,
 }
 
 impl Default for PlanQuery {
@@ -235,6 +264,8 @@ impl Default for PlanQuery {
             max_ep: 8,
             exact_nodes: false,
             mtbf_hours: 0.0,
+            target_loss: 0.0,
+            node_cost_per_hour: 0.0,
         }
     }
 }
@@ -252,8 +283,26 @@ impl PlanQuery {
             max_sp: opt_usize(j, "max_sp", d.max_sp)?,
             max_ep: opt_usize(j, "max_ep", d.max_ep)?,
             exact_nodes: opt_bool(j, "exact_nodes", d.exact_nodes)?,
-            mtbf_hours: opt_f64(j, "mtbf_hours", d.mtbf_hours)?,
+            mtbf_hours: opt_f64_nonneg(j, "mtbf_hours", d.mtbf_hours)?,
+            target_loss: opt_f64_nonneg(j, "target_loss", d.target_loss)?,
+            node_cost_per_hour: opt_f64_nonneg(j, "node_cost_per_hour", d.node_cost_per_hour)?,
         })
+    }
+
+    /// The structured unreachable-target error for a cost-objective
+    /// plan, checked BEFORE the query is queued so the front-end can
+    /// answer with `error_kind: "unreachable_target"` (the shared run
+    /// path only carries plain error strings).  `None` when no target is
+    /// set, when the problem itself is invalid (the run path reports
+    /// that), or when the target is reachable.
+    pub fn target_unreachable(&self) -> Option<objective::UnreachableTarget> {
+        if !(self.target_loss > 0.0) {
+            return None;
+        }
+        let (model, _, workload, _) = self.problem().ok()?;
+        CostToTarget::for_workload(self.target_loss, self.node_cost_per_hour, &workload)
+            .check(&model)
+            .err()
     }
 
     /// The planner problem instance — the one shared code path.
@@ -310,6 +359,11 @@ impl WhatIfQuery {
                 })
                 .collect::<anyhow::Result<Vec<f64>>>()?,
         };
+        // a NaN or negative derate factor silently disables whatever it
+        // multiplies — reject it here like the CLI does
+        if let Some(bad) = factors.iter().find(|f| !f.is_finite() || **f < 0.0) {
+            anyhow::bail!("'factors' must be finite numbers >= 0, got {bad}");
+        }
         Ok(WhatIfQuery { plan, axis, factors })
     }
 
@@ -329,6 +383,98 @@ impl WhatIfQuery {
         );
         let bounds = resilience::phase_boundaries(&points);
         Ok(whatif_payload(axis, &points, &bounds))
+    }
+}
+
+/// A `plan_to_target` query mirroring the CLI `plan-to-target`
+/// subcommand: the plan problem (cluster, batch, search space) from the
+/// embedded [`PlanQuery`] plus a candidate model list — the zoo IS the
+/// search space, so the embedded query's `model` field is ignored.
+#[derive(Clone, Debug)]
+pub struct PlanToTargetQuery {
+    pub plan: PlanQuery,
+    /// Candidate model names (empty = the full dense mt5 zoo).
+    pub models: Vec<String>,
+}
+
+impl PlanToTargetQuery {
+    pub fn from_json(j: &Json) -> anyhow::Result<PlanToTargetQuery> {
+        let plan = PlanQuery::from_json(j)?;
+        if !(plan.target_loss > 0.0) {
+            anyhow::bail!("'target_loss' is required (> 0) for plan_to_target");
+        }
+        if plan.mtbf_hours > 0.0 {
+            anyhow::bail!("'mtbf_hours' is not supported for plan_to_target");
+        }
+        let models: Vec<String> = match j.get("models") {
+            Json::Null => Vec::new(),
+            // a comma list matches the CLI flag; an array is natural JSON
+            Json::Str(s) => s
+                .split(',')
+                .map(|m| m.trim().to_string())
+                .filter(|m| !m.is_empty())
+                .collect(),
+            v => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'models' must be an array of model names"))?
+                .iter()
+                .map(|x| {
+                    x.as_str().map(str::to_string).ok_or_else(|| {
+                        anyhow::anyhow!("'models' must be an array of model names")
+                    })
+                })
+                .collect::<anyhow::Result<Vec<String>>>()?,
+        };
+        Ok(PlanToTargetQuery { plan, models })
+    }
+
+    /// Resolve the candidate zoo (empty = the dense mt5 zoo).
+    pub fn zoo(&self) -> anyhow::Result<Vec<ModelCfg>> {
+        if self.models.is_empty() {
+            return Ok(mt5_zoo());
+        }
+        self.models
+            .iter()
+            .map(|name| {
+                by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+            })
+            .collect()
+    }
+
+    /// Zoo-wide unreachable check, run BEFORE queueing (see
+    /// [`PlanQuery::target_unreachable`] for why).
+    pub fn target_unreachable(&self) -> Option<objective::UnreachableTarget> {
+        let zoo = self.zoo().ok()?;
+        let (_, _, workload, _) = self.plan.problem().ok()?;
+        let ctt = CostToTarget::for_workload(
+            self.plan.target_loss,
+            self.plan.node_cost_per_hour,
+            &workload,
+        );
+        objective::check_zoo(&zoo, &ctt).err()
+    }
+
+    /// The raw schedule (the CLI's human-readable table needs the
+    /// struct; the payload is [`target_plan_payload`] of it).
+    pub fn result(&self, sweep: &Sweep, cache: &SimCache) -> anyhow::Result<objective::TargetPlan> {
+        let zoo = self.zoo()?;
+        let (_, cluster, workload, space) = self.plan.problem()?;
+        objective::plan_to_target(
+            &zoo,
+            &cluster,
+            &workload,
+            &space,
+            self.plan.target_loss,
+            self.plan.node_cost_per_hour,
+            sweep,
+            cache,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Run the zoo search — the one code path shared by CLI and server.
+    pub fn run(&self, sweep: &Sweep, cache: &SimCache) -> anyhow::Result<Json> {
+        Ok(target_plan_payload(&self.result(sweep, cache)?))
     }
 }
 
@@ -418,6 +564,103 @@ pub fn plan_payload(result: &planner::PlanResult) -> Json {
         ("evaluated", Json::Num(result.evaluated as f64)),
         ("feasible", Json::Num(result.feasible as f64)),
         ("space_size", Json::Num(result.space_size as f64)),
+    ])
+}
+
+/// Machine-readable cost-to-target planner payload.  Embeds the plain
+/// [`plan_payload`] under `"plan"` (best + frontier there are ranked by
+/// the cost objective), plus the objective parameters and the priced
+/// best with exact bits.
+pub fn cost_plan_payload(
+    result: &planner::PlanResult,
+    target_loss: f64,
+    node_cost_per_hour: f64,
+    steps: f64,
+) -> Json {
+    let mut fields = vec![
+        ("objective", Json::Str("cost_to_target".to_string())),
+        ("target_loss", Json::Num(target_loss)),
+        ("node_cost_per_hour", Json::Num(node_cost_per_hour)),
+        ("steps_to_target", Json::Num(steps)),
+        ("steps_to_target_bits", hex_f64(steps)),
+        ("plan", plan_payload(result)),
+    ];
+    if let Some(best) = &result.best {
+        let (seconds, cost) = objective::price_run(best, steps, node_cost_per_hour);
+        fields.push(("seconds_to_target", Json::Num(seconds)));
+        fields.push(("seconds_to_target_bits", hex_f64(seconds)));
+        fields.push(("cost_to_target", Json::Num(cost)));
+        fields.push(("cost_to_target_bits", hex_f64(cost)));
+    }
+    Json::obj(fields)
+}
+
+/// Machine-readable progressive scale-up payload
+/// ([`objective::plan_to_target`]): every zoo candidate, the cheapest
+/// single-model plan, and the phase schedule, with exact bits on every
+/// ranking float.
+pub fn target_plan_payload(r: &objective::TargetPlan) -> Json {
+    let candidates: Vec<Json> = r
+        .candidates
+        .iter()
+        .map(|c| {
+            let mut fields = vec![
+                ("model", Json::Str(c.model.clone())),
+                ("floor", Json::Num(c.floor)),
+                ("floor_bits", hex_f64(c.floor)),
+            ];
+            if let Some(steps) = c.steps {
+                fields.push(("steps", Json::Num(steps)));
+            }
+            if let Some(p) = &c.point {
+                fields.push(("plan", Json::Str(p.label())));
+                fields.push(("seconds_per_step", Json::Num(p.seconds_per_step())));
+                fields.push(("seconds_per_step_bits", hex_f64(p.seconds_per_step())));
+            }
+            if let Some(s) = c.seconds {
+                fields.push(("seconds", Json::Num(s)));
+            }
+            if let Some(cost) = c.cost {
+                fields.push(("cost", Json::Num(cost)));
+                fields.push(("cost_bits", hex_f64(cost)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let phases: Vec<Json> = r
+        .phases
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("model", Json::Str(p.model.clone())),
+                ("plan", Json::Str(p.point.label())),
+                ("start_loss", Json::Num(p.start_loss)),
+                ("end_loss", Json::Num(p.end_loss)),
+                ("steps", Json::Num(p.steps)),
+                ("seconds", Json::Num(p.seconds)),
+                ("cost", Json::Num(p.cost)),
+                ("cost_bits", hex_f64(p.cost)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("objective", Json::Str("cost_to_target".to_string())),
+        ("target_loss", Json::Num(r.target_loss)),
+        ("node_cost_per_hour", Json::Num(r.node_cost_per_hour)),
+        ("candidates", Json::Arr(candidates)),
+        (
+            "best_single",
+            match r.best_single {
+                Some(i) => Json::Str(r.candidates[i].model.clone()),
+                None => Json::Null,
+            },
+        ),
+        ("multi_phase", Json::Bool(r.is_multi_phase())),
+        ("phases", Json::Arr(phases)),
+        ("total_seconds", Json::Num(r.total_seconds)),
+        ("total_seconds_bits", hex_f64(r.total_seconds)),
+        ("total_cost", Json::Num(r.total_cost)),
+        ("total_cost_bits", hex_f64(r.total_cost)),
     ])
 }
 
@@ -719,6 +962,23 @@ impl Engine {
         self.respond(job, fields);
     }
 
+    /// The structured "target unreachable" answer (satellite of the
+    /// cost-to-target objective): the floor rides along — with exact
+    /// bits — so a client can re-aim without a round trip.
+    fn respond_unreachable(&mut self, job: &RequestJob, err: &objective::UnreachableTarget) {
+        self.respond_fail(
+            job,
+            "unreachable_target",
+            err.to_string(),
+            vec![
+                ("target_loss", Json::Num(err.target_loss)),
+                ("floor", Json::Num(err.floor)),
+                ("floor_bits", hex_f64(err.floor)),
+                ("floor_model", Json::Str(err.model.clone())),
+            ],
+        );
+    }
+
     fn respond_stats(&mut self, job: &RequestJob) {
         let sk = timeline::skeletons();
         let (clears, grows) = self.sweep.scratch_stats();
@@ -883,6 +1143,7 @@ impl Engine {
         }
         let mut sims: Vec<(RequestJob, TrainSetup, String)> = Vec::new();
         let mut plans: Vec<(RequestJob, PlanQuery, String)> = Vec::new();
+        let mut targets: Vec<(RequestJob, PlanToTargetQuery, String)> = Vec::new();
         let mut whatifs: Vec<(RequestJob, WhatIfQuery, String)> = Vec::new();
         let mut hpos: Vec<(RequestJob, HpoQuery, String)> = Vec::new();
         let mut shutdown: Option<RequestJob> = None;
@@ -901,8 +1162,31 @@ impl Engine {
                 },
                 "plan" => match PlanQuery::from_json(&job.request) {
                     Ok(q) => {
-                        let key = canonical_key(&job.request);
-                        plans.push((job, q, key));
+                        if q.target_loss > 0.0 && q.mtbf_hours > 0.0 {
+                            self.respond_err(
+                                &job,
+                                &anyhow::anyhow!(
+                                    "'target_loss' and 'mtbf_hours' cannot be combined — \
+                                     a plan ranks by one objective; run two plan queries"
+                                ),
+                            );
+                        } else if let Some(err) = q.target_unreachable() {
+                            self.respond_unreachable(&job, &err);
+                        } else {
+                            let key = canonical_key(&job.request);
+                            plans.push((job, q, key));
+                        }
+                    }
+                    Err(e) => self.respond_err(&job, &e),
+                },
+                "plan_to_target" => match PlanToTargetQuery::from_json(&job.request) {
+                    Ok(q) => {
+                        if let Some(err) = q.target_unreachable() {
+                            self.respond_unreachable(&job, &err);
+                        } else {
+                            let key = canonical_key(&job.request);
+                            targets.push((job, q, key));
+                        }
                     }
                     Err(e) => self.respond_err(&job, &e),
                 },
@@ -928,7 +1212,7 @@ impl Engine {
                     &job,
                     &anyhow::anyhow!(
                         "unknown query '{other}' (expected \
-                         simulate/plan/whatif/hpo/stats/ping/fault/shutdown)"
+                         simulate/plan/plan_to_target/whatif/hpo/stats/ping/fault/shutdown)"
                     ),
                 ),
             }
@@ -938,7 +1222,23 @@ impl Engine {
         self.run_keyed::<PlanQuery, _>(plans, |eng, q, mark| {
             let (model, cluster, workload, space) = q.problem()?;
             let _ = mark; // timing handled by caller
-            if q.mtbf_hours > 0.0 {
+            if q.target_loss > 0.0 {
+                // reachability was pre-checked at the dispatch side, so
+                // `check` only trips here on a race-free logic error
+                let ctt =
+                    CostToTarget::for_workload(q.target_loss, q.node_cost_per_hour, &workload);
+                let steps = ctt.check(&model).map_err(|e| anyhow::anyhow!("{e}"))?;
+                let result = planner::plan_with(
+                    &model,
+                    &cluster,
+                    &workload,
+                    &space,
+                    &Objective::CostToTarget(ctt),
+                    &eng.sweep,
+                    &eng.cache,
+                );
+                Ok(cost_plan_payload(&result, q.target_loss, q.node_cost_per_hour, steps))
+            } else if q.mtbf_hours > 0.0 {
                 let fm = FailureModel::with_mtbf(q.mtbf_hours);
                 let result = resilience::plan_resilient(
                     &model, &cluster, &workload, &space, &fm, &eng.sweep, &eng.cache,
@@ -949,6 +1249,9 @@ impl Engine {
                     planner::plan(&model, &cluster, &workload, &space, &eng.sweep, &eng.cache);
                 Ok(plan_payload(&result))
             }
+        });
+        self.run_keyed::<PlanToTargetQuery, _>(targets, |eng, q, _mark| {
+            q.run(&eng.sweep, &eng.cache)
         });
         self.run_keyed::<WhatIfQuery, _>(whatifs, |eng, q, _mark| q.run(&eng.sweep, &eng.cache));
         let workers = self.workers_requested;
@@ -1578,5 +1881,91 @@ mod tests {
             "the embedded failure-free plan must be byte-identical"
         );
         assert!(b.path(&["result", "best", "goodput", "goodput_fraction"]).as_f64().unwrap() < 1.0);
+    }
+
+    /// A cost-objective plan answers the cost payload (embedding the
+    /// plan payload); an unreachable target answers the structured
+    /// `unreachable_target` error BEFORE any layout is priced; the two
+    /// objectives cannot be combined; and a NaN/negative knob is a
+    /// front-end error, not a silent disable.
+    #[test]
+    fn cost_plan_and_unreachable_target() {
+        let mut eng = test_engine(2);
+        let ok_q = r#"{"id": 1, "query": "plan", "model": "mt5-small", "nodes": 2, "exact_nodes": true, "target_loss": 2.9, "node_cost_per_hour": 32}"#;
+        let (j1, r1) = job(ok_q);
+        eng.process(vec![j1]);
+        let a = Json::parse(&line(&r1)).unwrap();
+        assert_eq!(a.get("ok").as_bool(), Some(true), "{a:?}");
+        assert_eq!(a.path(&["result", "objective"]).as_str(), Some("cost_to_target"));
+        assert!(a.path(&["result", "steps_to_target"]).as_f64().unwrap() > 0.0);
+        assert!(a.path(&["result", "cost_to_target"]).as_f64().unwrap() > 0.0);
+        assert!(a.path(&["result", "plan", "best", "label"]).as_str().is_some());
+
+        let priced_before = eng.cache.misses();
+        let bad_q =
+            r#"{"id": 2, "query": "plan", "model": "mt5-small", "nodes": 2, "target_loss": 1.5}"#;
+        let (j2, r2) = job(bad_q);
+        eng.process(vec![j2]);
+        let b = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(b.get("ok").as_bool(), Some(false));
+        assert_eq!(b.get("error_kind").as_str(), Some("unreachable_target"));
+        assert!(b.get("floor").as_f64().unwrap() > 1.5);
+        assert_eq!(b.get("floor_model").as_str(), Some("mt5-small"));
+        assert_eq!(eng.cache.misses(), priced_before, "unreachable must not price layouts");
+
+        let (j3, r3) = job(
+            r#"{"id": 3, "query": "plan", "model": "mt5-small", "target_loss": 2.9, "mtbf_hours": 24}"#,
+        );
+        eng.process(vec![j3]);
+        let c = Json::parse(&line(&r3)).unwrap();
+        assert_eq!(c.get("ok").as_bool(), Some(false));
+        assert!(c.get("error").as_str().unwrap().contains("cannot be combined"), "{c:?}");
+
+        let (j4, r4) = job(r#"{"id": 4, "query": "plan", "model": "mt5-small", "mtbf_hours": -3}"#);
+        eng.process(vec![j4]);
+        let d = Json::parse(&line(&r4)).unwrap();
+        assert_eq!(d.get("ok").as_bool(), Some(false));
+        assert!(d.get("error").as_str().unwrap().contains("mtbf_hours"), "{d:?}");
+    }
+
+    /// `plan_to_target` answers candidates + a phase schedule ending at
+    /// the target, and the zoo-wide unreachable error quotes the best
+    /// floor in the candidate list.
+    #[test]
+    fn plan_to_target_answers_phases_and_candidates() {
+        let mut eng = test_engine(2);
+        let q = r#"{"id": 1, "query": "plan_to_target", "nodes": 2, "exact_nodes": true, "target_loss": 2.8, "models": "mt5-small,mt5-base"}"#;
+        let (j1, r1) = job(q);
+        eng.process(vec![j1]);
+        let a = Json::parse(&line(&r1)).unwrap();
+        assert_eq!(a.get("ok").as_bool(), Some(true), "{a:?}");
+        let result = a.get("result");
+        assert_eq!(result.get("candidates").as_arr().unwrap().len(), 2);
+        assert!(result.get("best_single").as_str().is_some());
+        let phases = result.get("phases").as_arr().unwrap();
+        assert!(!phases.is_empty());
+        assert_eq!(phases.last().unwrap().get("end_loss").as_f64(), Some(2.8));
+        assert!(result.get("total_cost").as_f64().unwrap() > 0.0);
+
+        // an array-valued model list parses the same as the comma string
+        let q_arr = r#"{"id": 2, "query": "plan_to_target", "nodes": 2, "exact_nodes": true, "target_loss": 2.8, "models": ["mt5-small", "mt5-base"]}"#;
+        let (j2, r2) = job(q_arr);
+        eng.process(vec![j2]);
+        let b = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(b.get("result").dumps(), a.get("result").dumps());
+
+        let bad = r#"{"id": 3, "query": "plan_to_target", "target_loss": 1.0, "models": "mt5-small,mt5-base"}"#;
+        let (j3, r3) = job(bad);
+        eng.process(vec![j3]);
+        let c = Json::parse(&line(&r3)).unwrap();
+        assert_eq!(c.get("error_kind").as_str(), Some("unreachable_target"));
+        assert_eq!(c.get("floor_model").as_str(), Some("mt5-base"), "{c:?}");
+
+        // target_loss is required for this query kind
+        let (j4, r4) = job(r#"{"id": 4, "query": "plan_to_target"}"#);
+        eng.process(vec![j4]);
+        let d = Json::parse(&line(&r4)).unwrap();
+        assert_eq!(d.get("ok").as_bool(), Some(false));
+        assert!(d.get("error").as_str().unwrap().contains("target_loss"), "{d:?}");
     }
 }

@@ -1,11 +1,13 @@
 //! Cross-module property tests (no artifacts required): invariants that
 //! tie the analytical models together, fuzzed via `testkit`.
 
+use scalestudy::convergence::{ConvergenceInputs, LossModel};
 use scalestudy::hardware::ClusterSpec;
 use scalestudy::hpo::{evaluate, space, Template};
 use scalestudy::json::Json;
 use scalestudy::model::{by_name, moe_zoo, mt5_zoo};
-use scalestudy::planner::{plan, plan_exhaustive, PlanSpace};
+use scalestudy::objective::{CostToTarget, Objective};
+use scalestudy::planner::{plan, plan_exhaustive, plan_exhaustive_with, plan_with, PlanSpace};
 use scalestudy::sim::{
     dp_placement, memory_lower_bound, simulate_step, step_lower_bound, TrainSetup, Workload,
 };
@@ -964,6 +966,243 @@ fn prop_zero_failure_rate_bit_identical_to_plain_planner_on_every_zoo_model() {
                     model.name
                 );
             }
+        }
+    }
+}
+
+// ------------------------------------------------------------ objective
+
+/// PR 8 acceptance, mirroring the rate-0 suite above: ranking through
+/// the explicit [`Objective::StepTime`] is **bit-identical** to the
+/// plain planner on every zoo model.  The key map is the identity, so
+/// the pruned search, the exhaustive reference and the historical
+/// `plan` entry point must agree on the winning label, the step-time
+/// bits and the full frontier.
+#[test]
+fn prop_steptime_objective_bit_identical_to_plain_planner_on_every_zoo_model() {
+    let cluster = ClusterSpec::lps_pod(4);
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    for model in mt5_zoo() {
+        let cache = SimCache::new();
+        let plain = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+        let keyed = plan_with(
+            &model, &cluster, &workload, &space, &Objective::StepTime, &sweep, &cache,
+        );
+        let exact = plan_exhaustive_with(
+            &model, &cluster, &workload, &space, &Objective::StepTime, &sweep, &cache,
+        );
+        for (how, r) in [("plan_with", &keyed), ("plan_exhaustive_with", &exact)] {
+            let tag = format!("{} via {how}", model.name);
+            assert_eq!(plain.space_size, r.space_size, "{tag}: space size");
+            match (&plain.best, &r.best) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.label(), b.label(), "{tag}: best label diverged");
+                    assert_eq!(
+                        a.seconds_per_step().to_bits(),
+                        b.seconds_per_step().to_bits(),
+                        "{tag}: best step-time bits diverged"
+                    );
+                    assert_eq!(
+                        a.step.mem_per_gpu.to_bits(),
+                        b.step.mem_per_gpu.to_bits(),
+                        "{tag}: best memory bits diverged"
+                    );
+                }
+                (None, None) => {}
+                other => panic!("{tag}: best presence diverged: {other:?}"),
+            }
+            assert_eq!(plain.frontier.len(), r.frontier.len(), "{tag}: frontier size");
+            for (a, b) in plain.frontier.iter().zip(&r.frontier) {
+                assert_eq!(a.label(), b.label(), "{tag}: frontier label diverged");
+                assert_eq!(
+                    a.seconds_per_step().to_bits(),
+                    b.seconds_per_step().to_bits(),
+                    "{tag}: frontier bits diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Tentpole soundness property: the objective-aware bound `key(time_lb)`
+/// must never prune a winner under [`Objective::CostToTarget`] —
+/// branch-and-bound stays bit-identical to the exhaustive sweep for
+/// dense and MoE models, with and without a node price (rate 0
+/// degenerates the key to wall time × predicted steps).
+#[test]
+fn prop_cost_objective_bnb_bit_identical_to_exhaustive() {
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    for name in ["mt5-small", "mt5-base", "mt5-xl", "mt5-base-moe32"] {
+        let model = by_name(name).unwrap();
+        for nodes in [2usize, 4] {
+            let cluster = ClusterSpec::lps_pod(nodes);
+            let cache = SimCache::new();
+            for rate in [0.0, 30.0] {
+                let ctt = CostToTarget::for_workload(2.6, rate, &workload);
+                assert!(
+                    ctt.steps_for(&model).is_some(),
+                    "{name}: target loss 2.6 must be reachable"
+                );
+                let obj = Objective::CostToTarget(ctt);
+                let bnb = plan_with(&model, &cluster, &workload, &space, &obj, &sweep, &cache);
+                let exact =
+                    plan_exhaustive_with(&model, &cluster, &workload, &space, &obj, &sweep, &cache);
+                let tag = format!("{name} {nodes}n rate={rate}");
+                assert_eq!(bnb.space_size, exact.space_size, "{tag}: space size");
+                assert!(bnb.evaluated <= bnb.space_size, "{tag}: evaluated > space");
+                match (&bnb.best, &exact.best) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.label(), b.label(), "{tag}: best label diverged");
+                        assert_eq!(
+                            a.seconds_per_step().to_bits(),
+                            b.seconds_per_step().to_bits(),
+                            "{tag}: best step-time bits diverged"
+                        );
+                        assert_eq!(
+                            a.step.mem_per_gpu.to_bits(),
+                            b.step.mem_per_gpu.to_bits(),
+                            "{tag}: best memory bits diverged"
+                        );
+                    }
+                    (None, None) => {}
+                    other => panic!("{tag}: best presence diverged: {other:?}"),
+                }
+                assert_eq!(bnb.frontier.len(), exact.frontier.len(), "{tag}: frontier size");
+                for (a, b) in bnb.frontier.iter().zip(&exact.frontier) {
+                    assert_eq!(a.label(), b.label(), "{tag}: frontier label diverged");
+                    assert_eq!(
+                        a.seconds_per_step().to_bits(),
+                        b.seconds_per_step().to_bits(),
+                        "{tag}: frontier bits diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The slice decomposition that failure-aware planning used to run by
+/// hand is the independent reference for the single-pass
+/// [`Objective::Goodput`] search: checkpoint cost and failure rate are
+/// constant inside a (node count, optimizer) slice, so each slice's
+/// min-step-time point re-ranked by expected goodput must name the same
+/// winner as the one-pass objective search, bit for bit.
+#[test]
+fn prop_goodput_single_pass_matches_slice_reference() {
+    use scalestudy::resilience::FailureModel;
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let cluster = ClusterSpec::lps_pod(4);
+    for name in ["mt5-base", "mt5-xl"] {
+        let model = by_name(name).unwrap();
+        let cache = SimCache::new();
+        let fm = FailureModel::with_mtbf(6.0);
+        let full = plan_with(
+            &model, &cluster, &workload, &space,
+            &Objective::Goodput(fm.clone()), &sweep, &cache,
+        );
+        let mut reference: Option<(f64, scalestudy::planner::PlanPoint)> = None;
+        for &n in &space.nodes {
+            for &opt in &space.optimizers {
+                let sl = space.slice(n, opt);
+                let r = plan(&model, &cluster, &workload, &sl, &sweep, &cache);
+                if let Some(p) = r.best {
+                    let eff =
+                        fm.goodput(&p.setup, p.seconds_per_step()).effective_seconds_per_step;
+                    if reference.as_ref().map_or(true, |(e, _)| eff < *e) {
+                        reference = Some((eff, p));
+                    }
+                }
+            }
+        }
+        match (&full.best, &reference) {
+            (Some(a), Some((eff, b))) => {
+                assert_eq!(a.label(), b.label(), "{name}: goodput winner diverged from slices");
+                assert_eq!(
+                    a.seconds_per_step().to_bits(),
+                    b.seconds_per_step().to_bits(),
+                    "{name}: winner step-time bits diverged"
+                );
+                let full_eff =
+                    fm.goodput(&a.setup, a.seconds_per_step()).effective_seconds_per_step;
+                assert_eq!(
+                    full_eff.to_bits(),
+                    eff.to_bits(),
+                    "{name}: effective step time diverged from slice reference"
+                );
+            }
+            (None, None) => {}
+            (a, b) => panic!(
+                "{name}: feasibility diverged: single-pass={} slices={}",
+                a.is_some(),
+                b.is_some()
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------- convergence
+
+/// `loss_at` is strictly decreasing in steps for every dense and MoE
+/// zoo model, and never crosses the irreducible floor — the premises
+/// behind pricing a plan by steps-to-target.
+#[test]
+fn prop_loss_at_strictly_decreasing_across_zoos() {
+    let inp = ConvergenceInputs::default();
+    for model in mt5_zoo().into_iter().chain(moe_zoo()) {
+        let lm = LossModel::for_model(&model);
+        let mut prev = f64::INFINITY;
+        for steps in [0.0, 10.0, 1e3, 1e4, 1e5, 1e6, 1e7] {
+            let l = lm.loss_at(&inp, steps);
+            assert!(
+                l < prev,
+                "{}: loss must strictly fall: {l} at {steps} steps after {prev}",
+                model.name
+            );
+            assert!(l > lm.l_inf, "{}: loss crossed the floor at {steps} steps", model.name);
+            prev = l;
+        }
+    }
+}
+
+/// `steps_to_loss` inverts `loss_at` (closed form, so round trips hold
+/// to float precision) across the dense and MoE zoos — the quantity
+/// [`Objective::CostToTarget`] prices.  Default inputs keep warmup at
+/// 1000 steps: the short-warmup penalty applies only to `loss_at`, so a
+/// sub-50-step warmup would (correctly) break the round trip.
+#[test]
+fn prop_steps_to_loss_round_trips_loss_at_across_zoos() {
+    let inp = ConvergenceInputs::default();
+    for model in mt5_zoo().into_iter().chain(moe_zoo()) {
+        let lm = LossModel::for_model(&model);
+        for steps in [500.0, 5e3, 5e4, 5e5] {
+            let l = lm.loss_at(&inp, steps);
+            let back = lm
+                .steps_to_loss(&inp, l)
+                .unwrap_or_else(|| panic!("{}: loss {l} came back unreachable", model.name));
+            assert!(
+                (back - steps).abs() <= 1e-6 * steps,
+                "{}: {steps} steps -> loss {l} -> {back} steps",
+                model.name
+            );
+        }
+        // and the other direction, at targets above every zoo floor
+        for target in [2.6, 2.9, 3.0] {
+            let steps = lm.steps_to_loss(&inp, target).unwrap_or_else(|| {
+                panic!("{}: target {target} must clear floor {}", model.name, lm.l_inf)
+            });
+            assert!(steps > 0.0, "{}: target {target} cannot be free", model.name);
+            let l = lm.loss_at(&inp, steps);
+            assert!(
+                (l - target).abs() <= 1e-9 * target,
+                "{}: target {target} -> {steps} steps -> loss {l}",
+                model.name
+            );
         }
     }
 }
