@@ -1,0 +1,219 @@
+//! Bench E10 — incremental cross-query planning: the what-if ladder as
+//! ONE fused, incumbent-seeded `plan_batch` vs the pre-fusion per-rung
+//! cold replans, a warm SimCache repeat of the same ladder, and the
+//! persistent [`PlanCache`] answering a repeat `plan` query without
+//! pricing a single layout.  Every timed variant is asserted
+//! bit-identical to the cold reference before its wall time counts —
+//! the speedups are only interesting because the answers cannot move.
+//! Regression floors live in `rust/benches/baselines/BENCH_whatif.json`.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::hardware::ClusterSpec;
+use scalestudy::json::Json;
+use scalestudy::model::by_name;
+use scalestudy::objective::Objective;
+use scalestudy::plancache::PlanCache;
+use scalestudy::planner::{plan_cached, plan_with_seed, PlanSpace};
+use scalestudy::resilience::{derate_cluster, whatif_sweep, FailureModel, WhatIfAxis};
+use scalestudy::sim::Workload;
+use scalestudy::sweep::{SimCache, Sweep};
+use std::time::Instant;
+
+/// Wall seconds of one call plus its result.
+fn wall<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Seconds per call for `f` over `n` calls, timed directly (the floor
+/// comparison wants one stable scalar, not a distribution).
+fn time_per_call<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
+fn main() {
+    let mut b = Bench::new("whatif");
+    // perf-gate failures are DEFERRED until after b.finish() so a tripped
+    // gate still writes the BENCH_whatif.json artifact whose numbers
+    // explain it (the CI upload step runs with `always()`)
+    let mut gate_failures: Vec<String> = Vec::new();
+    let fast = std::env::var("SCALESTUDY_BENCH_FAST").is_ok();
+
+    let model = by_name("mt5-xl").unwrap();
+    let cluster = ClusterSpec::lps_pod(2);
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let fm = FailureModel::disabled();
+    let factors = [1.0, 0.7, 0.5, 0.35, 0.25, 0.15];
+
+    // ---- cold fused ladder: rung 0 runs alone, its winner seeds rungs
+    // 1..n, and those run as ONE plan_batch of shared pricing waves
+    let cache = SimCache::new();
+    let batches0 = sweep.pool_batches();
+    let (t_fused, pts) = wall(|| {
+        whatif_sweep(
+            &model, &cluster, &workload, &space, WhatIfAxis::Nic, &factors, &fm, &sweep, &cache,
+        )
+    });
+    let fused_batches = sweep.pool_batches() - batches0;
+    let fused_priced = cache.misses();
+    assert_eq!(pts.len(), factors.len());
+    assert!(pts.iter().all(|p| !p.label.is_empty()), "every rung must be feasible");
+
+    // ---- reference: per-rung unseeded replans (the pre-fusion cost), on
+    // a separate fresh SimCache so nothing carries across the two sides
+    let cold_cache = SimCache::new();
+    let (t_per_rung, rung_results) = wall(|| {
+        factors
+            .iter()
+            .map(|&f| {
+                let c = derate_cluster(&cluster, f, 1.0);
+                plan_with_seed(
+                    &model, &c, &workload, &space, &Objective::StepTime, None, &sweep, &cold_cache,
+                )
+            })
+            .collect::<Vec<_>>()
+    });
+    // the fused + incumbent-seeded ladder prices bit-identically to the
+    // cold per-rung reference (the tentpole's acceptance, re-checked here
+    // on the exact shapes the speedup claim is made for)
+    for (p, r) in pts.iter().zip(&rung_results) {
+        let best = r.best.as_ref().expect("cold rung feasible");
+        assert_eq!(p.label, best.label(), "fused ladder winner diverged");
+        assert_eq!(
+            p.seconds_per_step.to_bits(),
+            best.seconds_per_step().to_bits(),
+            "fused ladder step-time bits diverged"
+        );
+    }
+
+    // ---- warm repeat of the same ladder: every pricing is a SimCache hit
+    let reps = if fast { 2usize } else { 4 };
+    let misses_before_warm = cache.misses();
+    let (t_warm_total, warm_pts) = wall(|| {
+        let mut last = Vec::new();
+        for _ in 0..reps {
+            last = whatif_sweep(
+                &model, &cluster, &workload, &space, WhatIfAxis::Nic, &factors, &fm, &sweep,
+                &cache,
+            );
+        }
+        last
+    });
+    let t_warm = t_warm_total / reps as f64;
+    assert_eq!(cache.misses(), misses_before_warm, "warm ladder must not price a new layout");
+    for (p, w) in pts.iter().zip(&warm_pts) {
+        assert_eq!(p.label, w.label);
+        assert_eq!(p.seconds_per_step.to_bits(), w.seconds_per_step.to_bits());
+    }
+    let warm_whatif_speedup = t_fused / t_warm;
+    let seeded_ladder_speedup = t_per_rung / t_fused;
+
+    let mut lad = Table::new(
+        "what-if ladder (mt5-xl, 2 nodes, nic axis, 6 rungs)",
+        &["wall s", "speedup vs per-rung"],
+    );
+    lad.row("cold per-rung unseeded", vec![t_per_rung, 1.0]);
+    lad.row("cold fused + seeded", vec![t_fused, t_per_rung / t_fused]);
+    lad.row("warm repeat (SimCache hits)", vec![t_warm, t_per_rung / t_warm]);
+    lad.note("all three variants price bit-identically — labels and step-time bits compared per rung");
+    b.table(lad);
+    b.metric("warm_whatif_speedup_x", warm_whatif_speedup);
+    b.metric("seeded_ladder_speedup_x", seeded_ladder_speedup);
+    b.metric("fused_ladder_priced_points", fused_priced as f64);
+    b.metric("fused_wave_pool_batches", fused_batches as f64);
+    if fused_batches > 0 {
+        // shared-wave occupancy: distinct layouts priced per pool batch —
+        // fusing the rungs keeps this high where per-rung tail waves
+        // would drain the pool between queries
+        b.metric("fused_points_per_batch", fused_priced as f64 / fused_batches as f64);
+    }
+
+    // ---- persistent PlanCache: a warm repeat `plan` query is a lookup
+    // that prices zero layouts and rebuilds the winner bit-exactly
+    let pmodel = by_name("mt5-large").unwrap();
+    let pcluster = ClusterSpec::lps_pod(2);
+    let plan_sim = SimCache::new();
+    let plans = PlanCache::new();
+    let (t_cold_plan, cold_plan) = wall(|| {
+        plan_cached(
+            &pmodel, &pcluster, &workload, &space, &Objective::StepTime, None, &sweep, &plan_sim,
+            &plans,
+        )
+    });
+    assert_eq!((plans.hits(), plans.misses()), (0, 1), "first query must miss and cache");
+    let warm_sim = SimCache::new();
+    let warm_plan = plan_cached(
+        &pmodel, &pcluster, &workload, &space, &Objective::StepTime, None, &sweep, &warm_sim,
+        &plans,
+    );
+    assert_eq!(warm_sim.misses(), 0, "warm plan query must not price a layout");
+    let (cb, wb) = (cold_plan.best.as_ref().unwrap(), warm_plan.best.as_ref().unwrap());
+    assert_eq!(cb.label(), wb.label());
+    assert_eq!(cb.seconds_per_step().to_bits(), wb.seconds_per_step().to_bits());
+    assert_eq!(cold_plan.frontier.len(), warm_plan.frontier.len());
+    let plan_reps = if fast { 16usize } else { 64 };
+    let t_warm_plan = time_per_call(plan_reps, || {
+        let r = plan_cached(
+            &pmodel, &pcluster, &workload, &space, &Objective::StepTime, None, &sweep, &warm_sim,
+            &plans,
+        );
+        std::hint::black_box(r.best.is_some());
+    });
+    let warm_plan_speedup = t_cold_plan / t_warm_plan;
+    let mut pt = Table::new(
+        "repeat plan query (mt5-large, 2 nodes, default space)",
+        &["wall s", "speedup"],
+    );
+    pt.row("cold search (PlanCache miss)", vec![t_cold_plan, 1.0]);
+    pt.row("warm lookup (PlanCache hit)", vec![t_warm_plan, warm_plan_speedup]);
+    pt.note("warm answers materialize from cached coordinates + stored step bits — bit-identical");
+    b.table(pt);
+    b.metric("warm_plan_speedup_x", warm_plan_speedup);
+    b.metric("warm_plan_hit_rate", plans.hit_rate());
+    b.metric("cold_plan_wall_s", t_cold_plan);
+
+    // ---- regression smoke (CI satellite): the measured speedups must not
+    // fall below half the committed floors (the same generous noise guard
+    // band BENCH_timeline.json uses — both sides of each ratio are
+    // measured in the same run, so only a genuine regression trips it).
+    // In fast mode (CI) a missing baseline is a hard error — the gate
+    // must not silently self-disable.
+    let baseline = std::path::Path::new("rust/benches/baselines/BENCH_whatif.json");
+    if !baseline.exists() && fast {
+        gate_failures.push(format!(
+            "regression baseline {} not found — run the bench from the repo root",
+            baseline.display()
+        ));
+    }
+    if baseline.exists() {
+        let base = Json::parse_file(baseline).expect("committed baseline parses");
+        for (name, measured) in [
+            ("warm_whatif_speedup_x", warm_whatif_speedup),
+            ("warm_plan_speedup_x", warm_plan_speedup),
+        ] {
+            let floor = base.get("floors").get(name).as_f64().expect("baseline floor");
+            if measured < floor / 2.0 {
+                gate_failures.push(format!(
+                    "whatif regression: {name} {measured:.2}x fell below half the \
+                     committed floor ({floor:.1}x)"
+                ));
+            }
+            b.metric(&format!("floor_{name}"), floor);
+        }
+    }
+
+    // the artifact is written FIRST, then the deferred perf gates fire
+    b.finish();
+    assert!(
+        gate_failures.is_empty(),
+        "whatif perf gates tripped:\n{}",
+        gate_failures.join("\n")
+    );
+}

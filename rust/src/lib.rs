@@ -16,6 +16,7 @@
 //!    [`sim`] (step-time simulator), [`convergence`] (loss scaling laws),
 //!    [`hpo`] (funneled prune-and-combine search), [`sweep`] (parallel
 //!    trial executor + memo cache), [`planner`] (auto-parallelism search),
+//!    [`plancache`] (persistent cross-query plan-result cache),
 //!    [`objective`] (pluggable plan ranking + compute-optimal
 //!    plan-to-target), [`resilience`] (failure-aware goodput + what-if
 //!    sweeps), [`server`] (planner-as-a-service query front-end),
@@ -39,6 +40,7 @@ pub mod metrics;
 pub mod model;
 pub mod objective;
 pub mod parallel;
+pub mod plancache;
 pub mod planner;
 pub mod resilience;
 pub mod runconfig;

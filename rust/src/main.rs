@@ -137,9 +137,10 @@ fn app() -> App {
                 .flag("no-cache", "skip the persistent SimCache under target/"),
         )
         .command(
-            Command::new("cache", "inspect, bound, and merge the persistent SimCache")
-                .opt("merge", "", "merge another cache file into the default cache")
-                .flag("clear", "delete the default cache file"),
+            Command::new("cache", "inspect, bound, and merge the persistent SimCache and PlanCache")
+                .opt("merge", "", "merge another SimCache file into the default cache")
+                .opt("merge-plans", "", "merge another PlanCache file into the default plan cache")
+                .flag("clear", "delete both default cache files (SimCache + PlanCache)"),
         )
         .command(
             Command::new("simulate", "seconds/step for one configuration")
@@ -403,12 +404,47 @@ fn cmd_train(m: &Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Load (or bypass) both persistent planner caches behind one
+/// `--no-cache` flag: the SimCache (priced layouts) and the PlanCache
+/// (finished search results).  With `no_cache` set, neither file under
+/// `target/` is read, and the caller's `persist` gate (the returned
+/// bool) skips both saves — `--no-cache` runs are fully cold and leave
+/// no trace on disk.
+fn plan_caches(
+    no_cache: bool,
+) -> (bool, scalestudy::sweep::SimCache, scalestudy::plancache::PlanCache) {
+    use scalestudy::plancache::PlanCache;
+    use scalestudy::sweep::SimCache;
+    if no_cache {
+        (false, SimCache::new(), PlanCache::new())
+    } else {
+        (true, SimCache::load_default(), PlanCache::load_default())
+    }
+}
+
+/// Persist both planner caches (no-op when `--no-cache` was given).
+fn save_plan_caches(
+    persist: bool,
+    cache: &scalestudy::sweep::SimCache,
+    plans: &scalestudy::plancache::PlanCache,
+) {
+    if !persist {
+        return;
+    }
+    if let Err(e) = cache.save_default() {
+        eprintln!("warning: could not persist SimCache: {e:#}");
+    }
+    if let Err(e) = plans.save_default() {
+        eprintln!("warning: could not persist PlanCache: {e:#}");
+    }
+}
+
 fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     use scalestudy::objective::{price_run, CostToTarget, Objective};
-    use scalestudy::planner::{plan, plan_with};
-    use scalestudy::resilience::{plan_resilient, FailureModel};
+    use scalestudy::planner::plan_cached;
+    use scalestudy::resilience::{plan_resilient_cached, FailureModel};
     use scalestudy::server::{cost_plan_payload, plan_payload, resilient_plan_payload, PlanQuery};
-    use scalestudy::sweep::{SimCache, Sweep};
+    use scalestudy::sweep::Sweep;
     // the serve front-end builds the identical problem through the same
     // query struct, so socket answers match this subcommand bit-for-bit
     let q = PlanQuery {
@@ -437,15 +473,12 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
         let ctt = CostToTarget::for_workload(q.target_loss, q.node_cost_per_hour, &workload);
         let steps = ctt.check(&model).map_err(|e| anyhow::anyhow!("{e}"))?;
         let sweep = Sweep::new(m.get_usize("workers")?);
-        let persist = !m.flag("no-cache");
-        let cache = if persist { SimCache::load_default() } else { SimCache::new() };
+        let (persist, cache, plans) = plan_caches(m.flag("no-cache"));
         let objective = Objective::CostToTarget(ctt);
-        let result = plan_with(&model, &cluster, &workload, &space, &objective, &sweep, &cache);
-        if persist {
-            if let Err(e) = cache.save_default() {
-                eprintln!("warning: could not persist SimCache: {e:#}");
-            }
-        }
+        let result = plan_cached(
+            &model, &cluster, &workload, &space, &objective, None, &sweep, &cache, &plans,
+        );
+        save_plan_caches(persist, &cache, &plans);
         if m.flag("json") {
             println!(
                 "{}",
@@ -490,14 +523,11 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
         // failure-aware path: rank by expected goodput under failures
         let fm = FailureModel::with_mtbf(q.mtbf_hours);
         let sweep = Sweep::new(m.get_usize("workers")?);
-        let persist = !m.flag("no-cache");
-        let cache = if persist { SimCache::load_default() } else { SimCache::new() };
-        let result = plan_resilient(&model, &cluster, &workload, &space, &fm, &sweep, &cache);
-        if persist {
-            if let Err(e) = cache.save_default() {
-                eprintln!("warning: could not persist SimCache: {e:#}");
-            }
-        }
+        let (persist, cache, plans) = plan_caches(m.flag("no-cache"));
+        let result = plan_resilient_cached(
+            &model, &cluster, &workload, &space, &fm, &sweep, &cache, &plans,
+        );
+        save_plan_caches(persist, &cache, &plans);
         if m.flag("json") {
             println!("{}", resilient_plan_payload(&result).dumps());
             return Ok(());
@@ -551,18 +581,16 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     }
     let v100_nodes = q.v100_nodes;
     let sweep = Sweep::new(m.get_usize("workers")?);
-    let persist = !m.flag("no-cache");
-    let cache = if persist { SimCache::load_default() } else { SimCache::new() };
+    let (persist, cache, plans) = plan_caches(m.flag("no-cache"));
     let warm_entries = cache.len();
+    let warm_plans = plans.len();
     let t0 = std::time::Instant::now();
-    let result = plan(&model, &cluster, &workload, &space, &sweep, &cache);
+    let result = plan_cached(
+        &model, &cluster, &workload, &space, &Objective::StepTime, None, &sweep, &cache, &plans,
+    );
     let wall = t0.elapsed().as_secs_f64();
     if m.flag("json") {
-        if persist {
-            if let Err(e) = cache.save_default() {
-                eprintln!("warning: could not persist SimCache: {e:#}");
-            }
-        }
+        save_plan_caches(persist, &cache, &plans);
         println!("{}", plan_payload(&result).dumps());
         return Ok(());
     }
@@ -591,17 +619,18 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
         sweep.workers(),
     );
     println!(
-        "SimCache: {:.0}% hit rate ({} hits / {} misses; {} entries loaded from disk)\n",
+        "SimCache: {:.0}% hit rate ({} hits / {} misses; {} entries loaded from disk)",
         100.0 * cache.hit_rate(),
         cache.hits(),
         cache.misses(),
         warm_entries,
     );
-    if persist {
-        if let Err(e) = cache.save_default() {
-            eprintln!("warning: could not persist SimCache: {e:#}");
-        }
-    }
+    println!(
+        "PlanCache: {} ({} entries loaded from disk)\n",
+        if plans.hits() > 0 { "warm hit — answered without pricing a layout" } else { "miss — search ran, result cached" },
+        warm_plans,
+    );
+    save_plan_caches(persist, &cache, &plans);
     let best = match &result.best {
         Some(best) => best,
         None => {
@@ -871,20 +900,38 @@ fn cmd_serve(m: &Matches) -> anyhow::Result<()> {
 }
 
 fn cmd_cache(m: &Matches) -> anyhow::Result<()> {
+    use scalestudy::plancache::PlanCache;
     use scalestudy::sweep::SimCache;
     let path = SimCache::default_path();
+    let plan_path = PlanCache::default_path();
     if m.flag("clear") {
-        match std::fs::remove_file(&path) {
-            Ok(()) => println!("removed {}", path.display()),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                println!("nothing to clear at {}", path.display())
+        for p in [&path, &plan_path] {
+            match std::fs::remove_file(p) {
+                Ok(()) => println!("removed {}", p.display()),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    println!("nothing to clear at {}", p.display())
+                }
+                Err(e) => return Err(anyhow::anyhow!("removing {}: {e}", p.display())),
             }
-            Err(e) => return Err(anyhow::anyhow!("removing {}: {e}", path.display())),
         }
         return Ok(());
     }
     let cache = SimCache::load_default();
     println!("{} entries at {}", cache.len(), path.display());
+    let plans = PlanCache::load_default();
+    // PlanCache hit/miss counters are process-lifetime (freshly zero
+    // here, like the skeleton counters); the serve front-end's `stats`
+    // query reports the long-lived numbers
+    println!(
+        "plan cache: {} entries at {} ({} hits / {} misses / {} evictions, \
+         resident weight {})",
+        plans.len(),
+        plan_path.display(),
+        plans.hits(),
+        plans.misses(),
+        plans.evictions(),
+        plans.resident_weight()
+    );
     // skeleton-cache counters ride along so warm-pool claims are
     // inspectable (always zero in a fresh one-shot process; the serve
     // front-end's `stats` query reports the long-lived numbers)
@@ -915,6 +962,24 @@ fn cmd_cache(m: &Matches) -> anyhow::Result<()> {
         );
         cache.save_default()?;
         println!("saved {}", path.display());
+    }
+    let other_plans_path = m.get("merge-plans");
+    if !other_plans_path.is_empty() {
+        let other = PlanCache::load(std::path::Path::new(other_plans_path));
+        if other.is_empty() {
+            println!(
+                "{other_plans_path}: no usable entries (missing, corrupt, or an older schema — \
+                 the newest schema wins a merge)"
+            );
+        }
+        let added = plans.merge(&other);
+        println!(
+            "merged {added} of {} plan entries from {other_plans_path}; {} entries now resident",
+            other.len(),
+            plans.len()
+        );
+        plans.save_default()?;
+        println!("saved {}", plan_path.display());
     }
     Ok(())
 }
@@ -1039,6 +1104,89 @@ fn cmd_report(m: &Matches) -> anyhow::Result<()> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `plan --no-cache` must bypass the PlanCache exactly like the
+    /// SimCache: nothing read from disk, nothing written back — a
+    /// `--no-cache` run is fully cold and leaves no trace, even when
+    /// populated cache files exist.  (Single test in this binary on
+    /// purpose: it redirects both cache paths through the process-global
+    /// environment.)
+    #[test]
+    fn no_cache_bypasses_both_persistent_caches() {
+        use scalestudy::hardware::ClusterSpec;
+        use scalestudy::objective::Objective;
+        use scalestudy::planner::{self, PlanSpace};
+        use scalestudy::sim::Workload;
+        use scalestudy::sweep::Sweep;
+        let dir = std::env::temp_dir().join(format!("scalestudy-nocache-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sim_file = dir.join("simcache.json");
+        let plan_file = dir.join("plancache.json");
+        std::env::set_var("SCALESTUDY_SIMCACHE", &sim_file);
+        std::env::set_var("SCALESTUDY_PLANCACHE", &plan_file);
+
+        // --no-cache: loads nothing, and the persist gate skips the save
+        let (persist, cache, plans) = plan_caches(true);
+        assert!(!persist, "--no-cache must disable persistence");
+        assert!(cache.is_empty() && plans.is_empty());
+        save_plan_caches(persist, &cache, &plans);
+        assert!(!sim_file.exists(), "--no-cache must not write the SimCache");
+        assert!(!plan_file.exists(), "--no-cache must not write the PlanCache");
+
+        // a persist run populates and writes both caches
+        let model = by_name("mt5-small").unwrap();
+        let cluster = ClusterSpec::lps_pod(1);
+        let workload = Workload::table1();
+        let space = PlanSpace {
+            nodes: vec![1],
+            max_tp: 2,
+            max_pp: 1,
+            max_sp: 1,
+            max_ep: 1,
+            ..PlanSpace::default()
+        };
+        let sweep = Sweep::serial();
+        let (persist, cache, plans) = plan_caches(false);
+        assert!(persist);
+        let cold = planner::plan_cached(
+            &model, &cluster, &workload, &space, &Objective::StepTime, None, &sweep, &cache,
+            &plans,
+        );
+        assert_eq!((plans.hits(), plans.misses(), plans.len()), (0, 1, 1));
+        save_plan_caches(persist, &cache, &plans);
+        assert!(sim_file.exists() && plan_file.exists());
+
+        // --no-cache still ignores the now-populated files...
+        let (_, cache2, plans2) = plan_caches(true);
+        assert!(cache2.is_empty(), "--no-cache must not read the SimCache file");
+        assert!(plans2.is_empty(), "--no-cache must not read the PlanCache file");
+
+        // ...while a warm persist run answers the repeat plan from the
+        // PlanCache without pricing a single layout, bit-identically
+        let (_, cache3, plans3) = plan_caches(false);
+        assert_eq!(plans3.len(), 1);
+        let warm = planner::plan_cached(
+            &model, &cluster, &workload, &space, &Objective::StepTime, None, &sweep, &cache3,
+            &plans3,
+        );
+        assert_eq!((plans3.hits(), plans3.misses()), (1, 0));
+        assert_eq!(cache3.misses(), 0, "a plan-cache hit must not price layouts");
+        let label = |r: &planner::PlanResult| r.best.as_ref().map(|b| b.label());
+        assert_eq!(label(&cold), label(&warm));
+        assert_eq!(
+            cold.best.as_ref().map(|b| b.seconds_per_step().to_bits()),
+            warm.best.as_ref().map(|b| b.seconds_per_step().to_bits()),
+        );
+
+        std::env::remove_var("SCALESTUDY_SIMCACHE");
+        std::env::remove_var("SCALESTUDY_PLANCACHE");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 fn cmd_zoo() -> anyhow::Result<()> {

@@ -350,10 +350,11 @@ impl TargetPlan {
 /// scale-up schedules.  Errors when *no* candidate can reach the target
 /// (quoting the lowest floor in the zoo — the best any model could do).
 ///
-/// Each candidate's layout is priced once by
-/// [`planner::plan_with`] under the cost objective (shared `cache`, so
-/// the zoo sweep reuses every repeated shape), then the phase schedule
-/// is pure convergence-model arithmetic on top.
+/// Each candidate's layout is priced once under the cost objective, and
+/// the whole zoo runs as one [`planner::plan_batch`] of fused pricing
+/// waves (shared `cache`, shared pool — bit-identical to the former
+/// per-model [`planner::plan_with`] loop), then the phase schedule is
+/// pure convergence-model arithmetic on top.
 pub fn plan_to_target(
     models: &[ModelCfg],
     cluster: &ClusterSpec,
@@ -373,11 +374,26 @@ pub fn plan_to_target(
         models.iter().map(|m| ctt.steps_for(m)).collect();
 
     // one cost-ranked layout query per candidate (the degraded key picks
-    // layouts for floor-above-target models too — see Objective::context)
+    // layouts for floor-above-target models too — see Objective::context),
+    // fused into one batch of shared pricing waves: every zoo search
+    // advances concurrently, so the pool stays occupied across the whole
+    // scan instead of draining between one model's small waves and the
+    // next's
     let objective = Objective::CostToTarget(ctt.clone());
+    let reqs: Vec<planner::PlanRequest<'_>> = models
+        .iter()
+        .map(|model| planner::PlanRequest {
+            model,
+            cluster,
+            workload,
+            space,
+            objective: objective.clone(),
+            seed: None,
+        })
+        .collect();
+    let results = planner::plan_batch(&reqs, sweep, cache);
     let mut candidates: Vec<ZooCandidate> = Vec::with_capacity(models.len());
-    for (i, model) in models.iter().enumerate() {
-        let r = planner::plan_with(model, cluster, workload, space, &objective, sweep, cache);
+    for (i, (model, r)) in models.iter().zip(results).enumerate() {
         let point = r.best;
         let (seconds, cost) = match (steps_per[i], &point) {
             (Some(steps), Some(p)) => {

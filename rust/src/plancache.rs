@@ -1,0 +1,876 @@
+//! Persistent cache of **whole planning answers**: the cross-query layer
+//! of the incremental-planning stack (the per-step [`crate::sweep::SimCache`]
+//! memoizes simulator pricings; this memoizes the search *result*).
+//!
+//! A planner query is fully determined by (model, cluster — including
+//! heterogeneous extra groups —, workload, plan space, objective
+//! parameters): the branch-and-bound search is deterministic and
+//! bit-identical across worker counts, so the same query always produces
+//! the same [`crate::planner::PlanResult`].  [`PlanKey::of`] canonicalizes
+//! every one of those fields (floats as exact bit patterns, variable-length
+//! lists length-prefixed so adjacent fields can never alias) and the cache
+//! maps it to a [`CachedPlan`]: the best point and full frontier stored as
+//! **compact plan coordinates** plus their priced [`StepTime`]s, with the
+//! `evaluated`/`feasible`/`space_size` counters.  A warm repeat `plan`
+//! query is then an O(1) lookup + a cheap re-materialization — no
+//! enumeration, no bounds, no simulation.
+//!
+//! Materialization is bit-identical by construction: every non-swept knob
+//! of a planner setup is fixed ([`crate::planner`] builds each candidate
+//! through one shared constructor), so the stored coordinates
+//! (nodes, dp/tp/pp/sp/ep, stage, optimizer, schedule, offload, cap)
+//! rebuild the exact [`TrainSetup`] the search priced, and the stored
+//! [`StepTime`] carries the exact bits the simulator produced.
+//!
+//! Mechanics mirror the SimCache deliberately: 16 lock stripes, exact
+//! hit/miss counters, insertion-order (oldest-first) eviction under a
+//! bound (`SCALESTUDY_PLANCACHE_MAX`, 0 = unbounded), schema-arbitrated
+//! persistence to `target/pallas_plancache.json` (override with
+//! `SCALESTUDY_PLANCACHE`) with every float as its bit pattern, and union
+//! [`PlanCache::merge`] where existing entries win.  On top of that it
+//! tracks `evictions` and a `resident_weight` (total stored plan points)
+//! in the style of the skeleton cache's stats, so the `cache` CLI and the
+//! serve `stats` query can report all three caches side by side.
+
+use crate::hardware::ClusterSpec;
+use crate::json::Json;
+use crate::model::ModelCfg;
+use crate::objective::Objective;
+use crate::parallel::ParallelCfg;
+use crate::planner::{PlanPoint, PlanResult, PlanSpace};
+use crate::sim::{StepTime, Workload};
+use crate::sweep::{env_usize_or, hex_u64, parse_hex_u64, step_from_json, step_to_json};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// On-disk schema version.  Bump whenever [`PlanKey`] layout, the stored
+/// plan-coordinate set, or anything that feeds the planner's pricing
+/// changes; files under any other version load empty (a stale plan must
+/// never survive a pricing change — a cold start merely re-searches).
+pub const PLANCACHE_SCHEMA_VERSION: u64 = 1;
+
+/// Default bound on resident plans.  Whole plan results are much heavier
+/// than single step pricings (a frontier can hold dozens of points), so
+/// the default sits far below the SimCache's; override with
+/// `SCALESTUDY_PLANCACHE_MAX` (0 = unbounded).
+pub const PLANCACHE_DEFAULT_MAX_ENTRIES: usize = 4096;
+
+fn default_max_entries() -> usize {
+    env_usize_or("SCALESTUDY_PLANCACHE_MAX", PLANCACHE_DEFAULT_MAX_ENTRIES)
+}
+
+/// Lock stripes for the plan map (same contention argument as the
+/// SimCache: concurrent serve waves only collide 1/16 of the time).
+const PLANCACHE_STRIPES: usize = 16;
+
+/// Canonical key of one planning query: every input that can change the
+/// answer, floats as exact bit patterns.  Variable-length sections
+/// (extra node groups, the plan-space lists) are length-prefixed so two
+/// different queries can never flatten to the same field vector.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlanKey {
+    model_name: String,
+    objective: &'static str,
+    fields: Vec<u64>,
+}
+
+impl PlanKey {
+    pub fn of(
+        model: &ModelCfg,
+        cluster: &ClusterSpec,
+        workload: &Workload,
+        space: &PlanSpace,
+        objective: &Objective,
+    ) -> PlanKey {
+        let mut f: Vec<u64> = Vec::new();
+        // ---- model
+        f.extend_from_slice(&[
+            model.vocab,
+            model.d_model,
+            model.d_ff,
+            model.num_heads,
+            model.d_kv,
+            model.enc_layers,
+            model.dec_layers,
+            model.tied_lm_head as u64,
+            model.experts,
+            model.top_k,
+            model.moe_every,
+        ]);
+        // ---- cluster (primary group, fabric, storage, then every extra
+        // group — same field set the SimCache's SetupKey canonicalizes)
+        f.extend_from_slice(&[
+            cluster.nodes as u64,
+            cluster.node.gpus as u64,
+            cluster.node.gpu.peak_flops_bf16.to_bits(),
+            cluster.node.gpu.peak_flops_fp32.to_bits(),
+            cluster.node.gpu.hbm_bytes.to_bits(),
+            cluster.node.gpu.hbm_bw.to_bits(),
+            cluster.node.gpu.achievable_frac.to_bits(),
+            cluster.node.nvlink_bw.to_bits(),
+            cluster.node.nvlink_latency.to_bits(),
+            cluster.node.host_ram_bytes.to_bits(),
+            cluster.node.pcie_bw.to_bits(),
+            cluster.ib_bw.to_bits(),
+            cluster.ib_latency.to_bits(),
+            cluster.oversub_threshold_nodes as u64,
+            cluster.oversub_factor.to_bits(),
+            cluster.storage_samples_per_s.to_bits(),
+            cluster.storage_threshold_nodes as u64,
+            cluster.storage_contention.to_bits(),
+        ]);
+        f.push(cluster.extra_groups.len() as u64);
+        for g in &cluster.extra_groups {
+            f.extend_from_slice(&[
+                g.nodes as u64,
+                g.node.gpus as u64,
+                g.node.gpu.peak_flops_bf16.to_bits(),
+                g.node.gpu.peak_flops_fp32.to_bits(),
+                g.node.gpu.hbm_bytes.to_bits(),
+                g.node.gpu.hbm_bw.to_bits(),
+                g.node.gpu.achievable_frac.to_bits(),
+                g.node.nvlink_bw.to_bits(),
+                g.node.nvlink_latency.to_bits(),
+                g.node.host_ram_bytes.to_bits(),
+                g.node.pcie_bw.to_bits(),
+                g.ib_bw.to_bits(),
+            ]);
+        }
+        // ---- workload
+        f.extend_from_slice(&[
+            workload.global_batch as u64,
+            workload.enc_len,
+            workload.dec_len,
+            workload.ckpt as u64,
+        ]);
+        // ---- plan space (every list length-prefixed)
+        f.push(space.stages.len() as u64);
+        f.extend(space.stages.iter().map(|s| s.index() as u64));
+        f.push(space.optimizers.len() as u64);
+        f.extend(space.optimizers.iter().map(|&o| o as u64));
+        f.push(space.offload.len() as u64);
+        f.extend(space.offload.iter().map(|&o| o as u64));
+        f.push(space.micro_batch_caps.len() as u64);
+        f.extend(space.micro_batch_caps.iter().map(|&c| c as u64));
+        f.push(space.schedules.len() as u64);
+        f.extend(space.schedules.iter().map(|&s| s as u64));
+        f.push(space.nodes.len() as u64);
+        f.extend(space.nodes.iter().map(|&n| n as u64));
+        f.extend_from_slice(&[
+            space.max_tp as u64,
+            space.max_pp as u64,
+            space.max_sp as u64,
+            space.max_ep as u64,
+        ]);
+        // ---- objective parameters (the discriminant rides as the
+        // `objective` name string)
+        match objective {
+            Objective::StepTime => {}
+            Objective::Goodput(fm) => {
+                f.extend_from_slice(&[
+                    fm.mtbf_hours.to_bits(),
+                    fm.write_bw.to_bits(),
+                    fm.read_bw.to_bits(),
+                    fm.shared_bw.to_bits(),
+                    fm.restart_overhead_s.to_bits(),
+                ]);
+            }
+            Objective::CostToTarget(c) => {
+                f.extend_from_slice(&[
+                    c.target_loss.to_bits(),
+                    c.node_cost_per_hour.to_bits(),
+                    c.inputs.lr.to_bits(),
+                    c.inputs.warmup_steps.to_bits(),
+                    c.inputs.global_batch as u64,
+                    c.inputs.tokens_per_sample,
+                    c.inputs.opt as u64,
+                    c.inputs.weight_decay.to_bits(),
+                    c.inputs.dropout.to_bits(),
+                    c.inputs.grad_clip.to_bits(),
+                    c.inputs.label_smoothing.to_bits(),
+                    c.inputs.full_precision as u64,
+                ]);
+            }
+        }
+        PlanKey { model_name: model.name.clone(), objective: objective.name(), fields: f }
+    }
+}
+
+/// One stored plan point: the swept coordinates plus the exact priced
+/// [`StepTime`].  Everything else about the setup is a planner-fixed
+/// knob, so [`PointRec::materialize`] rebuilds the identical
+/// [`crate::sim::TrainSetup`] through the planner's own constructor.
+#[derive(Clone, Debug)]
+pub struct PointRec {
+    pub nodes: usize,
+    pub par: ParallelCfg,
+    pub stage: usize,
+    pub opt: u64,
+    pub sched: u64,
+    pub offload: bool,
+    pub cap: usize,
+    pub step: StepTime,
+}
+
+fn opt_from_u64(x: u64) -> Option<crate::zero::OptimizerKind> {
+    use crate::zero::OptimizerKind::*;
+    match x {
+        0 => Some(AdamW),
+        1 => Some(SgdMomentum),
+        2 => Some(Adafactor),
+        3 => Some(Lamb),
+        _ => None,
+    }
+}
+
+fn sched_from_u64(x: u64) -> Option<crate::parallel::PipeSchedule> {
+    use crate::parallel::PipeSchedule::*;
+    match x {
+        0 => Some(GPipe),
+        1 => Some(OneFOneB),
+        2 => Some(Interleaved1F1B),
+        _ => None,
+    }
+}
+
+impl PointRec {
+    pub fn of(p: &PlanPoint) -> PointRec {
+        let s = &p.setup;
+        PointRec {
+            nodes: s.cluster.total_nodes(),
+            par: s.par,
+            stage: s.stage.index(),
+            opt: s.opt as u64,
+            sched: s.sched as u64,
+            offload: s.offload,
+            cap: s.micro_batch_cap,
+            step: p.step.clone(),
+        }
+    }
+
+    /// Rebuild the exact plan point for the query this record was stored
+    /// under.  `None` only on a malformed record (unknown enum index) —
+    /// treated as a cache miss by the caller.
+    pub fn materialize(
+        &self,
+        model: &ModelCfg,
+        cluster: &ClusterSpec,
+        workload: &Workload,
+    ) -> Option<PlanPoint> {
+        let stage = crate::zero::ZeroStage::from_index(self.stage)?;
+        let opt = opt_from_u64(self.opt)?;
+        let sched = sched_from_u64(self.sched)?;
+        let sub = cluster.take_nodes(self.nodes);
+        let setup = crate::planner::branch_setup(
+            model, &sub, workload, self.par, stage, opt, sched, self.offload, self.cap,
+        );
+        Some(PlanPoint { setup, step: self.step.clone() })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("dp", Json::Num(self.par.dp as f64)),
+            ("tp", Json::Num(self.par.tp as f64)),
+            ("pp", Json::Num(self.par.pp as f64)),
+            ("sp", Json::Num(self.par.sp as f64)),
+            ("ep", Json::Num(self.par.ep as f64)),
+            ("stage", Json::Num(self.stage as f64)),
+            ("opt", Json::Num(self.opt as f64)),
+            ("sched", Json::Num(self.sched as f64)),
+            ("offload", Json::Bool(self.offload)),
+            ("cap", Json::Num(self.cap as f64)),
+            ("step", step_to_json(&self.step)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<PointRec> {
+        Some(PointRec {
+            nodes: j.get("nodes").as_usize()?,
+            par: ParallelCfg {
+                dp: j.get("dp").as_usize()?,
+                tp: j.get("tp").as_usize()?,
+                pp: j.get("pp").as_usize()?,
+                sp: j.get("sp").as_usize()?,
+                ep: j.get("ep").as_usize()?,
+            },
+            stage: j.get("stage").as_usize()?,
+            opt: j.get("opt").as_usize()? as u64,
+            sched: j.get("sched").as_usize()? as u64,
+            offload: j.get("offload").as_bool()?,
+            cap: j.get("cap").as_usize()?,
+            step: step_from_json(j.get("step"))?,
+        })
+    }
+}
+
+/// A complete stored planning answer.
+#[derive(Clone, Debug)]
+pub struct CachedPlan {
+    pub best: Option<PointRec>,
+    pub frontier: Vec<PointRec>,
+    pub evaluated: usize,
+    pub feasible: usize,
+    pub space_size: usize,
+}
+
+impl CachedPlan {
+    pub fn of(r: &PlanResult) -> CachedPlan {
+        CachedPlan {
+            best: r.best.as_ref().map(PointRec::of),
+            frontier: r.frontier.iter().map(PointRec::of).collect(),
+            evaluated: r.evaluated,
+            feasible: r.feasible,
+            space_size: r.space_size,
+        }
+    }
+
+    /// Rebuild the full [`PlanResult`] for the same query inputs the
+    /// entry was keyed under.  `None` on a malformed record.
+    pub fn materialize(
+        &self,
+        model: &ModelCfg,
+        cluster: &ClusterSpec,
+        workload: &Workload,
+    ) -> Option<PlanResult> {
+        let best = match &self.best {
+            Some(rec) => Some(rec.materialize(model, cluster, workload)?),
+            None => None,
+        };
+        let mut frontier = Vec::with_capacity(self.frontier.len());
+        for rec in &self.frontier {
+            frontier.push(rec.materialize(model, cluster, workload)?);
+        }
+        Some(PlanResult {
+            best,
+            frontier,
+            evaluated: self.evaluated,
+            feasible: self.feasible,
+            space_size: self.space_size,
+        })
+    }
+
+    /// Stored plan points in this entry (the resident-weight unit).
+    fn weight(&self) -> usize {
+        self.frontier.len() + self.best.is_some() as usize
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("evaluated", Json::Num(self.evaluated as f64)),
+            ("feasible", Json::Num(self.feasible as f64)),
+            ("space_size", Json::Num(self.space_size as f64)),
+            (
+                "best",
+                match &self.best {
+                    Some(rec) => rec.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("frontier", Json::Arr(self.frontier.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<CachedPlan> {
+        let best = match j.get("best") {
+            Json::Null => None,
+            rec => Some(PointRec::from_json(rec)?),
+        };
+        let frontier: Option<Vec<PointRec>> =
+            j.get("frontier").as_arr()?.iter().map(PointRec::from_json).collect();
+        Some(CachedPlan {
+            best,
+            frontier: frontier?,
+            evaluated: j.get("evaluated").as_usize()?,
+            feasible: j.get("feasible").as_usize()?,
+            space_size: j.get("space_size").as_usize()?,
+        })
+    }
+}
+
+/// Thread-safe, bounded, persistent map `PlanKey → CachedPlan` (module
+/// docs).  Lookup/insert take exactly one stripe-lock acquisition on the
+/// hot path; eviction pops the globally oldest-inserted entry.
+pub struct PlanCache {
+    stripes: Vec<Mutex<HashMap<PlanKey, (CachedPlan, u64)>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    entries: AtomicUsize,
+    evictions: AtomicUsize,
+    /// Total stored plan points across every entry (frontier members +
+    /// bests) — the skeleton-cache-style weight the stats report.
+    weight: AtomicUsize,
+    seq: AtomicU64,
+    /// Keys in insertion order (seq assigned under this lock, so queue
+    /// order == age order); same stripe→ages nesting discipline as the
+    /// SimCache, so the pair cannot deadlock.
+    ages: Mutex<VecDeque<(PlanKey, u64)>>,
+    max_entries: usize,
+}
+
+impl Default for PlanCache {
+    fn default() -> PlanCache {
+        PlanCache::new()
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::with_capacity(default_max_entries())
+    }
+
+    /// A cache bounded to `max_entries` resident plans (0 = unbounded).
+    pub fn with_capacity(max_entries: usize) -> PlanCache {
+        PlanCache {
+            stripes: (0..PLANCACHE_STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            entries: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            weight: AtomicUsize::new(0),
+            seq: AtomicU64::new(0),
+            ages: Mutex::new(VecDeque::new()),
+            max_entries,
+        }
+    }
+
+    fn stripe_of(&self, key: &PlanKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    fn next_seq_and_track(&self, key: &PlanKey) -> u64 {
+        let mut ages = self.ages.lock().unwrap();
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        ages.push_back((key.clone(), seq));
+        seq
+    }
+
+    /// Remove the globally oldest-inserted entry (amortized O(1); stale
+    /// age-queue fronts — already replaced entries — are discarded).
+    fn evict_oldest(&self) {
+        loop {
+            let front = { self.ages.lock().unwrap().pop_front() };
+            let (k, s) = match front {
+                Some(f) => f,
+                None => return,
+            };
+            let mut map = self.stripes[self.stripe_of(&k)].lock().unwrap();
+            if map.get(&k).map_or(false, |&(_, cs)| cs == s) {
+                if let Some((plan, _)) = map.remove(&k) {
+                    self.weight.fetch_sub(plan.weight(), Ordering::Relaxed);
+                }
+                self.entries.fetch_sub(1, Ordering::Relaxed);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+
+    /// The stored answer for `key`, if any (exact hit/miss counting).
+    pub fn lookup(&self, key: &PlanKey) -> Option<CachedPlan> {
+        let map = self.stripes[self.stripe_of(key)].lock().unwrap();
+        match map.get(key) {
+            Some((plan, _)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(plan.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store `plan` under `key` (an existing entry for the key is
+    /// replaced in place and keeps being tracked by its newest age).
+    pub fn insert(&self, key: PlanKey, plan: CachedPlan) {
+        {
+            let mut map = self.stripes[self.stripe_of(&key)].lock().unwrap();
+            let seq = self.next_seq_and_track(&key);
+            self.weight.fetch_add(plan.weight(), Ordering::Relaxed);
+            if let Some((old, _)) = map.insert(key, (plan, seq)) {
+                self.weight.fetch_sub(old.weight(), Ordering::Relaxed);
+            } else {
+                self.entries.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if self.max_entries > 0 && self.entries.load(Ordering::Relaxed) > self.max_entries {
+            self.evict_oldest();
+        }
+    }
+
+    /// Union `other`'s plans into this cache: entries already present
+    /// here win; incoming entries arrive oldest-first so relative ages
+    /// survive; the capacity bound applies as usual.  Returns how many
+    /// entries were added.  Schema arbitration happens at load time, so
+    /// merging an old-schema file is a no-op.
+    pub fn merge(&self, other: &PlanCache) -> usize {
+        let mut incoming: Vec<(PlanKey, CachedPlan, u64)> = Vec::new();
+        for stripe in &other.stripes {
+            for (k, (plan, s)) in stripe.lock().unwrap().iter() {
+                incoming.push((k.clone(), plan.clone(), *s));
+            }
+        }
+        incoming.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        let mut added = 0usize;
+        for (k, plan, _) in incoming {
+            {
+                let mut map = self.stripes[self.stripe_of(&k)].lock().unwrap();
+                if map.contains_key(&k) {
+                    continue;
+                }
+                let seq = self.next_seq_and_track(&k);
+                self.weight.fetch_add(plan.weight(), Ordering::Relaxed);
+                map.insert(k, (plan, seq));
+                self.entries.fetch_add(1, Ordering::Relaxed);
+                added += 1;
+            }
+            if self.max_entries > 0
+                && self.entries.load(Ordering::Relaxed) > self.max_entries
+            {
+                self.evict_oldest();
+            }
+        }
+        added
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> usize {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Total stored plan points (frontier members + bests).
+    pub fn resident_weight(&self) -> usize {
+        self.weight.load(Ordering::Relaxed)
+    }
+
+    /// Hit fraction of all lookups so far (0.0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits(), self.misses());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    // ------------------------------------------------- persistence
+
+    /// Default on-disk location (override with `SCALESTUDY_PLANCACHE`).
+    pub fn default_path() -> PathBuf {
+        std::env::var("SCALESTUDY_PLANCACHE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("target/pallas_plancache.json"))
+    }
+
+    /// Load the cache at [`PlanCache::default_path`] (empty on failure).
+    pub fn load_default() -> PlanCache {
+        PlanCache::load(&PlanCache::default_path())
+    }
+
+    /// Save to [`PlanCache::default_path`].
+    pub fn save_default(&self) -> anyhow::Result<()> {
+        self.save(&PlanCache::default_path())
+    }
+
+    /// Load a cache from `path`.  Any failure degrades to an empty cache;
+    /// a *present but unusable* file emits a one-line stderr warning (a
+    /// missing file is a normal cold start).
+    pub fn load(path: &Path) -> PlanCache {
+        let (cache, warning) = PlanCache::load_verbose(path);
+        if let Some(w) = warning {
+            eprintln!("warning: {w}");
+        }
+        cache
+    }
+
+    /// [`PlanCache::load`] with the degradation reason surfaced.
+    pub fn load_verbose(path: &Path) -> (PlanCache, Option<String>) {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return (PlanCache::new(), None);
+            }
+            Err(e) => {
+                let why = format!(
+                    "plan cache {}: unreadable ({e}); starting empty",
+                    path.display()
+                );
+                return (PlanCache::new(), Some(why));
+            }
+        };
+        let json = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                let why = format!(
+                    "plan cache {}: corrupt JSON ({e}); starting empty",
+                    path.display()
+                );
+                return (PlanCache::new(), Some(why));
+            }
+        };
+        match PlanCache::from_json(&json) {
+            Some(cache) => (cache, None),
+            None => {
+                let why = format!(
+                    "plan cache {}: schema/entry mismatch (want schema {PLANCACHE_SCHEMA_VERSION}); starting empty",
+                    path.display()
+                );
+                (PlanCache::new(), Some(why))
+            }
+        }
+    }
+
+    /// Serialize and write atomically (temp file + rename; parents
+    /// created), same durability contract as the SimCache.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    /// The full map as a versioned JSON tree, entries sorted by key and
+    /// insertion sequences densified to ranks so the eviction order
+    /// survives a save/load round trip.
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(PlanKey, CachedPlan, u64)> = Vec::new();
+        for stripe in &self.stripes {
+            for (k, (plan, s)) in stripe.lock().unwrap().iter() {
+                entries.push((k.clone(), plan.clone(), *s));
+            }
+        }
+        let mut by_age: Vec<usize> = (0..entries.len()).collect();
+        by_age.sort_by_key(|&i| entries[i].2);
+        let mut rank = vec![0u64; entries.len()];
+        for (r, &i) in by_age.iter().enumerate() {
+            rank[i] = r as u64;
+        }
+        let mut tagged: Vec<(PlanKey, CachedPlan, u64)> = entries
+            .into_iter()
+            .zip(rank)
+            .map(|((k, plan, _), r)| (k, plan, r))
+            .collect();
+        tagged.sort_by(|a, b| a.0.cmp(&b.0));
+        let entries: Vec<Json> = tagged
+            .into_iter()
+            .map(|(k, plan, r)| {
+                Json::obj(vec![
+                    ("model", Json::Str(k.model_name)),
+                    ("objective", Json::Str(k.objective.to_string())),
+                    ("fields", Json::Arr(k.fields.iter().map(|&x| hex_u64(x)).collect())),
+                    ("seq", hex_u64(r)),
+                    ("plan", plan.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(PLANCACHE_SCHEMA_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Rebuild from [`PlanCache::to_json`] output.  `None` on schema
+    /// mismatch or any malformed entry; entries are inserted oldest-first
+    /// so an over-capacity file keeps its newest plans.
+    pub fn from_json(json: &Json) -> Option<PlanCache> {
+        if json.get("schema").as_usize()? as u64 != PLANCACHE_SCHEMA_VERSION {
+            return None;
+        }
+        let cache = PlanCache::new();
+        let mut incoming: Vec<(PlanKey, CachedPlan, u64)> = Vec::new();
+        for e in json.get("entries").as_arr()? {
+            let model_name = e.get("model").as_str()?.to_string();
+            let objective = match e.get("objective").as_str()? {
+                "step_time" => "step_time",
+                "goodput" => "goodput",
+                "cost_to_target" => "cost_to_target",
+                _ => return None,
+            };
+            let fields: Option<Vec<u64>> =
+                e.get("fields").as_arr()?.iter().map(parse_hex_u64).collect();
+            let key = PlanKey { model_name, objective, fields: fields? };
+            let plan = CachedPlan::from_json(e.get("plan"))?;
+            let age = parse_hex_u64(e.get("seq"))?;
+            incoming.push((key, plan, age));
+        }
+        incoming.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        for (key, plan, _) in incoming {
+            cache.insert(key, plan);
+        }
+        Some(cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+    use crate::objective::CostToTarget;
+    use crate::planner;
+    use crate::resilience::FailureModel;
+    use crate::sweep::{SimCache, Sweep};
+    use crate::zero::{OptimizerKind, ZeroStage};
+
+    fn small_space() -> PlanSpace {
+        PlanSpace {
+            stages: ZeroStage::all().to_vec(),
+            optimizers: vec![OptimizerKind::AdamW],
+            offload: vec![false],
+            micro_batch_caps: vec![0],
+            schedules: vec![crate::parallel::PipeSchedule::OneFOneB],
+            nodes: vec![1, 2],
+            max_tp: 8,
+            max_pp: 4,
+            max_sp: 1,
+            max_ep: 1,
+        }
+    }
+
+    fn assert_results_bit_identical(a: &PlanResult, b: &PlanResult) {
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.feasible, b.feasible);
+        assert_eq!(a.space_size, b.space_size);
+        assert_eq!(a.best.is_some(), b.best.is_some());
+        if let (Some(x), Some(y)) = (&a.best, &b.best) {
+            assert_eq!(x.label(), y.label());
+            assert_eq!(x.seconds_per_step().to_bits(), y.seconds_per_step().to_bits());
+            assert_eq!(x.step.mem_per_gpu.to_bits(), y.step.mem_per_gpu.to_bits());
+        }
+        assert_eq!(a.frontier.len(), b.frontier.len());
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert_eq!(x.label(), y.label());
+            assert_eq!(x.seconds_per_step().to_bits(), y.seconds_per_step().to_bits());
+            assert_eq!(x.step.mem_per_gpu.to_bits(), y.step.mem_per_gpu.to_bits());
+        }
+    }
+
+    /// Store → lookup → materialize reproduces the search bit-for-bit,
+    /// and a JSON round trip (the persistence path) preserves it.
+    #[test]
+    fn cached_plan_roundtrips_bit_identically() {
+        let model = by_name("mt5-large").unwrap();
+        let cluster = crate::hardware::ClusterSpec::lps_pod(2);
+        let w = Workload::table1();
+        let space = small_space();
+        let r = planner::plan(&model, &cluster, &w, &space, &Sweep::serial(), &SimCache::new());
+        let key = PlanKey::of(&model, &cluster, &w, &space, &Objective::StepTime);
+        let cache = PlanCache::new();
+        cache.insert(key.clone(), CachedPlan::of(&r));
+        let hit = cache.lookup(&key).expect("stored entry");
+        let back = hit.materialize(&model, &cluster, &w).expect("well-formed");
+        assert_results_bit_identical(&r, &back);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.resident_weight(), r.frontier.len() + 1);
+        // persistence: serialize, reload, materialize again
+        let reloaded = PlanCache::from_json(&cache.to_json()).expect("schema matches");
+        let back2 = reloaded
+            .lookup(&key)
+            .expect("entry survives the round trip")
+            .materialize(&model, &cluster, &w)
+            .expect("well-formed");
+        assert_results_bit_identical(&r, &back2);
+        // a wrong-schema file loads as None (schema arbitration)
+        let mut j = cache.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::Num((PLANCACHE_SCHEMA_VERSION + 1) as f64));
+        }
+        assert!(PlanCache::from_json(&j).is_none());
+    }
+
+    /// The key separates every query input: model, cluster width, space,
+    /// objective kind AND objective parameters.
+    #[test]
+    fn keys_distinguish_queries() {
+        let a = by_name("mt5-base").unwrap();
+        let b = by_name("mt5-large").unwrap();
+        let c2 = crate::hardware::ClusterSpec::lps_pod(2);
+        let c4 = crate::hardware::ClusterSpec::lps_pod(4);
+        let w = Workload::table1();
+        let space = small_space();
+        let k = |m: &ModelCfg, c: &ClusterSpec, o: &Objective| PlanKey::of(m, c, &w, &space, o);
+        let st = Objective::StepTime;
+        assert_ne!(k(&a, &c2, &st), k(&b, &c2, &st));
+        assert_ne!(k(&a, &c2, &st), k(&a, &c4, &st));
+        assert_ne!(
+            k(&a, &c2, &Objective::Goodput(FailureModel::with_mtbf(6.0))),
+            k(&a, &c2, &Objective::Goodput(FailureModel::with_mtbf(12.0))),
+        );
+        assert_ne!(
+            k(&a, &c2, &st),
+            k(&a, &c2, &Objective::CostToTarget(CostToTarget::for_workload(2.6, 0.0, &w))),
+        );
+        assert_ne!(
+            k(&a, &c2, &Objective::CostToTarget(CostToTarget::for_workload(2.6, 0.0, &w))),
+            k(&a, &c2, &Objective::CostToTarget(CostToTarget::for_workload(2.6, 30.0, &w))),
+        );
+        // a different space (wider node ladder) is a different query
+        let wider = PlanSpace { nodes: vec![1, 2, 4], ..small_space() };
+        assert_ne!(
+            PlanKey::of(&a, &c2, &w, &space, &st),
+            PlanKey::of(&a, &c2, &w, &wider, &st)
+        );
+        // identical inputs agree
+        assert_eq!(k(&a, &c2, &st), k(&a, &c2, &Objective::StepTime));
+    }
+
+    /// Capacity bound: oldest-inserted entries evict first, counters and
+    /// resident weight stay exact, and merge honors existing-wins.
+    #[test]
+    fn eviction_and_merge_follow_simcache_semantics() {
+        let model = by_name("mt5-small").unwrap();
+        let w = Workload::table1();
+        let space = small_space();
+        let mk_key = |nodes: usize| {
+            let c = crate::hardware::ClusterSpec::lps_pod(nodes);
+            PlanKey::of(&model, &c, &w, &space, &Objective::StepTime)
+        };
+        let plan = CachedPlan {
+            best: None,
+            frontier: Vec::new(),
+            evaluated: 1,
+            feasible: 0,
+            space_size: 1,
+        };
+        let cache = PlanCache::with_capacity(2);
+        cache.insert(mk_key(1), plan.clone());
+        cache.insert(mk_key(2), plan.clone());
+        cache.insert(mk_key(3), plan.clone());
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.lookup(&mk_key(1)).is_none(), "oldest entry must evict first");
+        assert!(cache.lookup(&mk_key(2)).is_some());
+        assert!(cache.lookup(&mk_key(3)).is_some());
+        // merge: existing entries win, new ones come over
+        let other = PlanCache::new();
+        let newer =
+            CachedPlan { evaluated: 99, ..plan.clone() };
+        other.insert(mk_key(3), newer);
+        other.insert(mk_key(4), plan.clone());
+        let added = cache.merge(&other);
+        assert_eq!(added, 1);
+        assert_eq!(
+            cache.lookup(&mk_key(3)).unwrap().evaluated,
+            1,
+            "existing entries must win a merge"
+        );
+    }
+}

@@ -70,7 +70,8 @@
 use crate::hardware::{ClusterSpec, NodeGroup};
 use crate::model::ModelCfg;
 use crate::objective::Objective;
-use crate::planner::{self, PlanPoint, PlanResult, PlanSpace};
+use crate::plancache::PlanCache;
+use crate::planner::{self, PlanPoint, PlanResult, PlanSeed, PlanSpace};
 use crate::sim::{self, TrainSetup, Workload};
 use crate::sweep::{SimCache, Sweep};
 
@@ -297,25 +298,77 @@ pub fn plan_resilient(
     sweep: &Sweep,
     cache: &SimCache,
 ) -> ResilientPlanResult {
-    let base = planner::plan(model, cluster, workload, space, sweep, cache);
+    plan_resilient_seeded(model, cluster, workload, space, fm, None, sweep, cache)
+}
+
+/// [`plan_resilient`] with an optional incumbent seed carried over from
+/// a neighboring query (a what-if rung, a previous MTBF probe).  The
+/// seed feeds both passes through [`planner::plan_with_seed`], which
+/// revalidates and reprices it per query — results stay bit-identical
+/// to the unseeded call.  With the failure model enabled, the base and
+/// goodput searches run as one fused [`planner::plan_batch`]: the two
+/// queries price the *same* setups (only the ranking differs), so each
+/// fused wave dedups their [`crate::sweep::SetupKey`]s and every step
+/// simulates once for both.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_resilient_seeded(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    fm: &FailureModel,
+    seed: Option<&PlanSeed>,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> ResilientPlanResult {
     if !fm.enabled() {
+        let base = planner::plan_with_seed(
+            model,
+            cluster,
+            workload,
+            space,
+            &Objective::StepTime,
+            seed,
+            sweep,
+            cache,
+        );
         let best = base.best.clone().map(|point| {
             let goodput = fm.goodput(&point.setup, point.seconds_per_step());
             ResilientPoint { point, goodput }
         });
         return ResilientPlanResult { base, best, flipped: false, candidates: Vec::new() };
     }
-    // the SimCache is shared with the base query above, so the goodput
-    // pass re-ranks memoized prices instead of re-simulating
-    let good = planner::plan_with(
-        model,
-        cluster,
-        workload,
-        space,
-        &Objective::Goodput(fm.clone()),
-        sweep,
-        cache,
-    );
+    let reqs = [
+        planner::PlanRequest {
+            model,
+            cluster,
+            workload,
+            space,
+            objective: Objective::StepTime,
+            seed: seed.copied(),
+        },
+        planner::PlanRequest {
+            model,
+            cluster,
+            workload,
+            space,
+            objective: Objective::Goodput(fm.clone()),
+            seed: seed.copied(),
+        },
+    ];
+    let mut results = planner::plan_batch(&reqs, sweep, cache);
+    let good = results.pop().expect("two fused requests");
+    let base = results.pop().expect("two fused requests");
+    assemble_resilient(base, good, fm)
+}
+
+/// Fold a failure-free base result and a goodput-objective result into
+/// the combined answer (shared by the fused and the plan-cached paths).
+fn assemble_resilient(
+    base: PlanResult,
+    good: PlanResult,
+    fm: &FailureModel,
+) -> ResilientPlanResult {
     let with_goodput = |point: PlanPoint| {
         let goodput = fm.goodput(&point.setup, point.seconds_per_step());
         ResilientPoint { point, goodput }
@@ -328,6 +381,56 @@ pub fn plan_resilient(
         _ => false,
     };
     ResilientPlanResult { base, best, flipped, candidates }
+}
+
+/// [`plan_resilient`] behind the persistent [`PlanCache`]: both the
+/// failure-free base query and the goodput query are cached whole (they
+/// have distinct objective digests), so a warm repeat is two O(1)
+/// lookups.  On a miss the goodput search is seeded with the base
+/// winner — an in-space feasible incumbent that tightens pruning for
+/// free.  Bit-identical to [`plan_resilient`] either way.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_resilient_cached(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    fm: &FailureModel,
+    sweep: &Sweep,
+    cache: &SimCache,
+    plans: &PlanCache,
+) -> ResilientPlanResult {
+    let base = planner::plan_cached(
+        model,
+        cluster,
+        workload,
+        space,
+        &Objective::StepTime,
+        None,
+        sweep,
+        cache,
+        plans,
+    );
+    if !fm.enabled() {
+        let best = base.best.clone().map(|point| {
+            let goodput = fm.goodput(&point.setup, point.seconds_per_step());
+            ResilientPoint { point, goodput }
+        });
+        return ResilientPlanResult { base, best, flipped: false, candidates: Vec::new() };
+    }
+    let seed = base.best.as_ref().map(|b| PlanSeed::of(&b.setup));
+    let good = planner::plan_cached(
+        model,
+        cluster,
+        workload,
+        space,
+        &Objective::Goodput(fm.clone()),
+        seed.as_ref(),
+        sweep,
+        cache,
+        plans,
+    );
+    assemble_resilient(base, good, fm)
 }
 
 // ------------------------------------------------------------------
@@ -439,6 +542,16 @@ pub struct PhaseBoundary {
 /// Replan at every factor of `axis` and report the winner per point.
 /// With `fm` enabled the winner is the failure-aware one (and for the
 /// [`WhatIfAxis::Mtbf`] axis each factor *is* the MTBF in hours).
+///
+/// The ladder is incremental and fused (bit-identical to replanning each
+/// rung cold): rung 0 runs alone and its winner becomes the **incumbent
+/// seed** for every other rung (revalidated and repriced per rung — a
+/// winner that stops fitting under a harsher derate is discarded, never
+/// trusted), and rungs 1..n run as ONE [`planner::plan_batch`] of shared
+/// pricing waves, so the pool stays occupied across the whole ladder.
+/// Only the winner-ranking search runs per rung — a sweep point never
+/// reads the failure-free base pass the old per-rung
+/// [`plan_resilient`] call also computed.
 pub fn whatif_sweep(
     model: &ModelCfg,
     cluster: &ClusterSpec,
@@ -450,52 +563,87 @@ pub fn whatif_sweep(
     sweep: &Sweep,
     cache: &SimCache,
 ) -> Vec<SweepPoint> {
-    let mut out = Vec::with_capacity(factors.len());
-    for &factor in factors {
-        let (derated, point_fm) = match axis {
+    if factors.is_empty() {
+        return Vec::new();
+    }
+    // per-rung query inputs: the derated cluster and the rung's failure
+    // model (the Mtbf axis sweeps the model itself)
+    let queries: Vec<(ClusterSpec, FailureModel)> = factors
+        .iter()
+        .map(|&factor| match axis {
             WhatIfAxis::Nic => (derate_cluster(cluster, factor, 1.0), fm.clone()),
             WhatIfAxis::Nvlink => (derate_cluster(cluster, 1.0, factor), fm.clone()),
             WhatIfAxis::Jitter => (jitter_cluster(cluster, factor), fm.clone()),
             WhatIfAxis::Mtbf => {
                 (cluster.clone(), FailureModel { mtbf_hours: factor, ..fm.clone() })
             }
-        };
-        let point = if point_fm.enabled() {
-            let r = plan_resilient(model, &derated, workload, space, &point_fm, sweep, cache);
-            match r.best {
-                Some(b) => SweepPoint {
-                    factor,
-                    label: b.point.label(),
-                    seconds_per_step: b.point.seconds_per_step(),
-                    effective_seconds_per_step: b.goodput.effective_seconds_per_step,
-                },
-                None => SweepPoint {
-                    factor,
-                    label: String::new(),
-                    seconds_per_step: f64::INFINITY,
-                    effective_seconds_per_step: f64::INFINITY,
-                },
-            }
+        })
+        .collect();
+    let rung_objective = |pfm: &FailureModel| {
+        if pfm.enabled() {
+            Objective::Goodput(pfm.clone())
         } else {
-            let r = planner::plan(model, &derated, workload, space, sweep, cache);
-            match r.best {
-                Some(b) => SweepPoint {
+            Objective::StepTime
+        }
+    };
+    // rung 0: cold; its winner seeds the rest of the ladder
+    let first = {
+        let (c, pfm) = &queries[0];
+        planner::plan_with_seed(
+            model,
+            c,
+            workload,
+            space,
+            &rung_objective(pfm),
+            None,
+            sweep,
+            cache,
+        )
+    };
+    let seed = first.best.as_ref().map(|b| PlanSeed::of(&b.setup));
+    // rungs 1..n: one fused batch, every rung incumbent-seeded
+    let objectives: Vec<Objective> =
+        queries[1..].iter().map(|(_, pfm)| rung_objective(pfm)).collect();
+    let reqs: Vec<planner::PlanRequest<'_>> = queries[1..]
+        .iter()
+        .zip(&objectives)
+        .map(|((c, _), objective)| planner::PlanRequest {
+            model,
+            cluster: c,
+            workload,
+            space,
+            objective: objective.clone(),
+            seed,
+        })
+        .collect();
+    let rest = planner::plan_batch(&reqs, sweep, cache);
+    std::iter::once(first)
+        .chain(rest)
+        .zip(factors)
+        .zip(&queries)
+        .map(|((r, &factor), (_, pfm))| match r.best {
+            Some(b) => {
+                let seconds = b.seconds_per_step();
+                let effective = if pfm.enabled() {
+                    pfm.goodput(&b.setup, seconds).effective_seconds_per_step
+                } else {
+                    seconds
+                };
+                SweepPoint {
                     factor,
                     label: b.label(),
-                    seconds_per_step: b.seconds_per_step(),
-                    effective_seconds_per_step: b.seconds_per_step(),
-                },
-                None => SweepPoint {
-                    factor,
-                    label: String::new(),
-                    seconds_per_step: f64::INFINITY,
-                    effective_seconds_per_step: f64::INFINITY,
-                },
+                    seconds_per_step: seconds,
+                    effective_seconds_per_step: effective,
+                }
             }
-        };
-        out.push(point);
-    }
-    out
+            None => SweepPoint {
+                factor,
+                label: String::new(),
+                seconds_per_step: f64::INFINITY,
+                effective_seconds_per_step: f64::INFINITY,
+            },
+        })
+        .collect()
 }
 
 /// The intervals of a sweep where the winning plan flips.
@@ -528,14 +676,28 @@ pub fn find_flip(
     cache: &SimCache,
 ) -> Option<(f64, ResilientPlanResult)> {
     // log-spaced, from "monthly" failures down to pathological churn —
-    // the flip point only has to exist somewhere on the ladder
+    // the flip point only has to exist somewhere on the ladder.  Each
+    // rung seeds the next with its goodput winner (revalidated and
+    // repriced per rung), so the descent gets cheaper as it goes while
+    // staying bit-identical to cold per-rung replans.
     const LADDER: [f64; 9] = [512.0, 128.0, 32.0, 8.0, 2.0, 0.5, 0.125, 0.03125, 0.0078125];
+    let mut seed: Option<PlanSeed> = None;
     for &mtbf in &LADDER {
         let probe = FailureModel { mtbf_hours: mtbf, ..fm.clone() };
-        let r = plan_resilient(model, cluster, workload, space, &probe, sweep, cache);
+        let r = plan_resilient_seeded(
+            model,
+            cluster,
+            workload,
+            space,
+            &probe,
+            seed.as_ref(),
+            sweep,
+            cache,
+        );
         if r.flipped {
             return Some((mtbf, r));
         }
+        seed = r.best.as_ref().map(|b| PlanSeed::of(&b.point.setup));
     }
     None
 }

@@ -2,9 +2,11 @@
 //!
 //! The `serve` subcommand turns the one-shot CLI into a **long-lived
 //! capacity-planning oracle**: one process-wide [`Sweep`] worker pool
-//! (warm `TimelineScratch` arenas), one warm [`SimCache`] and the global
-//! skeleton cache serve every query, so repeat queries answer from warm
-//! state instead of paying cold caches per invocation.
+//! (warm `TimelineScratch` arenas), one warm [`SimCache`], one warm
+//! [`PlanCache`] and the global skeleton cache serve every query, so
+//! repeat queries answer from warm state instead of paying cold caches
+//! per invocation — a warm repeat `plan` query is a cache lookup that
+//! prices zero layouts.
 //!
 //! ## Protocol
 //!
@@ -76,6 +78,7 @@ use crate::json::Json;
 use crate::model::{by_name, mt5_zoo, ModelCfg};
 use crate::objective::{self, CostToTarget, Objective};
 use crate::parallel::{ParallelCfg, PipeSchedule};
+use crate::plancache::PlanCache;
 use crate::planner::{self, PlanSpace};
 use crate::resilience::{self, FailureModel, WhatIfAxis};
 use crate::sim::{self, StepTime, TrainSetup, Workload};
@@ -842,6 +845,8 @@ struct WaveMark {
     sim_misses: u64,
     skel_hits: u64,
     skel_misses: u64,
+    plan_hits: u64,
+    plan_misses: u64,
     scratch_clears: u64,
     scratch_grows: u64,
 }
@@ -849,6 +854,9 @@ struct WaveMark {
 struct Engine {
     sweep: Sweep,
     cache: SimCache,
+    /// Persistent cross-query plan-result cache: warm repeat `plan`
+    /// queries answer without pricing a single layout.
+    plans: PlanCache,
     persist: bool,
     workers_requested: usize,
     addr: SocketAddr,
@@ -887,6 +895,8 @@ impl Engine {
             sim_misses: self.cache.misses() as u64,
             skel_hits: sk.hits() as u64,
             skel_misses: sk.misses() as u64,
+            plan_hits: self.plans.hits() as u64,
+            plan_misses: self.plans.misses() as u64,
             scratch_clears: clears,
             scratch_grows: grows,
         }
@@ -911,6 +921,13 @@ impl Engine {
             (
                 "skeletons",
                 rate_obj(sk.hits() as u64 - mark.skel_hits, sk.misses() as u64 - mark.skel_misses),
+            ),
+            (
+                "plancache",
+                rate_obj(
+                    self.plans.hits() as u64 - mark.plan_hits,
+                    self.plans.misses() as u64 - mark.plan_misses,
+                ),
             ),
             (
                 "scratch",
@@ -1013,6 +1030,17 @@ impl Engine {
                     ("hit_rate", Json::Num(sk.hit_rate())),
                     ("entries", Json::Num(sk.len() as f64)),
                     ("resident_weight", Json::Num(sk.resident_weight() as f64)),
+                ]),
+            ),
+            (
+                "plancache",
+                Json::obj(vec![
+                    ("hits", Json::Num(self.plans.hits() as f64)),
+                    ("misses", Json::Num(self.plans.misses() as f64)),
+                    ("hit_rate", Json::Num(self.plans.hit_rate())),
+                    ("entries", Json::Num(self.plans.len() as f64)),
+                    ("evictions", Json::Num(self.plans.evictions() as f64)),
+                    ("resident_weight", Json::Num(self.plans.resident_weight() as f64)),
                 ]),
             ),
             (
@@ -1228,25 +1256,36 @@ impl Engine {
                 let ctt =
                     CostToTarget::for_workload(q.target_loss, q.node_cost_per_hour, &workload);
                 let steps = ctt.check(&model).map_err(|e| anyhow::anyhow!("{e}"))?;
-                let result = planner::plan_with(
+                let result = planner::plan_cached(
                     &model,
                     &cluster,
                     &workload,
                     &space,
                     &Objective::CostToTarget(ctt),
+                    None,
                     &eng.sweep,
                     &eng.cache,
+                    &eng.plans,
                 );
                 Ok(cost_plan_payload(&result, q.target_loss, q.node_cost_per_hour, steps))
             } else if q.mtbf_hours > 0.0 {
                 let fm = FailureModel::with_mtbf(q.mtbf_hours);
-                let result = resilience::plan_resilient(
-                    &model, &cluster, &workload, &space, &fm, &eng.sweep, &eng.cache,
+                let result = resilience::plan_resilient_cached(
+                    &model, &cluster, &workload, &space, &fm, &eng.sweep, &eng.cache, &eng.plans,
                 );
                 Ok(resilient_plan_payload(&result))
             } else {
-                let result =
-                    planner::plan(&model, &cluster, &workload, &space, &eng.sweep, &eng.cache);
+                let result = planner::plan_cached(
+                    &model,
+                    &cluster,
+                    &workload,
+                    &space,
+                    &Objective::StepTime,
+                    None,
+                    &eng.sweep,
+                    &eng.cache,
+                    &eng.plans,
+                );
                 Ok(plan_payload(&result))
             }
         });
@@ -1351,6 +1390,9 @@ fn engine_loop(mut eng: Engine, rx: mpsc::Receiver<RequestJob>) {
         if let Err(e) = eng.cache.save_default() {
             eprintln!("warning: could not persist SimCache: {e:#}");
         }
+        if let Err(e) = eng.plans.save_default() {
+            eprintln!("warning: could not persist PlanCache: {e:#}");
+        }
     }
 }
 
@@ -1429,6 +1471,7 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let sweep = Sweep::new(cfg.workers);
         let cache = if cfg.persist_cache { SimCache::load_default() } else { SimCache::new() };
+        let plans = if cfg.persist_cache { PlanCache::load_default() } else { PlanCache::new() };
         let workers = sweep.workers();
         let shed = Arc::new(AtomicU64::new(0));
         let queue_depth = Arc::new(AtomicUsize::new(0));
@@ -1436,6 +1479,7 @@ impl Server {
         let eng = Engine {
             sweep,
             cache,
+            plans,
             persist: cfg.persist_cache,
             workers_requested: cfg.workers,
             addr,
@@ -1640,6 +1684,7 @@ mod tests {
         Engine {
             sweep,
             cache: SimCache::new(),
+            plans: PlanCache::new(),
             persist: false,
             workers_requested: workers,
             addr: "127.0.0.1:0".parse().unwrap(),
@@ -1719,6 +1764,39 @@ mod tests {
             "warm repeat must not grow any arena"
         );
         assert_eq!(warm.get("result").dumps(), cold.get("result").dumps());
+    }
+
+    /// A warm repeat `plan` query answers from the PlanCache: zero
+    /// layouts priced, a bit-identical payload, meta reporting a 1.0
+    /// plan-cache hit rate, and `stats` carrying the plancache block.
+    #[test]
+    fn warm_repeat_plan_answers_from_plan_cache() {
+        let mut eng = test_engine(2);
+        let q = r#"{"id": 1, "query": "plan", "model": "mt5-small", "nodes": 2, "exact_nodes": true}"#;
+        let (j1, r1) = job(q);
+        eng.process(vec![j1]);
+        let cold = Json::parse(&line(&r1)).unwrap();
+        assert_eq!(cold.get("ok").as_bool(), Some(true), "{cold:?}");
+        assert_eq!((eng.plans.hits(), eng.plans.misses()), (0, 1));
+        let priced = eng.cache.misses();
+        let (j2, r2) = job(q);
+        eng.process(vec![j2]);
+        let warm = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(
+            warm.get("result").dumps(),
+            cold.get("result").dumps(),
+            "a plan-cache answer must be byte-identical to the search"
+        );
+        assert_eq!(eng.plans.hits(), 1);
+        assert_eq!(eng.cache.misses(), priced, "warm repeat must not price a single layout");
+        assert_eq!(warm.path(&["meta", "plancache", "hit_rate"]).as_f64(), Some(1.0));
+        let (j3, r3) = job(r#"{"id": 3, "query": "stats"}"#);
+        eng.process(vec![j3]);
+        let s = Json::parse(&line(&r3)).unwrap();
+        assert_eq!(s.path(&["result", "plancache", "entries"]).as_f64(), Some(1.0));
+        assert_eq!(s.path(&["result", "plancache", "hits"]).as_f64(), Some(1.0));
+        assert_eq!(s.path(&["result", "plancache", "misses"]).as_f64(), Some(1.0));
+        assert!(s.path(&["result", "plancache", "resident_weight"]).as_f64().unwrap() >= 1.0);
     }
 
     /// Malformed queries answer with ok=false and never take the engine

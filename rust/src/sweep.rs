@@ -1007,7 +1007,7 @@ pub(crate) fn hex_u64(x: u64) -> Json {
     Json::Str(format!("{x:016x}"))
 }
 
-fn parse_hex_u64(j: &Json) -> Option<u64> {
+pub(crate) fn parse_hex_u64(j: &Json) -> Option<u64> {
     let s = j.as_str()?;
     if s.len() != 16 {
         return None;
@@ -1019,7 +1019,7 @@ pub(crate) fn hex_f64(x: f64) -> Json {
     hex_u64(x.to_bits())
 }
 
-fn parse_hex_f64(j: &Json) -> Option<f64> {
+pub(crate) fn parse_hex_f64(j: &Json) -> Option<f64> {
     parse_hex_u64(j).map(f64::from_bits)
 }
 
@@ -1042,7 +1042,7 @@ pub(crate) fn step_to_json(st: &StepTime) -> Json {
     ])
 }
 
-fn step_from_json(j: &Json) -> Option<StepTime> {
+pub(crate) fn step_from_json(j: &Json) -> Option<StepTime> {
     Some(StepTime {
         micro_batch: j.get("micro_batch").as_usize()?,
         num_microbatches: j.get("num_microbatches").as_usize()?,

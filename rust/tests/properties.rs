@@ -1146,6 +1146,191 @@ fn prop_goodput_single_pass_matches_slice_reference() {
     }
 }
 
+// ------------------------------------------------- incremental planning
+
+/// Bit-compare two plan results: space size, best, and the full Pareto
+/// frontier (labels carry the layout; the float bits carry the exact
+/// pricing).
+fn assert_plan_results_bit_identical(
+    tag: &str,
+    a: &scalestudy::planner::PlanResult,
+    b: &scalestudy::planner::PlanResult,
+) {
+    assert_eq!(a.space_size, b.space_size, "{tag}: space size");
+    match (&a.best, &b.best) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.label(), y.label(), "{tag}: best label diverged");
+            assert_eq!(
+                x.seconds_per_step().to_bits(),
+                y.seconds_per_step().to_bits(),
+                "{tag}: best step-time bits diverged"
+            );
+            assert_eq!(
+                x.step.mem_per_gpu.to_bits(),
+                y.step.mem_per_gpu.to_bits(),
+                "{tag}: best memory bits diverged"
+            );
+        }
+        (None, None) => {}
+        other => panic!("{tag}: best presence diverged: {other:?}"),
+    }
+    assert_eq!(a.frontier.len(), b.frontier.len(), "{tag}: frontier size");
+    for (x, y) in a.frontier.iter().zip(&b.frontier) {
+        assert_eq!(x.label(), y.label(), "{tag}: frontier label diverged");
+        assert_eq!(
+            x.seconds_per_step().to_bits(),
+            y.seconds_per_step().to_bits(),
+            "{tag}: frontier bits diverged"
+        );
+        assert_eq!(
+            x.step.mem_per_gpu.to_bits(),
+            y.step.mem_per_gpu.to_bits(),
+            "{tag}: frontier memory bits diverged"
+        );
+    }
+}
+
+/// ISSUE 9 tentpole acceptance: the incumbent-seeded search is
+/// bit-identical to the exhaustive reference for every objective across
+/// the dense zoo × {1,2,4,8} nodes.  The seed is the real incremental
+/// pattern — the previous node-rung's winner carried into the next
+/// query and repriced there — and a valid incumbent may only *tighten*
+/// the best bound, never change the answer: best, full frontier, and
+/// space size all match `plan_exhaustive_with` bit for bit.  One shared
+/// SimCache per model keeps the 3-objective × 4-rung ladder at roughly
+/// the cost of a single exhaustive sweep (every repeat pricing is a
+/// bit-identical cache hit).
+#[test]
+fn prop_seeded_bnb_bit_identical_to_exhaustive_per_objective() {
+    use scalestudy::planner::{plan_with_seed, PlanSeed};
+    use scalestudy::resilience::FailureModel;
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let objectives = vec![
+        Objective::StepTime,
+        Objective::Goodput(FailureModel::with_mtbf(6.0)),
+        Objective::CostToTarget(CostToTarget::for_workload(2.6, 30.0, &workload)),
+    ];
+    for model in mt5_zoo() {
+        let cache = SimCache::new();
+        for objective in &objectives {
+            let mut seed: Option<PlanSeed> = None;
+            for nodes in [1usize, 2, 4, 8] {
+                let cluster = ClusterSpec::lps_pod(nodes);
+                let seeded = plan_with_seed(
+                    &model, &cluster, &workload, &space, objective, seed.as_ref(), &sweep,
+                    &cache,
+                );
+                let exact = plan_exhaustive_with(
+                    &model, &cluster, &workload, &space, objective, &sweep, &cache,
+                );
+                let tag = format!(
+                    "{} {nodes}n {} (seeded={})",
+                    model.name,
+                    objective.name(),
+                    seed.is_some()
+                );
+                assert!(seeded.evaluated <= seeded.space_size, "{tag}: evaluated > space");
+                assert_plan_results_bit_identical(&tag, &seeded, &exact);
+                // carry the incumbent to the next rung
+                seed = seeded.best.as_ref().map(|b| PlanSeed::of(&b.setup));
+            }
+        }
+    }
+}
+
+/// A stale incumbent — in-space under the new query but infeasible when
+/// repriced there — must be repriced and discarded, never trusted: the
+/// seeded search runs the identical branch-and-bound as the unseeded
+/// one, bit for bit and counter for counter.
+#[test]
+fn prop_stale_incumbent_is_repriced_and_discarded() {
+    use scalestudy::parallel::{ParallelCfg, PipeSchedule};
+    use scalestudy::planner::{plan_with_seed, PlanSeed};
+    let model = by_name("mt5-xxl").unwrap();
+    let cluster = ClusterSpec::lps_pod(1);
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let cache = SimCache::new();
+    // dp-only ZeRO-0 cannot hold mt5-xxl on one node — a plausible
+    // carry-over from a smaller query that is in-space here but OOM
+    let stale = PlanSeed {
+        nodes: 1,
+        par: ParallelCfg { dp: 8, tp: 1, pp: 1, sp: 1, ep: 1 },
+        stage: ZeroStage::Stage0,
+        opt: OptimizerKind::AdamW,
+        sched: PipeSchedule::OneFOneB,
+        offload: false,
+        micro_batch_cap: 0,
+    };
+    let cold = plan_with(
+        &model, &cluster, &workload, &space, &Objective::StepTime, &sweep, &cache,
+    );
+    let seeded = plan_with_seed(
+        &model, &cluster, &workload, &space, &Objective::StepTime, Some(&stale), &sweep, &cache,
+    );
+    assert_eq!(cold.evaluated, seeded.evaluated, "a discarded seed must not prune anything");
+    assert_eq!(cold.feasible, seeded.feasible, "feasible count diverged");
+    assert_plan_results_bit_identical("stale seed (mt5-xxl 1n)", &cold, &seeded);
+}
+
+/// Persistent plan-cache round-trip through real searches across all
+/// three objectives: plan → save → load → the same queries answer from
+/// disk alone, bit-identically, without pricing a single layout.
+#[test]
+fn prop_plancache_roundtrip_preserves_plan_results() {
+    use scalestudy::plancache::PlanCache;
+    use scalestudy::planner::plan_cached;
+    use scalestudy::resilience::FailureModel;
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let sweep = Sweep::auto();
+    let cache = SimCache::new();
+    let plans = PlanCache::new();
+    let queries: Vec<(&str, usize, Objective)> = vec![
+        ("mt5-small", 1, Objective::StepTime),
+        ("mt5-base", 2, Objective::Goodput(FailureModel::with_mtbf(12.0))),
+        (
+            "mt5-large",
+            2,
+            Objective::CostToTarget(CostToTarget::for_workload(2.6, 30.0, &workload)),
+        ),
+    ];
+    let mut originals = Vec::new();
+    for (name, nodes, obj) in &queries {
+        let model = by_name(name).unwrap();
+        let cluster = ClusterSpec::lps_pod(*nodes);
+        originals.push(plan_cached(
+            &model, &cluster, &workload, &space, obj, None, &sweep, &cache, &plans,
+        ));
+    }
+    assert_eq!(plans.len(), queries.len(), "each query caches one record");
+    assert_eq!(plans.misses(), queries.len());
+    let path = std::env::temp_dir()
+        .join(format!("scalestudy-prop-plancache-{}.json", std::process::id()));
+    plans.save(&path).expect("save");
+    let reloaded = PlanCache::load(&path);
+    assert_eq!(reloaded.len(), queries.len(), "reload must keep every record");
+    let cold_sim = SimCache::new();
+    for ((name, nodes, obj), orig) in queries.iter().zip(&originals) {
+        let model = by_name(name).unwrap();
+        let cluster = ClusterSpec::lps_pod(*nodes);
+        let again = plan_cached(
+            &model, &cluster, &workload, &space, obj, None, &sweep, &cold_sim, &reloaded,
+        );
+        let tag = format!("{name} {nodes}n {} from disk", obj.name());
+        assert_eq!(orig.evaluated, again.evaluated, "{tag}: evaluated");
+        assert_eq!(orig.feasible, again.feasible, "{tag}: feasible");
+        assert_plan_results_bit_identical(&tag, orig, &again);
+    }
+    assert_eq!(cold_sim.misses(), 0, "warm plan-cache answers must not price layouts");
+    assert_eq!(reloaded.hits(), queries.len());
+    assert_eq!(reloaded.misses(), 0);
+    let _ = std::fs::remove_file(&path);
+}
+
 // ---------------------------------------------------------- convergence
 
 /// `loss_at` is strictly decreasing in steps for every dense and MoE
