@@ -1,0 +1,132 @@
+//! Bench E11 — trace-replay survival engine: Monte-Carlo goodput
+//! replay throughput (traces/s) for a fixed setup, the worker-count
+//! bit-identity contract re-checked on the exact shapes the numbers are
+//! reported for, and one end-to-end elastic `survive` (plan + survivor
+//! ladder + replay) wall time.  Regression floors live in
+//! `rust/benches/baselines/BENCH_survival.json`.
+
+use scalestudy::benchkit::{Bench, Table};
+use scalestudy::hardware::{BlastDomain, ClusterSpec};
+use scalestudy::json::Json;
+use scalestudy::model::by_name;
+use scalestudy::planner::PlanSpace;
+use scalestudy::resilience::{CheckpointPolicy, FailureModel};
+use scalestudy::sim::{simulate_step, TrainSetup, Workload};
+use scalestudy::survival::{replay_setup, survive, SurvivalSpec};
+use scalestudy::sweep::{SimCache, Sweep};
+use scalestudy::zero::ZeroStage;
+use std::time::Instant;
+
+/// Wall seconds of one call plus its result.
+fn wall<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+fn main() {
+    let mut b = Bench::new("survival");
+    // perf-gate failures are DEFERRED until after b.finish() so a tripped
+    // gate still writes the BENCH_survival.json artifact whose numbers
+    // explain it (the CI upload step runs with `always()`)
+    let mut gate_failures: Vec<String> = Vec::new();
+    let fast = std::env::var("SCALESTUDY_BENCH_FAST").is_ok();
+
+    let model = by_name("mt5-xl").unwrap();
+    let setup = TrainSetup::dp_pod(model.clone(), 4, ZeroStage::Stage2);
+    let step_s = simulate_step(&setup).seconds_per_step();
+    assert!(step_s.is_finite() && step_s > 0.0, "bench setup must be feasible");
+    let mut fm = FailureModel::with_mtbf(2.0);
+    fm.policy = CheckpointPolicy::Async { snapshot_s: 2.0, drain_bw: 2.0e9 };
+    let traces = if fast { 512usize } else { 4096 };
+    let spec = SurvivalSpec { seed: 17, traces, horizon_steps: 4096, elastic: false };
+
+    // ---- determinism first: the replay must be bit-identical at any
+    // worker count BEFORE any throughput number is reported for it
+    let serial = replay_setup(&setup, step_s, &fm, &spec, &Sweep::serial());
+    let pooled = replay_setup(&setup, step_s, &fm, &spec, &Sweep::new(3));
+    assert_eq!(serial.mean_rate.to_bits(), pooled.mean_rate.to_bits());
+    assert_eq!(serial.p50_rate.to_bits(), pooled.p50_rate.to_bits());
+    assert_eq!(serial.p99_rate.to_bits(), pooled.p99_rate.to_bits());
+    assert_eq!(serial.sem_rate.to_bits(), pooled.sem_rate.to_bits());
+    assert!(serial.mean_failures > 0.0, "the bench MTBF must actually produce failures");
+
+    // ---- replay throughput on the shared pool (the serving shape)
+    let sweep = Sweep::auto();
+    let (t_replay, rep) = wall(|| replay_setup(&setup, step_s, &fm, &spec, &sweep));
+    assert_eq!(rep.mean_rate.to_bits(), serial.mean_rate.to_bits());
+    let traces_per_s = traces as f64 / t_replay.max(1e-12);
+    let (t_serial, _) = wall(|| replay_setup(&setup, step_s, &fm, &spec, &Sweep::serial()));
+    let serial_traces_per_s = traces as f64 / t_serial.max(1e-12);
+
+    let mut tab = Table::new(
+        "trace replay (mt5-xl dp4, async ckpt, MTBF 2 h, 4096-step horizon)",
+        &["wall s", "traces/s"],
+    );
+    tab.row("serial", vec![t_serial, serial_traces_per_s]);
+    tab.row("shared pool", vec![t_replay, traces_per_s]);
+    tab.note("both sides replay bit-identically — mean/p50/p99/sem bits compared first");
+    b.table(tab);
+    b.metric("traces_per_s", traces_per_s);
+    b.metric("serial_traces_per_s", serial_traces_per_s);
+    b.metric("mean_failures_per_trace", rep.mean_failures);
+
+    // ---- end-to-end elastic survive: plan, build the survivor ladder,
+    // replay with permanent failures (ungated — it is dominated by the
+    // planner, whose floors live in BENCH_planner/BENCH_whatif)
+    let mut cluster = ClusterSpec::lps_pod(4);
+    cluster.domains.push(BlastDomain {
+        name: "switch".to_string(),
+        size: 2,
+        mtbf_hours: 50.0,
+    });
+    let workload = Workload::table1();
+    let space = PlanSpace::default();
+    let cache = SimCache::new();
+    let elastic_spec = SurvivalSpec {
+        seed: 17,
+        traces: if fast { 64 } else { 256 },
+        horizon_steps: 4096,
+        elastic: true,
+    };
+    let efm = FailureModel::with_mtbf(100.0);
+    let (t_elastic, out) = wall(|| {
+        survive(&model, &cluster, &workload, &space, &efm, &elastic_spec, &sweep, &cache)
+    });
+    let out = out.expect("elastic survive must find a plan for the bench problem");
+    b.metric("elastic_survive_wall_s", t_elastic);
+    b.metric("elastic_mean_replans", out.report.mean_replans);
+    b.metric("elastic_exhausted_traces", out.report.exhausted_traces as f64);
+
+    // ---- regression smoke (CI satellite): replay throughput must not
+    // fall below half the committed floor.  In fast mode (CI) a missing
+    // baseline is a hard error — the gate must not silently self-disable.
+    let baseline = std::path::Path::new("rust/benches/baselines/BENCH_survival.json");
+    if !baseline.exists() && fast {
+        gate_failures.push(format!(
+            "regression baseline {} not found — run the bench from the repo root",
+            baseline.display()
+        ));
+    }
+    if baseline.exists() {
+        let base = Json::parse_file(baseline).expect("committed baseline parses");
+        for (name, measured) in [("traces_per_s", traces_per_s)] {
+            let floor = base.get("floors").get(name).as_f64().expect("baseline floor");
+            if measured < floor / 2.0 {
+                gate_failures.push(format!(
+                    "survival regression: {name} {measured:.0} fell below half the \
+                     committed floor ({floor:.0})"
+                ));
+            }
+            b.metric(&format!("floor_{name}"), floor);
+        }
+    }
+
+    // the artifact is written FIRST, then the deferred perf gates fire
+    b.finish();
+    assert!(
+        gate_failures.is_empty(),
+        "survival perf gates tripped:\n{}",
+        gate_failures.join("\n")
+    );
+}

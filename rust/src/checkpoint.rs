@@ -364,6 +364,50 @@ mod tests {
     }
 
     #[test]
+    fn load_falls_back_to_previous_complete_checkpoint_past_stale_staging() {
+        let dir = tmp("state_stale_load");
+        // A complete checkpoint exists; a LATER save then crashed midway,
+        // leaving a torn `.saving` staging dir beside it.  Restore must
+        // read the previous complete checkpoint and never look at the
+        // staging leftovers.
+        let state = small_state(6);
+        state.save(&dir).unwrap();
+        let staging = dir.with_file_name(format!(
+            "{}.saving",
+            dir.file_name().unwrap().to_string_lossy()
+        ));
+        std::fs::create_dir_all(&staging).unwrap();
+        std::fs::write(staging.join("meta.json"), "{\"step\": 999").unwrap();
+        std::fs::write(staging.join("params.npy"), b"\x93NUMPY torn").unwrap();
+
+        let back = TrainState::load(&dir).unwrap();
+        assert_eq!(back, state, "restore must serve the last complete checkpoint");
+        assert_eq!(back.step, 6, "the torn in-flight step must not surface");
+        // ...and the next successful save discards the stale staging dir.
+        small_state(7).save(&dir).unwrap();
+        assert!(!staging.exists());
+        assert_eq!(TrainState::load(&dir).unwrap().step, 7);
+    }
+
+    #[test]
+    fn save_to_unwritable_target_errors_instead_of_panicking() {
+        // The checkpoint target's parent is a regular FILE — every write
+        // into it must fail.  `save` has to surface a structured error
+        // (the trainer decides whether to retry or keep going), never
+        // panic or leave a half-written directory behind.
+        let base = tmp("state_unwritable");
+        std::fs::write(&base, b"i am a file, not a directory").unwrap();
+        let dir = base.join("ckpt");
+        let err = small_state(8).save(&dir);
+        assert!(err.is_err(), "save into an unwritable target must error");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(!msg.is_empty());
+        // the target itself must not have appeared
+        assert!(!dir.exists());
+        let _ = std::fs::remove_file(&base);
+    }
+
+    #[test]
     fn short_params_array_fails_flat_len_check() {
         let dir = tmp("state_shortlen");
         let state = small_state(5);

@@ -114,6 +114,31 @@ pub struct NodeGroup {
     pub ib_bw: f64,
 }
 
+/// One level of correlated blast domains above the node: every `size`
+/// consecutive nodes (placement order) share a switch, PSU or rack whose
+/// failure takes out all of them at once.  Each level fails as its own
+/// Poisson process at `mtbf_hours` per *domain instance*, so a plan on
+/// `n` nodes sees `ceil(n / size)` instances of this level — interruption
+/// rate grows in coarse steps instead of linearly, punishing wide plans
+/// super-linearly relative to the independent-Poisson model.
+#[derive(Clone, Debug)]
+pub struct BlastDomain {
+    /// Human-readable level name ("switch", "psu", "rack").
+    pub name: String,
+    /// Nodes per domain instance at this level.
+    pub size: usize,
+    /// Mean time between failures of ONE domain instance, in hours.
+    /// `0` (or any non-finite / non-positive value) disables the level.
+    pub mtbf_hours: f64,
+}
+
+impl BlastDomain {
+    /// Does this level contribute failures at all?
+    pub fn enabled(&self) -> bool {
+        self.mtbf_hours.is_finite() && self.mtbf_hours > 0.0 && self.size >= 1
+    }
+}
+
 /// The cluster: a primary node group plus the inter-node fabric, and —
 /// for mixed-generation pods — any number of extra heterogeneous node
 /// groups ([`ClusterSpec::extra_groups`]).  Synchronous training runs at
@@ -152,6 +177,11 @@ pub struct ClusterSpec {
     /// `storage_contention` per extra node (lock convoy / NFS saturation).
     pub storage_threshold_nodes: usize,
     pub storage_contention: f64,
+    /// Correlated failure-domain levels above the node (switch, PSU,
+    /// rack), used by [`crate::resilience::FailureModel`].  Empty (the
+    /// default everywhere) means nodes fail independently — every
+    /// failure-model consumer then takes the exact PR 7 Poisson path.
+    pub domains: Vec<BlastDomain>,
 }
 
 impl ClusterSpec {
@@ -177,6 +207,7 @@ impl ClusterSpec {
             storage_samples_per_s: 480.0,
             storage_threshold_nodes: 4,
             storage_contention: 4.7,
+            domains: Vec::new(),
         }
     }
 
@@ -389,6 +420,23 @@ mod tests {
         // aggregate HBM is per-group exact: 16×80 GiB + 16×32 GiB
         let want = 16.0 * (80.0 + 32.0) * 1024f64.powi(3);
         assert!((c.total_hbm() - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn blast_domains_default_empty_and_propagate_through_views() {
+        let mut c = ClusterSpec::lps_pod(4);
+        assert!(c.domains.is_empty(), "default cluster has no correlated domains");
+        c.domains.push(BlastDomain { name: "switch".into(), size: 2, mtbf_hours: 100.0 });
+        assert!(c.domains[0].enabled());
+        // views and sub-pods carry the topology along
+        assert_eq!(c.limiting_view().domains.len(), 1);
+        assert_eq!(c.take_nodes(2).domains.len(), 1);
+        // a zero/negative/non-finite MTBF disables the level
+        for mtbf in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let d = BlastDomain { name: "off".into(), size: 2, mtbf_hours: mtbf };
+            assert!(!d.enabled(), "mtbf {mtbf} must disable the level");
+        }
+        assert!(!BlastDomain { name: "z".into(), size: 0, mtbf_hours: 1.0 }.enabled());
     }
 
     #[test]

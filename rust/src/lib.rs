@@ -47,6 +47,7 @@ pub mod runconfig;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod survival;
 pub mod sweep;
 pub mod testkit;
 pub mod timeline;

@@ -75,6 +75,17 @@ fn app() -> App {
                     "0",
                     "per-node MTBF in hours; > 0 ranks plans by expected goodput under failures",
                 )
+                .opt("domain-size", "0", "nodes per blast domain (correlated failures; 0 = off)")
+                .opt(
+                    "domain-mtbf-hours",
+                    "0",
+                    "per-domain MTBF in hours (a domain failure takes out every member node)",
+                )
+                .opt("ckpt-policy", "sync", "checkpoint policy: sync, async, or tiered")
+                .opt("snapshot-s", "1", "async/tiered: device-snapshot stall per checkpoint (s)")
+                .opt("drain-bw", "2e9", "async: per-node background drain bandwidth (B/s)")
+                .opt("local-bw", "8e9", "tiered: per-node local-tier write bandwidth (B/s)")
+                .flag("replicate", "tiered: also replicate to the shared tier in the background")
                 .opt(
                     "target-loss",
                     "0",
@@ -119,10 +130,45 @@ fn app() -> App {
                 .opt("nodes", "8", "pod size")
                 .opt("v100-nodes", "0", "extra previous-generation DGX-1V nodes (mixed pod)")
                 .opt("batch", "768", "effective (global) batch size")
-                .opt("axis", "nic", "derate axis: nic, nvlink, jitter, or mtbf")
+                .opt("axis", "nic", "derate axis: nic, nvlink, jitter, mtbf, or domain-mtbf")
                 .opt("factors", "", "comma-separated derate factors (empty = axis default ladder)")
                 .opt("mtbf-hours", "0", "per-node MTBF in hours (prices failures on every point)")
+                .opt("domain-size", "0", "nodes per blast domain (correlated failures; 0 = off)")
+                .opt(
+                    "domain-mtbf-hours",
+                    "0",
+                    "per-domain MTBF in hours (a domain failure takes out every member node)",
+                )
                 .opt("drop-nodes", "0", "also price an elastic replan after losing this many nodes")
+                .opt("workers", "0", "sweep worker threads (0 = all cores)")
+                .flag("no-cache", "skip the persistent SimCache under target/")
+                .flag("json", "print the machine-readable payload (same as the serve front-end)"),
+        )
+        .command(
+            Command::new(
+                "survive",
+                "trace-replay survival: Monte-Carlo goodput distribution for the winning plan",
+            )
+                .opt("model", "mt5-xxl", "zoo model")
+                .opt("nodes", "8", "pod size")
+                .opt("v100-nodes", "0", "extra previous-generation DGX-1V nodes (mixed pod)")
+                .opt("batch", "768", "effective (global) batch size")
+                .opt("mtbf-hours", "0", "per-node MTBF in hours")
+                .opt("domain-size", "0", "nodes per blast domain (correlated failures; 0 = off)")
+                .opt(
+                    "domain-mtbf-hours",
+                    "0",
+                    "per-domain MTBF in hours (a domain failure takes out every member node)",
+                )
+                .opt("ckpt-policy", "sync", "checkpoint policy: sync, async, or tiered")
+                .opt("snapshot-s", "1", "async/tiered: device-snapshot stall per checkpoint (s)")
+                .opt("drain-bw", "2e9", "async: per-node background drain bandwidth (B/s)")
+                .opt("local-bw", "8e9", "tiered: per-node local-tier write bandwidth (B/s)")
+                .flag("replicate", "tiered: also replicate to the shared tier in the background")
+                .opt("seed", "0", "root trace seed (trace i replays with split(i))")
+                .opt("traces", "256", "independent failure traces to replay")
+                .opt("steps", "4096", "useful-step horizon each trace must complete")
+                .flag("elastic", "failures are permanent: shrink + replan from the survivor ladder")
                 .opt("workers", "0", "sweep worker threads (0 = all cores)")
                 .flag("no-cache", "skip the persistent SimCache under target/")
                 .flag("json", "print the machine-readable payload (same as the serve front-end)"),
@@ -178,6 +224,7 @@ fn main() {
                 "plan" => cmd_plan(&m),
                 "plan-to-target" => cmd_plan_to_target(&m),
                 "whatif" => cmd_whatif(&m),
+                "survive" => cmd_survive(&m),
                 "serve" => cmd_serve(&m),
                 "cache" => cmd_cache(&m),
                 "collectives" => cmd_collectives(&m),
@@ -442,7 +489,7 @@ fn save_plan_caches(
 fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
     use scalestudy::objective::{price_run, CostToTarget, Objective};
     use scalestudy::planner::plan_cached;
-    use scalestudy::resilience::{plan_resilient_cached, FailureModel};
+    use scalestudy::resilience::plan_resilient_cached;
     use scalestudy::server::{cost_plan_payload, plan_payload, resilient_plan_payload, PlanQuery};
     use scalestudy::sweep::Sweep;
     // the serve front-end builds the identical problem through the same
@@ -458,10 +505,17 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
         max_ep: m.get_usize("max-ep")?,
         exact_nodes: m.flag("exact-nodes"),
         mtbf_hours: m.get_f64_nonneg("mtbf-hours")?,
+        domain_size: m.get_usize("domain-size")?,
+        domain_mtbf_hours: m.get_f64_nonneg("domain-mtbf-hours")?,
+        ckpt_policy: m.get("ckpt-policy").to_string(),
+        snapshot_s: m.get_f64_nonneg("snapshot-s")?,
+        drain_bw: m.get_f64_nonneg("drain-bw")?,
+        local_bw: m.get_f64_nonneg("local-bw")?,
+        replicate: m.flag("replicate"),
         target_loss: m.get_f64_nonneg("target-loss")?,
         node_cost_per_hour: m.get_f64_nonneg("node-cost-per-hour")?,
     };
-    if q.target_loss > 0.0 && q.mtbf_hours > 0.0 {
+    if q.target_loss > 0.0 && q.failure_aware() {
         anyhow::bail!(
             "--target-loss and --mtbf-hours cannot be combined — \
              a plan ranks by one objective; run the command twice"
@@ -519,9 +573,10 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    if q.mtbf_hours > 0.0 {
+    if q.failure_aware() {
         // failure-aware path: rank by expected goodput under failures
-        let fm = FailureModel::with_mtbf(q.mtbf_hours);
+        // (node-level Poisson, correlated blast domains, or both)
+        let fm = q.failure_model()?;
         let sweep = Sweep::new(m.get_usize("workers")?);
         let (persist, cache, plans) = plan_caches(m.flag("no-cache"));
         let result = plan_resilient_cached(
@@ -533,10 +588,23 @@ fn cmd_plan(m: &Matches) -> anyhow::Result<()> {
             return Ok(());
         }
         println!(
-            "failure-aware plan: {} on {} nodes at per-node MTBF {} h",
+            "failure-aware plan: {} on {} nodes ({} checkpoints){}{}",
             model.name,
             cluster.total_nodes(),
-            q.mtbf_hours
+            q.ckpt_policy,
+            if q.mtbf_hours > 0.0 {
+                format!(", per-node MTBF {} h", q.mtbf_hours)
+            } else {
+                String::new()
+            },
+            if q.domain_size > 0 && q.domain_mtbf_hours > 0.0 {
+                format!(
+                    ", blast domains of {} nodes at MTBF {} h",
+                    q.domain_size, q.domain_mtbf_hours
+                )
+            } else {
+                String::new()
+            },
         );
         let best = match &result.best {
             Some(b) => b,
@@ -755,9 +823,9 @@ fn cmd_plan_to_target(m: &Matches) -> anyhow::Result<()> {
 
 fn cmd_whatif(m: &Matches) -> anyhow::Result<()> {
     use scalestudy::resilience::{
-        phase_boundaries, replan_after_failure, whatif_sweep, FailureModel, WhatIfAxis,
+        phase_boundaries, replan_after_failure, whatif_sweep, WhatIfAxis,
     };
-    use scalestudy::server::{PlanQuery, WhatIfQuery};
+    use scalestudy::server::{cluster_exhausted_payload, PlanQuery, WhatIfAnswer, WhatIfQuery};
     use scalestudy::sweep::{SimCache, Sweep};
     let plan_q = PlanQuery {
         model: m.get("model").to_string(),
@@ -765,6 +833,8 @@ fn cmd_whatif(m: &Matches) -> anyhow::Result<()> {
         v100_nodes: m.get_usize("v100-nodes")?,
         batch: m.get_usize("batch")?,
         mtbf_hours: m.get_f64_nonneg("mtbf-hours")?,
+        domain_size: m.get_usize("domain-size")?,
+        domain_mtbf_hours: m.get_f64_nonneg("domain-mtbf-hours")?,
         ..PlanQuery::default()
     };
     // a NaN or negative derate factor silently disables whatever it
@@ -785,31 +855,37 @@ fn cmd_whatif(m: &Matches) -> anyhow::Result<()> {
             })
             .collect::<anyhow::Result<Vec<f64>>>()?,
     };
-    let q = WhatIfQuery { plan: plan_q, axis: m.get("axis").to_string(), factors };
+    let q = WhatIfQuery {
+        plan: plan_q,
+        axis: m.get("axis").to_string(),
+        factors,
+        drop_nodes: m.get_usize("drop-nodes")?,
+    };
     let axis = WhatIfAxis::parse(&q.axis)
-        .ok_or_else(|| anyhow::anyhow!("axis must be nic, nvlink, jitter, or mtbf"))?;
+        .ok_or_else(|| anyhow::anyhow!("axis must be nic, nvlink, jitter, mtbf, or domain-mtbf"))?;
     let sweep = Sweep::new(m.get_usize("workers")?);
     let persist = !m.flag("no-cache");
     let cache = if persist { SimCache::load_default() } else { SimCache::new() };
     if m.flag("json") {
         // the serve front-end answers `whatif` through the same
         // WhatIfQuery::run, so socket answers match this bit-for-bit
-        let payload = q.run(&sweep, &cache)?;
+        let answer = q.run(&sweep, &cache)?;
         if persist {
             if let Err(e) = cache.save_default() {
                 eprintln!("warning: could not persist SimCache: {e:#}");
             }
         }
-        println!("{}", payload.dumps());
+        match answer {
+            WhatIfAnswer::Payload(payload) => println!("{}", payload.dumps()),
+            // the structured error body, field-for-field what serve
+            // answers — clients match on error_kind, not exit status
+            WhatIfAnswer::Exhausted(e) => println!("{}", cluster_exhausted_payload(&e).dumps()),
+        }
         return Ok(());
     }
     let (model, cluster, workload, space) = q.plan.problem()?;
     let ladder = if q.factors.is_empty() { axis.default_factors() } else { q.factors.clone() };
-    let fm = if q.plan.mtbf_hours > 0.0 {
-        FailureModel::with_mtbf(q.plan.mtbf_hours)
-    } else {
-        FailureModel::disabled()
-    };
+    let fm = q.plan.failure_model()?;
     let points =
         whatif_sweep(&model, &cluster, &workload, &space, axis, &ladder, &fm, &sweep, &cache);
     let bounds = phase_boundaries(&points);
@@ -844,25 +920,124 @@ fn cmd_whatif(m: &Matches) -> anyhow::Result<()> {
             println!("  between {} and {}: {} -> {}", b.lo, b.hi, b.from, b.to);
         }
     }
-    let drop = m.get_usize("drop-nodes")?;
+    let drop = q.drop_nodes;
     if drop > 0 {
-        let r = replan_after_failure(&model, &cluster, &workload, &space, &fm, drop, &sweep, &cache)?;
-        println!("\nelastic replan after losing {drop} node(s): {} survivors", r.survivors);
-        match &r.result.best {
-            Some(b) => {
-                println!("  new plan: {}", b.point.describe());
+        match replan_after_failure(&model, &cluster, &workload, &space, &fm, drop, &sweep, &cache) {
+            Ok(r) => {
                 println!(
-                    "  restart cost ~{:.0} s (checkpoint restore + restart overhead + expected rework)",
-                    r.restart_cost_s
+                    "\nelastic replan after losing {drop} node(s): {} survivors",
+                    r.survivors
                 );
+                match &r.result.best {
+                    Some(b) => {
+                        println!("  new plan: {}", b.point.describe());
+                        println!(
+                            "  restart cost ~{:.0} s (checkpoint restore + restart overhead + expected rework)",
+                            r.restart_cost_s
+                        );
+                    }
+                    None => println!("  nothing fits on the survivor cluster"),
+                }
             }
-            None => println!("  nothing fits on the survivor cluster"),
+            // not a CLI failure: the sweep above still answered — report
+            // the exhaustion the same way serve does, without bailing
+            Err(e) => println!("\nelastic replan: cluster exhausted — {e}"),
         }
     }
     if persist {
         if let Err(e) = cache.save_default() {
             eprintln!("warning: could not persist SimCache: {e:#}");
         }
+    }
+    Ok(())
+}
+
+fn cmd_survive(m: &Matches) -> anyhow::Result<()> {
+    use scalestudy::server::{PlanQuery, SurviveQuery};
+    use scalestudy::survival;
+    use scalestudy::sweep::{SimCache, Sweep};
+    let q = SurviveQuery {
+        plan: PlanQuery {
+            model: m.get("model").to_string(),
+            nodes: m.get_usize("nodes")?,
+            v100_nodes: m.get_usize("v100-nodes")?,
+            batch: m.get_usize("batch")?,
+            mtbf_hours: m.get_f64_nonneg("mtbf-hours")?,
+            domain_size: m.get_usize("domain-size")?,
+            domain_mtbf_hours: m.get_f64_nonneg("domain-mtbf-hours")?,
+            ckpt_policy: m.get("ckpt-policy").to_string(),
+            snapshot_s: m.get_f64_nonneg("snapshot-s")?,
+            drain_bw: m.get_f64_nonneg("drain-bw")?,
+            local_bw: m.get_f64_nonneg("local-bw")?,
+            replicate: m.flag("replicate"),
+            ..PlanQuery::default()
+        },
+        seed: m.get_u64("seed")?,
+        traces: m.get_usize("traces")?,
+        steps: m.get_usize("steps")?,
+        elastic: m.flag("elastic"),
+    };
+    let sweep = Sweep::new(m.get_usize("workers")?);
+    let persist = !m.flag("no-cache");
+    let cache = if persist { SimCache::load_default() } else { SimCache::new() };
+    if m.flag("json") {
+        // the serve front-end answers `survive` through the same
+        // SurviveQuery::run, so socket answers match this bit-for-bit
+        let payload = q.run(&sweep, &cache)?;
+        if persist {
+            if let Err(e) = cache.save_default() {
+                eprintln!("warning: could not persist SimCache: {e:#}");
+            }
+        }
+        println!("{}", payload.dumps());
+        return Ok(());
+    }
+    if !q.plan.failure_aware() {
+        anyhow::bail!(
+            "survive needs a failure source: set --mtbf-hours and/or \
+             --domain-size + --domain-mtbf-hours"
+        );
+    }
+    let (model, cluster, workload, space) = q.plan.problem()?;
+    let fm = q.plan.failure_model()?;
+    let spec = q.spec();
+    let out = survival::survive(&model, &cluster, &workload, &space, &fm, &spec, &sweep, &cache)
+        .ok_or_else(|| {
+            anyhow::anyhow!("no feasible plan — every configuration overflows HBM at this scale")
+        })?;
+    if persist {
+        if let Err(e) = cache.save_default() {
+            eprintln!("warning: could not persist SimCache: {e:#}");
+        }
+    }
+    let r = &out.report;
+    println!(
+        "survival replay: {} on {} nodes, {} traces x {} useful steps{}",
+        model.name,
+        out.nodes,
+        r.traces,
+        r.horizon_steps,
+        if r.elastic { " (elastic: failures are permanent)" } else { "" },
+    );
+    println!("  plan: {}", out.label);
+    println!(
+        "  failure-free step {:.3} s; checkpoint every {} steps ({} policy)",
+        out.seconds_per_step, out.interval_steps, q.plan.ckpt_policy
+    );
+    println!("  analytic goodput  {:.5} useful steps/s", r.analytic_rate);
+    println!(
+        "  replayed goodput  {:.5} mean / {:.5} p50 / {:.5} p99 (sem {:.2e})",
+        r.mean_rate, r.p50_rate, r.p99_rate, r.sem_rate
+    );
+    println!(
+        "  per trace: {:.2} failures, {:.2} replans, {:.0} s of lost work",
+        r.mean_failures, r.mean_replans, r.mean_lost_s
+    );
+    if r.exhausted_traces > 0 {
+        println!(
+            "  {} of {} traces exhausted the cluster before finishing",
+            r.exhausted_traces, r.traces
+        );
     }
     Ok(())
 }
@@ -1186,6 +1361,82 @@ mod tests {
         std::env::remove_var("SCALESTUDY_SIMCACHE");
         std::env::remove_var("SCALESTUDY_PLANCACHE");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn parse_run(argv: &[&str]) -> (String, Matches) {
+        let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        match app().parse(&argv) {
+            Ok((name, Parsed::Run(m))) => (name, m),
+            Ok((name, Parsed::Help(_))) => panic!("unexpected help parse for '{name}'"),
+            Err(e) => panic!("parse error: {e}"),
+        }
+    }
+
+    /// The resilience front-end flags parse end-to-end: the `survive`
+    /// subcommand resolves with its replay knobs, and `plan`/`whatif`
+    /// accept the blast-domain + checkpoint-policy flags.
+    #[test]
+    fn survive_and_domain_flags_parse() {
+        let (name, m) = parse_run(&[
+            "survive",
+            "--model",
+            "mt5-small",
+            "--nodes",
+            "2",
+            "--mtbf-hours",
+            "0.5",
+            "--ckpt-policy",
+            "tiered",
+            "--replicate",
+            "--seed",
+            "9",
+            "--traces",
+            "32",
+            "--steps",
+            "512",
+            "--elastic",
+            "--json",
+        ]);
+        assert_eq!(name, "survive");
+        assert_eq!(m.get("ckpt-policy"), "tiered");
+        assert!(m.flag("replicate") && m.flag("elastic") && m.flag("json"));
+        assert_eq!(m.get_u64("seed").unwrap(), 9);
+        assert_eq!(m.get_usize("traces").unwrap(), 32);
+
+        let (_, p) = parse_run(&[
+            "plan",
+            "--model",
+            "mt5-small",
+            "--domain-size",
+            "2",
+            "--domain-mtbf-hours",
+            "100",
+            "--ckpt-policy",
+            "async",
+            "--snapshot-s",
+            "2.5",
+            "--drain-bw",
+            "1e9",
+        ]);
+        assert_eq!(p.get_usize("domain-size").unwrap(), 2);
+        assert_eq!(p.get_f64_nonneg("domain-mtbf-hours").unwrap(), 100.0);
+        assert_eq!(p.get("ckpt-policy"), "async");
+        assert_eq!(p.get_f64_nonneg("snapshot-s").unwrap(), 2.5);
+
+        let (_, w) = parse_run(&[
+            "whatif",
+            "--axis",
+            "domain-mtbf",
+            "--domain-size",
+            "4",
+            "--domain-mtbf-hours",
+            "200",
+            "--drop-nodes",
+            "3",
+        ]);
+        assert_eq!(w.get("axis"), "domain-mtbf");
+        assert_eq!(w.get_usize("drop-nodes").unwrap(), 3);
+        assert_eq!(w.get_usize("domain-size").unwrap(), 4);
     }
 }
 

@@ -51,7 +51,7 @@ use std::sync::Mutex;
 /// plan-coordinate set, or anything that feeds the planner's pricing
 /// changes; files under any other version load empty (a stale plan must
 /// never survive a pricing change — a cold start merely re-searches).
-pub const PLANCACHE_SCHEMA_VERSION: u64 = 1;
+pub const PLANCACHE_SCHEMA_VERSION: u64 = 2;
 
 /// Default bound on resident plans.  Whole plan results are much heavier
 /// than single step pricings (a frontier can hold dozens of points), so
@@ -140,6 +140,13 @@ impl PlanKey {
                 g.ib_bw.to_bits(),
             ]);
         }
+        // Blast-domain topology re-ranks Goodput plans, so it is part of
+        // the key even though it never changes failure-free step times.
+        f.push(cluster.domains.len() as u64);
+        for d in &cluster.domains {
+            f.push(d.size as u64);
+            f.push(d.mtbf_hours.to_bits());
+        }
         // ---- workload
         f.extend_from_slice(&[
             workload.global_batch as u64,
@@ -178,6 +185,20 @@ impl PlanKey {
                     fm.shared_bw.to_bits(),
                     fm.restart_overhead_s.to_bits(),
                 ]);
+                // Checkpoint policy: discriminant + a fixed-width slot
+                // per parameter (zeros for the variants that lack one).
+                let (disc, a, b, c) = match fm.policy {
+                    crate::resilience::CheckpointPolicy::Sync => (0u64, 0u64, 0u64, 0u64),
+                    crate::resilience::CheckpointPolicy::Async { snapshot_s, drain_bw } => {
+                        (1, snapshot_s.to_bits(), drain_bw.to_bits(), 0)
+                    }
+                    crate::resilience::CheckpointPolicy::Tiered {
+                        local_bw,
+                        shared_bw,
+                        replicate,
+                    } => (2, local_bw.to_bits(), shared_bw.to_bits(), replicate as u64),
+                };
+                f.extend_from_slice(&[disc, a, b, c]);
             }
             Objective::CostToTarget(c) => {
                 f.extend_from_slice(&[
@@ -830,6 +851,47 @@ mod tests {
         );
         // identical inputs agree
         assert_eq!(k(&a, &c2, &st), k(&a, &c2, &Objective::StepTime));
+        // blast-domain topology is part of the cluster digest even when
+        // failure-free step times are untouched
+        let mut domained = c2.clone();
+        domained.domains = vec![crate::hardware::BlastDomain {
+            name: "switch".into(),
+            size: 2,
+            mtbf_hours: 100.0,
+        }];
+        assert_ne!(k(&a, &c2, &st), k(&a, &domained, &st));
+        let mut wider_domain = domained.clone();
+        wider_domain.domains[0].mtbf_hours = 200.0;
+        assert_ne!(k(&a, &domained, &st), k(&a, &wider_domain, &st));
+        // checkpoint policy is part of the Goodput objective digest
+        let fm = FailureModel::with_mtbf(6.0);
+        let mut async_fm = fm.clone();
+        async_fm.policy =
+            crate::resilience::CheckpointPolicy::Async { snapshot_s: 2.0, drain_bw: 2.0e9 };
+        let mut tiered_fm = fm.clone();
+        tiered_fm.policy = crate::resilience::CheckpointPolicy::Tiered {
+            local_bw: 5.0e9,
+            shared_bw: 1.0e8,
+            replicate: true,
+        };
+        assert_ne!(
+            k(&a, &c2, &Objective::Goodput(fm.clone())),
+            k(&a, &c2, &Objective::Goodput(async_fm.clone())),
+        );
+        assert_ne!(
+            k(&a, &c2, &Objective::Goodput(async_fm)),
+            k(&a, &c2, &Objective::Goodput(tiered_fm.clone())),
+        );
+        let mut unreplicated = tiered_fm.clone();
+        if let crate::resilience::CheckpointPolicy::Tiered { replicate, .. } =
+            &mut unreplicated.policy
+        {
+            *replicate = false;
+        }
+        assert_ne!(
+            k(&a, &c2, &Objective::Goodput(tiered_fm)),
+            k(&a, &c2, &Objective::Goodput(unreplicated)),
+        );
     }
 
     /// Capacity bound: oldest-inserted entries evict first, counters and

@@ -13,12 +13,39 @@
 //! [`FailureModel::mtbf_hours`]; a plan running on `n` nodes fails at the
 //! cluster rate λ = n / MTBF — the *blast radius* term that lets a slower
 //! 4-node plan beat a faster 8-node plan once failures are priced.
+//! On top of the independent per-node process, a cluster may declare
+//! **correlated blast-domain levels** ([`crate::hardware::BlastDomain`]
+//! on [`ClusterSpec::domains`]): every `size` consecutive nodes share a
+//! switch / PSU / rack that fails as its own Poisson process and takes
+//! out all of them at once.  A plan on `n` nodes then adds
+//! `ceil(n / size) / MTBF_level` per level to λ
+//! ([`FailureModel::lambda_for`]) — the rate climbs in coarse steps at
+//! domain boundaries, so wide plans are punished super-linearly relative
+//! to the independent model.  An empty `domains` list (the default
+//! everywhere) routes through the exact PR 7 expressions, bit for bit.
 //! Checkpoint write/restore cost derives from the **same ZeRO state-bytes
 //! expression the memory model prices** ([`crate::zero::checkpoint_bytes`]
 //! via [`crate::sim::checkpoint_state_bytes`]): fp16 parameters + the fp32
 //! optimizer master state, (2 + K)·Ψ bytes, streamed at
 //! `min(shared_bw, nodes · per_node_bw)` (ZeRO-sharded writers scale with
 //! the pod until the shared storage front-end binds).
+//!
+//! ## Checkpoint policies
+//!
+//! [`CheckpointPolicy`] decides what part of a checkpoint lands on the
+//! step's critical path.  `Sync` is the PR 7 model: the full write
+//! blocks training.  `Async` stalls only for the in-HBM snapshot and
+//! drains the persist against compute; `Tiered` snapshots to node-local
+//! NVMe (optionally replicating to a buddy node) and drains to the
+//! shared tier, with restore preferring the nearest surviving tier
+//! (rate-weighted over the failure topology).  Drained I/O is absorbed
+//! at [`crate::timeline::checkpoint_drain_budget`] seconds per step —
+//! the timeline engine's fluid comm-stream overlap budget applied to the
+//! backward-pass share of a step — and only the spill past the budget
+//! is charged.  This moves the Young/Daly optimum (δ_eff ≪ δ_full): the
+//! interval optimizer becomes piecewise
+//! ([`optimal_interval_steps_policy`]) and is re-proved against brute
+//! force under every policy.
 //!
 //! The checkpoint interval is chosen Young/Daly-style: the period
 //! minimizing expected wall time per useful step has the closed form
@@ -58,16 +85,18 @@
 //!
 //! ## What-if sweeps
 //!
-//! [`whatif_sweep`] replans under derated NIC/NVLink rates or per-node
-//! straggler jitter (one slow node priced through PR 3's heterogeneous
-//! slowest-participant machinery) or a ladder of MTBFs, and
+//! [`whatif_sweep`] replans under derated NIC/NVLink rates, seeded
+//! per-micro-batch compute jitter (measured p99 step time through the
+//! timeline engine; the whole-node straggler reshaping survives as
+//! [`jitter_cluster`]), or a ladder of per-node or blast-domain MTBFs,
+//! and
 //! [`phase_boundaries`] reports where the winning plan *flips* — the
 //! phase structure of plan space that LLMSFTComBenchmarking measures
 //! empirically.  [`replan_after_failure`] prices elastic recovery: drop
 //! `k` nodes, replan on the survivor cluster, and price the restart from
 //! the last checkpoint.
 
-use crate::hardware::{ClusterSpec, NodeGroup};
+use crate::hardware::{BlastDomain, ClusterSpec, NodeGroup};
 use crate::model::ModelCfg;
 use crate::objective::Objective;
 use crate::plancache::PlanCache;
@@ -77,6 +106,12 @@ use crate::sweep::{SimCache, Sweep};
 
 /// Seconds per hour (the MTBF knob is in hours; the model runs in seconds).
 const HOUR_S: f64 = 3600.0;
+
+/// Fixed seed and sample count for the measured-p99 jitter pricing in
+/// [`whatif_sweep`] — module constants so the CLI and serve front-ends
+/// stay byte-identical on the jitter axis.
+const JITTER_SEED: u64 = 0x5CA1_AB1E;
+const JITTER_SAMPLES: usize = 64;
 
 /// Per-node failure statistics plus the checkpoint I/O path.
 #[derive(Clone, Debug)]
@@ -95,6 +130,9 @@ pub struct FailureModel {
     /// Fixed restart cost per failure (seconds): requeue, scheduler,
     /// process launch, NCCL re-init — everything that is not restore I/O.
     pub restart_overhead_s: f64,
+    /// How checkpoints hit the critical path ([`CheckpointPolicy`]).
+    /// `Sync` (the default) is the exact PR 7 blocking-write model.
+    pub policy: CheckpointPolicy,
 }
 
 impl Default for FailureModel {
@@ -109,7 +147,53 @@ impl Default for FailureModel {
             read_bw: 2e9,
             shared_bw: 20e9,
             restart_overhead_s: 180.0,
+            policy: CheckpointPolicy::Sync,
         }
+    }
+}
+
+/// What part of a checkpoint lands on the step's critical path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CheckpointPolicy {
+    /// The PR 7 model: the full write blocks training
+    /// (δ = bytes / min(nodes·write_bw, shared_bw) on the critical
+    /// path), restore reads the shared tier.
+    Sync,
+    /// Snapshot-then-drain: training stalls only for the in-HBM/host
+    /// snapshot, then the persist drains against compute inside the
+    /// per-step overlap budget ([`crate::timeline::checkpoint_drain_budget`]);
+    /// only drain spilling past the budget is charged.  Restore reads
+    /// the shared tier like `Sync`.
+    Async {
+        /// Critical-path stall per checkpoint (seconds): the
+        /// device-side snapshot of the (2 + K)·Ψ state.
+        snapshot_s: f64,
+        /// Per-node drain bandwidth to persistent storage (bytes/s),
+        /// still capped by the model's shared front-end ceiling.
+        drain_bw: f64,
+    },
+    /// Two-tier: snapshot to node-local NVMe at `local_bw` per node —
+    /// the only critical-path stall, doubled when `replicate` also
+    /// copies each shard to a buddy node — then drain to the shared
+    /// tier at `shared_bw` aggregate.  Restore prefers the nearest
+    /// surviving tier: with replication, node-level failures restore
+    /// from the buddy's local shard and only domain-level failures fall
+    /// back to the shared tier (expected restore is rate-weighted over
+    /// the failure topology); without replication every restore reads
+    /// the shared tier.
+    Tiered {
+        /// Per-node local-tier (NVMe) bandwidth, bytes/s.
+        local_bw: f64,
+        /// Shared-tier aggregate drain/read bandwidth, bytes/s.
+        shared_bw: f64,
+        /// Replicate each local shard to a buddy node.
+        replicate: bool,
+    },
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> CheckpointPolicy {
+        CheckpointPolicy::Sync
     }
 }
 
@@ -137,24 +221,129 @@ impl FailureModel {
         nodes.max(1) as f64 / (self.mtbf_hours * HOUR_S)
     }
 
-    /// Checkpoint write/restore cost for one setup.  Bytes come from the
-    /// same ZeRO expression the memory model prices
-    /// ([`sim::checkpoint_state_bytes`]); bandwidth is `nodes` sharded
-    /// writers against the shared front-end ceiling.
+    /// Cluster interruption rate (failures/second) for a plan on
+    /// `cluster`: the independent per-node term plus one Poisson term
+    /// per enabled correlated blast-domain level
+    /// ([`ClusterSpec::domains`]).  A plan spanning `n` nodes touches
+    /// `ceil(n / size)` instances of each level, so the rate climbs in
+    /// coarse steps at domain boundaries.  With no domains declared
+    /// this is exactly [`FailureModel::lambda_per_s`], bit for bit.
+    pub fn lambda_for(&self, cluster: &ClusterSpec) -> f64 {
+        let n = cluster.total_nodes();
+        let mut lambda = self.lambda_per_s(n);
+        for d in &cluster.domains {
+            if d.enabled() {
+                let instances = (n.max(1) as f64 / d.size.max(1) as f64).ceil();
+                lambda += instances / (d.mtbf_hours * HOUR_S);
+            }
+        }
+        lambda
+    }
+
+    /// Does any failure source fire on `cluster` — the per-node process
+    /// or at least one enabled blast-domain level?  (A domain-only
+    /// model, `mtbf_hours = 0` with declared domains, still prices
+    /// failures.)  With no domains declared this is exactly
+    /// [`FailureModel::enabled`].
+    pub fn enabled_for(&self, cluster: &ClusterSpec) -> bool {
+        self.enabled() || cluster.domains.iter().any(|d| d.enabled())
+    }
+
+    /// The per-level failure decomposition the survival engine samples
+    /// from: the node level (one instance per node) plus every enabled
+    /// blast-domain level.  The level rates sum to
+    /// [`FailureModel::lambda_for`] in the same order, bit for bit.
+    pub fn topology(&self, cluster: &ClusterSpec) -> FailureTopology {
+        let n = cluster.total_nodes();
+        let mut levels = Vec::new();
+        if self.enabled() {
+            levels.push(FailureLevel {
+                name: "node".into(),
+                size: 1,
+                mtbf_hours: self.mtbf_hours,
+                instances: n.max(1),
+                lambda_per_s: self.lambda_per_s(n),
+            });
+        }
+        for d in &cluster.domains {
+            if d.enabled() {
+                let instances = (n.max(1) as f64 / d.size.max(1) as f64).ceil();
+                levels.push(FailureLevel {
+                    name: d.name.clone(),
+                    size: d.size.max(1),
+                    mtbf_hours: d.mtbf_hours,
+                    instances: instances as usize,
+                    lambda_per_s: instances / (d.mtbf_hours * HOUR_S),
+                });
+            }
+        }
+        FailureTopology { levels }
+    }
+
+    /// How the interruption rate splits between node-level failures
+    /// (the failed node's local tier is lost but a replicated buddy
+    /// shard survives) and domain-level failures (whole blast domains
+    /// die — only the shared tier survives).  `(1.0, 0.0)` when nothing
+    /// fails at all, so a disabled model still prices an optimistic
+    /// local restore.
+    fn failure_shares(&self, cluster: &ClusterSpec) -> (f64, f64) {
+        let node = self.lambda_per_s(cluster.total_nodes());
+        let total = self.lambda_for(cluster);
+        if !(total > 0.0) {
+            return (1.0, 0.0);
+        }
+        let node_share = node / total;
+        (node_share, 1.0 - node_share)
+    }
+
+    /// Checkpoint cost for one setup under the model's
+    /// [`CheckpointPolicy`].  Bytes come from the same ZeRO expression
+    /// the memory model prices ([`sim::checkpoint_state_bytes`]);
+    /// `write_s` is the critical-path stall, `drain_s` the overlappable
+    /// persist I/O (zero for `Sync`), `restore_s` the expected restore
+    /// read.  The `Sync` arm is the exact PR 7 expression.
     pub fn checkpoint_cost(&self, setup: &TrainSetup) -> CheckpointCost {
         let bytes = sim::checkpoint_state_bytes(setup);
         let nodes = setup.cluster.total_nodes().max(1) as f64;
-        let write = (nodes * self.write_bw).min(self.shared_bw);
-        let read = (nodes * self.read_bw).min(self.shared_bw);
         let per = |bw: f64| if bw > 0.0 { bytes / bw } else { f64::INFINITY };
-        CheckpointCost { bytes, write_s: per(write), restore_s: per(read) }
+        match &self.policy {
+            CheckpointPolicy::Sync => {
+                let write = (nodes * self.write_bw).min(self.shared_bw);
+                let read = (nodes * self.read_bw).min(self.shared_bw);
+                CheckpointCost { bytes, write_s: per(write), drain_s: 0.0, restore_s: per(read) }
+            }
+            CheckpointPolicy::Async { snapshot_s, drain_bw } => {
+                let read = (nodes * self.read_bw).min(self.shared_bw);
+                CheckpointCost {
+                    bytes,
+                    write_s: snapshot_s.max(0.0),
+                    drain_s: per((nodes * drain_bw).min(self.shared_bw)),
+                    restore_s: per(read),
+                }
+            }
+            CheckpointPolicy::Tiered { local_bw, shared_bw, replicate } => {
+                let copies = if *replicate { 2.0 } else { 1.0 };
+                let local = per(nodes * local_bw);
+                let shared = per(*shared_bw);
+                let restore = if *replicate {
+                    // nearest surviving tier, rate-weighted: a node
+                    // failure leaves the buddy's local shard, a domain
+                    // failure only the shared tier
+                    let (node_share, domain_share) = self.failure_shares(&setup.cluster);
+                    node_share * local + domain_share * shared
+                } else {
+                    shared
+                };
+                CheckpointCost { bytes, write_s: copies * local, drain_s: shared, restore_s: restore }
+            }
+        }
     }
 
     /// Expected goodput of a plan priced at `step_s` seconds/step.
     pub fn goodput(&self, setup: &TrainSetup, step_s: f64) -> Goodput {
         let ckpt = self.checkpoint_cost(setup);
-        let lambda = self.lambda_per_s(setup.cluster.total_nodes());
-        if !self.enabled() || !(step_s.is_finite() && step_s > 0.0) {
+        let lambda = self.lambda_for(&setup.cluster);
+        if !self.enabled_for(&setup.cluster) || !(step_s.is_finite() && step_s > 0.0) {
             // exact failure-free degeneration: no checkpoints, no rework
             return Goodput {
                 interval_steps: 0,
@@ -166,8 +355,13 @@ impl FailureModel {
             };
         }
         let recovery = ckpt.restore_s + self.restart_overhead_s;
-        let m = optimal_interval_steps(step_s, ckpt.write_s, lambda, recovery);
-        let eff = effective_seconds_per_step(m, step_s, ckpt.write_s, lambda, recovery);
+        let budget = crate::timeline::checkpoint_drain_budget(step_s);
+        let m = optimal_interval_steps_policy(
+            step_s, ckpt.write_s, ckpt.drain_s, budget, lambda, recovery,
+        );
+        let eff = effective_seconds_per_step_policy(
+            m, step_s, ckpt.write_s, ckpt.drain_s, budget, lambda, recovery,
+        );
         Goodput {
             interval_steps: m,
             checkpoint_write_s: ckpt.write_s,
@@ -179,14 +373,50 @@ impl FailureModel {
     }
 }
 
+/// The per-level failure decomposition of one (model, cluster) pair —
+/// what [`crate::survival`] samples failure traces from.
+#[derive(Clone, Debug)]
+pub struct FailureTopology {
+    pub levels: Vec<FailureLevel>,
+}
+
+impl FailureTopology {
+    /// Total interruption rate across every level — equals
+    /// [`FailureModel::lambda_for`] bit for bit (same summation order).
+    pub fn total_lambda_per_s(&self) -> f64 {
+        self.levels.iter().fold(0.0, |acc, l| acc + l.lambda_per_s)
+    }
+}
+
+/// One level of the failure topology: `instances` independent Poisson
+/// processes, each killing `size` nodes at once when it fires.
+#[derive(Clone, Debug)]
+pub struct FailureLevel {
+    /// Level name ("node", "switch", "psu", "rack").
+    pub name: String,
+    /// Nodes lost per failure at this level.
+    pub size: usize,
+    /// MTBF of ONE instance, in hours.
+    pub mtbf_hours: f64,
+    /// Instances the plan spans (`ceil(nodes / size)`).
+    pub instances: usize,
+    /// Aggregate failure rate of the level (failures/second).
+    pub lambda_per_s: f64,
+}
+
 /// Checkpoint I/O cost for one setup.
 #[derive(Clone, Copy, Debug)]
 pub struct CheckpointCost {
     /// Unique persisted bytes: (2 + K)·Ψ, fp16 params + fp32 opt state.
     pub bytes: f64,
-    /// Seconds to write one checkpoint (δ in the interval model).
+    /// Critical-path stall per checkpoint (δ₀ in the interval model):
+    /// the full write under `Sync`, only the snapshot otherwise.
     pub write_s: f64,
-    /// Seconds to read it back on restart.
+    /// Persist I/O that drains against compute (0 under `Sync`); the
+    /// part exceeding the per-period overlap budget spills back onto
+    /// the critical path.
+    pub drain_s: f64,
+    /// Expected seconds to read the checkpoint back on restart.
     pub restore_s: f64,
 }
 
@@ -244,6 +474,102 @@ pub fn optimal_interval_steps(step_s: f64, delta: f64, lambda: f64, recovery: f6
     let mut best_eff = effective_seconds_per_step(1, step_s, delta, lambda, recovery);
     for m in lo..=hi {
         let eff = effective_seconds_per_step(m, step_s, delta, lambda, recovery);
+        if eff < best_eff {
+            best_eff = eff;
+            best = m;
+        }
+    }
+    best
+}
+
+/// Expected wall seconds per useful step under a checkpoint policy with
+/// a drained component: per period of `m` steps, training stalls for
+/// `stall0` (the snapshot) while `drain_s` of persist I/O overlaps with
+/// the following steps at `budget_per_step` seconds absorbed per step
+/// ([`crate::timeline::checkpoint_drain_budget`]); only the spill past
+/// `m · budget` lands on the critical path.  `drain_s <= 0` routes to
+/// the synchronous expression unchanged — same arguments, same bits —
+/// which is what keeps the `Sync` policy exactly PR 7.
+pub fn effective_seconds_per_step_policy(
+    m: usize,
+    step_s: f64,
+    stall0: f64,
+    drain_s: f64,
+    budget_per_step: f64,
+    lambda: f64,
+    recovery: f64,
+) -> f64 {
+    if drain_s <= 0.0 {
+        return effective_seconds_per_step(m, step_s, stall0, lambda, recovery);
+    }
+    let m = m.max(1);
+    let spill = (drain_s - m as f64 * budget_per_step).max(0.0);
+    let delta = stall0 + spill;
+    let w = m as f64 * step_s + delta;
+    w * (1.0 + lambda * (w / 2.0 + recovery)) / m as f64
+}
+
+/// [`optimal_interval_steps`] generalized to checkpoint policies with a
+/// drained component.  The objective is piecewise in `m`: below the
+/// absorption threshold `m_th = ceil(drain_s / budget)` the effective
+/// checkpoint cost is `δ(m) = stall0 + drain_s − m·budget` (the period
+/// slope shrinks to `s − budget`), above it `δ(m) = stall0`.  Each
+/// regime is the synchronous objective under a substitution, so each
+/// has its own Young/Daly closed form and is strictly unimodal; the
+/// discrete optimum sits adjacent to one of the two closed-form seeds
+/// or the regime boundary.  A short scan over that candidate set (plus
+/// the `m = 1` boundary) settles integrality — property-tested optimal
+/// against a full brute-force sweep like the synchronous optimizer.
+/// `drain_s <= 0` routes to [`optimal_interval_steps`] unchanged.
+pub fn optimal_interval_steps_policy(
+    step_s: f64,
+    stall0: f64,
+    drain_s: f64,
+    budget_per_step: f64,
+    lambda: f64,
+    recovery: f64,
+) -> usize {
+    if drain_s <= 0.0 {
+        return optimal_interval_steps(step_s, stall0, lambda, recovery);
+    }
+    if !(lambda > 0.0) || !(step_s > 0.0) {
+        return 1; // degenerate inputs: any interval is equivalent
+    }
+    let mut cands: Vec<usize> = vec![1];
+    // closed-form seed of the synchronous objective at effective cost
+    // `delta` and per-step period slope `slope`:
+    // W* = δ + √(δ² + 2δ(1 + λR)/λ), m* = (W* − δ)/slope
+    let mut push_seed = |delta: f64, slope: f64| {
+        if !(delta > 0.0) || !(slope > 0.0) {
+            return; // free checkpoints / absorbed slope: boundary wins
+        }
+        let span = (delta * delta + 2.0 * delta * (1.0 + lambda * recovery) / lambda).sqrt();
+        let seed = (span / slope).round().clamp(1.0, 1e15) as usize;
+        for m in seed.saturating_sub(4).max(1)..=seed.saturating_add(4) {
+            cands.push(m);
+        }
+    };
+    // spill regime (m below the absorption threshold)
+    push_seed(stall0 + drain_s, step_s - budget_per_step);
+    // absorbed regime (the drain hides entirely)
+    push_seed(stall0, step_s);
+    // the regime boundary itself
+    if budget_per_step > 0.0 {
+        let m_th = (drain_s / budget_per_step).ceil().clamp(1.0, 1e15) as usize;
+        for m in m_th.saturating_sub(2).max(1)..=m_th.saturating_add(2) {
+            cands.push(m);
+        }
+    }
+    cands.sort_unstable();
+    cands.dedup();
+    let mut best = 1usize;
+    let mut best_eff = effective_seconds_per_step_policy(
+        1, step_s, stall0, drain_s, budget_per_step, lambda, recovery,
+    );
+    for &m in &cands {
+        let eff = effective_seconds_per_step_policy(
+            m, step_s, stall0, drain_s, budget_per_step, lambda, recovery,
+        );
         if eff < best_eff {
             best_eff = eff;
             best = m;
@@ -321,7 +647,7 @@ pub fn plan_resilient_seeded(
     sweep: &Sweep,
     cache: &SimCache,
 ) -> ResilientPlanResult {
-    if !fm.enabled() {
+    if !fm.enabled_for(cluster) {
         let base = planner::plan_with_seed(
             model,
             cluster,
@@ -411,7 +737,7 @@ pub fn plan_resilient_cached(
         cache,
         plans,
     );
-    if !fm.enabled() {
+    if !fm.enabled_for(cluster) {
         let best = base.best.clone().map(|point| {
             let goodput = fm.goodput(&point.setup, point.seconds_per_step());
             ResilientPoint { point, goodput }
@@ -444,13 +770,23 @@ pub enum WhatIfAxis {
     Nic,
     /// Scale every node's NVLink bandwidth by the factor.
     Nvlink,
-    /// Slow ONE node's sustained compute by the factor amount: factor
-    /// `j` multiplies its achievable FLOPs by `(1 - j)` (0 = healthy).
-    /// Priced through the heterogeneous slowest-participant machinery —
-    /// sub-pod plans that avoid the straggler keep full speed.
+    /// Per-micro-batch compute jitter: the factor is the multiplicative
+    /// spread of per-task compute times (each micro-batch task drawn
+    /// uniformly in `[1 − j, 1 + j]` under a seeded stream in the
+    /// timeline engine).  The plan is unchanged (the expected step is
+    /// the deterministic one); the sweep point's measured p99 step time
+    /// ([`SweepPoint::p99_seconds_per_step`]) carries the tail cost.
+    /// Spread 0 is bit-identical to the deterministic engine.  (The
+    /// older whole-node straggler reshaping survives as
+    /// [`jitter_cluster`] for direct API use.)
     Jitter,
     /// The factor IS the per-node MTBF in hours (goodput ladder).
     Mtbf,
+    /// The factor IS the blast-domain MTBF in hours: every declared
+    /// [`ClusterSpec::domains`] level is swept to it (a cluster with no
+    /// declared topology probes a default top-of-rack switch domain
+    /// covering half the pod).
+    DomainMtbf,
 }
 
 impl WhatIfAxis {
@@ -460,6 +796,7 @@ impl WhatIfAxis {
             "nvlink" => Some(WhatIfAxis::Nvlink),
             "jitter" => Some(WhatIfAxis::Jitter),
             "mtbf" => Some(WhatIfAxis::Mtbf),
+            "domain-mtbf" => Some(WhatIfAxis::DomainMtbf),
             _ => None,
         }
     }
@@ -470,6 +807,7 @@ impl WhatIfAxis {
             WhatIfAxis::Nvlink => "nvlink",
             WhatIfAxis::Jitter => "jitter",
             WhatIfAxis::Mtbf => "mtbf",
+            WhatIfAxis::DomainMtbf => "domain-mtbf",
         }
     }
 
@@ -479,7 +817,9 @@ impl WhatIfAxis {
         match self {
             WhatIfAxis::Nic | WhatIfAxis::Nvlink => vec![1.0, 0.5, 0.25, 0.125, 0.0625],
             WhatIfAxis::Jitter => vec![0.0, 0.2, 0.4, 0.6, 0.8],
-            WhatIfAxis::Mtbf => vec![1024.0, 256.0, 64.0, 16.0, 4.0, 1.0, 0.25],
+            WhatIfAxis::Mtbf | WhatIfAxis::DomainMtbf => {
+                vec![1024.0, 256.0, 64.0, 16.0, 4.0, 1.0, 0.25]
+            }
         }
     }
 }
@@ -527,6 +867,12 @@ pub struct SweepPoint {
     /// Expected seconds per useful step (equals `seconds_per_step` when
     /// the failure model is disabled).
     pub effective_seconds_per_step: f64,
+    /// Measured p99 seconds/step of the winner under per-micro-batch
+    /// compute jitter ([`WhatIfAxis::Jitter`], seeded spread = factor).
+    /// On every other axis — and at spread 0 — the deterministic engine
+    /// IS the distribution, so this equals `seconds_per_step` bit for
+    /// bit.
+    pub p99_seconds_per_step: f64,
 }
 
 /// A factor interval where the winning plan flips: the winner at `lo`
@@ -540,8 +886,13 @@ pub struct PhaseBoundary {
 }
 
 /// Replan at every factor of `axis` and report the winner per point.
-/// With `fm` enabled the winner is the failure-aware one (and for the
-/// [`WhatIfAxis::Mtbf`] axis each factor *is* the MTBF in hours).
+/// With `fm` enabled (or the rung's cluster carrying enabled blast
+/// domains) the winner is the failure-aware one; for the
+/// [`WhatIfAxis::Mtbf`] axis each factor *is* the per-node MTBF in
+/// hours, for [`WhatIfAxis::DomainMtbf`] the blast-domain MTBF, and for
+/// [`WhatIfAxis::Jitter`] the per-micro-batch compute spread whose
+/// measured p99 step time lands in
+/// [`SweepPoint::p99_seconds_per_step`].
 ///
 /// The ladder is incremental and fused (bit-identical to replanning each
 /// rung cold): rung 0 runs alone and its winner becomes the **incumbent
@@ -567,20 +918,42 @@ pub fn whatif_sweep(
         return Vec::new();
     }
     // per-rung query inputs: the derated cluster and the rung's failure
-    // model (the Mtbf axis sweeps the model itself)
+    // model (the Mtbf axis sweeps the model itself, the DomainMtbf axis
+    // the cluster's blast-domain topology).  The jitter axis plans on
+    // the unperturbed cluster at every rung — the expected step is the
+    // deterministic one and plan_batch dedups the identical queries —
+    // and prices the rung's tail separately below.
     let queries: Vec<(ClusterSpec, FailureModel)> = factors
         .iter()
         .map(|&factor| match axis {
             WhatIfAxis::Nic => (derate_cluster(cluster, factor, 1.0), fm.clone()),
             WhatIfAxis::Nvlink => (derate_cluster(cluster, 1.0, factor), fm.clone()),
-            WhatIfAxis::Jitter => (jitter_cluster(cluster, factor), fm.clone()),
+            WhatIfAxis::Jitter => (cluster.clone(), fm.clone()),
             WhatIfAxis::Mtbf => {
                 (cluster.clone(), FailureModel { mtbf_hours: factor, ..fm.clone() })
             }
+            WhatIfAxis::DomainMtbf => {
+                let mut c = cluster.clone();
+                if c.domains.is_empty() {
+                    // no declared topology: probe a default top-of-rack
+                    // switch domain covering half the pod
+                    let size = (c.total_nodes() + 1) / 2;
+                    c.domains.push(BlastDomain {
+                        name: "switch".into(),
+                        size: size.max(1),
+                        mtbf_hours: factor,
+                    });
+                } else {
+                    for d in &mut c.domains {
+                        d.mtbf_hours = factor;
+                    }
+                }
+                (c, fm.clone())
+            }
         })
         .collect();
-    let rung_objective = |pfm: &FailureModel| {
-        if pfm.enabled() {
+    let rung_objective = |c: &ClusterSpec, pfm: &FailureModel| {
+        if pfm.enabled_for(c) {
             Objective::Goodput(pfm.clone())
         } else {
             Objective::StepTime
@@ -594,7 +967,7 @@ pub fn whatif_sweep(
             c,
             workload,
             space,
-            &rung_objective(pfm),
+            &rung_objective(c, pfm),
             None,
             sweep,
             cache,
@@ -603,7 +976,7 @@ pub fn whatif_sweep(
     let seed = first.best.as_ref().map(|b| PlanSeed::of(&b.setup));
     // rungs 1..n: one fused batch, every rung incumbent-seeded
     let objectives: Vec<Objective> =
-        queries[1..].iter().map(|(_, pfm)| rung_objective(pfm)).collect();
+        queries[1..].iter().map(|(c, pfm)| rung_objective(c, pfm)).collect();
     let reqs: Vec<planner::PlanRequest<'_>> = queries[1..]
         .iter()
         .zip(&objectives)
@@ -624,8 +997,17 @@ pub fn whatif_sweep(
         .map(|((r, &factor), (_, pfm))| match r.best {
             Some(b) => {
                 let seconds = b.seconds_per_step();
-                let effective = if pfm.enabled() {
+                let effective = if pfm.enabled_for(&b.setup.cluster) {
                     pfm.goodput(&b.setup, seconds).effective_seconds_per_step
+                } else {
+                    seconds
+                };
+                // jitter rungs re-price the winner's step under seeded
+                // per-micro-batch spread; spread 0 and every other axis
+                // return the deterministic step bit-identically
+                let p99 = if axis == WhatIfAxis::Jitter && factor > 0.0 {
+                    sim::jittered_step_stats(&b.setup, JITTER_SEED, factor, JITTER_SAMPLES)
+                        .p99_s
                 } else {
                     seconds
                 };
@@ -634,6 +1016,7 @@ pub fn whatif_sweep(
                     label: b.label(),
                     seconds_per_step: seconds,
                     effective_seconds_per_step: effective,
+                    p99_seconds_per_step: p99,
                 }
             }
             None => SweepPoint {
@@ -641,6 +1024,7 @@ pub fn whatif_sweep(
                 label: String::new(),
                 seconds_per_step: f64::INFINITY,
                 effective_seconds_per_step: f64::INFINITY,
+                p99_seconds_per_step: f64::INFINITY,
             },
         })
         .collect()
@@ -719,10 +1103,46 @@ pub struct ElasticReplan {
     pub restart_cost_s: f64,
 }
 
+/// Dropping `dropped` nodes leaves no cluster that can run the model:
+/// either no node survives at all, or no plan fits the survivor pod.
+/// Surfaced as a structured, typed error (`error_kind:
+/// "cluster_exhausted"` on the serve and CLI front-ends) instead of a
+/// panic or an empty plan.
+#[derive(Clone, Debug)]
+pub struct ClusterExhausted {
+    pub total_nodes: usize,
+    pub dropped: usize,
+    /// Nodes left after the drop (0 when `dropped >= total_nodes`).
+    pub survivors: usize,
+}
+
+impl std::fmt::Display for ClusterExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.survivors == 0 {
+            write!(
+                f,
+                "cannot drop {} of {} nodes: no survivors",
+                self.dropped, self.total_nodes
+            )
+        } else {
+            write!(
+                f,
+                "dropping {} of {} nodes leaves {} survivor node(s) but no feasible plan",
+                self.dropped, self.total_nodes, self.survivors
+            )
+        }
+    }
+}
+
+impl std::error::Error for ClusterExhausted {}
+
 /// Drop `dropped` nodes from `cluster` (placement order: weakest extra
 /// groups go first — [`ClusterSpec::take_nodes`] keeps the primary
 /// group), replan on the survivors, and price the restart from the last
-/// checkpoint.  Errors when no node would survive.
+/// checkpoint.  Returns the typed [`ClusterExhausted`] error when no
+/// node survives or no plan fits the survivor pod (the `?` operator
+/// still converts it into `anyhow::Result` for callers that don't
+/// match on it).
 pub fn replan_after_failure(
     model: &ModelCfg,
     cluster: &ClusterSpec,
@@ -732,14 +1152,17 @@ pub fn replan_after_failure(
     dropped: usize,
     sweep: &Sweep,
     cache: &SimCache,
-) -> anyhow::Result<ElasticReplan> {
+) -> Result<ElasticReplan, ClusterExhausted> {
     let total = cluster.total_nodes();
     if dropped >= total {
-        anyhow::bail!("cannot drop {dropped} of {total} nodes: no survivors");
+        return Err(ClusterExhausted { total_nodes: total, dropped, survivors: 0 });
     }
     let survivors = total - dropped;
     let surviving = cluster.take_nodes(survivors);
     let result = plan_resilient(model, &surviving, workload, space, fm, sweep, cache);
+    if result.best.is_none() {
+        return Err(ClusterExhausted { total_nodes: total, dropped, survivors });
+    }
     let restart_cost_s = match &result.best {
         Some(b) => {
             let ckpt = fm.checkpoint_cost(&b.point.setup);
@@ -938,6 +1361,7 @@ mod tests {
             read_bw: 2e9,
             shared_bw: 1e8,
             restart_overhead_s: 120.0,
+            policy: CheckpointPolicy::Sync,
         };
         let (mtbf, flip) = find_flip(&model, &cluster, &w, &space, &fm, &sweep, &cache)
             .expect("some MTBF on the ladder must flip a multi-node winner");
@@ -1056,5 +1480,362 @@ mod tests {
             &cache,
         )
         .is_err());
+    }
+
+    #[test]
+    fn cluster_exhausted_error_is_typed_and_structured() {
+        let model = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(4);
+        let w = Workload::table1();
+        let space = small_space();
+        let cache = SimCache::new();
+        let err = replan_after_failure(
+            &model,
+            &cluster,
+            &w,
+            &space,
+            &FailureModel::with_mtbf(64.0),
+            7,
+            &Sweep::serial(),
+            &cache,
+        )
+        .unwrap_err();
+        assert_eq!((err.total_nodes, err.dropped, err.survivors), (4, 7, 0));
+        assert!(err.to_string().contains("no survivors"), "{err}");
+        // the typed error still converts into anyhow via `?`
+        let as_anyhow: anyhow::Error = err.into();
+        assert!(as_anyhow.to_string().contains("no survivors"));
+    }
+
+    #[test]
+    fn empty_topology_sync_policy_bit_identical_to_pr7_on_every_zoo_model() {
+        // the PR 7 closed form, inlined: with no blast domains and the
+        // Sync policy, goodput() must reproduce λ = n/MTBF, the blocking
+        // write cost, and the synchronous interval optimum bit for bit
+        for model in crate::model::mt5_zoo() {
+            let setup = TrainSetup::dp_pod(model, 4, crate::zero::ZeroStage::Stage2);
+            let step_s = crate::sim::simulate_step(&setup).seconds_per_step();
+            if !step_s.is_finite() {
+                continue; // a shape that does not fit has no goodput story
+            }
+            for mtbf in [0.25, 4.0, 64.0, 1024.0] {
+                let fm = FailureModel::with_mtbf(mtbf);
+                let g = fm.goodput(&setup, step_s);
+                let ckpt = fm.checkpoint_cost(&setup);
+                assert_eq!(ckpt.drain_s.to_bits(), 0.0f64.to_bits());
+                let lambda =
+                    setup.cluster.total_nodes().max(1) as f64 / (mtbf * HOUR_S);
+                let recovery = ckpt.restore_s + fm.restart_overhead_s;
+                let m = optimal_interval_steps(step_s, ckpt.write_s, lambda, recovery);
+                let eff =
+                    effective_seconds_per_step(m, step_s, ckpt.write_s, lambda, recovery);
+                assert_eq!(g.interval_steps, m);
+                assert_eq!(g.lambda_per_s.to_bits(), lambda.to_bits());
+                assert_eq!(g.checkpoint_write_s.to_bits(), ckpt.write_s.to_bits());
+                assert_eq!(g.effective_seconds_per_step.to_bits(), eff.to_bits());
+                assert_eq!(g.goodput_fraction.to_bits(), (step_s / eff).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn topology_levels_sum_to_lambda_for() {
+        let mut cluster = ClusterSpec::lps_pod(8);
+        cluster.domains.push(BlastDomain {
+            name: "switch".into(),
+            size: 4,
+            mtbf_hours: 200.0,
+        });
+        cluster.domains.push(BlastDomain { name: "rack".into(), size: 8, mtbf_hours: 1000.0 });
+        cluster.domains.push(BlastDomain { name: "off".into(), size: 2, mtbf_hours: 0.0 });
+        let fm = FailureModel::with_mtbf(100.0);
+        let topo = fm.topology(&cluster);
+        assert_eq!(topo.levels.len(), 3, "node + 2 enabled levels; disabled level dropped");
+        assert_eq!(
+            topo.total_lambda_per_s().to_bits(),
+            fm.lambda_for(&cluster).to_bits(),
+            "per-level rates must sum to the aggregate, bit for bit"
+        );
+        // sub-pods span fewer domain instances
+        let sub = cluster.take_nodes(2);
+        assert!(fm.lambda_for(&sub) < fm.lambda_for(&cluster));
+        assert_eq!(fm.topology(&sub).levels[1].instances, 1);
+        // a domain-only model (node term disabled) still fires
+        let off = FailureModel::disabled();
+        assert!(off.enabled_for(&cluster));
+        assert!(off.lambda_for(&cluster) > 0.0);
+        assert!(!off.enabled_for(&ClusterSpec::lps_pod(8)));
+        // empty domains: exactly the PR 7 node rate
+        assert_eq!(
+            fm.lambda_for(&ClusterSpec::lps_pod(8)).to_bits(),
+            fm.lambda_per_s(8).to_bits()
+        );
+    }
+
+    #[test]
+    fn domain_boundaries_step_the_interruption_rate() {
+        let mut cluster = ClusterSpec::lps_pod(8);
+        cluster.domains.push(BlastDomain {
+            name: "switch".into(),
+            size: 4,
+            mtbf_hours: 100.0,
+        });
+        let fm = FailureModel::with_mtbf(1000.0);
+        let l: Vec<f64> = (1..=8).map(|n| fm.lambda_for(&cluster.take_nodes(n))).collect();
+        for w in l.windows(2) {
+            assert!(w[1] >= w[0], "rate must be monotone in the node count: {l:?}");
+        }
+        // within a switch, growing the plan pays only the node term;
+        // crossing the 4 -> 5 boundary adds a whole new switch instance
+        let within = l[3] - l[2];
+        let crossing = l[4] - l[3];
+        assert!(
+            crossing > within * 5.0,
+            "boundary step must dominate the node term: {within} vs {crossing}"
+        );
+    }
+
+    #[test]
+    fn policy_interval_optimal_vs_brute_force() {
+        // async/tiered grid: snapshot stall, drained persist, per-step
+        // overlap budget — the piecewise optimizer must match brute force
+        for &step_s in &[0.5, 2.0, 30.0] {
+            let budget = crate::timeline::checkpoint_drain_budget(step_s);
+            for &stall0 in &[0.0, 1.0, 30.0] {
+                for &drain_s in &[5.0, 120.0, 3600.0] {
+                    for &mtbf_s in &[900.0, 3600.0 * 24.0, 3600.0 * 24.0 * 30.0] {
+                        for &recovery in &[30.0, 600.0] {
+                            let lambda = 8.0 / mtbf_s;
+                            let m = optimal_interval_steps_policy(
+                                step_s, stall0, drain_s, budget, lambda, recovery,
+                            );
+                            let eff = effective_seconds_per_step_policy(
+                                m, step_s, stall0, drain_s, budget, lambda, recovery,
+                            );
+                            for cand in 1..=20_000usize {
+                                let e = effective_seconds_per_step_policy(
+                                    cand, step_s, stall0, drain_s, budget, lambda, recovery,
+                                );
+                                assert!(
+                                    eff <= e * (1.0 + 1e-12),
+                                    "s={step_s} δ0={stall0} drain={drain_s} λ={lambda:.2e} \
+                                     R={recovery}: m={m} ({eff}) beaten by m={cand} ({e})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // zero drain routes to the synchronous optimizer, same bits
+        let (s, d, l, r) = (2.0, 30.0, 1e-4, 120.0);
+        let b = crate::timeline::checkpoint_drain_budget(s);
+        assert_eq!(
+            optimal_interval_steps_policy(s, d, 0.0, b, l, r),
+            optimal_interval_steps(s, d, l, r)
+        );
+        let m = optimal_interval_steps(s, d, l, r);
+        assert_eq!(
+            effective_seconds_per_step_policy(m, s, d, 0.0, b, l, r).to_bits(),
+            effective_seconds_per_step(m, s, d, l, r).to_bits()
+        );
+    }
+
+    #[test]
+    fn async_and_tiered_policies_shrink_the_critical_path() {
+        let model = by_name("mt5-xl").unwrap();
+        let setup = TrainSetup::dp_pod(model, 4, crate::zero::ZeroStage::Stage2);
+        let step_s = crate::sim::simulate_step(&setup).seconds_per_step();
+        assert!(step_s.is_finite());
+        // a crawling shared store makes the blocking write expensive
+        let sync = FailureModel { shared_bw: 1e8, ..FailureModel::with_mtbf(4.0) };
+        let async_fm = FailureModel {
+            policy: CheckpointPolicy::Async { snapshot_s: 2.0, drain_bw: 2e9 },
+            ..sync.clone()
+        };
+        let cs = sync.checkpoint_cost(&setup);
+        let ca = async_fm.checkpoint_cost(&setup);
+        assert!(ca.write_s < cs.write_s, "snapshot stall must undercut the blocking write");
+        assert_eq!(cs.drain_s, 0.0);
+        assert!(ca.drain_s > 0.0);
+        let gs = sync.goodput(&setup, step_s);
+        let ga = async_fm.goodput(&setup, step_s);
+        assert!(
+            ga.goodput_fraction > gs.goodput_fraction,
+            "draining the persist must beat blocking on it: {} vs {}",
+            ga.goodput_fraction,
+            gs.goodput_fraction
+        );
+        // tiered + replicate: local NVMe stall, shared drain, and node
+        // failures restore from the buddy's local shard
+        let tiered = FailureModel {
+            policy: CheckpointPolicy::Tiered {
+                local_bw: 5e9,
+                shared_bw: 1e8,
+                replicate: true,
+            },
+            ..sync.clone()
+        };
+        let ct = tiered.checkpoint_cost(&setup);
+        assert!(ct.write_s < cs.write_s);
+        assert!(ct.restore_s < cs.restore_s, "node failures restore from the local tier");
+        // un-replicated: every restore falls back to the shared tier
+        let bare = FailureModel {
+            policy: CheckpointPolicy::Tiered {
+                local_bw: 5e9,
+                shared_bw: 1e8,
+                replicate: false,
+            },
+            ..sync.clone()
+        };
+        assert!(bare.checkpoint_cost(&setup).restore_s > ct.restore_s);
+        // a domain-dominated topology pushes the replicated restore back
+        // toward the shared tier (the whole local tier dies with the
+        // domain)
+        let mut dsetup = setup.clone();
+        dsetup.cluster.domains.push(BlastDomain {
+            name: "switch".into(),
+            size: 4,
+            mtbf_hours: 1.0,
+        });
+        assert!(tiered.checkpoint_cost(&dsetup).restore_s > ct.restore_s);
+    }
+
+    #[test]
+    fn correlated_domains_rerank_differently_than_independent_at_equal_rate() {
+        // the regression only correlated domains can produce: at the SAME
+        // full-cluster aggregate interruption rate, the independent
+        // Poisson model shrinks the blast radius (λ ∝ nodes rewards
+        // narrow plans) while the correlated model keeps the wide winner
+        // (1..=4 nodes all sit behind the same switch, so shrinking buys
+        // no rate reduction, only a slower step)
+        let model = by_name("mt5-large").unwrap();
+        let w = Workload::table1();
+        let space = small_space();
+        let sweep = Sweep::serial();
+        let base_fm = FailureModel {
+            mtbf_hours: 0.0, // correlated probe: node term disabled
+            write_bw: 2e9,
+            read_bw: 2e9,
+            shared_bw: 1e8, // crawling shared store: δ constant in nodes
+            restart_overhead_s: 120.0,
+            policy: CheckpointPolicy::Sync,
+        };
+        let plain = ClusterSpec::lps_pod(4);
+        let mut found = None;
+        for &domain_mtbf in &[2.0, 0.5, 0.125, 0.03125, 0.0078125] {
+            let mut corr_cluster = plain.clone();
+            corr_cluster.domains.push(BlastDomain {
+                name: "switch".into(),
+                size: 4,
+                mtbf_hours: domain_mtbf,
+            });
+            // independent probe: per-node MTBF chosen so the full-pod
+            // aggregate rate matches the correlated model
+            let ind_fm = FailureModel { mtbf_hours: 4.0 * domain_mtbf, ..base_fm.clone() };
+            let l_corr = base_fm.lambda_for(&corr_cluster);
+            let l_ind = ind_fm.lambda_for(&plain);
+            assert!(
+                ((l_corr - l_ind) / l_ind).abs() < 1e-9,
+                "aggregate rates must match: {l_corr} vs {l_ind}"
+            );
+            let cache = SimCache::new();
+            let corr =
+                plan_resilient(&model, &corr_cluster, &w, &space, &base_fm, &sweep, &cache);
+            let ind = plan_resilient(&model, &plain, &w, &space, &ind_fm, &sweep, &cache);
+            let (cb, ib) = (corr.best.as_ref().unwrap(), ind.best.as_ref().unwrap());
+            let corr_nodes = cb.point.setup.cluster.total_nodes();
+            let ind_nodes = ib.point.setup.cluster.total_nodes();
+            assert!(
+                corr_nodes >= ind_nodes,
+                "the correlated model must never prefer a narrower plan than \
+                 the independent one at equal aggregate rate"
+            );
+            if ind_nodes < corr_nodes {
+                found = Some((domain_mtbf, corr_nodes, ind_nodes));
+                break;
+            }
+        }
+        let (mtbf, corr_nodes, ind_nodes) = found.expect(
+            "some rung must re-rank: independent-Poisson shrinks the blast \
+             radius while the correlated model keeps the wide plan",
+        );
+        assert!(ind_nodes < corr_nodes, "at domain MTBF {mtbf}h: {ind_nodes} vs {corr_nodes}");
+    }
+
+    #[test]
+    fn whatif_domain_mtbf_axis_prices_topology() {
+        let model = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(2);
+        let w = Workload::table1();
+        let space = PlanSpace { nodes: vec![1, 2], ..small_space() };
+        let cache = SimCache::new();
+        let pts = whatif_sweep(
+            &model,
+            &cluster,
+            &w,
+            &space,
+            WhatIfAxis::DomainMtbf,
+            &[1024.0, 1.0, 0.0625],
+            &FailureModel::disabled(),
+            &Sweep::serial(),
+            &cache,
+        );
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert!(!p.label.is_empty());
+            assert!(
+                p.effective_seconds_per_step > p.seconds_per_step,
+                "domain failures must be priced even with the node term disabled"
+            );
+        }
+        // a harsher domain MTBF strictly raises every candidate's rate,
+        // so the winner's effective step can only worsen
+        assert!(pts[1].effective_seconds_per_step > pts[0].effective_seconds_per_step);
+        assert!(pts[2].effective_seconds_per_step > pts[1].effective_seconds_per_step);
+    }
+
+    #[test]
+    fn whatif_jitter_axis_measures_p99_and_degenerates_at_zero() {
+        let model = by_name("mt5-large").unwrap();
+        let cluster = ClusterSpec::lps_pod(2);
+        let w = Workload::table1();
+        let space = PlanSpace { nodes: vec![1, 2], ..small_space() };
+        let cache = SimCache::new();
+        let pts = whatif_sweep(
+            &model,
+            &cluster,
+            &w,
+            &space,
+            WhatIfAxis::Jitter,
+            &[0.0, 0.3],
+            &FailureModel::disabled(),
+            &Sweep::serial(),
+            &cache,
+        );
+        assert_eq!(pts.len(), 2);
+        // spread 0: the deterministic engine IS the distribution
+        assert_eq!(pts[0].p99_seconds_per_step.to_bits(), pts[0].seconds_per_step.to_bits());
+        // the plan is the unperturbed one on every rung (the expected
+        // step is deterministic; only the measured tail moves)
+        assert_eq!(pts[0].label, pts[1].label);
+        assert_eq!(pts[0].seconds_per_step.to_bits(), pts[1].seconds_per_step.to_bits());
+        // the measured tail sits at or above the deterministic step
+        assert!(pts[1].p99_seconds_per_step >= pts[1].seconds_per_step - 1e-12);
+        // non-jitter axes carry the deterministic step as their p99
+        let nic = whatif_sweep(
+            &model,
+            &cluster,
+            &w,
+            &space,
+            WhatIfAxis::Nic,
+            &[1.0, 0.5],
+            &FailureModel::disabled(),
+            &Sweep::serial(),
+            &cache,
+        );
+        for p in &nic {
+            assert_eq!(p.p99_seconds_per_step.to_bits(), p.seconds_per_step.to_bits());
+        }
     }
 }

@@ -80,8 +80,9 @@ use crate::objective::{self, CostToTarget, Objective};
 use crate::parallel::{ParallelCfg, PipeSchedule};
 use crate::plancache::PlanCache;
 use crate::planner::{self, PlanSpace};
-use crate::resilience::{self, FailureModel, WhatIfAxis};
+use crate::resilience::{self, CheckpointPolicy, FailureModel, WhatIfAxis};
 use crate::sim::{self, StepTime, TrainSetup, Workload};
+use crate::survival;
 use crate::sweep::{hex_f64, step_to_json, SimCache, Sweep};
 use crate::timeline;
 use crate::zero::ZeroStage;
@@ -252,6 +253,25 @@ pub struct PlanQuery {
     /// Price of one node-hour for the cost objective (0 = rank by wall
     /// time to target).
     pub node_cost_per_hour: f64,
+    /// Correlated blast-domain width in nodes; with `domain_mtbf_hours`
+    /// > 0 the cluster gains one "switch" domain level of this size
+    /// (a domain failure takes out all members at once).  0 = no
+    /// declared domains: the exact PR 7 independent-Poisson model.
+    pub domain_size: usize,
+    /// MTBF of ONE blast domain in hours (0 disables the domain level).
+    pub domain_mtbf_hours: f64,
+    /// Checkpoint policy: "sync" (PR 7 blocking write), "async"
+    /// (snapshot + overlapped drain), or "tiered" (local NVMe tier +
+    /// shared drain, optional buddy replication).
+    pub ckpt_policy: String,
+    /// Async policy: critical-path snapshot stall per checkpoint (s).
+    pub snapshot_s: f64,
+    /// Async policy: per-node drain bandwidth to storage (bytes/s).
+    pub drain_bw: f64,
+    /// Tiered policy: per-node local NVMe bandwidth (bytes/s).
+    pub local_bw: f64,
+    /// Tiered policy: replicate each local shard to a buddy node.
+    pub replicate: bool,
 }
 
 impl Default for PlanQuery {
@@ -269,6 +289,13 @@ impl Default for PlanQuery {
             mtbf_hours: 0.0,
             target_loss: 0.0,
             node_cost_per_hour: 0.0,
+            domain_size: 0,
+            domain_mtbf_hours: 0.0,
+            ckpt_policy: "sync".to_string(),
+            snapshot_s: 1.0,
+            drain_bw: 2e9,
+            local_bw: 8e9,
+            replicate: false,
         }
     }
 }
@@ -289,7 +316,50 @@ impl PlanQuery {
             mtbf_hours: opt_f64_nonneg(j, "mtbf_hours", d.mtbf_hours)?,
             target_loss: opt_f64_nonneg(j, "target_loss", d.target_loss)?,
             node_cost_per_hour: opt_f64_nonneg(j, "node_cost_per_hour", d.node_cost_per_hour)?,
+            domain_size: opt_usize(j, "domain_size", d.domain_size)?,
+            domain_mtbf_hours: opt_f64_nonneg(j, "domain_mtbf_hours", d.domain_mtbf_hours)?,
+            ckpt_policy: {
+                let p = opt_str(j, "ckpt_policy", &d.ckpt_policy)?;
+                if !matches!(p.as_str(), "sync" | "async" | "tiered") {
+                    anyhow::bail!("'ckpt_policy' must be sync, async, or tiered (got '{p}')");
+                }
+                p
+            },
+            snapshot_s: opt_f64_nonneg(j, "snapshot_s", d.snapshot_s)?,
+            drain_bw: opt_f64_nonneg(j, "drain_bw", d.drain_bw)?,
+            local_bw: opt_f64_nonneg(j, "local_bw", d.local_bw)?,
+            replicate: opt_bool(j, "replicate", d.replicate)?,
         })
+    }
+
+    /// Does any failure source fire for this query — the per-node MTBF
+    /// or a declared blast-domain level?  Gates the failure-aware
+    /// goodput ranking exactly like [`FailureModel::enabled_for`].
+    pub fn failure_aware(&self) -> bool {
+        self.mtbf_hours > 0.0 || (self.domain_size > 0 && self.domain_mtbf_hours > 0.0)
+    }
+
+    /// The failure model this query describes — the one shared
+    /// constructor, so CLI and serve price the identical model.
+    pub fn failure_model(&self) -> anyhow::Result<FailureModel> {
+        let mut fm = if self.mtbf_hours > 0.0 {
+            FailureModel::with_mtbf(self.mtbf_hours)
+        } else {
+            FailureModel::disabled()
+        };
+        fm.policy = match self.ckpt_policy.as_str() {
+            "sync" => CheckpointPolicy::Sync,
+            "async" => {
+                CheckpointPolicy::Async { snapshot_s: self.snapshot_s, drain_bw: self.drain_bw }
+            }
+            "tiered" => CheckpointPolicy::Tiered {
+                local_bw: self.local_bw,
+                shared_bw: fm.shared_bw,
+                replicate: self.replicate,
+            },
+            other => anyhow::bail!("ckpt_policy must be sync, async, or tiered (got '{other}')"),
+        };
+        Ok(fm)
     }
 
     /// The structured unreachable-target error for a cost-objective
@@ -312,11 +382,18 @@ impl PlanQuery {
     pub fn problem(&self) -> anyhow::Result<(ModelCfg, ClusterSpec, Workload, PlanSpace)> {
         let model =
             by_name(&self.model).ok_or_else(|| anyhow::anyhow!("unknown model '{}'", self.model))?;
-        let cluster = if self.v100_nodes > 0 {
+        let mut cluster = if self.v100_nodes > 0 {
             ClusterSpec::mixed_pod(self.nodes.max(1), self.v100_nodes)
         } else {
             ClusterSpec::lps_pod(self.nodes.max(1))
         };
+        if self.domain_size > 0 && self.domain_mtbf_hours > 0.0 {
+            cluster.domains.push(crate::hardware::BlastDomain {
+                name: "switch".to_string(),
+                size: self.domain_size,
+                mtbf_hours: self.domain_mtbf_hours,
+            });
+        }
         let mut workload = Workload::table1();
         workload.global_batch = self.batch;
         let mut space = PlanSpace {
@@ -341,6 +418,19 @@ pub struct WhatIfQuery {
     pub axis: String,
     /// Derate factors (empty = the axis's default ladder).
     pub factors: Vec<f64>,
+    /// Also price an elastic replan after losing this many nodes
+    /// (0 = off).  Dropping every node — or leaving survivors no plan
+    /// fits — answers the structured `cluster_exhausted` error.
+    pub drop_nodes: usize,
+}
+
+/// What a `whatif` query resolves to: a payload, or the structured
+/// cluster-exhausted failure (`error_kind: "cluster_exhausted"` on both
+/// front-ends — the typed error can't ride an `anyhow::Error`, the
+/// vendored shim has no downcasting).
+pub enum WhatIfAnswer {
+    Payload(Json),
+    Exhausted(resilience::ClusterExhausted),
 }
 
 impl WhatIfQuery {
@@ -348,7 +438,7 @@ impl WhatIfQuery {
         let plan = PlanQuery::from_json(j)?;
         let axis = opt_str(j, "axis", "nic")?;
         if WhatIfAxis::parse(&axis).is_none() {
-            anyhow::bail!("axis must be nic, nvlink, jitter, or mtbf");
+            anyhow::bail!("axis must be nic, nvlink, jitter, mtbf, or domain-mtbf");
         }
         let factors = match j.get("factors") {
             Json::Null => Vec::new(),
@@ -367,25 +457,110 @@ impl WhatIfQuery {
         if let Some(bad) = factors.iter().find(|f| !f.is_finite() || **f < 0.0) {
             anyhow::bail!("'factors' must be finite numbers >= 0, got {bad}");
         }
-        Ok(WhatIfQuery { plan, axis, factors })
+        let drop_nodes = opt_usize(j, "drop_nodes", 0)?;
+        Ok(WhatIfQuery { plan, axis, factors, drop_nodes })
     }
 
     /// Run the sweep — the one code path shared by CLI and server.
-    pub fn run(&self, sweep: &Sweep, cache: &SimCache) -> anyhow::Result<Json> {
+    pub fn run(&self, sweep: &Sweep, cache: &SimCache) -> anyhow::Result<WhatIfAnswer> {
         let (model, cluster, workload, space) = self.plan.problem()?;
         let axis = WhatIfAxis::parse(&self.axis).expect("validated in from_json");
         let factors =
             if self.factors.is_empty() { axis.default_factors() } else { self.factors.clone() };
-        let fm = if self.plan.mtbf_hours > 0.0 {
-            FailureModel::with_mtbf(self.plan.mtbf_hours)
-        } else {
-            FailureModel::disabled()
-        };
+        let fm = self.plan.failure_model()?;
         let points = resilience::whatif_sweep(
             &model, &cluster, &workload, &space, axis, &factors, &fm, sweep, cache,
         );
         let bounds = resilience::phase_boundaries(&points);
-        Ok(whatif_payload(axis, &points, &bounds))
+        let mut payload = whatif_payload(axis, &points, &bounds);
+        if self.drop_nodes > 0 {
+            match resilience::replan_after_failure(
+                &model,
+                &cluster,
+                &workload,
+                &space,
+                &fm,
+                self.drop_nodes,
+                sweep,
+                cache,
+            ) {
+                Ok(r) => {
+                    if let Json::Obj(map) = &mut payload {
+                        map.insert("elastic_replan".to_string(), elastic_replan_json(&r));
+                    }
+                }
+                Err(e) => return Ok(WhatIfAnswer::Exhausted(e)),
+            }
+        }
+        Ok(WhatIfAnswer::Payload(payload))
+    }
+}
+
+/// A `survive` query mirroring the CLI `survive` subcommand: the plan
+/// problem (with its failure model) plus the trace-replay knobs.  Both
+/// front-ends run [`SurviveQuery::run`], and the payload carries no
+/// wall-time fields, so a socket answer is byte-identical to the
+/// one-shot CLI for the same seed.
+#[derive(Clone, Debug)]
+pub struct SurviveQuery {
+    pub plan: PlanQuery,
+    /// Root trace seed (trace `i` replays with `Rng::new(seed).split(i)`).
+    pub seed: u64,
+    /// Number of independent failure traces.
+    pub traces: usize,
+    /// Useful-step horizon each trace must complete.
+    pub steps: usize,
+    /// Permanent failures: shrink + replan from the survivor ladder.
+    pub elastic: bool,
+}
+
+impl Default for SurviveQuery {
+    fn default() -> SurviveQuery {
+        SurviveQuery { plan: PlanQuery::default(), seed: 0, traces: 256, steps: 4096, elastic: false }
+    }
+}
+
+impl SurviveQuery {
+    pub fn from_json(j: &Json) -> anyhow::Result<SurviveQuery> {
+        let d = SurviveQuery::default();
+        Ok(SurviveQuery {
+            plan: PlanQuery::from_json(j)?,
+            seed: opt_u64(j, "seed", d.seed)?,
+            traces: opt_usize(j, "traces", d.traces)?,
+            steps: opt_usize(j, "steps", d.steps)?,
+            elastic: opt_bool(j, "elastic", d.elastic)?,
+        })
+    }
+
+    /// The replay spec — the one shared constructor, so CLI text mode
+    /// and the JSON path replay the identical traces.
+    pub fn spec(&self) -> survival::SurvivalSpec {
+        survival::SurvivalSpec {
+            seed: self.seed,
+            traces: self.traces.max(1),
+            horizon_steps: self.steps.max(1),
+            elastic: self.elastic,
+        }
+    }
+
+    /// Plan + replay — the one code path shared by CLI and server.
+    pub fn run(&self, sweep: &Sweep, cache: &SimCache) -> anyhow::Result<Json> {
+        if !self.plan.failure_aware() {
+            anyhow::bail!(
+                "survive needs a failure source: set mtbf_hours and/or \
+                 domain_size + domain_mtbf_hours"
+            );
+        }
+        let (model, cluster, workload, space) = self.plan.problem()?;
+        let fm = self.plan.failure_model()?;
+        let out =
+            survival::survive(&model, &cluster, &workload, &space, &fm, &self.spec(), sweep, cache)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no feasible plan — every configuration overflows HBM at this scale"
+                    )
+                })?;
+        Ok(survival_payload(&out))
     }
 }
 
@@ -732,6 +907,8 @@ pub fn whatif_payload(
                                 "effective_seconds_per_step",
                                 Json::Num(p.effective_seconds_per_step),
                             ),
+                            ("p99_seconds_per_step", Json::Num(p.p99_seconds_per_step)),
+                            ("p99_seconds_per_step_bits", hex_f64(p.p99_seconds_per_step)),
                         ])
                     })
                     .collect(),
@@ -753,6 +930,84 @@ pub fn whatif_payload(
                     .collect(),
             ),
         ),
+    ])
+}
+
+/// The elastic-replan block a `whatif` payload carries when
+/// `drop_nodes` > 0 and the survivor cluster still fits a plan.
+fn elastic_replan_json(r: &resilience::ElasticReplan) -> Json {
+    let best = r.result.best.as_ref();
+    Json::obj(vec![
+        ("survivors", Json::Num(r.survivors as f64)),
+        ("restart_cost_s", Json::Num(r.restart_cost_s)),
+        ("restart_cost_s_bits", hex_f64(r.restart_cost_s)),
+        (
+            "plan",
+            match best {
+                Some(b) => Json::Str(b.point.label()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "seconds_per_step",
+            match best {
+                Some(b) => Json::Num(b.point.seconds_per_step()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "seconds_per_step_bits",
+            match best {
+                Some(b) => hex_f64(b.point.seconds_per_step()),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// The structured cluster-exhausted error body, shared by the CLI
+/// `--json` path and (field-for-field) the serve `respond_fail` answer.
+pub fn cluster_exhausted_payload(err: &resilience::ClusterExhausted) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(err.to_string())),
+        ("error_kind", Json::Str("cluster_exhausted".to_string())),
+        ("total_nodes", Json::Num(err.total_nodes as f64)),
+        ("dropped", Json::Num(err.dropped as f64)),
+        ("survivors", Json::Num(err.survivors as f64)),
+    ])
+}
+
+/// Machine-readable survival payload: the replayed winner plus the
+/// goodput distribution.  Exact bit patterns ride along and no
+/// wall-time field is included, so the byte-identical-across-runs
+/// determinism gate can compare whole payloads.
+pub fn survival_payload(out: &survival::SurvivalOutcome) -> Json {
+    let r = &out.report;
+    Json::obj(vec![
+        ("plan", Json::Str(out.label.clone())),
+        ("nodes", Json::Num(out.nodes as f64)),
+        ("seconds_per_step", Json::Num(out.seconds_per_step)),
+        ("seconds_per_step_bits", hex_f64(out.seconds_per_step)),
+        ("interval_steps", Json::Num(out.interval_steps as f64)),
+        ("traces", Json::Num(r.traces as f64)),
+        ("horizon_steps", Json::Num(r.horizon_steps as f64)),
+        ("elastic", Json::Bool(r.elastic)),
+        ("analytic_rate", Json::Num(r.analytic_rate)),
+        ("analytic_rate_bits", hex_f64(r.analytic_rate)),
+        ("mean_rate", Json::Num(r.mean_rate)),
+        ("mean_rate_bits", hex_f64(r.mean_rate)),
+        ("p50_rate", Json::Num(r.p50_rate)),
+        ("p50_rate_bits", hex_f64(r.p50_rate)),
+        ("p99_rate", Json::Num(r.p99_rate)),
+        ("p99_rate_bits", hex_f64(r.p99_rate)),
+        ("sem_rate", Json::Num(r.sem_rate)),
+        ("sem_rate_bits", hex_f64(r.sem_rate)),
+        ("mean_failures", Json::Num(r.mean_failures)),
+        ("mean_replans", Json::Num(r.mean_replans)),
+        ("mean_lost_s", Json::Num(r.mean_lost_s)),
+        ("mean_lost_s_bits", hex_f64(r.mean_lost_s)),
+        ("exhausted_traces", Json::Num(r.exhausted_traces as f64)),
     ])
 }
 
@@ -1173,6 +1428,7 @@ impl Engine {
         let mut plans: Vec<(RequestJob, PlanQuery, String)> = Vec::new();
         let mut targets: Vec<(RequestJob, PlanToTargetQuery, String)> = Vec::new();
         let mut whatifs: Vec<(RequestJob, WhatIfQuery, String)> = Vec::new();
+        let mut survs: Vec<(RequestJob, SurviveQuery, String)> = Vec::new();
         let mut hpos: Vec<(RequestJob, HpoQuery, String)> = Vec::new();
         let mut shutdown: Option<RequestJob> = None;
         for job in jobs {
@@ -1190,7 +1446,7 @@ impl Engine {
                 },
                 "plan" => match PlanQuery::from_json(&job.request) {
                     Ok(q) => {
-                        if q.target_loss > 0.0 && q.mtbf_hours > 0.0 {
+                        if q.target_loss > 0.0 && q.failure_aware() {
                             self.respond_err(
                                 &job,
                                 &anyhow::anyhow!(
@@ -1225,6 +1481,13 @@ impl Engine {
                     }
                     Err(e) => self.respond_err(&job, &e),
                 },
+                "survive" => match SurviveQuery::from_json(&job.request) {
+                    Ok(q) => {
+                        let key = canonical_key(&job.request);
+                        survs.push((job, q, key));
+                    }
+                    Err(e) => self.respond_err(&job, &e),
+                },
                 "hpo" => match HpoQuery::from_json(&job.request) {
                     Ok(q) => {
                         let key = canonical_key(&job.request);
@@ -1240,7 +1503,7 @@ impl Engine {
                     &job,
                     &anyhow::anyhow!(
                         "unknown query '{other}' (expected \
-                         simulate/plan/plan_to_target/whatif/hpo/stats/ping/fault/shutdown)"
+                         simulate/plan/plan_to_target/whatif/survive/hpo/stats/ping/fault/shutdown)"
                     ),
                 ),
             }
@@ -1267,13 +1530,18 @@ impl Engine {
                     &eng.cache,
                     &eng.plans,
                 );
-                Ok(cost_plan_payload(&result, q.target_loss, q.node_cost_per_hour, steps))
-            } else if q.mtbf_hours > 0.0 {
-                let fm = FailureModel::with_mtbf(q.mtbf_hours);
+                Ok(KeyedAnswer::Payload(cost_plan_payload(
+                    &result,
+                    q.target_loss,
+                    q.node_cost_per_hour,
+                    steps,
+                )))
+            } else if q.failure_aware() {
+                let fm = q.failure_model()?;
                 let result = resilience::plan_resilient_cached(
                     &model, &cluster, &workload, &space, &fm, &eng.sweep, &eng.cache, &eng.plans,
                 );
-                Ok(resilient_plan_payload(&result))
+                Ok(KeyedAnswer::Payload(resilient_plan_payload(&result)))
             } else {
                 let result = planner::plan_cached(
                     &model,
@@ -1286,17 +1554,33 @@ impl Engine {
                     &eng.cache,
                     &eng.plans,
                 );
-                Ok(plan_payload(&result))
+                Ok(KeyedAnswer::Payload(plan_payload(&result)))
             }
         });
         self.run_keyed::<PlanToTargetQuery, _>(targets, |eng, q, _mark| {
-            q.run(&eng.sweep, &eng.cache)
+            Ok(KeyedAnswer::Payload(q.run(&eng.sweep, &eng.cache)?))
         });
-        self.run_keyed::<WhatIfQuery, _>(whatifs, |eng, q, _mark| q.run(&eng.sweep, &eng.cache));
+        self.run_keyed::<WhatIfQuery, _>(whatifs, |eng, q, _mark| {
+            Ok(match q.run(&eng.sweep, &eng.cache)? {
+                WhatIfAnswer::Payload(p) => KeyedAnswer::Payload(p),
+                WhatIfAnswer::Exhausted(e) => KeyedAnswer::Fail {
+                    kind: "cluster_exhausted",
+                    msg: e.to_string(),
+                    extra: vec![
+                        ("total_nodes", Json::Num(e.total_nodes as f64)),
+                        ("dropped", Json::Num(e.dropped as f64)),
+                        ("survivors", Json::Num(e.survivors as f64)),
+                    ],
+                },
+            })
+        });
+        self.run_keyed::<SurviveQuery, _>(survs, |eng, q, _mark| {
+            Ok(KeyedAnswer::Payload(q.run(&eng.sweep, &eng.cache)?))
+        });
         let workers = self.workers_requested;
         self.run_keyed::<HpoQuery, _>(hpos, |eng, q, _mark| {
             let result = hpo::run_funnel_cached(&q.cfg(workers), &eng.cache);
-            Ok(hpo_payload(&result))
+            Ok(KeyedAnswer::Payload(hpo_payload(&result)))
         });
 
         if let Some(job) = shutdown {
@@ -1345,7 +1629,7 @@ impl Engine {
     /// shared pool, deduping identical in-flight requests.
     fn run_keyed<Q, F>(&mut self, jobs: Vec<(RequestJob, Q, String)>, run: F)
     where
-        F: Fn(&Engine, &Q, &WaveMark) -> anyhow::Result<Json>,
+        F: Fn(&Engine, &Q, &WaveMark) -> anyhow::Result<KeyedAnswer>,
     {
         let mut done: HashMap<String, (Json, Json)> = HashMap::new();
         let mut dup = 0usize;
@@ -1359,7 +1643,12 @@ impl Engine {
             let mark = self.mark();
             match run(self, q, &mark) {
                 Err(e) => self.respond_err(job, &e),
-                Ok(payload) => {
+                Ok(KeyedAnswer::Fail { kind, msg, extra }) => {
+                    // structured domain failures are not cached in `done`:
+                    // they are cheap to recompute and carry no wave meta
+                    self.respond_fail(job, kind, msg, extra);
+                }
+                Ok(KeyedAnswer::Payload(payload)) => {
                     self.waves += 1;
                     let meta = self.meta(&mark, 1, 0);
                     self.respond_ok(job, payload.clone(), Some(meta.clone()));
@@ -1369,6 +1658,19 @@ impl Engine {
         }
         self.deduped += dup as u64;
     }
+}
+
+/// What a keyed-query closure hands back to [`Engine::run_keyed`].
+/// `Fail` routes through `respond_fail` so domain outcomes that are not
+/// protocol errors (a dropped cluster with no survivors, say) answer
+/// with a machine-matchable `error_kind` instead of a flat string.
+enum KeyedAnswer {
+    Payload(Json),
+    Fail {
+        kind: &'static str,
+        msg: String,
+        extra: Vec<(&'static str, Json)>,
+    },
 }
 
 fn engine_loop(mut eng: Engine, rx: mpsc::Receiver<RequestJob>) {
@@ -2045,5 +2347,90 @@ mod tests {
         let d = Json::parse(&line(&r4)).unwrap();
         assert_eq!(d.get("ok").as_bool(), Some(false));
         assert!(d.get("error").as_str().unwrap().contains("target_loss"), "{d:?}");
+    }
+
+    /// `survive` answers a deterministic goodput distribution: the same
+    /// request on a fresh engine — even at a different worker count — is
+    /// byte-identical; a missing failure source and an unknown checkpoint
+    /// policy are front-end errors.
+    #[test]
+    fn survive_query_is_deterministic_and_validated() {
+        let mut eng = test_engine(2);
+        let q = r#"{"id": 1, "query": "survive", "model": "mt5-small", "nodes": 2, "exact_nodes": true, "mtbf_hours": 0.5, "seed": 7, "traces": 16, "steps": 256}"#;
+        let (j1, r1) = job(q);
+        eng.process(vec![j1]);
+        let a = Json::parse(&line(&r1)).unwrap();
+        assert_eq!(a.get("ok").as_bool(), Some(true), "{a:?}");
+        let res = a.get("result");
+        assert!(res.get("plan").as_str().is_some());
+        assert!(res.get("mean_rate").as_f64().unwrap() > 0.0);
+        assert!(res.get("analytic_rate").as_f64().unwrap() > 0.0);
+        assert_eq!(res.get("traces").as_f64(), Some(16.0));
+        assert_eq!(res.get("elastic").as_bool(), Some(false));
+        let mut eng_serial = test_engine(1);
+        let (j2, r2) = job(q);
+        eng_serial.process(vec![j2]);
+        let b = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(
+            b.get("result").dumps(),
+            a.get("result").dumps(),
+            "survive payloads must be byte-identical across engines and worker counts"
+        );
+
+        let (j3, r3) = job(r#"{"id": 3, "query": "survive", "model": "mt5-small", "nodes": 2}"#);
+        eng.process(vec![j3]);
+        let c = Json::parse(&line(&r3)).unwrap();
+        assert_eq!(c.get("ok").as_bool(), Some(false));
+        assert!(c.get("error").as_str().unwrap().contains("failure source"), "{c:?}");
+
+        let (j4, r4) = job(
+            r#"{"id": 4, "query": "survive", "model": "mt5-small", "nodes": 2, "mtbf_hours": 24, "ckpt_policy": "blockchain"}"#,
+        );
+        eng.process(vec![j4]);
+        let d = Json::parse(&line(&r4)).unwrap();
+        assert_eq!(d.get("ok").as_bool(), Some(false));
+        assert!(d.get("error").as_str().unwrap().contains("ckpt_policy"), "{d:?}");
+    }
+
+    /// `whatif` with `drop_nodes` past the cluster size answers the
+    /// structured `cluster_exhausted` error (satellite regression); a
+    /// survivable drop embeds the elastic-replan block in the payload.
+    #[test]
+    fn whatif_drop_nodes_exhaustion_is_structured() {
+        let mut eng = test_engine(2);
+        let ok_q = r#"{"id": 1, "query": "whatif", "model": "mt5-small", "nodes": 2, "mtbf_hours": 24, "drop_nodes": 1, "factors": [1.0]}"#;
+        let (j1, r1) = job(ok_q);
+        eng.process(vec![j1]);
+        let a = Json::parse(&line(&r1)).unwrap();
+        assert_eq!(a.get("ok").as_bool(), Some(true), "{a:?}");
+        let replan = a.path(&["result", "elastic_replan"]);
+        assert_eq!(replan.get("survivors").as_f64(), Some(1.0));
+        assert!(replan.get("restart_cost_s").as_f64().unwrap() > 0.0);
+        assert!(replan.get("plan").as_str().is_some(), "{a:?}");
+
+        let bad_q = r#"{"id": 2, "query": "whatif", "model": "mt5-small", "nodes": 2, "mtbf_hours": 24, "drop_nodes": 2, "factors": [1.0]}"#;
+        let (j2, r2) = job(bad_q);
+        eng.process(vec![j2]);
+        let b = Json::parse(&line(&r2)).unwrap();
+        assert_eq!(b.get("ok").as_bool(), Some(false));
+        assert_eq!(b.get("error_kind").as_str(), Some("cluster_exhausted"));
+        assert_eq!(b.get("total_nodes").as_f64(), Some(2.0));
+        assert_eq!(b.get("dropped").as_f64(), Some(2.0));
+        assert_eq!(b.get("survivors").as_f64(), Some(0.0));
+    }
+
+    /// Blast-domain fields alone (no node-level MTBF) make a plan query
+    /// failure-aware: the answer is the resilient payload with a goodput
+    /// fraction strictly below 1.
+    #[test]
+    fn domain_fields_make_a_plan_failure_aware() {
+        let mut eng = test_engine(2);
+        let q = r#"{"id": 1, "query": "plan", "model": "mt5-small", "nodes": 2, "exact_nodes": true, "domain_size": 1, "domain_mtbf_hours": 24}"#;
+        let (j1, r1) = job(q);
+        eng.process(vec![j1]);
+        let a = Json::parse(&line(&r1)).unwrap();
+        assert_eq!(a.get("ok").as_bool(), Some(true), "{a:?}");
+        let frac = a.path(&["result", "best", "goodput", "goodput_fraction"]).as_f64().unwrap();
+        assert!(frac > 0.0 && frac < 1.0, "domain failures must tax goodput: {frac}");
     }
 }

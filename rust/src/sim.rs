@@ -548,6 +548,97 @@ pub fn checkpoint_state_bytes(setup: &TrainSetup) -> f64 {
     crate::zero::checkpoint_bytes(setup.model.params() as f64, setup.opt)
 }
 
+/// Measured step-time distribution under per-micro-batch compute jitter
+/// (the what-if jitter axis's straggler statistics).
+#[derive(Clone, Copy, Debug)]
+pub struct JitterStats {
+    /// Mean seconds per step across the sampled traces.
+    pub mean_s: f64,
+    /// p99 seconds per step across the sampled traces (nearest-rank on
+    /// the ascending sort — the max for sample counts below 100).
+    pub p99_s: f64,
+}
+
+/// Sample `samples` jittered step times for one setup: every per-task
+/// compute chunk is scaled by a deterministic
+/// [`crate::timeline::TaskJitter`] factor drawn from `(seed, sample)`,
+/// so stragglers propagate through real pipeline dependencies and the
+/// measured tail reflects the schedule's actual absorption capacity.
+/// The pricing preamble (memory fit, comm classes, optimizer, input
+/// pipeline) is the **identical** shared-expression path
+/// [`simulate_step`] evaluates; only the timeline replay differs per
+/// sample.  `spread <= 0` (or `samples == 0`) returns the deterministic
+/// [`simulate_step`] seconds in both fields, bit for bit — the
+/// degenerate case is the unperturbed simulator itself.  An OOM setup
+/// reports `INFINITY` in both fields.
+pub fn jittered_step_stats(
+    setup: &TrainSetup,
+    seed: u64,
+    spread: f64,
+    samples: usize,
+) -> JitterStats {
+    if !(spread > 0.0) || samples == 0 {
+        let s = simulate_step(setup).seconds_per_step();
+        return JitterStats { mean_s: s, p99_s: s };
+    }
+    let comm = CommModel::from_view(setup.cluster.limiting_view());
+    let cluster = &comm.cluster;
+    let fit = setup_fit(setup);
+    if fit.samples_per_rank == 0 {
+        return JitterStats { mean_s: f64::INFINITY, p99_s: f64::INFINITY };
+    }
+    let (micro_batch, num_micro, _mem) = match fit.fit {
+        Some(found) => found,
+        None => return JitterStats { mean_s: f64::INFINITY, p99_s: f64::INFINITY },
+    };
+    let m = &setup.model;
+    let w = &setup.workload;
+    let (tp, pp, sp, dp) = (setup.par.tp, setup.par.pp, setup.par.sp, setup.par.dp);
+    let flops_per_sample = m.train_flops_per_sample(w.enc_len, w.dec_len);
+    let ckpt_factor = if w.ckpt { CKPT_COMPUTE_FACTOR } else { 1.0 };
+    let sustained = cluster.node.gpu.sustained_flops() * (tp * pp * sp) as f64;
+    let compute = flops_per_sample * fit.samples_per_rank as f64 * ckpt_factor / sustained;
+    let cc = comm_classes(setup, &comm, fit.psi, micro_batch, num_micro);
+    let shard = fit.psi / dp.max(1) as f64;
+    let mut optimizer = (2.0 * setup.opt.k_bytes() * shard) / cluster.node.gpu.hbm_bw;
+    if setup.offload {
+        optimizer += 2.0 * setup.opt.k_bytes() * shard / cluster.node.pcie_bw;
+    }
+    let shared_rate = cluster.effective_storage_rate(cluster.nodes);
+    let per_node_rate = shared_rate / cluster.nodes as f64;
+    let worker_rate =
+        per_node_rate * (setup.dataloader_workers as f64).min(8.0).max(1.0) / 2.0;
+    let node_rate = worker_rate.min(per_node_rate * 4.0);
+    let load_time = w.global_batch as f64 / (node_rate * cluster.nodes as f64);
+    let inp = timeline::PipeInputs {
+        sched: setup.sched,
+        pp: pp.max(1),
+        num_micro,
+        fwd_total: compute / 3.0,
+        bwd_total: compute * 2.0 / 3.0,
+        blocking_fwd_micro: cc.blocking_fwd_micro,
+        blocking_bwd_micro: cc.blocking_bwd_micro,
+        ovl_micro: cc.ovl_micro,
+        ovl_step: cc.ovl_step,
+        hop: cc.hop,
+        overlap: setup.overlap_comm,
+    };
+    let mut secs: Vec<f64> = (0..samples)
+        .map(|k| {
+            let out = timeline::simulate_pipeline_jittered(&inp, seed, k as u64, spread);
+            // makespan = compute + blocking + exposed + measured idle on
+            // the perturbed trace; the post-step all-gather and optimizer
+            // land after it, and the input pipeline floors the total
+            let busy = out.makespan + cc.post_ag + optimizer;
+            busy + (load_time - busy).max(0.0)
+        })
+        .collect();
+    let mean = secs.iter().sum::<f64>() / samples as f64;
+    secs.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((samples - 1) as f64 * 0.99).ceil() as usize;
+    JitterStats { mean_s: mean, p99_s: secs[idx] }
+}
+
 /// The kept closed-form path: scalar overlap heuristic + schedule-aware
 /// bubble fraction.  Bit-identical to [`simulate_step`] for pp = 1 (both
 /// evaluate [`scalar_exposure`] on the same [`comm_classes`]); the
@@ -1053,6 +1144,37 @@ mod tests {
         assert!(!st.fits, "13B cannot fit stage 0 on 80GB");
         let small = TrainSetup::dp_pod(by_name("mt5-small").unwrap(), 2, ZeroStage::Stage0);
         assert!(simulate_step(&small).fits);
+    }
+
+    /// Jitter satellite: spread 0 is the deterministic simulator bit for
+    /// bit, a positive spread yields a reproducible distribution with
+    /// p99 >= mean, and an OOM shape reports infinities.
+    #[test]
+    fn jittered_step_stats_degenerate_and_distribution() {
+        let s = pp_setup(
+            "mt5-xl",
+            2,
+            ParallelCfg::dtp(4, 1, 4),
+            ZeroStage::Stage1,
+        );
+        let det = simulate_step(&s).seconds_per_step();
+        let zero = jittered_step_stats(&s, 7, 0.0, 32);
+        assert_eq!(zero.mean_s.to_bits(), det.to_bits());
+        assert_eq!(zero.p99_s.to_bits(), det.to_bits());
+        let none = jittered_step_stats(&s, 7, 0.3, 0);
+        assert_eq!(none.p99_s.to_bits(), det.to_bits());
+        let a = jittered_step_stats(&s, 7, 0.3, 32);
+        let b = jittered_step_stats(&s, 7, 0.3, 32);
+        assert_eq!(a.mean_s.to_bits(), b.mean_s.to_bits(), "same seed reproduces");
+        assert_eq!(a.p99_s.to_bits(), b.p99_s.to_bits());
+        assert!(a.mean_s.is_finite() && a.p99_s >= a.mean_s);
+        // a dp-only (pp = 1) shape works through the same path
+        let dp = xxl_setup(4, ZeroStage::Stage2);
+        let j = jittered_step_stats(&dp, 7, 0.2, 16);
+        assert!(j.p99_s.is_finite() && j.p99_s >= j.mean_s);
+        // OOM: stage 0 cannot hold the 13B states
+        let oom = jittered_step_stats(&xxl_setup(2, ZeroStage::Stage0), 7, 0.2, 8);
+        assert!(oom.mean_s.is_infinite() && oom.p99_s.is_infinite());
     }
 
     #[test]

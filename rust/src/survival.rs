@@ -1,0 +1,595 @@
+//! Seeded trace-replay survival engine (PR 10, tentpole part 3).
+//!
+//! The closed-form goodput model in [`crate::resilience`] prices a plan's
+//! failure exposure analytically: optimal checkpoint interval, expected
+//! effective seconds per useful step.  This module is the discrete-event
+//! counterpart — it samples concrete failure traces from the cluster's
+//! [`crate::hardware::BlastDomain`] topology and replays the plan's
+//! step / checkpoint / restore schedule against each trace, so the
+//! analytical expectation can be validated against a Monte-Carlo
+//! confidence band (the validation the closed form never had), and so the
+//! *distribution* (p50/p99 useful-step rate, work lost, elastic replans)
+//! becomes visible rather than just the mean.
+//!
+//! Determinism contract: the root RNG is split per trace index through
+//! [`Sweep::map_seeded`], so the report is bit-identical at any worker
+//! count and across CLI / serve front-ends for the same seed.
+//!
+//! Replay semantics (chosen to be first-order consistent with the
+//! analytical model so the confidence-band test is meaningful):
+//!
+//! * A *period* is `m` useful steps followed by the policy's critical-path
+//!   checkpoint stall: `m·step + stall0 + max(0, drain − m·budget)` — the
+//!   exact `W` the interval optimizer minimises over.
+//! * Failure inter-arrivals are exponential at the topology's total rate
+//!   `Σ instances/MTBF`; a failure mid-period loses all work since the
+//!   last complete checkpoint, then pays `restore + restart_overhead`.
+//! * Failures during recovery are not stacked (memoryless resample after
+//!   restore), matching the first-order analytical recovery term.
+//! * Elastic mode makes failures *permanent*: the blast level that fired
+//!   is sampled proportionally to its rate, the domain's members leave
+//!   the cluster, and when the survivor count drops below the running
+//!   plan's node count the trace re-plans from a precomputed per-node-
+//!   count ladder (Goodput-objective winners); an infeasible survivor
+//!   count exhausts the trace.
+
+use crate::hardware::ClusterSpec;
+use crate::model::ModelCfg;
+use crate::planner::PlanSpace;
+use crate::resilience::{plan_resilient, FailureModel};
+use crate::sim::{TrainSetup, Workload};
+use crate::sweep::{SimCache, Sweep};
+use crate::timeline::checkpoint_drain_budget;
+use crate::util::rng::Rng;
+
+/// Knobs for one survival run.  Shared verbatim by the `survive` CLI
+/// subcommand and the serve query so both front-ends stay bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SurvivalSpec {
+    /// Root seed; trace `i` replays with `Rng::new(seed).split(i)`.
+    pub seed: u64,
+    /// Number of independent traces (clamped to at least 1).
+    pub traces: usize,
+    /// Useful steps each trace must complete (clamped to at least 1).
+    pub horizon_steps: usize,
+    /// Replay permanent failures with elastic shrink + replan instead of
+    /// in-place restore on a fixed cluster.
+    pub elastic: bool,
+}
+
+impl Default for SurvivalSpec {
+    fn default() -> SurvivalSpec {
+        SurvivalSpec { seed: 0, traces: 256, horizon_steps: 4096, elastic: false }
+    }
+}
+
+/// Distribution summary over all replayed traces.
+#[derive(Clone, Debug)]
+pub struct SurvivalReport {
+    pub traces: usize,
+    pub horizon_steps: usize,
+    pub elastic: bool,
+    /// Useful steps per wall-clock second from the closed form
+    /// (`1 / effective_seconds_per_step` of the unshrunk plan).
+    pub analytic_rate: f64,
+    /// Mean useful-step rate over traces.
+    pub mean_rate: f64,
+    /// Median useful-step rate.
+    pub p50_rate: f64,
+    /// Rate achieved by the 99th-percentile-WORST trace (ascending 1%
+    /// quantile): 99% of traces do at least this well.
+    pub p99_rate: f64,
+    /// Standard error of `mean_rate` (population σ / √traces) — the
+    /// Monte-Carlo confidence band the analytic rate is tested against.
+    pub sem_rate: f64,
+    pub mean_failures: f64,
+    pub mean_replans: f64,
+    /// Mean seconds of work lost to rollbacks per trace.
+    pub mean_lost_s: f64,
+    /// Traces that ran out of feasible survivors (elastic mode only).
+    pub exhausted_traces: usize,
+}
+
+/// The survival view of one planner winner plus its replayed report.
+#[derive(Clone, Debug)]
+pub struct SurvivalOutcome {
+    pub label: String,
+    pub nodes: usize,
+    pub seconds_per_step: f64,
+    pub interval_steps: usize,
+    pub report: SurvivalReport,
+}
+
+/// Everything the replay loop needs about one plan at one node count.
+#[derive(Clone, Debug)]
+struct Rung {
+    nodes: usize,
+    step_s: f64,
+    interval_steps: usize,
+    /// `m·step + stall0 + spill` — wall seconds per complete period.
+    period_s: f64,
+    /// `restore + restart_overhead` charged per failure.
+    recovery_s: f64,
+    lambda_per_s: f64,
+    /// `(rate, blast size)` per topology level, summing to `lambda_per_s`.
+    levels: Vec<(f64, usize)>,
+}
+
+fn rung_for(setup: &TrainSetup, step_s: f64, fm: &FailureModel) -> Rung {
+    let nodes = setup.cluster.total_nodes();
+    let lambda = fm.lambda_for(&setup.cluster);
+    if !(lambda > 0.0) || !(step_s.is_finite() && step_s > 0.0) {
+        // Failure-free (or unpriceable) plans never checkpoint: one step
+        // per period, no stall, no recovery.
+        return Rung {
+            nodes,
+            step_s,
+            interval_steps: 1,
+            period_s: step_s,
+            recovery_s: 0.0,
+            lambda_per_s: 0.0,
+            levels: Vec::new(),
+        };
+    }
+    let g = fm.goodput(setup, step_s);
+    let ckpt = fm.checkpoint_cost(setup);
+    let m = g.interval_steps.max(1);
+    let spill = (ckpt.drain_s - m as f64 * checkpoint_drain_budget(step_s)).max(0.0);
+    Rung {
+        nodes,
+        step_s,
+        interval_steps: m,
+        period_s: m as f64 * step_s + ckpt.write_s + spill,
+        recovery_s: ckpt.restore_s + fm.restart_overhead_s,
+        lambda_per_s: lambda,
+        levels: fm
+            .topology(&setup.cluster)
+            .levels
+            .iter()
+            .map(|l| (l.lambda_per_s, l.size))
+            .collect(),
+    }
+}
+
+/// Per-trace tallies folded into the report.
+#[derive(Clone, Copy, Debug)]
+struct TraceStats {
+    rate: f64,
+    failures: u64,
+    replans: u64,
+    lost_s: f64,
+    exhausted: bool,
+}
+
+fn exp_draw(rng: &mut Rng, lambda: f64) -> f64 {
+    // f64() < 1.0 strictly, so the log argument is never 0.
+    -(1.0 - rng.f64()).ln() / lambda
+}
+
+/// Which blast level fired, proportional to per-level rates; returns the
+/// number of nodes the failure takes out.
+fn pick_blast(rng: &mut Rng, levels: &[(f64, usize)], total: f64) -> usize {
+    let mut u = rng.f64() * total;
+    for &(lam, size) in levels {
+        if u < lam {
+            return size;
+        }
+        u -= lam;
+    }
+    levels.last().map(|&(_, s)| s).unwrap_or(1)
+}
+
+/// Replay one trace on a fixed cluster (failures restore in place).
+fn replay_static(rng: &mut Rng, rung: &Rung, horizon_steps: usize) -> TraceStats {
+    let horizon = horizon_steps as u64;
+    if !(rung.lambda_per_s > 0.0) {
+        let m = rung.interval_steps as u64;
+        let periods = (horizon + m - 1) / m;
+        let wall = periods as f64 * rung.period_s;
+        let useful = periods * rung.interval_steps as u64;
+        let rate = if wall > 0.0 { useful as f64 / wall } else { 0.0 };
+        return TraceStats { rate, failures: 0, replans: 0, lost_s: 0.0, exhausted: false };
+    }
+    let mut useful = 0u64;
+    let mut wall = 0.0;
+    let mut failures = 0u64;
+    let mut lost = 0.0;
+    let mut to_fail = exp_draw(rng, rung.lambda_per_s);
+    while useful < horizon {
+        if to_fail >= rung.period_s {
+            // The period completes and its checkpoint commits.
+            to_fail -= rung.period_s;
+            wall += rung.period_s;
+            useful += rung.interval_steps as u64;
+        } else {
+            // Mid-period failure: everything since the last checkpoint
+            // is lost, then the trace pays the recovery bill.
+            failures += 1;
+            lost += to_fail;
+            wall += to_fail + rung.recovery_s;
+            to_fail = exp_draw(rng, rung.lambda_per_s);
+        }
+    }
+    TraceStats { rate: useful as f64 / wall, failures, replans: 0, lost_s: lost, exhausted: false }
+}
+
+/// Replay one trace with permanent failures: each event removes a blast
+/// domain's members, and the trace re-plans from `ladder[survivors]`.
+fn replay_elastic(
+    rng: &mut Rng,
+    ladder: &[Option<Rung>],
+    start_nodes: usize,
+    horizon_steps: usize,
+) -> TraceStats {
+    let horizon = horizon_steps as u64;
+    let mut avail = start_nodes;
+    let mut useful = 0u64;
+    let mut wall = 0.0;
+    let mut failures = 0u64;
+    let mut replans = 0u64;
+    let mut lost = 0.0;
+    let mut exhausted = false;
+    'run: while useful < horizon {
+        let Some(rung) = ladder.get(avail).and_then(|r| r.as_ref()) else {
+            exhausted = true;
+            break;
+        };
+        if !(rung.lambda_per_s > 0.0) {
+            let left = horizon - useful;
+            let m = rung.interval_steps as u64;
+            let periods = (left + m - 1) / m;
+            wall += periods as f64 * rung.period_s;
+            useful += periods * rung.interval_steps as u64;
+            break;
+        }
+        let mut to_fail = exp_draw(rng, rung.lambda_per_s);
+        while useful < horizon {
+            if to_fail >= rung.period_s {
+                to_fail -= rung.period_s;
+                wall += rung.period_s;
+                useful += rung.interval_steps as u64;
+            } else {
+                failures += 1;
+                lost += to_fail;
+                wall += to_fail + rung.recovery_s;
+                let dead = pick_blast(rng, &rung.levels, rung.lambda_per_s).min(avail);
+                avail -= dead;
+                if avail == 0 {
+                    exhausted = true;
+                    break 'run;
+                }
+                if avail < rung.nodes {
+                    // The survivors no longer fit the running plan — the
+                    // next loop iteration re-plans from the ladder.
+                    replans += 1;
+                }
+                continue 'run;
+            }
+        }
+        break;
+    }
+    let rate = if wall > 0.0 { useful as f64 / wall } else { 0.0 };
+    TraceStats { rate, failures, replans, lost_s: lost, exhausted }
+}
+
+fn aggregate(stats: &[TraceStats], analytic_rate: f64, spec: &SurvivalSpec) -> SurvivalReport {
+    let n = stats.len().max(1) as f64;
+    let mean_rate = stats.iter().map(|t| t.rate).sum::<f64>() / n;
+    let var = stats.iter().map(|t| (t.rate - mean_rate) * (t.rate - mean_rate)).sum::<f64>() / n;
+    let mut rates: Vec<f64> = stats.iter().map(|t| t.rate).collect();
+    rates.sort_by(|a, b| a.total_cmp(b));
+    let quant = |q: f64| -> f64 {
+        if rates.is_empty() {
+            return 0.0;
+        }
+        rates[((rates.len() - 1) as f64 * q).round() as usize]
+    };
+    SurvivalReport {
+        traces: stats.len(),
+        horizon_steps: spec.horizon_steps.max(1),
+        elastic: spec.elastic,
+        analytic_rate,
+        mean_rate,
+        p50_rate: quant(0.5),
+        p99_rate: quant(0.01),
+        sem_rate: (var / n).sqrt(),
+        mean_failures: stats.iter().map(|t| t.failures as f64).sum::<f64>() / n,
+        mean_replans: stats.iter().map(|t| t.replans as f64).sum::<f64>() / n,
+        mean_lost_s: stats.iter().map(|t| t.lost_s).sum::<f64>() / n,
+        exhausted_traces: stats.iter().filter(|t| t.exhausted).count(),
+    }
+}
+
+fn analytic_rate_for(setup: &TrainSetup, step_s: f64, fm: &FailureModel) -> f64 {
+    if !(step_s.is_finite() && step_s > 0.0) {
+        return 0.0;
+    }
+    if fm.enabled_for(&setup.cluster) {
+        let eff = fm.goodput(setup, step_s).effective_seconds_per_step;
+        if eff > 0.0 {
+            1.0 / eff
+        } else {
+            0.0
+        }
+    } else {
+        1.0 / step_s
+    }
+}
+
+/// Replay an already-priced setup on a fixed cluster (no planner, no
+/// elastic shrink).  This is the primitive the MC-vs-analytic property
+/// test exercises per zoo model.
+pub fn replay_setup(
+    setup: &TrainSetup,
+    step_s: f64,
+    fm: &FailureModel,
+    spec: &SurvivalSpec,
+    sweep: &Sweep,
+) -> SurvivalReport {
+    let rung = rung_for(setup, step_s, fm);
+    let horizon = spec.horizon_steps.max(1);
+    let idxs: Vec<u64> = (0..spec.traces.max(1) as u64).collect();
+    let stats =
+        sweep.map_seeded(spec.seed, &idxs, |_, _, rng| replay_static(rng, &rung, horizon));
+    aggregate(&stats, analytic_rate_for(setup, step_s, fm), spec)
+}
+
+/// Plan under the failure model, then replay the winner.  In elastic mode
+/// a Goodput-winner ladder is precomputed for every survivor count so the
+/// replay loop never plans inside a trace (keeps traces cheap AND
+/// deterministic regardless of trace order).
+pub fn survive(
+    model: &ModelCfg,
+    cluster: &ClusterSpec,
+    workload: &Workload,
+    space: &PlanSpace,
+    fm: &FailureModel,
+    spec: &SurvivalSpec,
+    sweep: &Sweep,
+    cache: &SimCache,
+) -> Option<SurvivalOutcome> {
+    let planned = plan_resilient(model, cluster, workload, space, fm, sweep, cache);
+    let best = planned
+        .best
+        .as_ref()
+        .filter(|b| b.point.seconds_per_step().is_finite())?;
+    let step_s = best.point.seconds_per_step();
+    let n0 = best.point.setup.cluster.total_nodes();
+    let horizon = spec.horizon_steps.max(1);
+    let idxs: Vec<u64> = (0..spec.traces.max(1) as u64).collect();
+    let stats = if spec.elastic {
+        let mut ladder: Vec<Option<Rung>> = vec![None; n0 + 1];
+        ladder[n0] = Some(rung_for(&best.point.setup, step_s, fm));
+        for k in 1..n0 {
+            let sub = cluster.take_nodes(k);
+            ladder[k] = plan_resilient(model, &sub, workload, space, fm, sweep, cache)
+                .best
+                .filter(|b| b.point.seconds_per_step().is_finite())
+                .map(|b| rung_for(&b.point.setup, b.point.seconds_per_step(), fm));
+        }
+        sweep.map_seeded(spec.seed, &idxs, |_, _, rng| {
+            replay_elastic(rng, &ladder, n0, horizon)
+        })
+    } else {
+        let rung = rung_for(&best.point.setup, step_s, fm);
+        sweep.map_seeded(spec.seed, &idxs, |_, _, rng| replay_static(rng, &rung, horizon))
+    };
+    let report = aggregate(&stats, analytic_rate_for(&best.point.setup, step_s, fm), spec);
+    Some(SurvivalOutcome {
+        label: best.point.label(),
+        nodes: n0,
+        seconds_per_step: step_s,
+        interval_steps: if fm.enabled_for(&best.point.setup.cluster) {
+            best.goodput.interval_steps
+        } else {
+            0
+        },
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::BlastDomain;
+    use crate::model;
+    use crate::resilience::CheckpointPolicy;
+    use crate::sim::simulate_step;
+    use crate::zero::{OptimizerKind, ZeroStage};
+
+    fn small_space() -> PlanSpace {
+        PlanSpace {
+            optimizers: vec![OptimizerKind::AdamW, OptimizerKind::Adafactor],
+            micro_batch_caps: vec![0, 8],
+            schedules: vec![crate::parallel::PipeSchedule::OneFOneB],
+            nodes: vec![1, 2, 4],
+            max_tp: 4,
+            max_pp: 2,
+            max_sp: 1,
+            max_ep: 1,
+            ..PlanSpace::default()
+        }
+    }
+
+    /// The acceptance property: for EVERY zoo model, the closed-form
+    /// goodput rate lands inside the seeded Monte-Carlo confidence band
+    /// of the trace-replay engine.
+    #[test]
+    fn analytic_rate_inside_mc_confidence_band_for_every_zoo_model() {
+        let sweep = Sweep::serial();
+        for m in model::mt5_zoo() {
+            let name = m.name.clone();
+            let setup = TrainSetup::dp_pod(m, 4, ZeroStage::Stage2);
+            let step_s = simulate_step(&setup).seconds_per_step();
+            if !step_s.is_finite() {
+                continue;
+            }
+            let fm = FailureModel::with_mtbf(200.0);
+            // Horizon of ~50 checkpoint periods keeps traces long enough
+            // to see failures but cheap enough to run the whole zoo.
+            let interval = fm.goodput(&setup, step_s).interval_steps.max(1);
+            let spec = SurvivalSpec {
+                seed: 7,
+                traces: 200,
+                horizon_steps: interval * 50,
+                elastic: false,
+            };
+            let rep = replay_setup(&setup, step_s, &fm, &spec, &sweep);
+            assert!(rep.mean_rate > 0.0, "{name}: degenerate MC rate");
+            // 4 standard errors plus a small relative floor for the
+            // second-order terms the closed form drops by design.
+            let tol = 4.0 * rep.sem_rate + 2e-3 * rep.analytic_rate;
+            assert!(
+                (rep.mean_rate - rep.analytic_rate).abs() <= tol,
+                "{name}: analytic {} vs MC {} ± {} (tol {})",
+                rep.analytic_rate,
+                rep.mean_rate,
+                rep.sem_rate,
+                tol
+            );
+            // The worst-1% trace can never beat the median.
+            assert!(rep.p99_rate <= rep.p50_rate + 1e-12, "{name}: p99 > p50");
+        }
+    }
+
+    #[test]
+    fn traces_bit_identical_at_any_worker_count() {
+        let m = model::by_name("mt5-xl").unwrap();
+        let setup = TrainSetup::dp_pod(m, 4, ZeroStage::Stage2);
+        let step_s = simulate_step(&setup).seconds_per_step();
+        assert!(step_s.is_finite());
+        let mut fm = FailureModel::with_mtbf(1.0);
+        fm.policy = CheckpointPolicy::Async { snapshot_s: 2.0, drain_bw: 2.0e9 };
+        let spec = SurvivalSpec { seed: 99, traces: 64, horizon_steps: 512, elastic: false };
+        let serial = replay_setup(&setup, step_s, &fm, &spec, &Sweep::serial());
+        for workers in [2usize, 5] {
+            let par = replay_setup(&setup, step_s, &fm, &spec, &Sweep::new(workers));
+            assert_eq!(serial.mean_rate.to_bits(), par.mean_rate.to_bits());
+            assert_eq!(serial.p50_rate.to_bits(), par.p50_rate.to_bits());
+            assert_eq!(serial.p99_rate.to_bits(), par.p99_rate.to_bits());
+            assert_eq!(serial.sem_rate.to_bits(), par.sem_rate.to_bits());
+            assert_eq!(serial.mean_lost_s.to_bits(), par.mean_lost_s.to_bits());
+        }
+        // Same seed reproduces; a different seed draws different traces.
+        let again = replay_setup(&setup, step_s, &fm, &spec, &Sweep::serial());
+        assert_eq!(serial.mean_rate.to_bits(), again.mean_rate.to_bits());
+        let other = replay_setup(
+            &setup,
+            step_s,
+            &fm,
+            &SurvivalSpec { seed: 100, ..spec },
+            &Sweep::serial(),
+        );
+        assert_ne!(
+            serial.mean_rate.to_bits(),
+            other.mean_rate.to_bits(),
+            "different seeds must draw different traces"
+        );
+    }
+
+    #[test]
+    fn disabled_failure_model_replays_failure_free() {
+        let m = model::by_name("mt5-large").unwrap();
+        let setup = TrainSetup::dp_pod(m, 2, ZeroStage::Stage2);
+        let step_s = simulate_step(&setup).seconds_per_step();
+        assert!(step_s.is_finite());
+        let spec = SurvivalSpec { seed: 1, traces: 16, horizon_steps: 100, elastic: false };
+        let rep = replay_setup(&setup, step_s, &FailureModel::disabled(), &spec, &Sweep::serial());
+        let ideal = 1.0 / step_s;
+        assert_eq!(rep.mean_rate.to_bits(), ideal.to_bits());
+        assert_eq!(rep.p50_rate.to_bits(), ideal.to_bits());
+        assert_eq!(rep.p99_rate.to_bits(), ideal.to_bits());
+        assert_eq!(rep.analytic_rate.to_bits(), ideal.to_bits());
+        assert_eq!(rep.sem_rate, 0.0);
+        assert_eq!(rep.mean_failures, 0.0);
+        assert_eq!(rep.mean_lost_s, 0.0);
+    }
+
+    /// Elastic replay on a harsh correlated topology: failures happen,
+    /// domain deaths force replans, and every trace still reports a
+    /// finite rate (or a counted exhaustion).
+    #[test]
+    fn elastic_replay_shrinks_replans_and_survives() {
+        let m = model::by_name("mt5-large").unwrap();
+        let mut cluster = ClusterSpec::lps_pod(4);
+        cluster.domains = vec![BlastDomain {
+            name: "switch".into(),
+            size: 2,
+            mtbf_hours: 25.0,
+        }];
+        // MTBF mild enough that the 4-node plan still wins (so elastic
+        // shrink has room to replan downward), harsh enough that a
+        // 100k-step horizon sees failures in essentially every run.
+        let mut fm = FailureModel::with_mtbf(50.0);
+        fm.restart_overhead_s = 60.0;
+        let w = Workload::table1();
+        let space = small_space();
+        let cache = SimCache::new();
+        let sweep = Sweep::serial();
+        let spec = SurvivalSpec { seed: 3, traces: 24, horizon_steps: 100_000, elastic: true };
+        let out = survive(&m, &cluster, &w, &space, &fm, &spec, &sweep, &cache)
+            .expect("plan must exist");
+        assert!(out.nodes > 0 && out.seconds_per_step.is_finite());
+        let rep = &out.report;
+        assert!(rep.elastic);
+        assert!(rep.mean_failures > 0.0, "harsh MTBF must produce failures");
+        assert!(rep.mean_replans > 0.0, "node deaths must force elastic replans");
+        assert!(rep.mean_lost_s > 0.0);
+        assert!(rep.exhausted_traces <= rep.traces);
+        assert!(rep.mean_rate.is_finite() && rep.mean_rate >= 0.0);
+        // Deterministic: the same spec replays bit-identically even
+        // through the planner + ladder path.
+        let again = survive(&m, &cluster, &w, &space, &fm, &spec, &sweep, &cache).unwrap();
+        assert_eq!(rep.mean_rate.to_bits(), again.report.mean_rate.to_bits());
+        assert_eq!(rep.mean_replans, again.report.mean_replans);
+        assert_eq!(rep.exhausted_traces, again.report.exhausted_traces);
+        // Non-elastic on the same problem keeps the cluster whole.
+        let fixed = survive(
+            &m,
+            &cluster,
+            &w,
+            &space,
+            &fm,
+            &SurvivalSpec { elastic: false, ..spec },
+            &sweep,
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(fixed.report.mean_replans, 0.0);
+        assert_eq!(fixed.report.exhausted_traces, 0);
+    }
+
+    /// More traces tighten the confidence band (SEM shrinks roughly as
+    /// 1/√N) — a sanity check that the aggregation is actually computing
+    /// a standard error and not a population σ.
+    #[test]
+    fn sem_shrinks_with_trace_count() {
+        let m = model::by_name("mt5-base").unwrap();
+        let setup = TrainSetup::dp_pod(m, 4, ZeroStage::Stage2);
+        let step_s = simulate_step(&setup).seconds_per_step();
+        assert!(step_s.is_finite());
+        let fm = FailureModel::with_mtbf(0.5);
+        let sweep = Sweep::serial();
+        let small = replay_setup(
+            &setup,
+            step_s,
+            &fm,
+            &SurvivalSpec { seed: 11, traces: 32, horizon_steps: 2048, elastic: false },
+            &sweep,
+        );
+        let big = replay_setup(
+            &setup,
+            step_s,
+            &fm,
+            &SurvivalSpec { seed: 11, traces: 512, horizon_steps: 2048, elastic: false },
+            &sweep,
+        );
+        assert!(small.sem_rate > 0.0, "harsh MTBF must spread the traces");
+        assert!(
+            big.sem_rate < small.sem_rate,
+            "16x the traces must tighten the band: {} vs {}",
+            big.sem_rate,
+            small.sem_rate
+        );
+    }
+}

@@ -98,6 +98,23 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// (DeepSpeed bucketing leaves some SM/copy-engine contention).
 pub const OVERLAP_EFFICIENCY: f64 = 0.85;
 
+/// Seconds of asynchronous checkpoint traffic one training step can
+/// drain without touching the critical path — the fluid comm-stream
+/// budget the resilience layer's async/tiered policies charge their
+/// persist phase against.  The backward phase is 2/3 of each step (the
+/// 1:2 forward:backward roofline split every pricing path uses) and the
+/// comm stream drains at [`OVERLAP_EFFICIENCY`] of backward windows, so
+/// each step hides at most `0.85 · (2/3) · step_s` seconds of drain.
+/// Deliberately a function of the step time alone: the budget must be
+/// identical for every candidate interval `m` so the piecewise interval
+/// optimizer (`crate::resilience::optimal_interval_steps_policy`) stays
+/// exact, and the resulting wall-per-period stays strictly increasing in
+/// the step time (the coefficient is < 1), preserving the objective
+/// monotonicity contract.
+pub fn checkpoint_drain_budget(step_s: f64) -> f64 {
+    OVERLAP_EFFICIENCY * (2.0 / 3.0) * step_s.max(0.0)
+}
+
 /// Per-step pipeline inputs, all in seconds per rank.
 #[derive(Clone, Copy, Debug)]
 pub struct PipeInputs {
@@ -797,12 +814,86 @@ pub fn simulate_pipeline_uncached(inp: &PipeInputs) -> PipeOutcome {
     simulate_pipeline_with(&skel, &mut scratch, inp)
 }
 
+/// Deterministic per-task compute perturbation for the jitter axis: the
+/// compute chunk of dense task id `t` in sample `sample` is scaled by
+/// [`TaskJitter::factor`], a pure splitmix64 hash of
+/// `(seed, sample, task)` mapped to a uniform in `[1−spread, 1+spread]`.
+/// Blocking comm, hop delays and the overlappable stream are left
+/// untouched — jitter models compute stragglers per micro-batch, not the
+/// network.  Being a pure hash (no sequential RNG state), a jittered
+/// trace is identical regardless of thread, call order or worker count.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskJitter {
+    seed: u64,
+    sample: u64,
+    spread: f64,
+}
+
+impl TaskJitter {
+    /// `spread` is clamped to `[0, 0.95]` so factors stay positive.
+    pub fn new(seed: u64, sample: u64, spread: f64) -> TaskJitter {
+        TaskJitter { seed, sample, spread: spread.clamp(0.0, 0.95) }
+    }
+
+    /// Multiplicative compute factor for dense task id `task`.
+    pub fn factor(&self, task: u64) -> f64 {
+        let mut z = self
+            .seed
+            .wrapping_add(self.sample.wrapping_mul(0xA24B_AED4_963E_E407))
+            .wrapping_add(task.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 * (1.0 / 9007199254740992.0); // 53-bit
+        1.0 + self.spread * (2.0 * u - 1.0)
+    }
+}
+
+/// One jittered sample of a step: every task's compute chunk is scaled
+/// by the `(seed, sample)` trace's per-task factor before the event
+/// simulation runs, so stragglers propagate through real pipeline
+/// dependencies instead of a scalar slowdown.  `spread <= 0` returns
+/// [`simulate_pipeline`] unchanged — the degenerate case is the
+/// deterministic engine itself, bit for bit.  Note the makespan is
+/// measured on the perturbed trace while the outcome's `bubble`
+/// decomposition still subtracts the unperturbed compute totals; callers
+/// of jittered sampling consume the makespan.
+pub fn simulate_pipeline_jittered(
+    inp: &PipeInputs,
+    seed: u64,
+    sample: u64,
+    spread: f64,
+) -> PipeOutcome {
+    if !(spread > 0.0) {
+        return simulate_pipeline(inp);
+    }
+    let jitter = TaskJitter::new(seed, sample, spread);
+    let skel = skeletons().get(SkeletonKey::of(inp));
+    SCRATCH.with(|s| simulate_pipeline_impl(&skel, &mut s.borrow_mut(), inp, Some(&jitter)))
+}
+
 /// The optimized engine over an explicit skeleton + arena.  `skel` must
 /// match `inp`'s `(schedule, pp, num_micro)` shape.
 pub fn simulate_pipeline_with(
     skel: &PipeSkeleton,
     scratch: &mut TimelineScratch,
     inp: &PipeInputs,
+) -> PipeOutcome {
+    simulate_pipeline_impl(skel, scratch, inp, None)
+}
+
+/// The engine body.  With `jitter: None` every duration expression is
+/// the verbatim unperturbed path (property-tested bit-identical to the
+/// retained reference); with a jitter, each non-ghost task's compute
+/// chunk is scaled by its per-task factor while the blocking-comm share
+/// of the duration stays fixed, and backward drain windows shrink/grow
+/// with the perturbed chunk so the fluid comm stream sees the jittered
+/// timeline too.
+fn simulate_pipeline_impl(
+    skel: &PipeSkeleton,
+    scratch: &mut TimelineScratch,
+    inp: &PipeInputs,
+    jitter: Option<&TaskJitter>,
 ) -> PipeOutcome {
     debug_assert_eq!(skel.key, SkeletonKey::of(inp), "skeleton/inputs shape mismatch");
     let p = skel.p;
@@ -856,12 +947,21 @@ pub fn simulate_pipeline_with(
                         }
                         scratch.busy[st] = true;
                         scratch.ptr[st] += 1;
-                        let dur = if ghost {
-                            0.0
+                        let (dur, bspan) = if ghost {
+                            (0.0, 0.0)
+                        } else if let Some(j) = jitter {
+                            // scale only the compute chunk; the blocking
+                            // comm share of the duration is unperturbed
+                            let f = j.factor(t as u64);
+                            if bwd {
+                                (bwd_chunk * f + (bwd_dur - bwd_chunk), bwd_chunk * f)
+                            } else {
+                                (fwd_chunk * f + (fwd_dur - fwd_chunk), 0.0)
+                            }
                         } else if bwd {
-                            bwd_dur
+                            (bwd_dur, bwd_chunk)
                         } else {
-                            fwd_dur
+                            (fwd_dur, 0.0)
                         };
                         let end = start + dur;
                         if !ghost {
@@ -873,12 +973,7 @@ pub fn simulate_pipeline_with(
                                     0.0,
                                 ));
                             }
-                            scratch.intervals[st].push((
-                                dur,
-                                bwd,
-                                false,
-                                if bwd { bwd_chunk } else { 0.0 },
-                            ));
+                            scratch.intervals[st].push((dur, bwd, false, bspan));
                             scratch.stage_last_end[st] = end;
                         }
                         scratch.free_at[st] = end;
@@ -1583,6 +1678,72 @@ mod tests {
         let (_, g_before) = scratch.stats();
         let _ = simulate_pipeline_with(&small, &mut scratch, &small_inp);
         assert_eq!(scratch.stats().1, g_before, "shrinking shapes must not allocate");
+    }
+
+    /// Satellite: per-micro-batch jitter.  `spread = 0` is the
+    /// deterministic engine bit for bit; a positive spread perturbs the
+    /// makespan, reproduces exactly for the same `(seed, sample)`, and
+    /// every per-task factor stays inside the clamped spread band.
+    #[test]
+    fn jitter_zero_spread_bit_identical_and_samples_reproduce() {
+        let inp = PipeInputs {
+            sched: PipeSchedule::OneFOneB,
+            pp: 4,
+            num_micro: 12,
+            fwd_total: 12.0,
+            bwd_total: 24.0,
+            blocking_fwd_micro: 0.1,
+            blocking_bwd_micro: 0.2,
+            ovl_micro: 0.3,
+            ovl_step: 0.4,
+            hop: 0.05,
+            overlap: true,
+        };
+        let base = simulate_pipeline(&inp);
+        let zero = simulate_pipeline_jittered(&inp, 42, 7, 0.0);
+        assert_outcomes_bit_identical(&zero, &base, "spread 0 degenerates");
+        let neg = simulate_pipeline_jittered(&inp, 42, 7, -1.0);
+        assert_outcomes_bit_identical(&neg, &base, "negative spread degenerates");
+        let j1 = simulate_pipeline_jittered(&inp, 42, 7, 0.3);
+        let j1b = simulate_pipeline_jittered(&inp, 42, 7, 0.3);
+        assert_outcomes_bit_identical(&j1, &j1b, "same (seed, sample) reproduces");
+        assert!(j1.makespan.is_finite() && j1.makespan > 0.0);
+        let j2 = simulate_pipeline_jittered(&inp, 42, 8, 0.3);
+        assert_ne!(
+            j1.makespan.to_bits(),
+            j2.makespan.to_bits(),
+            "distinct samples draw distinct traces"
+        );
+        // per-task factors live in [1 - spread, 1 + spread] ...
+        let j = TaskJitter::new(1, 2, 0.3);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for t in 0..4096u64 {
+            let f = j.factor(t);
+            assert!((0.7..=1.3).contains(&f), "factor {f} escapes the band");
+            lo = lo.min(f);
+            hi = hi.max(f);
+        }
+        // ... and actually fill it (the hash is not degenerate)
+        assert!(lo < 0.75 && hi > 1.25, "factors collapsed: [{lo}, {hi}]");
+        // wild spreads clamp so factors stay positive
+        let wild = TaskJitter::new(1, 2, 7.0);
+        for t in 0..4096u64 {
+            assert!(wild.factor(t) > 0.0);
+        }
+    }
+
+    /// The drain budget is linear in the step time, never negative, and
+    /// strictly below a full step (the coefficient protects the interval
+    /// optimizer's monotonicity contract).
+    #[test]
+    fn drain_budget_linear_and_below_one_step() {
+        assert_eq!(checkpoint_drain_budget(0.0), 0.0);
+        assert_eq!(checkpoint_drain_budget(-5.0), 0.0);
+        let b1 = checkpoint_drain_budget(1.0);
+        assert!((b1 - OVERLAP_EFFICIENCY * 2.0 / 3.0).abs() < 1e-15);
+        assert!(b1 < 1.0);
+        assert_eq!(checkpoint_drain_budget(10.0).to_bits(), (b1 * 10.0).to_bits());
     }
 
     /// The thread-local arena behind [`simulate_pipeline`] reaches the
